@@ -1,0 +1,38 @@
+//! Accuracy-vs-density sweep on one model (the Fig 2a/Fig 4 protocol):
+//! evaluates the zero-shot task suite at every AOT-compiled polar density
+//! and prints the degradation curve with the critical threshold marked.
+//!
+//!   cargo run --release --example accuracy_sweep [model] [per_family]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use polar_sparsity::bench::accuracy::{available_densities, eval_suite};
+use polar_sparsity::coordinator::Mode;
+use polar_sparsity::runtime::{Engine, Executor};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("opt-tiny");
+    let per_family: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let dir = std::path::PathBuf::from("artifacts").join(model);
+    let exec = Arc::new(Executor::load(&dir)?);
+    let engine = Engine::new(exec);
+    let critical = engine.exec.config().critical_density;
+    let suite = std::path::Path::new("artifacts/eval_tasks.jsonl");
+
+    let dense = eval_suite(&engine, Mode::Dense, suite, per_family, 12)?;
+    println!("{model}: dense average accuracy = {:.3}\n", dense.average);
+    println!("{:>8} {:>10} {:>10}", "density", "accuracy", "delta");
+    for d in available_densities(engine.exec.manifest()) {
+        let s = eval_suite(&engine, Mode::Polar { density: d }, suite, per_family, 12)?;
+        let mark = if (d - critical).abs() < 1e-9 { "  <- critical threshold" } else { "" };
+        println!(
+            "{d:>8.3} {:>10.3} {:>+10.3}{mark}",
+            s.average,
+            s.average - dense.average
+        );
+    }
+    Ok(())
+}

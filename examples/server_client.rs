@@ -1,0 +1,56 @@
+//! Server + client demo: starts the TCP JSON-lines server in-process on an
+//! ephemeral port, drives it with concurrent clients (so requests batch),
+//! then shuts it down.
+//!
+//!   cargo run --release --example server_client
+
+use std::sync::mpsc::channel;
+
+use anyhow::Result;
+use polar_sparsity::coordinator::Mode;
+use polar_sparsity::server::{serve, Client, ServerConfig};
+
+fn main() -> Result<()> {
+    let (addr_tx, addr_rx) = channel();
+    let server = std::thread::spawn(move || {
+        serve(
+            ServerConfig {
+                model_dir: "artifacts/opt-tiny".into(),
+                addr: "127.0.0.1:0".to_string(),
+                mode: Mode::Polar { density: 0.5 },
+                max_batch: 8,
+            },
+            move |addr| {
+                let _ = addr_tx.send(addr);
+            },
+        )
+    });
+    let addr = addr_rx.recv()?;
+    println!("server up on {addr}");
+
+    let prompts = ["succ:a=", "succ:b=", "cmp:1,9=", "copy:xy=", "maj:aabab="];
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let addr = addr.clone();
+            let p = p.to_string();
+            std::thread::spawn(move || -> Result<String> {
+                let mut c = Client::connect(&addr)?;
+                let resp = c.request(&p, 8)?;
+                Ok(format!(
+                    "{p:<12} -> {:?}  (ttft {:.0} ms)",
+                    resp.get("text").as_str().unwrap_or("?"),
+                    resp.get("ttft_ms").as_f64().unwrap_or(0.0)
+                ))
+            })
+        })
+        .collect();
+    for h in handles {
+        println!("{}", h.join().expect("client thread")?);
+    }
+
+    Client::connect(&addr)?.shutdown()?;
+    server.join().expect("server thread")?;
+    println!("server shut down cleanly");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//! Loads opt-tiny, replays an identical Poisson-arrival workload through
+//! the continuous-batching scheduler under dense, DejaVu and Polar modes,
+//! and reports throughput / TTFT / inter-token latency — the serving-paper
+//! analogue of "load a small real model and serve batched requests".
+//!
+//!   cargo run --release --example serving_e2e [n_requests] [rate]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use polar_sparsity::coordinator::{Mode, Scheduler, SchedulerConfig, SparsityController};
+use polar_sparsity::runtime::{Engine, Executor};
+use polar_sparsity::workload::{generate, WorkloadConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40.0);
+
+    let exec = Arc::new(Executor::load(std::path::Path::new("artifacts/opt-tiny"))?);
+    let wl = WorkloadConfig {
+        n_requests,
+        arrival_rate: rate,
+        prompt_len_min: 8,
+        prompt_len_max: 48,
+        max_new_tokens: 24,
+        seed: 7,
+        ..Default::default()
+    };
+    println!(
+        "workload: {n_requests} requests, Poisson {rate}/s, prompts 8..48, 24 new tokens\n"
+    );
+    println!(
+        "{:<8} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "mode", "tok/s", "itl p50", "ttft p50", "e2e p50", "steps"
+    );
+    for mode in [Mode::Dense, Mode::DejaVu, Mode::Polar { density: 0.5 }] {
+        let engine = Engine::new(exec.clone());
+        let ctl = SparsityController::new(mode);
+        ctl.validate(engine.exec.manifest())?;
+        // pre-compile all bucket variants so timings measure serving, not
+        // first-touch JIT (the CUDA-graph capture analogue)
+        engine.precompile(&ctl.decode_tag())?;
+        let mut sched = Scheduler::new(
+            engine,
+            ctl,
+            SchedulerConfig { max_batch: 16, compact: true },
+        );
+        // replay the same trace: requests arrive on their Poisson schedule
+        let trace = generate(&wl);
+        let t0 = Instant::now();
+        let mut pending: std::collections::VecDeque<_> = trace.into();
+        let mut completed = 0usize;
+        while completed < n_requests {
+            while let Some(front) = pending.front() {
+                if t0.elapsed().as_secs_f64() >= front.at_s {
+                    let mut tr = pending.pop_front().unwrap();
+                    tr.request.enqueued_at = Instant::now();
+                    sched.enqueue(tr.request);
+                } else {
+                    break;
+                }
+            }
+            if sched.is_idle() {
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            completed += sched.step()?.len();
+        }
+        let m = &sched.metrics;
+        println!(
+            "{:<8} {:>10.1} {:>8.1}ms {:>8.1}ms {:>8.1}ms {:>9}",
+            format!("{:?}", mode).split(' ').next().unwrap().to_lowercase(),
+            m.decode_throughput(),
+            m.itl.p50() * 1e3,
+            m.ttft.p50() * 1e3,
+            m.e2e.p50() * 1e3,
+            m.decode_steps,
+        );
+    }
+    println!("\n(record this run in EXPERIMENTS.md — serving e2e validation)");
+    Ok(())
+}

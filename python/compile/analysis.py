@@ -1,0 +1,201 @@
+"""Model-analysis figures (build-time, like the paper's offline studies).
+
+Emits results/*.csv for:
+  fig1b — union MLP activation vs layer/batch (opt-small)       [§3.1]
+  fig2a — perplexity vs oracle head sparsity (zoo)              [§3.2]
+  fig2b — per-layer attention importance (zoo)                  [§3.2, [22]]
+  fig7  — OPT-family union activations vs batch                 [App. B.1]
+  fig8  — ReLUfied-LLaMA union activations vs batch             [App. B.1]
+  fig9  — head-activation heat map counts                       [App. B.2]
+
+Usage: python -m compile.analysis --out ../artifacts --results ../results
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import get_config
+
+BATCHES = [1, 4, 16, 64]
+N_TRIALS = 48
+
+
+def write_csv(path, header, rows):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"[analysis] wrote {path} ({len(rows)} rows)")
+
+
+def load_model(out, name):
+    cfg = get_config(name)
+    params = {k: jnp.asarray(v) for k, v in
+              np.load(os.path.join(out, name, "model.npz")).items()}
+    return cfg, params
+
+
+def load_supervision(out, name):
+    return dict(np.load(os.path.join(out, name, "supervision.npz")))
+
+
+# ---------------------------------------------------------------------------
+# Union activation studies (Figs 1b, 7, 8)
+# ---------------------------------------------------------------------------
+
+
+def union_rows(name, sup, rng):
+    """Rows (model, batch, layer, union_frac_mean, union_frac_std)."""
+    act = sup["mlp_active"]  # [L, n, Dff]
+    L, n, dff = act.shape
+    rows = []
+    for b in BATCHES:
+        idx = rng.integers(0, n, size=(N_TRIALS, b))
+        for l in range(L):
+            fr = act[l][idx].any(axis=1).mean(axis=1)  # [trials]
+            rows.append((name, b, l, round(float(fr.mean()), 4),
+                         round(float(fr.std()), 4)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 2a — perplexity vs oracle head sparsity
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "top_k"))
+def _loss_headmask(cfg, params, tokens, top_k: int):
+    """Full forward with only the top-k heads (by per-token output L2 norm)
+    kept per layer (>0); layer 0 dense. Returns mean next-token NLL."""
+    B, S1 = tokens.shape
+    S = S1 - 1
+    toks, targets = tokens[:, :-1], tokens[:, 1:]
+    lengths = jnp.full((B,), S, jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = model._embed(cfg, params, toks, positions)
+    for l in range(cfg.n_layers):
+        h = model.layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = (h @ params["wq"][l] + params["bq"][l]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        k = (h @ params["wk"][l] + params["bk"][l]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ params["wv"][l] + params["bv"][l]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+        if cfg.pos == "rope":
+            q = model.rope(q, positions, cfg.d_head)
+            k = model.rope(k, positions, cfg.d_head)
+        o = model._causal_attention(cfg, q, k, v, lengths)  # [B,S,H,dh]
+        if l > 0 and top_k < cfg.n_heads:
+            norms = jnp.linalg.norm(o, axis=-1)              # [B,S,H]
+            kth = jnp.sort(norms, axis=-1)[..., -top_k][..., None]
+            o = jnp.where((norms >= kth)[..., None], o, 0.0)
+        x = x + o.reshape(B, S, -1) @ params["wo"][l] + params["bo"][l]
+        h2 = model.layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        x = x + model.mlp_dense(cfg, params, l, h2)
+    x = model.layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def fig2a_rows(name, cfg, params):
+    ids = corpus.heldout_text_tokens(8 * 96 + 1)
+    toks = ids[: 8 * 96 + 1]
+    batch = np.stack([toks[i * 96:(i + 1) * 96 + 1] for i in range(8)])
+    rows = []
+    base = None
+    for k in range(cfg.n_heads, 0, -1):
+        nll = float(_loss_headmask(cfg, params, jnp.asarray(batch), k))
+        ppl = float(np.exp(nll))
+        if k == cfg.n_heads:
+            base = ppl
+        rows.append((name, k, round(k / cfg.n_heads, 3), round(ppl, 4),
+                     round(ppl / base - 1.0, 4)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 2b — attention layer importance (score of [22]: 1 - cos(x, x+attn))
+# ---------------------------------------------------------------------------
+
+
+def fig2b_rows(name, cfg, params):
+    stream = corpus.training_stream(424242, 4 * 96 + 1)
+    batch = np.stack([stream[i * 96:(i + 1) * 96] for i in range(4)])
+    lengths = jnp.full((4,), 96, jnp.int32)
+    _, _, aux = model.forward_full(cfg, params, jnp.asarray(batch), lengths,
+                                   collect=True)
+    cos = np.asarray(aux["attn_cos"])  # [L,B,S]
+    rows = []
+    for l in range(cfg.n_layers):
+        imp = 1.0 - float(cos[l].mean())
+        rows.append((name, l, round(imp, 5)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 9 — head activation heat map
+# ---------------------------------------------------------------------------
+
+
+def fig9_rows(name, cfg, sup):
+    norms = sup["head_norms"]  # [L, n, H]
+    L, n, H = norms.shape
+    k = max(1, H // 2)
+    kth = np.sort(norms, axis=-1)[..., -k][..., None]
+    active = norms >= kth
+    rows = []
+    for l in range(L):
+        for h in range(H):
+            rows.append((name, l, h, int(active[l, :, h].sum()), n))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--results", default="../results")
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+    R = args.results
+
+    # Fig 1b (opt-small) + Fig 7 (OPT family) + Fig 8 (ReLUfied llama)
+    write_csv(os.path.join(R, "fig1b.csv"),
+              ["model", "batch", "layer", "union_frac", "union_std"],
+              union_rows("opt-small", load_supervision(args.out, "opt-small"), rng))
+    rows7 = []
+    for m in ("opt-tiny", "opt-small"):
+        rows7 += union_rows(m, load_supervision(args.out, m), rng)
+    write_csv(os.path.join(R, "fig7.csv"),
+              ["model", "batch", "layer", "union_frac", "union_std"], rows7)
+    write_csv(os.path.join(R, "fig8.csv"),
+              ["model", "batch", "layer", "union_frac", "union_std"],
+              union_rows("llama-relu", load_supervision(args.out, "llama-relu"), rng))
+
+    # Fig 2a + 2b across the zoo
+    rows2a, rows2b = [], []
+    for m in ("opt-tiny", "opt-small", "llama-tiny", "llama-gqa"):
+        cfg, params = load_model(args.out, m)
+        rows2a += fig2a_rows(m, cfg, params)
+        rows2b += fig2b_rows(m, cfg, params)
+    write_csv(os.path.join(R, "fig2a.csv"),
+              ["model", "top_k", "density", "ppl", "ppl_increase"], rows2a)
+    write_csv(os.path.join(R, "fig2b.csv"),
+              ["model", "layer", "importance"], rows2b)
+
+    # Fig 9 heat maps
+    rows9 = []
+    for m in ("opt-tiny", "llama-tiny"):
+        cfg, _ = load_model(args.out, m)
+        rows9 += fig9_rows(m, cfg, load_supervision(args.out, m))
+    write_csv(os.path.join(R, "fig9.csv"),
+              ["model", "layer", "head", "active_count", "n_tokens"], rows9)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,460 @@
+"""AOT lowering: every serving entry point -> HLO text + manifest.json.
+
+Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Every entry is lowered with ``keep_unused=True`` so the parameter list is
+always: data inputs (entry-specific, in order) followed by the full weight
+set sorted by name — one calling convention for the whole runtime.
+
+Entries per model (static shapes = the CUDA-graph analogue, DESIGN.md):
+  prefill_b{B}                       prompt pass at S=64
+  decode_{tag}_b{B}_n{N}             tag in dense | dejavu | polar_dXXXX |
+                                     teal_dXXXX | cats_dXXXX
+  micro_* (opt-small)                Fig 1a / Fig 3 / Fig 10 module benches
+  pp2_stage{0,1}_{tag}_b{B}_n{N}     pipeline-parallel stages (Fig 11)
+  tp{S}_{embed,attn,mlp,final}_*     Megatron-style TP shards (Fig 12)
+
+Usage: python -m compile.aot [--models a,b] [--sets core,micro,pp,tp]
+       [--out ../artifacts]
+"""
+
+import argparse
+import json
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import (
+    BATCH_BUCKETS, CONFIGS, DEFAULT_RECALL, DENSITY_SWEEP, PREFILL_LEN,
+    SEQ_BUCKETS, get_config,
+)
+from .kernels import ref as kref
+from .kernels import sel_gemm, sha_decode
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+MICRO_LAYER = 1  # the layer micro-entries exercise
+
+
+@dataclass
+class Entry:
+    name: str
+    kind: str
+    fn: object
+    data: list          # [{"name","shape","dtype"}...] in call order
+    outputs: list       # [{"name","shape","dtype"}...] of the result tuple
+    meta: dict = field(default_factory=dict)
+
+
+def dshape(cfg, B, N):
+    return [cfg.n_layers, 2, B, cfg.n_kv_heads, N, cfg.d_head]
+
+
+def dtag(density):
+    return f"d{int(round(density * 1000)):04d}"
+
+
+def load_topk(out_dir, cfg, B):
+    path = os.path.join(out_dir, cfg.name, "topk_table.json")
+    if not cfg.mlp_sparsity or not os.path.exists(path):
+        return ()
+    with open(path) as f:
+        table = json.load(f)
+    return tuple(table["recall_targets"][str(DEFAULT_RECALL)][str(B)])
+
+
+# ---------------------------------------------------------------------------
+# Entry builders
+# ---------------------------------------------------------------------------
+
+
+def core_entries(cfg, out_dir):
+    """prefill + decode matrix."""
+    V, L, G, dh = cfg.vocab, cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    entries = []
+    small = cfg.name == "llama-relu"  # accuracy-only model
+    batches = [1] if small else BATCH_BUCKETS
+    seqs = [128] if small else SEQ_BUCKETS
+
+    for B in batches:
+        entries.append(Entry(
+            name=f"prefill_b{B}", kind="prefill",
+            fn=(lambda cfg_: lambda toks, lens, params: model.prefill(
+                cfg_, params, toks, lens, PREFILL_LEN))(cfg),
+            data=[
+                {"name": "tokens", "shape": [B, PREFILL_LEN], "dtype": "i32"},
+                {"name": "lengths", "shape": [B], "dtype": "i32"},
+            ],
+            outputs=[
+                {"name": "logits", "shape": [B, V], "dtype": "f32"},
+                {"name": "kv", "shape": dshape(cfg, B, PREFILL_LEN), "dtype": "f32"},
+            ],
+            meta={"batch": B, "seq_bucket": PREFILL_LEN},
+        ))
+
+    def decode_entry(B, N, mode, density, mlp_topk, tag):
+        fn = (lambda cfg_, m, d, tk: lambda toks, lens, kv, params:
+              model.decode_step(cfg_, params, toks, lens, kv, mode=m,
+                                density=d, mlp_topk=tk))(cfg, mode, density, mlp_topk)
+        return Entry(
+            name=f"decode_{tag}_b{B}_n{N}", kind="decode", fn=fn,
+            data=[
+                {"name": "tokens", "shape": [B], "dtype": "i32"},
+                {"name": "lengths", "shape": [B], "dtype": "i32"},
+                {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
+            ],
+            outputs=[
+                {"name": "logits", "shape": [B, V], "dtype": "f32"},
+                {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
+            ],
+            meta={"batch": B, "seq_bucket": N, "mode": mode,
+                  "density": density, "mlp_topk": list(mlp_topk)},
+        )
+
+    for B in batches:
+        topk = load_topk(out_dir, cfg, B)
+        for N in seqs:
+            entries.append(decode_entry(B, N, "dense", 1.0, (), "dense"))
+            entries.append(decode_entry(
+                B, N, "polar", cfg.critical_density, topk,
+                f"polar_{dtag(cfg.critical_density)}"))
+            if cfg.mlp_sparsity:
+                entries.append(decode_entry(B, N, "dejavu", 1.0, topk, "dejavu"))
+
+    # accuracy sweep at B=1, N=128
+    if not small:
+        topk1 = load_topk(out_dir, cfg, 1)
+        for d in DENSITY_SWEEP:
+            if abs(d - cfg.critical_density) < 1e-9:
+                continue  # already built
+            entries.append(decode_entry(1, 128, "polar", d, topk1,
+                                        f"polar_{dtag(d)}"))
+        if cfg.name == "llama-tiny":
+            for m in ("teal", "cats"):
+                for d in (0.25, 0.5, 0.75):
+                    entries.append(decode_entry(1, 128, m, d, (),
+                                                f"{m}_{dtag(d)}"))
+    return entries
+
+
+def micro_entries(cfg, out_dir):
+    """Module-level entries for Figs 1a / 3 / 10 (layer MICRO_LAYER)."""
+    d, H, G, dh, Dff, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.d_head, cfg.d_ff, cfg.n_layers)
+    qpg = cfg.q_per_group
+    l = MICRO_LAYER
+    N = 256
+    entries = []
+
+    def data(**kw):
+        return [{"name": k, "shape": list(v[0]), "dtype": v[1]}
+                for k, v in kw.items()]
+
+    for B in (1, 4, 16):
+        xB = ([B, d], "f32")
+        entries.append(Entry(
+            f"micro_qkv_b{B}", "micro",
+            (lambda c: lambda x, params: (
+                x @ params["wq"][l] + params["bq"][l],
+                x @ params["wk"][l] + params["bk"][l],
+                x @ params["wv"][l] + params["bv"][l],
+            ))(cfg),
+            data(x=xB),
+            [{"name": "q", "shape": [B, H * dh], "dtype": "f32"},
+             {"name": "k", "shape": [B, G * dh], "dtype": "f32"},
+             {"name": "v", "shape": [B, G * dh], "dtype": "f32"}],
+            {"batch": B},
+        ))
+        entries.append(Entry(
+            f"micro_out_proj_b{B}", "micro",
+            (lambda c: lambda o, params: (o @ params["wo"][l] + params["bo"][l],))(cfg),
+            data(o=([B, H * dh], "f32")),
+            [{"name": "out", "shape": [B, d], "dtype": "f32"}],
+            {"batch": B},
+        ))
+        entries.append(Entry(
+            f"micro_mlp_dense_b{B}", "micro",
+            (lambda c: lambda x, params: (model.mlp_dense(c, params, l, x),))(cfg),
+            data(x=xB),
+            [{"name": "out", "shape": [B, d], "dtype": "f32"}],
+            {"batch": B},
+        ))
+        entries.append(Entry(
+            f"micro_router_mlp_b{B}", "micro",
+            (lambda c: lambda x, params: (model.mlp_router_logits(params, l, x),))(cfg),
+            data(x=xB),
+            [{"name": "logits", "shape": [B, Dff], "dtype": "f32"}],
+            {"batch": B},
+        ))
+        entries.append(Entry(
+            f"micro_router_attn_b{B}", "micro",
+            (lambda c: lambda x, params: (model.attn_router_logits(params, l, x),))(cfg),
+            data(x=xB),
+            [{"name": "logits", "shape": [B, G], "dtype": "f32"}],
+            {"batch": B},
+        ))
+        # dense attention core (xla) for Fig 1a breakdown
+        entries.append(Entry(
+            f"micro_attn_dense_b{B}_n{N}", "micro",
+            (lambda c: lambda q, k, v, lens, params: (
+                kref.dense_decode_attention_ref(q, k, v, lens, c.q_per_group),))(cfg),
+            data(q=([B, H, dh], "f32"), k=([B, G, N, dh], "f32"),
+                 v=([B, G, N, dh], "f32"), lengths=([B], "i32")),
+            [{"name": "o", "shape": [B, H, dh], "dtype": "f32"}],
+            {"batch": B, "seq_bucket": N},
+        ))
+
+    # Fig 3 kernel sweeps at B=16
+    B = 16
+    for K in sorted({max(1, G // 4), max(1, G // 2), max(1, 3 * G // 4), G}):
+        for impl, tag in (("xla", "xla"), ("pallas", "pallas")):
+            fn = (lambda c, im: lambda q, k, v, lens, hi, params: (
+                (sha_decode.sha_decode if im == "pallas" else kref.sha_decode_ref)(
+                    q, k, v, hi, lens, c.q_per_group),))(cfg, impl)
+            entries.append(Entry(
+                f"micro_attn_sha_{tag}_k{K}_b{B}_n{N}", "micro", fn,
+                data(q=([B, H, dh], "f32"), k=([B, G, N, dh], "f32"),
+                     v=([B, G, N, dh], "f32"), lengths=([B], "i32"),
+                     head_index=([B, K], "i32")),
+                [{"name": "o", "shape": [B, K * qpg, dh], "dtype": "f32"}],
+                {"batch": B, "seq_bucket": N, "top_k": K, "impl": tag},
+            ))
+    for K in sorted({Dff // 8, Dff // 4, Dff // 2, 3 * Dff // 4, Dff}):
+        for impl, tag in (("xla", "xla"), ("pallas", "pallas")):
+            fn = (lambda c, im, kk: lambda x, idx, params: (
+                (sel_gemm.sparse_mlp if im == "pallas" else kref.sparse_mlp_ref)(
+                    x, params["w1"][l], params["b1"][l],
+                    params["w2"][l], params["b2"][l], idx),))(cfg, impl, K)
+            entries.append(Entry(
+                f"micro_mlp_sparse_{tag}_k{K}_b{B}", "micro", fn,
+                data(x=([B, d], "f32"), index=([K], "i32")),
+                [{"name": "out", "shape": [B, d], "dtype": "f32"}],
+                {"batch": B, "top_k": K, "impl": tag},
+            ))
+    return entries
+
+
+def pp_entries(cfg, out_dir):
+    """Two-stage pipeline-parallel decode (Fig 11)."""
+    V, L, G, dh, d = cfg.vocab, cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_model
+    Lh = L // 2
+    N = 256
+    entries = []
+    modes = [("dense", 1.0), ("polar", cfg.critical_density)]
+    for B in BATCH_BUCKETS:
+        topk = load_topk(out_dir, cfg, B)
+        for mode, density in modes:
+            tag = "dense" if mode == "dense" else f"polar_{dtag(density)}"
+            kv0 = [Lh, 2, B, G, N, dh]
+            kv1 = [L - Lh, 2, B, G, N, dh]
+            fn0 = (lambda c, m, dn, tk: lambda toks, lens, kv, params: (
+                lambda x_kv: (x_kv[0], x_kv[1]))(
+                model.decode_core(
+                    c, params, model._embed(c, params, toks, lens - 1),
+                    lens, kv, layer_begin=0, layer_end=Lh, mode=m,
+                    density=dn, mlp_topk=tk)))(cfg, mode, density, topk)
+            entries.append(Entry(
+                f"pp2_stage0_{tag}_b{B}_n{N}", "pp_stage0", fn0,
+                [{"name": "tokens", "shape": [B], "dtype": "i32"},
+                 {"name": "lengths", "shape": [B], "dtype": "i32"},
+                 {"name": "kv", "shape": kv0, "dtype": "f32"}],
+                [{"name": "x", "shape": [B, d], "dtype": "f32"},
+                 {"name": "kv", "shape": kv0, "dtype": "f32"}],
+                {"batch": B, "seq_bucket": N, "mode": mode, "density": density,
+                 "stage": 0, "layers": [0, Lh]},
+            ))
+            fn1 = (lambda c, m, dn, tk: lambda x, lens, kv, params: (
+                lambda x_kv: (model.final_logits(c, params, x_kv[0]), x_kv[1]))(
+                model.decode_core(
+                    c, params, x, lens, kv, layer_begin=Lh, layer_end=L,
+                    mode=m, density=dn, mlp_topk=tk)))(cfg, mode, density, topk)
+            entries.append(Entry(
+                f"pp2_stage1_{tag}_b{B}_n{N}", "pp_stage1", fn1,
+                [{"name": "x", "shape": [B, d], "dtype": "f32"},
+                 {"name": "lengths", "shape": [B], "dtype": "i32"},
+                 {"name": "kv", "shape": kv1, "dtype": "f32"}],
+                [{"name": "logits", "shape": [B, V], "dtype": "f32"},
+                 {"name": "kv", "shape": kv1, "dtype": "f32"}],
+                {"batch": B, "seq_bucket": N, "mode": mode, "density": density,
+                 "stage": 1, "layers": [Lh, L]},
+            ))
+    return entries
+
+
+def tp_entries(cfg, out_dir, n_shards: int):
+    """Megatron-style TP shard entries (Fig 12)."""
+    V, L, G, dh, d, H = (cfg.vocab, cfg.n_layers, cfg.n_kv_heads, cfg.d_head,
+                         cfg.d_model, cfg.n_heads)
+    if G % n_shards or H % n_shards or cfg.d_ff % n_shards:
+        return []
+    Gs = G // n_shards
+    N = 256
+    entries = []
+    for B in (1, 4, 16):
+        topk = load_topk(out_dir, cfg, B)
+        mean_k = int(np.mean(topk)) if topk else 0
+        entries.append(Entry(
+            f"tp{n_shards}_embed_b{B}", "tp_embed",
+            (lambda c: lambda toks, lens, params: (model.tp_embed(c, params, toks, lens),))(cfg),
+            [{"name": "tokens", "shape": [B], "dtype": "i32"},
+             {"name": "lengths", "shape": [B], "dtype": "i32"}],
+            [{"name": "x", "shape": [B, d], "dtype": "f32"}],
+            {"batch": B, "n_shards": n_shards},
+        ))
+        entries.append(Entry(
+            f"tp{n_shards}_final_b{B}", "tp_final",
+            (lambda c: lambda x, params: (model.tp_final(c, params, x),))(cfg),
+            [{"name": "x", "shape": [B, d], "dtype": "f32"}],
+            [{"name": "logits", "shape": [B, V], "dtype": "f32"}],
+            {"batch": B, "n_shards": n_shards},
+        ))
+        for s in range(n_shards):
+            for sparse, tag, dens in (
+                (False, "dense", 1.0),
+                (True, f"sha_{dtag(cfg.critical_density)}", cfg.critical_density),
+            ):
+                def _mk(c, sh, sp, dn, ns):
+                    def fn(layer, x, kv, lens, params):
+                        p, k, v = model.tp_attn_shard(
+                            c, params, layer, x, kv, lens, shard=sh,
+                            n_shards=ns, sparse=sp, density=dn)
+                        # stack k/v so the shard cache round-trips as ONE
+                        # tensor (rust feeds it straight back next layer)
+                        import jax.numpy as jnp_
+                        return p, jnp_.stack([k, v])
+                    return fn
+                fn = _mk(cfg, s, sparse, dens, n_shards)
+                entries.append(Entry(
+                    f"tp{n_shards}_attn_s{s}_{tag}_b{B}_n{N}", "tp_attn", fn,
+                    [{"name": "layer", "shape": [], "dtype": "i32"},
+                     {"name": "x", "shape": [B, d], "dtype": "f32"},
+                     {"name": "kv", "shape": [2, B, Gs, N, dh], "dtype": "f32"},
+                     {"name": "lengths", "shape": [B], "dtype": "i32"}],
+                    [{"name": "partial", "shape": [B, d], "dtype": "f32"},
+                     {"name": "kv", "shape": [2, B, Gs, N, dh], "dtype": "f32"}],
+                    {"batch": B, "seq_bucket": N, "shard": s,
+                     "n_shards": n_shards, "density": dens},
+                ))
+            for k_mode, kk in (("dense", 0),
+                               (f"k{max(1, mean_k // n_shards)}",
+                                max(1, mean_k // n_shards)) if mean_k else ("dense", 0)):
+                fn = (lambda c, sh, kk_: lambda layer, x, params: (
+                    model.tp_mlp_shard(c, params, layer, x, shard=sh,
+                                       n_shards=n_shards, top_k=kk_),))(cfg, s, kk)
+                entries.append(Entry(
+                    f"tp{n_shards}_mlp_s{s}_{k_mode}_b{B}", "tp_mlp", fn,
+                    [{"name": "layer", "shape": [], "dtype": "i32"},
+                     {"name": "x", "shape": [B, d], "dtype": "f32"}],
+                    [{"name": "partial", "shape": [B, d], "dtype": "f32"}],
+                    {"batch": B, "shard": s, "n_shards": n_shards, "top_k": kk},
+                ))
+    # dedupe (the k_mode tuple trick can emit duplicates)
+    seen, out = set(), []
+    for e in entries:
+        if e.name not in seen:
+            seen.add(e.name)
+            out.append(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def lower(cfg, entry: Entry, param_avals):
+    data_avals = [
+        jax.ShapeDtypeStruct(tuple(d["shape"]), DTYPES[d["dtype"]])
+        for d in entry.data
+    ]
+    lowered = jax.jit(entry.fn, keep_unused=True).lower(*data_avals, param_avals)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")),
+        use_tuple_args=False, return_tuple=True,
+    )
+    return comp.as_hlo_text()
+
+
+def build_model(name: str, out_root: str, sets: list):
+    cfg = get_config(name)
+    mdir = os.path.join(out_root, name)
+    weights = dict(np.load(os.path.join(mdir, "model.npz")))
+    param_names = sorted(weights)
+    param_avals = {
+        k: jax.ShapeDtypeStruct(v.shape, jnp.dtype(v.dtype)) for k, v in weights.items()
+    }
+
+    entries = []
+    if "core" in sets:
+        entries += core_entries(cfg, out_root)
+    if "micro" in sets and name == "opt-small":
+        entries += micro_entries(cfg, out_root)
+    if "pp" in sets and name in ("opt-small", "llama-tiny"):
+        entries += pp_entries(cfg, out_root)
+    if "tp" in sets and name == "opt-small":
+        entries += tp_entries(cfg, out_root, 2)
+        entries += tp_entries(cfg, out_root, 4)
+
+    hlo_dir = os.path.join(mdir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    manifest = {
+        "model": name,
+        "analogue": cfg.analogue,
+        "config": {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+            "d_ff": cfg.d_ff, "mlp": cfg.mlp, "pos": cfg.pos,
+            "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+            "d_head": cfg.d_head, "critical_density": cfg.critical_density,
+        },
+        "params": [
+            {"name": n, "shape": list(weights[n].shape),
+             "dtype": str(weights[n].dtype)} for n in param_names
+        ],
+        "buckets": {"batch": BATCH_BUCKETS, "seq": SEQ_BUCKETS,
+                    "prefill": PREFILL_LEN},
+        "entries": [],
+    }
+    t_total = time.time()
+    for i, e in enumerate(entries):
+        path = os.path.join(hlo_dir, f"{e.name}.hlo.txt")
+        if not os.path.exists(path):
+            t0 = time.time()
+            text = lower(cfg, e, param_avals)
+            with open(path, "w") as f:
+                f.write(text)
+            dt = time.time() - t0
+        else:
+            dt = 0.0
+        manifest["entries"].append({
+            "name": e.name, "kind": e.kind, "file": f"hlo/{e.name}.hlo.txt",
+            "data": e.data, "outputs": e.outputs, "meta": e.meta,
+        })
+        if dt > 0:
+            print(f"  [{name}] {i + 1}/{len(entries)} {e.name} ({dt:.1f}s)")
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{name}] {len(entries)} entries in {time.time() - t_total:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="all")
+    ap.add_argument("--sets", default="core,micro,pp,tp")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.models == "all" else args.models.split(",")
+    sets = args.sets.split(",")
+    for name in names:
+        build_model(name, args.out, sets)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Greedy dynamic top-k calibration (paper Algorithm 2, §4.1).
+
+For every (recall target, batch size, layer) find the minimal top-k such
+that the router's batch-union top-k captures >= target recall of the true
+union activation set. This is the "dynamic top-k mechanism that adapts the
+number of active neurons per layer" — the per-layer k grows with batch size
+because the union of active neurons grows (Fig 1b), which is exactly the
+effect Polar Sparsity exploits/avoids.
+
+Output: artifacts/<model>/topk_table.json
+  {"recall_targets": {"0.99": {"1": [k per layer], "2": [...], ...}},
+   "union_stats": {...}}   (union_stats feeds Figs 1b/7/8)
+
+Usage: python -m compile.calibrate --model opt-tiny --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from .configs import BATCH_BUCKETS, CONFIGS, RECALL_TARGETS, get_config
+from .routers import mlp_router_apply
+
+DELTA = 8            # Algorithm 2 step size
+K0 = 8               # Algorithm 2 initial top-k
+N_TRIALS = 64        # batches sampled per (B, layer) estimate
+
+
+def router_logits_np(params, l, x):
+    z = np.maximum(x @ params["mr_w1"][l] + params["mr_b1"][l], 0.0)
+    return z @ params["mr_w2"][l] + params["mr_b2"][l]
+
+
+def union_recall_curve(logits, active, batch_idx):
+    """Mean recall of batch-union top-k for every k (vectorised Alg. 2).
+
+    logits: [n, Dff] router outputs; active: [n, Dff] bool ground truth;
+    batch_idx: [trials, B] sample indices forming synthetic batches.
+    Returns (recall[k] for k=1..Dff, mean union fraction).
+    """
+    Dff = logits.shape[1]
+    recalls = np.zeros(Dff, np.float64)
+    union_frac = 0.0
+    for rows in batch_idx:
+        agg = logits[rows].max(axis=0)            # aggregate predicted logits
+        union = active[rows].any(axis=0)          # ground-truth union set
+        n_union = max(int(union.sum()), 1)
+        order = np.argsort(-agg)
+        hits = np.cumsum(union[order])            # recall numerator for all k
+        recalls += hits / n_union
+        union_frac += n_union / Dff
+    return recalls / len(batch_idx), union_frac / len(batch_idx)
+
+
+def greedy_topk(recall_curve, target, k0=K0, delta=DELTA):
+    """Algorithm 2: smallest k (on the k0 + i*delta grid) meeting target."""
+    Dff = len(recall_curve)
+    k = k0
+    while k < Dff and recall_curve[k - 1] < target:
+        k += delta
+    return min(k, Dff)
+
+
+def calibrate(cfg, params, sup, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    h = sup["h_mlp"]            # [L, n, d]
+    active = sup["mlp_active"]  # [L, n, Dff]
+    n = h.shape[1]
+    table = {f"{t}": {} for t in RECALL_TARGETS}
+    union_stats = {}
+    for B in BATCH_BUCKETS:
+        batch_idx = rng.integers(0, n, size=(N_TRIALS, B))
+        ks = {f"{t}": [] for t in RECALL_TARGETS}
+        fracs = []
+        for l in range(cfg.n_layers):
+            logits = router_logits_np(params, l, h[l])
+            curve, frac = union_recall_curve(logits, active[l], batch_idx)
+            fracs.append(frac)
+            for t in RECALL_TARGETS:
+                ks[f"{t}"].append(int(greedy_topk(curve, t)))
+        for t in RECALL_TARGETS:
+            table[f"{t}"][str(B)] = ks[f"{t}"]
+        union_stats[str(B)] = [round(float(f), 4) for f in fracs]
+    return {"recall_targets": table, "union_stats": union_stats,
+            "d_ff": cfg.d_ff, "batch_buckets": BATCH_BUCKETS}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.model == "all" else [args.model]
+    for name in names:
+        cfg = get_config(name)
+        if not cfg.mlp_sparsity:
+            continue
+        mdir = os.path.join(args.out, name)
+        params = dict(np.load(os.path.join(mdir, "model.npz")))
+        sup = dict(np.load(os.path.join(mdir, "supervision.npz")))
+        out = calibrate(cfg, params, sup)
+        with open(os.path.join(mdir, "topk_table.json"), "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"[{name}] topk@0.99:",
+              {b: ks for b, ks in out["recall_targets"]["0.99"].items()})
+
+
+if __name__ == "__main__":
+    main()

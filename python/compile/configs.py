@@ -1,0 +1,125 @@
+"""Model zoo configuration.
+
+Four small decoder-only LMs spanning the paper's model axes:
+
+  * opt-tiny   -- OPT-6.7b analogue:   ReLU MLP, MHA      (MLP + head sparsity)
+  * opt-small  -- OPT-66b analogue:    ReLU MLP, MHA, deeper/wider
+  * llama-tiny -- LLaMA-2-7b analogue: SwiGLU MLP, MHA    (head sparsity only)
+  * llama-gqa  -- LLaMA-3.1-70b analogue: SwiGLU MLP, GQA (group sparsity)
+
+All are char-level (vocab = 256 bytes + PAD/BOS/EOS) with learned positional
+embeddings (OPT family) or RoPE (LLaMA family) and pre-LayerNorm.
+"""
+
+from dataclasses import dataclass, field
+
+
+PAD, BOS, EOS = 256, 257, 258
+VOCAB = 259
+
+# Static-shape buckets (must match rust/src/coordinator/batcher.rs).
+BATCH_BUCKETS = [1, 2, 4, 8, 16]
+SEQ_BUCKETS = [64, 128, 256]
+PREFILL_LEN = 64  # prompt bucket; prompts longer than this are truncated
+
+# Attention-density sweep used by the accuracy benches (Fig 2a / Fig 4).
+DENSITY_SWEEP = [0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0]
+
+# Densities for which end-to-end decode entries are AOT-compiled.
+THROUGHPUT_DENSITIES = [0.25, 0.5, 0.625]
+
+# MLP dynamic-top-k recall targets (Algorithm 2 calibration).
+RECALL_TARGETS = [0.9, 0.95, 0.99]
+DEFAULT_RECALL = 0.99
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    analogue: str          # which paper model this stands in for
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int        # == n_heads for MHA; < n_heads for GQA
+    d_ff: int
+    mlp: str               # "relu" | "swiglu"
+    pos: str               # "learned" | "rope"
+    max_seq: int = 256
+    vocab: int = VOCAB
+    # router hyper-parameters (Appendix C)
+    mlp_router_hidden: int = 64
+    # training (single-core CPU budget)
+    train_steps: int = 400
+    train_batch: int = 12
+    train_seq: int = 80
+    lr: float = 3e-4
+    # paper-style critical attention density (Table 1 analogues; validated
+    # empirically by `bench fig4` -- see EXPERIMENTS.md)
+    critical_density: float = 0.5
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def q_per_group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def n_groups(self) -> int:
+        """Routable attention units: heads for MHA, KV groups for GQA."""
+        return self.n_kv_heads
+
+    @property
+    def mlp_sparsity(self) -> bool:
+        """Paper sparsifies MLP only for the (ReLU) OPT family."""
+        return self.mlp == "relu"
+
+
+CONFIGS = {
+    "opt-tiny": ModelConfig(
+        name="opt-tiny", analogue="OPT-6.7b",
+        d_model=128, n_layers=4, n_heads=8, n_kv_heads=8,
+        d_ff=512, mlp="relu", pos="learned",
+        train_steps=400, critical_density=0.5,
+    ),
+    "opt-small": ModelConfig(
+        name="opt-small", analogue="OPT-66b",
+        d_model=192, n_layers=5, n_heads=8, n_kv_heads=8,
+        d_ff=768, mlp="relu", pos="learned",
+        train_steps=250, critical_density=0.25,
+    ),
+    "llama-tiny": ModelConfig(
+        name="llama-tiny", analogue="LLaMA-2-7b",
+        d_model=128, n_layers=4, n_heads=8, n_kv_heads=8,
+        d_ff=384, mlp="swiglu", pos="rope",
+        train_steps=400, critical_density=0.5,
+    ),
+    # ReLUfication baseline (Table 2 row / Fig 8a): LLaMA geometry, ReLU MLP.
+    "llama-relu": ModelConfig(
+        name="llama-relu", analogue="ReLUfied LLaMA-2-7b",
+        d_model=128, n_layers=4, n_heads=8, n_kv_heads=8,
+        d_ff=384, mlp="relu", pos="rope",
+        train_steps=400, critical_density=0.5,
+    ),
+    "llama-gqa": ModelConfig(
+        name="llama-gqa", analogue="LLaMA-3.1-70b",
+        d_model=128, n_layers=4, n_heads=8, n_kv_heads=2,
+        d_ff=384, mlp="swiglu", pos="rope",
+        train_steps=400, critical_density=0.625,
+    ),
+}
+
+DEFAULT_MODEL = "opt-tiny"
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(CONFIGS)}")
+    return CONFIGS[name]
+
+
+def heads_for_density(cfg: ModelConfig, density: float) -> int:
+    """Active heads/groups per sparse layer at a given attention density."""
+    k = max(1, round(cfg.n_groups * density))
+    return min(cfg.n_groups, k)

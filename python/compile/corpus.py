@@ -1,0 +1,149 @@
+"""Deterministic synthetic corpus + zero-shot task suite.
+
+Stands in for Wikitext-2 (router supervision, perplexity) and for the
+lm-eval-harness 9-task suite (COPA ... ARC) in the paper's evaluation.
+Nine task families, each scored by exact-match greedy continuation after
+the '=' delimiter; a small embedded natural-language block provides the
+held-out perplexity corpus.
+
+The eval split is exported to artifacts/eval_tasks.jsonl so the rust
+coordinator evaluates the *same* instances at serving time.
+"""
+
+import json
+import string
+
+import numpy as np
+
+from .configs import PAD, BOS, EOS
+
+# ---------------------------------------------------------------------------
+# Natural-ish text block (perplexity corpus; author-written, license-free).
+# ---------------------------------------------------------------------------
+
+TEXT = """
+the river moves slowly through the valley and the light falls on the water.
+every machine in the old workshop had a purpose and a place on the wall.
+to serve many requests at once the scheduler groups them into batches.
+a cache remembers what was computed so the answer returns without work.
+the attention of the reader moves from word to word and line to line.
+sparse forests grow where the soil is thin and the wind is strong.
+when the batch grows large the union of active neurons approaches all.
+each head of attention watches a different part of the long sentence.
+the cost of memory movement often exceeds the cost of arithmetic.
+small models learn simple rules quickly and forget them slowly.
+a router decides which worker receives the next unit of work.
+throughput rises when idle time falls and the pipeline stays full.
+the key and the value wait in the cache for the query to arrive.
+profiles reveal where the time goes and where the effort should go.
+the first layer reads the raw signal and the last layer writes the answer.
+latency hides in queues and appears only when the clock is watched.
+""".strip().replace("\n", " ")
+
+LOWER = string.ascii_lowercase
+DIGITS = string.digits
+
+TASK_FAMILIES = [
+    "copy", "rev", "succ", "add", "maj", "cmp", "srt", "kv", "pat",
+]
+
+
+def _sample(rng: np.random.Generator, family: str) -> tuple[str, str]:
+    """Return (prompt, answer); the training line is prompt + answer."""
+    if family == "copy":
+        n = rng.integers(2, 6)
+        s = "".join(rng.choice(list(LOWER[:10]), n))
+        return f"copy:{s}=", s
+    if family == "rev":
+        n = rng.integers(2, 5)
+        s = "".join(rng.choice(list(LOWER[:8]), n))
+        return f"rev:{s}=", s[::-1]
+    if family == "succ":
+        c = LOWER[rng.integers(0, 25)]
+        return f"succ:{c}=", LOWER[LOWER.index(c) + 1]
+    if family == "add":
+        a, b = int(rng.integers(0, 50)), int(rng.integers(0, 50))
+        return f"add:{a}+{b}=", str(a + b)
+    if family == "maj":
+        n = 5
+        a, b = rng.choice(list(LOWER[:6]), 2, replace=False)
+        na = int(rng.integers(3, 6))  # majority count
+        s = [a] * na + [b] * (n - na)
+        rng.shuffle(s)
+        return f"maj:{''.join(s)}=", a
+    if family == "cmp":
+        a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+        while a == b:
+            b = int(rng.integers(0, 10))
+        return f"cmp:{a},{b}=", "<" if a < b else ">"
+    if family == "srt":
+        s = rng.choice(list(LOWER[:8]), 3, replace=False)
+        return f"srt:{''.join(s)}=", "".join(sorted(s))
+    if family == "kv":
+        keys = rng.choice(list(LOWER[:8]), 3, replace=False)
+        vals = rng.choice(list(DIGITS), 3, replace=False)
+        q = int(rng.integers(0, 3))
+        ctx = " ".join(f"{k}{v}" for k, v in zip(keys, vals))
+        return f"kv:{ctx}?{keys[q]}=", str(vals[q])
+    if family == "pat":
+        unit = "".join(rng.choice(list(LOWER[:6]), int(rng.integers(1, 3))))
+        reps = int(rng.integers(2, 4))
+        s = unit * reps
+        return f"pat:{s}*=", unit
+    raise ValueError(family)
+
+
+def task_line(rng: np.random.Generator, family: str) -> str:
+    p, a = _sample(rng, family)
+    return p + a
+
+
+def encode(s: str) -> list[int]:
+    return [min(b, 255) for b in s.encode("utf-8", errors="replace")]
+
+
+def decode(ids) -> str:
+    return bytes(int(i) for i in ids if int(i) < 256).decode(
+        "utf-8", errors="replace"
+    )
+
+
+def training_stream(seed: int, n_tokens: int, task_frac: float = 0.7) -> np.ndarray:
+    """Packed token stream: task lines and text snippets joined by newline."""
+    rng = np.random.default_rng(seed)
+    out: list[int] = [BOS]
+    words = TEXT.split(" ")
+    while len(out) < n_tokens:
+        if rng.random() < task_frac:
+            fam = TASK_FAMILIES[int(rng.integers(0, len(TASK_FAMILIES)))]
+            line = task_line(rng, fam)
+        else:
+            i = int(rng.integers(0, max(1, len(words) - 12)))
+            line = " ".join(words[i : i + int(rng.integers(6, 13))])
+        out.extend(encode(line))
+        out.append(ord("\n"))
+    return np.array(out[:n_tokens], dtype=np.int32)
+
+
+def heldout_text_tokens(n_tokens: int = 4096) -> np.ndarray:
+    """Held-out perplexity corpus (text only, fixed)."""
+    ids = [BOS] + encode(TEXT)
+    reps = 1 + n_tokens // len(ids)
+    return np.array((ids * reps)[:n_tokens], dtype=np.int32)
+
+
+def eval_suite(seed: int = 1234, per_family: int = 50) -> list[dict]:
+    """Fixed zero-shot eval set (disjoint seed from training)."""
+    rng = np.random.default_rng(seed)
+    items = []
+    for fam in TASK_FAMILIES:
+        for _ in range(per_family):
+            p, a = _sample(rng, fam)
+            items.append({"family": fam, "prompt": p, "answer": a})
+    return items
+
+
+def write_eval_suite(path: str, seed: int = 1234, per_family: int = 50) -> None:
+    with open(path, "w") as f:
+        for item in eval_suite(seed, per_family):
+            f.write(json.dumps(item) + "\n")

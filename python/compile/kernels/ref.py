@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth for pytest/hypothesis sweeps and
+double as the *XLA-path* implementations used inside the end-to-end decode
+entries: on the CPU PJRT substrate, interpret-mode Pallas executes its grid
+serially, so the e2e artifacts lower the same selective computation through
+XLA's vectorizer while the Pallas kernels (Alg. 1 / Alg. 3) are exercised
+and benchmarked by the kernel-level entries (Fig 3). See DESIGN.md
+§Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sha_decode_ref(q, k, v, head_index, lengths, q_per_group: int = 1):
+    """Selective head/group attention, decode step (one query per sequence).
+
+    q:          [B, H, dh]        query for the new token, all H query heads
+    k, v:       [B, G, N, dh]     KV cache (G = kv heads/groups)
+    head_index: [B, T]  int32     active group ids per sequence (T = top-k)
+    lengths:    [B]     int32     valid KV length per sequence
+    returns:    [B, T * q_per_group, dh]  outputs of the *selected* heads,
+                in head_index order (caller scatters into the full layout).
+    """
+    B, H, dh = q.shape
+    G, N = k.shape[1], k.shape[2]
+    T = head_index.shape[1]
+    assert H == G * q_per_group
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    qg = q.reshape(B, G, q_per_group, dh)
+    qs = jnp.take_along_axis(qg, head_index[:, :, None, None], axis=1)
+    ks = jnp.take_along_axis(k, head_index[:, :, None, None], axis=1)
+    vs = jnp.take_along_axis(v, head_index[:, :, None, None], axis=1)
+
+    s = jnp.einsum("btqd,btnd->btqn", qs, ks) * scale
+    mask = jnp.arange(N)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btqn,btnd->btqd", p, vs)
+    return o.reshape(B, T * q_per_group, dh)
+
+
+def dense_decode_attention_ref(q, k, v, lengths, q_per_group: int = 1):
+    """Dense decode attention == SHA with the identity head index."""
+    B = q.shape[0]
+    G = k.shape[1]
+    idx = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[None, :], (B, G))
+    return sha_decode_ref(q, k, v, idx, lengths, q_per_group)
+
+
+def sel_gemm_nt_ref(a, w, index, activation: str = "none"):
+    """C = act(a @ gather(w, index).T)  -- the up-projection of Alg. 3.
+
+    a:     [M, K]   activations
+    w:     [D, K]   weights stored *neuron-major* (row per neuron)
+    index: [S] int32 active neuron ids
+    returns [M, S]
+    """
+    ws = jnp.take(w, index, axis=0)  # [S, K]
+    c = a @ ws.T
+    if activation == "relu":
+        c = jax.nn.relu(c)
+    elif activation != "none":
+        raise ValueError(activation)
+    return c
+
+
+def sel_gemm_nn_ref(h, w, index):
+    """C = h @ gather(w, index)  -- the down-projection of Alg. 3.
+
+    h:     [M, S]   sparse hidden activations
+    w:     [D, K]   weights, row per neuron
+    index: [S] int32
+    returns [M, K]
+    """
+    ws = jnp.take(w, index, axis=0)  # [S, K]
+    return h @ ws
+
+
+def sparse_mlp_ref(x, w1, b1, w2, b2, index):
+    """Full selective MLP block (OPT/ReLU): both GEMMs restricted to index."""
+    h = sel_gemm_nt_ref(x, w1, index) + jnp.take(b1, index)[None, :]
+    h = jax.nn.relu(h)
+    return sel_gemm_nn_ref(h, w2, index) + b2[None, :]

@@ -1,0 +1,107 @@
+"""Selective Head/Group FlashAttention, decode step (paper Algorithm 1).
+
+Pallas kernel. Grid = (B, top_k): each program owns one (sequence, selected
+head/group) pair — the TPU analogue of the paper's one-CUDA-threadblock-per
+(batch, head) mapping. The KV stream is tiled in BLK-row blocks (the
+``Bc = M_SRAM / 4d`` tiling of Alg. 1) with the classic online-softmax
+accumulator carried across tiles.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * ``batch_head_index`` is read at program start; on a real TPU this is a
+    scalar-prefetch operand (``PrefetchScalarGridSpec``) so the DMA engine
+    can issue the gathered KV tile addresses ahead of compute. In interpret
+    mode it is a dynamic ref index, which lowers to the same gather.
+  * Inactive heads are never touched: HBM->VMEM traffic scales with
+    top_k / H exactly as the paper's kernel scales SRAM traffic.
+  * GQA: one program computes all q_per_group query heads of the selected
+    group against the group's single KV stream (paper §4.2 "group sparsity").
+
+Kernel runs under ``interpret=True`` — the CPU PJRT client cannot execute
+Mosaic custom-calls; correctness is asserted against ``ref.sha_decode_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK = 32
+
+
+def _sha_kernel(hi_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *, blk, q_per_group):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    g = hi_ref[b, t]            # selected head/group id for this program
+    n = len_ref[b]              # valid KV length for this sequence
+    dh = q_ref.shape[2]
+    N = k_ref.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+
+    # All query heads that share this KV group: rows g*qpg .. (g+1)*qpg.
+    q = q_ref[b, pl.ds(g * q_per_group, q_per_group), :]  # [qpg, dh]
+
+    nblk = N // blk
+
+    def body(j, carry):
+        o_acc, l_acc, m_acc = carry
+        kj = k_ref[b, g, pl.ds(j * blk, blk), :]  # [blk, dh]
+        vj = v_ref[b, g, pl.ds(j * blk, blk), :]
+        s = jnp.dot(q, kj.T) * scale              # [qpg, blk]
+        pos = j * blk + jax.lax.iota(jnp.int32, blk)
+        s = jnp.where((pos < n)[None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_acc, jnp.max(s, axis=1))      # [qpg]
+        p = jnp.exp(s - m_new[:, None])                     # [qpg, blk]
+        alpha = jnp.exp(m_acc - m_new)                      # [qpg]
+        l_new = alpha * l_acc + jnp.sum(p, axis=1)
+        o_new = alpha[:, None] * o_acc + jnp.dot(p, vj)     # [qpg, dh]
+        return o_new, l_new, m_new
+
+    qpg = q_per_group
+    o, l, _ = jax.lax.fori_loop(
+        0, nblk, body,
+        (
+            jnp.zeros((qpg, dh), jnp.float32),
+            jnp.zeros((qpg,), jnp.float32),
+            jnp.full((qpg,), -jnp.inf, jnp.float32),
+        ),
+    )
+    o_ref[b, pl.ds(t * qpg, qpg), :] = o / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("q_per_group", "blk"))
+def sha_decode(q, k, v, head_index, lengths, q_per_group: int = 1,
+               blk: int = DEFAULT_BLK):
+    """Selective head/group flash-attention decode. Shapes as in ref.py.
+
+    Returns [B, top_k * q_per_group, dh]: outputs of the selected heads in
+    head_index order (compact layout; callers scatter into [B, H, dh]).
+    """
+    B, H, dh = q.shape
+    G, N = k.shape[1], k.shape[2]
+    T = head_index.shape[1]
+    if H != G * q_per_group:
+        raise ValueError(f"H={H} != G={G} * q_per_group={q_per_group}")
+    if N % blk != 0:
+        raise ValueError(f"KV length {N} not a multiple of blk={blk}")
+    kernel = functools.partial(_sha_kernel, blk=blk, q_per_group=q_per_group)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B, T * q_per_group, dh), jnp.float32),
+        grid=(B, T),
+        interpret=True,
+    )(head_index, lengths, q, k, v)
+
+
+def dense_decode_attention(q, k, v, lengths, q_per_group: int = 1,
+                           blk: int = DEFAULT_BLK):
+    """Dense baseline through the *same* kernel (identity head index).
+
+    This is the "standard FlashAttention" the paper compares against: the
+    identical inner loop, all G groups active, so kernel-level speedup
+    reflects head sparsity alone (Fig 3b protocol).
+    """
+    B = q.shape[0]
+    G = k.shape[1]
+    idx = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[None, :], (B, G))
+    return sha_decode(q, k, v, idx, lengths, q_per_group, blk)

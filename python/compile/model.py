@@ -1,0 +1,537 @@
+"""L2: decoder-only transformer with Polar-Sparsity decode paths.
+
+Pure-functional JAX. Three entry families, all lowered AOT by aot.py:
+
+  * ``forward_train`` — full causal pass (training + activation collection)
+  * ``prefill``       — prompt pass producing last-position logits + KV cache
+  * ``decode_step``   — one batched decode step; modes:
+        dense   : full MLP + full attention
+        dejavu  : union-router MLP sparsity only (DejaVu-style baseline §5.2)
+        polar   : SHA head/group sparsity (dense layer 0, §3.2) + dynamic
+                  per-layer top-k MLP sparsity for ReLU models (§4.1)
+
+Routers (Appendix C) execute *inside* the graph, so the rust coordinator
+never sees python at serving time.
+
+Weight layout: every per-layer tensor is stacked to [L, ...]; MLP weights
+are neuron-major [L, D_ff, d] (one contiguous row per neuron — Alg. 3).
+KV cache is one tensor [L, 2, B, G, N, dh].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import ref as kref
+from .kernels import sel_gemm, sha_decode
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig, with_routers: bool = True):
+    """Canonical (name, shape) list — the AOT manifest's parameter order."""
+    L, d, H, G, dh, Dff, V, S = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+        cfg.d_head, cfg.d_ff, cfg.vocab, cfg.max_seq,
+    )
+    spec = [
+        ("tok_emb", (V, d)),
+        ("pos_emb", (S, d)),          # zeros for rope models
+        ("ln1_g", (L, d)), ("ln1_b", (L, d)),
+        ("ln2_g", (L, d)), ("ln2_b", (L, d)),
+        ("lnf_g", (d,)), ("lnf_b", (d,)),
+        ("wq", (L, d, H * dh)), ("bq", (L, H * dh)),
+        ("wk", (L, d, G * dh)), ("bk", (L, G * dh)),
+        ("wv", (L, d, G * dh)), ("bv", (L, G * dh)),
+        ("wo", (L, H * dh, d)), ("bo", (L, d)),
+        ("w1", (L, Dff, d)), ("b1", (L, Dff)),
+        ("w2", (L, Dff, d)), ("b2", (L, d)),
+    ]
+    if cfg.mlp == "swiglu":
+        spec.append(("w3", (L, Dff, d)))
+    if with_routers:
+        rh = cfg.mlp_router_hidden
+        if cfg.mlp_sparsity:
+            spec += [
+                ("mr_w1", (L, d, rh)), ("mr_b1", (L, rh)),
+                ("mr_w2", (L, rh, Dff)), ("mr_b2", (L, Dff)),
+            ]
+        spec += [("ar_w", (L, d, cfg.n_groups)), ("ar_b", (L, cfg.n_groups))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, with_routers: bool = True):
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_spec(cfg, with_routers):
+        if name.endswith(("_g",)):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith(("_b", "b1", "b2")) or name.startswith("b"):
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            scale = 0.02
+            if name in ("wo", "w2"):
+                scale = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+            params[name] = (rng.standard_normal(shape) * scale).astype(np.float32)
+    if cfg.pos == "rope":
+        params["pos_emb"] = np.zeros_like(params["pos_emb"])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def rope(x, positions, dh: int):
+    """Rotary embedding. x: [..., n_heads, dh], positions broadcastable to x[..., 0, 0]."""
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _embed(cfg, params, tokens, positions):
+    x = jnp.take(params["tok_emb"], tokens, axis=0)
+    if cfg.pos == "learned":
+        x = x + jnp.take(params["pos_emb"], positions, axis=0)
+    return x
+
+
+def mlp_dense(cfg, params, l, h):
+    """Dense MLP block on normed input h: [..., d] -> [..., d]."""
+    w1, w2 = params["w1"][l], params["w2"][l]
+    b1, b2 = params["b1"][l], params["b2"][l]
+    if cfg.mlp == "relu":
+        a = jax.nn.relu(h @ w1.T + b1)
+    else:
+        a = jax.nn.silu(h @ w1.T) * (h @ params["w3"][l].T)
+    return a @ w2 + b2
+
+
+def mlp_router_logits(params, l, h):
+    """Two-layer bottleneck MLP router (Appendix C)."""
+    z = jax.nn.relu(h @ params["mr_w1"][l] + params["mr_b1"][l])
+    return z @ params["mr_w2"][l] + params["mr_b2"][l]
+
+
+def attn_router_logits(params, l, h):
+    """Single-layer head/group router (§4.2)."""
+    return h @ params["ar_w"][l] + params["ar_b"][l]
+
+
+
+def top_k_desc(x, k: int):
+    """Sort-based top-k (descending) along the last axis.
+
+    Used instead of lax.top_k because jax lowers that one to the TopK HLO
+    custom op with a `largest=` attribute that xla_extension 0.5.1's HLO
+    text parser rejects; sort/gather round-trips cleanly.
+    """
+    idx = jnp.argsort(-x, axis=-1)[..., :k].astype(jnp.int32)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx
+
+def mlp_masked(cfg, params, l, h, mode: str, density: float):
+    """Training-free magnitude baselines for Table 2.
+
+    ``teal``: per-token top-k masking by |activation| (TEAL-style).
+    ``cats``: per-token top-k masking by |gate| only (CATS-style threshold
+    on the silu gate). Accuracy baselines — per-token masks give no batched
+    wall-clock win (the paper's point); they exist to reproduce Table 2.
+    """
+    w1, w2 = params["w1"][l], params["w2"][l]
+    b1, b2 = params["b1"][l], params["b2"][l]
+    k = max(1, int(round(cfg.d_ff * density)))
+    if cfg.mlp == "relu":
+        a = jax.nn.relu(h @ w1.T + b1)
+        mag = jnp.abs(a)
+    else:
+        g = jax.nn.silu(h @ w1.T)
+        a = g * (h @ params["w3"][l].T)
+        mag = jnp.abs(g) if mode == "cats" else jnp.abs(a)
+    kth = top_k_desc(mag, k)[0][:, -1:]
+    a = jnp.where(mag >= kth, a, 0.0)
+    return a @ w2 + b2
+
+
+def mlp_sparse(cfg, params, l, h, top_k: int, impl: str = "xla"):
+    """Selective MLP: batch-union router top-k (§4.1). h: [B, d]."""
+    logits = mlp_router_logits(params, l, h)          # [B, Dff]
+    union = jnp.max(logits, axis=0)                   # union across batch
+    _, idx = top_k_desc(union, top_k)               # neuron index tensor
+    idx = idx.astype(jnp.int32)
+    args = (h, params["w1"][l], params["b1"][l], params["w2"][l],
+            params["b2"][l], idx)
+    if impl == "pallas":
+        return sel_gemm.sparse_mlp(*args)
+    return kref.sparse_mlp_ref(*args)
+
+
+# ---------------------------------------------------------------------------
+# Full causal pass (training / prefill core)
+# ---------------------------------------------------------------------------
+
+
+def _causal_attention(cfg, q, k, v, lengths):
+    """q,k,v: [B,S,{H|G},dh]; returns [B,S,H,dh]. Dense, masked."""
+    B, S = q.shape[0], q.shape[1]
+    G, qpg = cfg.n_groups, cfg.q_per_group
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+    qg = q.reshape(B, S, G, qpg, cfg.d_head)
+    s = jnp.einsum("bigqd,bjgd->bgqij", qg, k) * scale  # [B,G,qpg,S,S]
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    causal = j <= i
+    valid = j[None, :, :] < lengths[:, None, None]
+    mask = causal[None, :, :] & valid
+    s = jnp.where(mask[:, None, None, :, :], s, kref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqij,bjgd->bigqd", p, v)
+    return o.reshape(B, S, cfg.n_heads, cfg.d_head)
+
+
+def forward_full(cfg: ModelConfig, params, tokens, lengths, collect: bool = False):
+    """Full causal forward. tokens: [B,S], lengths: [B].
+
+    Returns (logits [B,S,V], caches (k,v each [L,B,G,S,dh]), aux dict).
+    aux (collect=True): mlp_active [L,B,S,Dff] bool, head_norms [L,B,S,H],
+    attn_cos [L,B,S] (layer-importance score of Fig 2b: cos(x, x+attn(x))).
+    """
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = _embed(cfg, params, tokens, positions)
+    ks, vs = [], []
+    aux = {"mlp_active": [], "head_norms": [], "attn_cos": [],
+           "h_attn": [], "h_mlp": []}
+    for l in range(cfg.n_layers):
+        h = layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = (h @ params["wq"][l] + params["bq"][l]).reshape(B, S, cfg.n_heads, cfg.d_head)
+        k = (h @ params["wk"][l] + params["bk"][l]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ params["wv"][l] + params["bv"][l]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+        if cfg.pos == "rope":
+            q = rope(q, positions, cfg.d_head)
+            k = rope(k, positions, cfg.d_head)
+        o = _causal_attention(cfg, q, k, v, lengths)   # [B,S,H,dh]
+        attn_out = o.reshape(B, S, -1) @ params["wo"][l] + params["bo"][l]
+        if collect:
+            aux["h_attn"].append(h)                                # router input
+            aux["head_norms"].append(jnp.linalg.norm(o, axis=-1))  # [B,S,H]
+            num = jnp.sum(x * (x + attn_out), axis=-1)
+            den = jnp.linalg.norm(x, axis=-1) * jnp.linalg.norm(x + attn_out, axis=-1) + 1e-6
+            aux["attn_cos"].append(num / den)
+        x = x + attn_out
+        h2 = layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        if collect:
+            aux["h_mlp"].append(h2)                                # router input
+            if cfg.mlp == "relu":
+                pre = h2 @ params["w1"][l].T + params["b1"][l]
+                aux["mlp_active"].append(pre > 0)
+        x = x + mlp_dense(cfg, params, l, h2)
+        ks.append(k)
+        vs.append(v)
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T
+    caches = (jnp.stack([k.swapaxes(1, 2) for k in ks]),   # [L,B,G,S,dh]
+              jnp.stack([v.swapaxes(1, 2) for v in vs]))
+    if collect:
+        aux = {k2: jnp.stack(v2) if v2 else None for k2, v2 in aux.items()}
+    return logits, caches, aux
+
+
+def prefill(cfg: ModelConfig, params, tokens, lengths, n_bucket: int):
+    """Prompt pass. tokens [B,S] padded, lengths [B] (1..S).
+
+    Returns (last_logits [B,V], kv [L,2,B,G,N,dh]) with N = n_bucket >= S.
+    """
+    B, S = tokens.shape
+    logits, (k, v), _ = forward_full(cfg, params, tokens, lengths)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1
+    )[:, 0, :]
+    pad = n_bucket - S
+    if pad < 0:
+        raise ValueError(f"prompt bucket {S} > kv bucket {n_bucket}")
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    return last, jnp.stack([k, v], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def _decode_attention(cfg, params, l, x, h, kv_l, lengths, *, sparse: bool,
+                      top_k: int, impl: str):
+    """One attention block in decode. x: residual [B,d], h: normed [B,d].
+
+    kv_l: this layer's cache [2,B,G,N,dh] (weights indexed by absolute l).
+    Returns (attn_out [B,d], k_l, v_l new caches).
+    """
+    B = x.shape[0]
+    G, qpg, dh = cfg.n_groups, cfg.q_per_group, cfg.d_head
+    pos = lengths - 1
+
+    q = (h @ params["wq"][l] + params["bq"][l]).reshape(B, cfg.n_heads, dh)
+    k_new = (h @ params["wk"][l] + params["bk"][l]).reshape(B, G, dh)
+    v_new = (h @ params["wv"][l] + params["bv"][l]).reshape(B, G, dh)
+    if cfg.pos == "rope":
+        q = rope(q, pos, dh)          # [B,H,dh], positions [B]
+        k_new = rope(k_new, pos, dh)  # [B,G,dh]
+
+    def upd(cache_b, new_b, p):
+        return jax.lax.dynamic_update_slice(cache_b, new_b[:, None, :], (0, p, 0))
+
+    k_l = jax.vmap(upd)(kv_l[0], k_new, pos)   # [B,G,N,dh]
+    v_l = jax.vmap(upd)(kv_l[1], v_new, pos)
+
+    if sparse and top_k < G:
+        logits = attn_router_logits(params, l, h)          # [B,G]
+        _, head_idx = top_k_desc(logits, top_k)            # batch head index
+        head_idx = head_idx.astype(jnp.int32)
+        if impl == "pallas":
+            o_sel = sha_decode.sha_decode(q, k_l, v_l, head_idx, lengths, qpg)
+        else:
+            o_sel = kref.sha_decode_ref(q, k_l, v_l, head_idx, lengths, qpg)
+        # scatter the selected heads back into the dense [B, H, dh] layout
+        qidx = (head_idx[:, :, None] * qpg
+                + jnp.arange(qpg, dtype=jnp.int32)[None, None, :]).reshape(B, -1)
+        o = jnp.zeros((B, cfg.n_heads, dh), jnp.float32)
+        o = o.at[jnp.arange(B)[:, None], qidx].set(o_sel)
+    else:
+        if impl == "pallas":
+            o = sha_decode.dense_decode_attention(q, k_l, v_l, lengths, qpg)
+        else:
+            o = kref.dense_decode_attention_ref(q, k_l, v_l, lengths, qpg)
+        o = o.reshape(B, cfg.n_heads, dh)
+
+    attn_out = o.reshape(B, -1) @ params["wo"][l] + params["bo"][l]
+    return attn_out, k_l, v_l
+
+
+def decode_core(cfg: ModelConfig, params, x, lengths, kv, *,
+                layer_begin: int, layer_end: int,
+                mode: str = "dense", density: float = 1.0,
+                mlp_topk: tuple = (), attn_impl: str = "xla",
+                mlp_impl: str = "xla"):
+    """Run decode layers [layer_begin, layer_end) on hidden x [B,d].
+
+    kv holds only this slice's layers: [layer_end-layer_begin, 2, B,G,N,dh]
+    (pipeline-parallel stages own disjoint KV shards). Returns (x, kv_new).
+    """
+    if mode not in ("dense", "dejavu", "polar", "teal", "cats"):
+        raise ValueError(mode)
+    attn_k = max(1, min(cfg.n_groups, round(cfg.n_groups * density)))
+    mlp_sparse_on = mode in ("dejavu", "polar") and cfg.mlp_sparsity and mlp_topk
+
+    ks, vs = [], []
+    for l in range(layer_begin, layer_end):
+        lk = l - layer_begin  # kv-slice index
+        h = layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        sparse_attn = mode == "polar" and l > 0
+        attn_out, k_l, v_l = _decode_attention(
+            cfg, params, l, x, h, kv[lk], lengths,
+            sparse=sparse_attn, top_k=attn_k, impl=attn_impl,
+        )
+        x = x + attn_out
+        ks.append(k_l)
+        vs.append(v_l)
+        h2 = layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        if mlp_sparse_on and mlp_topk[l] < cfg.d_ff:
+            mlp_out = mlp_sparse(cfg, params, l, h2, mlp_topk[l], mlp_impl)
+        elif mode in ("teal", "cats") and density < 1.0:
+            mlp_out = mlp_masked(cfg, params, l, h2, mode, density)
+        else:
+            mlp_out = mlp_dense(cfg, params, l, h2)
+        x = x + mlp_out
+    kv_new = jnp.stack([jnp.stack(ks), jnp.stack(vs)], axis=1)
+    return x, kv_new
+
+
+def final_logits(cfg, params, x):
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mode", "density", "mlp_topk", "attn_impl", "mlp_impl"),
+)
+def decode_step(cfg: ModelConfig, params, tokens, lengths, kv, *,
+                mode: str = "dense", density: float = 1.0,
+                mlp_topk: tuple = (), attn_impl: str = "xla",
+                mlp_impl: str = "xla"):
+    """One decode step. tokens [B] (the *new* token, already appended to the
+    sequence: lengths includes it). kv [L,2,B,G,N,dh]. Returns
+    (logits [B,V], kv_new).
+
+    mode="polar": layer 0 attention dense (Fig 2b), layers >0 at `density`;
+    MLP top-k per layer from `mlp_topk` (calibrated, Algorithm 2) for ReLU
+    models. mode="dejavu": MLP sparsity only. mode="dense": no sparsity.
+    """
+    pos = lengths - 1
+    x = _embed(cfg, params, tokens, pos)
+    x, kv_new = decode_core(
+        cfg, params, x, lengths, kv,
+        layer_begin=0, layer_end=cfg.n_layers, mode=mode, density=density,
+        mlp_topk=mlp_topk, attn_impl=attn_impl, mlp_impl=mlp_impl,
+    )
+    return final_logits(cfg, params, x), kv_new
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel shard entries (Fig 12 substrate)
+#
+# Megatron-style TP simulated on one host: each shard executable computes its
+# slice of heads (attention) or FFN neurons (MLP) for *one* layer, selected
+# dynamically by a scalar layer id (weights are stacked [L,...], so
+# dynamic_index_in_dim keeps shapes static). The rust driver runs shards on
+# worker threads and performs the per-layer all-reduce (partial sums +
+# residual) on the host — the same two-sync-points-per-layer schedule as real
+# Megatron TP. Layer 0 uses the dense attention entry (paper §3.2).
+# ---------------------------------------------------------------------------
+
+
+def _layer_params(params, layer, names):
+    return {n: jax.lax.dynamic_index_in_dim(params[n], layer, 0, keepdims=False)
+            for n in names}
+
+
+def tp_embed(cfg, params, tokens, lengths):
+    """Replicated embedding (cheap): tokens [B] -> x [B,d]."""
+    return _embed(cfg, params, tokens, lengths - 1)
+
+
+def tp_final(cfg, params, x):
+    """Replicated final norm + LM head: x [B,d] -> logits [B,V]."""
+    return final_logits(cfg, params, x)
+
+
+def tp_attn_shard(cfg, params, layer, x, kv_l_shard, lengths, *,
+                  shard: int, n_shards: int, sparse: bool = False,
+                  density: float = 1.0, impl: str = "xla"):
+    """One attention block's shard: heads [shard*Hs, (shard+1)*Hs).
+
+    layer: scalar i32. kv_l_shard: [2,B,Gs,N,dh]. Returns
+    (partial attn_out [B,d] — summed across shards by the host all-reduce,
+     k_shard', v_shard').
+    """
+    B = x.shape[0]
+    H, G, dh = cfg.n_heads, cfg.n_groups, cfg.d_head
+    Hs, Gs = H // n_shards, G // n_shards
+    qpg = cfg.q_per_group
+    hs, gs = shard * Hs * dh, shard * Gs * dh
+    p = _layer_params(params, layer, ["ln1_g", "ln1_b", "wq", "bq", "wk", "bk",
+                                      "wv", "bv", "wo", "bo", "ar_w", "ar_b"])
+    pos = lengths - 1
+    h = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = (h @ p["wq"][:, hs:hs + Hs * dh] + p["bq"][hs:hs + Hs * dh]).reshape(B, Hs, dh)
+    k_new = (h @ p["wk"][:, gs:gs + Gs * dh] + p["bk"][gs:gs + Gs * dh]).reshape(B, Gs, dh)
+    v_new = (h @ p["wv"][:, gs:gs + Gs * dh] + p["bv"][gs:gs + Gs * dh]).reshape(B, Gs, dh)
+    if cfg.pos == "rope":
+        q = rope(q, pos, dh)
+        k_new = rope(k_new, pos, dh)
+
+    def upd(cache_b, new_b, pb):
+        return jax.lax.dynamic_update_slice(cache_b, new_b[:, None, :], (0, pb, 0))
+
+    k_l = jax.vmap(upd)(kv_l_shard[0], k_new, pos)
+    v_l = jax.vmap(upd)(kv_l_shard[1], v_new, pos)
+
+    if sparse:
+        top_k = max(1, min(Gs, round(Gs * density)))
+        logits = h @ p["ar_w"][:, shard * Gs:(shard + 1) * Gs] \
+            + p["ar_b"][shard * Gs:(shard + 1) * Gs]
+        _, head_idx = top_k_desc(logits, top_k)
+        head_idx = head_idx.astype(jnp.int32)
+        o_sel = kref.sha_decode_ref(q, k_l, v_l, head_idx, lengths, qpg)
+        qidx = (head_idx[:, :, None] * qpg
+                + jnp.arange(qpg, dtype=jnp.int32)[None, None, :]).reshape(B, -1)
+        o = jnp.zeros((B, Hs, dh), jnp.float32)
+        o = o.at[jnp.arange(B)[:, None], qidx].set(o_sel)
+    else:
+        o = kref.dense_decode_attention_ref(q, k_l, v_l, lengths, qpg)
+        o = o.reshape(B, Hs, dh)
+
+    partial = o.reshape(B, -1) @ p["wo"][hs:hs + Hs * dh, :]
+    if shard == 0:
+        partial = partial + p["bo"]
+    return partial, k_l, v_l
+
+
+def tp_mlp_shard(cfg, params, layer, x, *, shard: int, n_shards: int,
+                 top_k: int = 0):
+    """One MLP block's shard: neurons [shard*Ds, (shard+1)*Ds).
+
+    Returns partial [B,d] (host all-reduce sums shards). top_k > 0 applies
+    the union router over the shard's local neurons (dynamic MLP sparsity).
+    """
+    Dff = cfg.d_ff
+    Ds = Dff // n_shards
+    lo = shard * Ds
+    names = ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"]
+    if cfg.mlp == "swiglu":
+        names.append("w3")
+    if top_k > 0:
+        names += ["mr_w1", "mr_b1", "mr_w2", "mr_b2"]
+    p = _layer_params(params, layer, names)
+    h = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    w1, w2 = p["w1"][lo:lo + Ds], p["w2"][lo:lo + Ds]
+    b1 = p["b1"][lo:lo + Ds]
+    if top_k > 0 and cfg.mlp == "relu":
+        z = jax.nn.relu(h @ p["mr_w1"] + p["mr_b1"])
+        logits = (z @ p["mr_w2"] + p["mr_b2"])[:, lo:lo + Ds]
+        union = jnp.max(logits, axis=0)
+        k = min(top_k, Ds)
+        _, idx = top_k_desc(union, k)
+        idx = idx.astype(jnp.int32)
+        partial = kref.sparse_mlp_ref(h, w1, b1, w2, jnp.zeros_like(p["b2"]), idx)
+    elif cfg.mlp == "relu":
+        partial = jax.nn.relu(h @ w1.T + b1) @ w2
+    else:
+        w3 = p["w3"][lo:lo + Ds]
+        partial = (jax.nn.silu(h @ w1.T) * (h @ w3.T)) @ w2
+    if shard == 0:
+        partial = partial + p["b2"]
+    return partial
+
+
+# ---------------------------------------------------------------------------
+# Reference generation loop (python-side; used by tests & analysis only)
+# ---------------------------------------------------------------------------
+
+
+def generate_greedy(cfg, params, prompt_ids, max_new: int, n_bucket: int = None,
+                    mode: str = "dense", density: float = 1.0,
+                    mlp_topk: tuple = ()):
+    """Greedy decode of a single sequence (B=1). Returns generated ids."""
+    n_bucket = n_bucket or cfg.max_seq
+    tokens = np.asarray(prompt_ids, np.int32)[None, :]
+    lengths = np.array([tokens.shape[1]], np.int32)
+    logits, kv = prefill(cfg, params, jnp.asarray(tokens), jnp.asarray(lengths), n_bucket)
+    out = []
+    for _ in range(max_new):
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        lengths = lengths + 1
+        if int(lengths[0]) > n_bucket:
+            break
+        logits, kv = decode_step(
+            cfg, params, jnp.array([nxt], jnp.int32), jnp.asarray(lengths), kv,
+            mode=mode, density=density, mlp_topk=mlp_topk,
+        )
+    return out

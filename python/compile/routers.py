@@ -1,0 +1,216 @@
+"""Router training (paper §4.1, §4.2, Appendix C) — build-time only.
+
+Collects supervision from dense forward passes over the corpus, then trains
+
+  * per-layer MLP routers: 2-layer bottleneck FFN, labels = ground-truth
+    neuron activations (pre-ReLU > 0)                        [ReLU models]
+  * per-layer attention head/group routers: 1-layer FFN, labels = top-50 %
+    heads/groups by attention-output L2 norm                 [all models]
+
+as binary classifiers with BCE + Adam (LLM frozen), exactly the Appendix C
+recipe (batch 64, lr 1e-4, early stopping, <=20 epochs). Router weights are
+merged into artifacts/<model>/model.npz; quality metrics go to
+router_metrics.json.
+
+Usage: python -m compile.routers --model opt-tiny --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import CONFIGS, get_config
+from .optim import adam_init, adam_update
+
+COLLECT_SEED = 90210
+COLLECT_BATCHES = 12          # x train_batch x train_seq tokens of supervision
+VAL_FRAC = 0.1
+LABEL_HEAD_FRAC = 0.5         # top-50% by norm == "active" (§4.2)
+
+
+def collect(cfg, params, n_batches: int = COLLECT_BATCHES, seed: int = COLLECT_SEED):
+    """Supervision tensors from dense forward passes.
+
+    Returns dict with, per layer stacked on axis 0:
+      h_attn [L,n,d], h_mlp [L,n,d], head_norms [L,n,H],
+      mlp_active [L,n,Dff] (ReLU models only)
+    """
+    B, T = cfg.train_batch, cfg.train_seq
+    stream = corpus.training_stream(seed, n_tokens=n_batches * B * T + 1)
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    fwd = jax.jit(
+        lambda toks, lens: model.forward_full(cfg, jp, toks, lens, collect=True)[2]
+    )
+    outs = {"h_attn": [], "h_mlp": [], "head_norms": [], "mlp_active": []}
+    for i in range(n_batches):
+        toks = stream[i * B * T : (i + 1) * B * T].reshape(B, T)
+        lens = jnp.full((B,), T, jnp.int32)
+        aux = fwd(jnp.asarray(toks), lens)
+        L = cfg.n_layers
+        outs["h_attn"].append(np.asarray(aux["h_attn"]).reshape(L, -1, cfg.d_model))
+        outs["h_mlp"].append(np.asarray(aux["h_mlp"]).reshape(L, -1, cfg.d_model))
+        outs["head_norms"].append(
+            np.asarray(aux["head_norms"]).reshape(L, -1, cfg.n_heads)
+        )
+        if aux["mlp_active"] is not None:
+            outs["mlp_active"].append(
+                np.asarray(aux["mlp_active"]).reshape(L, -1, cfg.d_ff)
+            )
+    return {
+        k: np.concatenate(v, axis=1) if v else None for k, v in outs.items()
+    }
+
+
+def group_labels(cfg, head_norms):
+    """Binary head/group activity labels from output norms. [L,n,H]->[L,n,G]."""
+    L, n, H = head_norms.shape
+    g = head_norms.reshape(L, n, cfg.n_groups, cfg.q_per_group).mean(axis=-1)
+    k = max(1, int(round(cfg.n_groups * LABEL_HEAD_FRAC)))
+    kth = np.sort(g, axis=-1)[..., -k][..., None]
+    return (g >= kth).astype(np.float32), g
+
+
+@functools.partial(jax.jit, static_argnames=("apply",))
+def _bce_loss(w, x, y, apply):
+    logits = apply(w, x)
+    z = jax.nn.log_sigmoid(logits)
+    zn = jax.nn.log_sigmoid(-logits)
+    return -jnp.mean(y * z + (1 - y) * zn)
+
+
+def _train_binary(apply, w, x, y, *, lr=1e-4, epochs=20, batch=64, seed=0,
+                  patience=3):
+    """Generic BCE trainer with early stopping on a held-out split."""
+    n = x.shape[0]
+    n_val = max(1, int(n * VAL_FRAC))
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    xv, yv = x[perm[:n_val]], y[perm[:n_val]]
+    xt, yt = x[perm[n_val:]], y[perm[n_val:]]
+    w = {k: jnp.asarray(v) for k, v in w.items()}
+    opt = adam_init(w)
+    loss_grad = jax.jit(
+        lambda w_, xb, yb: jax.value_and_grad(
+            lambda ww: _bce_loss(ww, xb, yb, apply)
+        )(w_)
+    )
+    best, best_w, bad = np.inf, w, 0
+    steps = max(1, len(xt) // batch)
+    for ep in range(epochs):
+        order = rng.permutation(len(xt))
+        for s in range(steps):
+            idx = order[s * batch : (s + 1) * batch]
+            _, g = loss_grad(w, jnp.asarray(xt[idx]), jnp.asarray(yt[idx]))
+            w, opt = adam_update(w, g, opt, lr)
+        vl = float(_bce_loss(w, jnp.asarray(xv), jnp.asarray(yv), apply))
+        if vl < best - 1e-5:
+            best, best_w, bad = vl, w, 0
+        else:
+            bad += 1
+            if bad >= patience:
+                break
+    return {k: np.asarray(v) for k, v in best_w.items()}, best
+
+
+def mlp_router_apply(w, x):
+    return jax.nn.relu(x @ w["w1"] + w["b1"]) @ w["w2"] + w["b2"]
+
+
+def attn_router_apply(w, x):
+    return x @ w["w"] + w["b"]
+
+
+def recall_at_k(logits, labels, k):
+    """E[|topk(pred) ∩ active| / |active|] — router quality metric."""
+    order = np.argsort(-logits, axis=-1)[:, :k]
+    hit = np.take_along_axis(labels > 0, order, axis=-1).sum(axis=-1)
+    tot = np.maximum((labels > 0).sum(axis=-1), 1)
+    return float(np.mean(hit / tot))
+
+
+def train_routers(cfg, params, data, seed: int = 0):
+    """Train all routers; returns (router params to merge, metrics)."""
+    rng = np.random.default_rng(seed)
+    d, rh, Dff, G = cfg.d_model, cfg.mlp_router_hidden, cfg.d_ff, cfg.n_groups
+    merged, metrics = {}, {"mlp": [], "attn": []}
+
+    if cfg.mlp_sparsity and data["mlp_active"] is not None:
+        mw1 = np.zeros((cfg.n_layers, d, rh), np.float32)
+        mb1 = np.zeros((cfg.n_layers, rh), np.float32)
+        mw2 = np.zeros((cfg.n_layers, rh, Dff), np.float32)
+        mb2 = np.zeros((cfg.n_layers, Dff), np.float32)
+        for l in range(cfg.n_layers):
+            w0 = {
+                "w1": rng.standard_normal((d, rh)).astype(np.float32) * 0.05,
+                "b1": np.zeros(rh, np.float32),
+                "w2": rng.standard_normal((rh, Dff)).astype(np.float32) * 0.05,
+                "b2": np.zeros(Dff, np.float32),
+            }
+            x, y = data["h_mlp"][l], data["mlp_active"][l].astype(np.float32)
+            w, vl = _train_binary(mlp_router_apply, w0, x, y, seed=seed + l)
+            mw1[l], mb1[l], mw2[l], mb2[l] = w["w1"], w["b1"], w["w2"], w["b2"]
+            logits = np.asarray(mlp_router_apply(
+                {k: jnp.asarray(v) for k, v in w.items()}, jnp.asarray(x)))
+            mean_active = float(y.mean())
+            k = max(1, int(Dff * mean_active))
+            metrics["mlp"].append({
+                "layer": l, "val_bce": vl, "mean_active_frac": mean_active,
+                "recall_at_mean_k": recall_at_k(logits, y, k),
+            })
+        merged.update({"mr_w1": mw1, "mr_b1": mb1, "mr_w2": mw2, "mr_b2": mb2})
+
+    labels, _ = group_labels(cfg, data["head_norms"])
+    aw = np.zeros((cfg.n_layers, d, G), np.float32)
+    ab = np.zeros((cfg.n_layers, G), np.float32)
+    k_half = max(1, int(round(G * LABEL_HEAD_FRAC)))
+    for l in range(cfg.n_layers):
+        w0 = {
+            "w": rng.standard_normal((d, G)).astype(np.float32) * 0.05,
+            "b": np.zeros(G, np.float32),
+        }
+        x, y = data["h_attn"][l], labels[l]
+        w, vl = _train_binary(attn_router_apply, w0, x, y, seed=seed + 100 + l)
+        aw[l], ab[l] = w["w"], w["b"]
+        logits = np.asarray(attn_router_apply(
+            {k2: jnp.asarray(v) for k2, v in w.items()}, jnp.asarray(x)))
+        metrics["attn"].append({
+            "layer": l, "val_bce": vl,
+            "recall_at_half": recall_at_k(logits, y, k_half),
+        })
+    merged.update({"ar_w": aw, "ar_b": ab})
+    return merged, metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    names = list(CONFIGS) if args.model == "all" else [args.model]
+    for name in names:
+        cfg = get_config(name)
+        path = os.path.join(args.out, name, "model.npz")
+        params = dict(np.load(path))
+        data = collect(cfg, params)
+        routers, metrics = train_routers(cfg, params, data)
+        np.savez(path, **params, **routers)
+        with open(os.path.join(args.out, name, "router_metrics.json"), "w") as f:
+            json.dump(metrics, f, indent=1)
+        print(f"[{name}] routers trained:",
+              {k: round(m[-1].get("recall_at_half", m[-1].get("recall_at_mean_k", 0)), 3)
+               for k, m in metrics.items() if m})
+        # persist supervision features for calibrate.py / analysis.py reuse
+        np.savez_compressed(
+            os.path.join(args.out, name, "supervision.npz"),
+            **{k: v for k, v in data.items() if v is not None},
+        )
+
+
+if __name__ == "__main__":
+    main()

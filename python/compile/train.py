@@ -1,0 +1,124 @@
+"""Pretrain the model zoo on the synthetic corpus (build-time only).
+
+Usage: python -m compile.train --model opt-tiny [--out ../artifacts]
+Writes artifacts/<model>/model.npz (weights, no routers yet) and
+artifacts/<model>/train_log.json (loss curve for EXPERIMENTS.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+from .configs import CONFIGS, PAD, get_config
+from .optim import adam_init, adam_update
+
+
+def batches(cfg, seed: int, n_steps: int, task_frac: float = 0.7):
+    """Packed next-token training batches [B, T+1] from the corpus stream."""
+    B, T = cfg.train_batch, cfg.train_seq
+    stream = corpus.training_stream(
+        seed, n_tokens=n_steps * B * (T + 1) + 1, task_frac=task_frac
+    )
+    per = B * (T + 1)
+    for step in range(n_steps):
+        chunk = stream[step * per : (step + 1) * per]
+        yield chunk.reshape(B, T + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def loss_fn(cfg, params, batch):
+    """Next-token cross-entropy over the packed stream (no pads)."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    lengths = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    logits, _, _ = model.forward_full(cfg, params, tokens, lengths)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = targets != PAD
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(cfg, params, opt_state, batch, lr: float):
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+    params, opt_state = adam_update(params, grads, opt_state, lr)
+    return params, opt_state, loss
+
+
+def train(cfg, seed: int = 0, log_every: int = 25, init=None, steps=None,
+          lr=None, task_frac: float = 0.7):
+    if init is None:
+        params = {k: jnp.asarray(v) for k, v in
+                  model.init_params(cfg, seed, with_routers=False).items()}
+    else:
+        params = {k: jnp.asarray(v) for k, v in init.items()
+                  if not k.startswith(("mr_", "ar_"))}
+    steps = steps or cfg.train_steps
+    lr = lr or cfg.lr
+    opt_state = adam_init(params)
+    log = []
+    t0 = time.time()
+    for step, batch in enumerate(batches(cfg, seed + 7, steps, task_frac)):
+        params, opt_state, loss = train_step(
+            cfg, params, opt_state, jnp.asarray(batch), lr
+        )
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(loss),
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"[{cfg.name}] step {step:4d} loss {float(loss):.4f}")
+    return {k: np.asarray(v) for k, v in params.items()}, log
+
+
+def heldout_ppl(cfg, params, n_tokens: int = 2048):
+    ids = corpus.heldout_text_tokens(n_tokens + 1)
+    T = cfg.train_seq
+    n = (len(ids) - 1) // T
+    total, count = 0.0, 0
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    for i in range(n):
+        batch = ids[i * T : (i + 1) * T + 1][None, :]
+        total += float(loss_fn(cfg, jp, jnp.asarray(batch))) * T
+        count += T
+    return float(np.exp(total / max(count, 1)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="warm-start from the existing model.npz")
+    ap.add_argument("--extra-steps", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=0.0)
+    ap.add_argument("--task-frac", type=float, default=0.7)
+    args = ap.parse_args()
+
+    names = list(CONFIGS) if args.model == "all" else [args.model]
+    for name in names:
+        cfg = get_config(name)
+        out_dir = os.path.join(args.out, name)
+        os.makedirs(out_dir, exist_ok=True)
+        init = None
+        if args.resume:
+            init = dict(np.load(os.path.join(out_dir, "model.npz")))
+        params, log = train(
+            cfg, args.seed + (1 if args.resume else 0), init=init,
+            steps=args.extra_steps or None, lr=args.lr or None,
+            task_frac=args.task_frac,
+        )
+        ppl = heldout_ppl(cfg, params)
+        print(f"[{name}] held-out text ppl: {ppl:.2f}")
+        np.savez(os.path.join(out_dir, "model.npz"), **params)
+        with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+            json.dump({"model": name, "heldout_ppl": ppl, "log": log}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Prototype: selective-head flash-attention decode kernel (Pallas, interpret)
+lowered to HLO text, to validate the python->rust interchange early.
+
+Run: cd python && python proto_sha.py /tmp/sha_hlo.txt
+Then: cargo run --bin proto_load /tmp/sha_hlo.txt
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+from jax.experimental import pallas as pl
+
+
+def sha_decode_kernel(hi_ref, len_ref, q_ref, k_ref, v_ref, o_ref):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    h = hi_ref[b, t]
+    n = len_ref[b]
+    q = pl.load(q_ref, (b, h, slice(None)))  # [dh]
+    N = k_ref.shape[2]
+    dh = q_ref.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+
+    BLK = 32
+    nblk = N // BLK
+
+    def body(j, carry):
+        o_acc, l_acc, m_acc = carry
+        kj = pl.load(k_ref, (b, h, pl.ds(j * BLK, BLK), slice(None)))  # [BLK, dh]
+        vj = pl.load(v_ref, (b, h, pl.ds(j * BLK, BLK), slice(None)))
+        s = jnp.dot(kj, q) * scale  # [BLK]
+        pos = j * BLK + jax.lax.iota(jnp.int32, BLK)
+        s = jnp.where(pos < n, s, -jnp.inf)
+        m_new = jnp.maximum(m_acc, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_acc - m_new)
+        l_new = alpha * l_acc + jnp.sum(p)
+        o_new = alpha * o_acc + jnp.dot(p, vj)
+        return o_new, l_new, m_new
+
+    o, l, m = jax.lax.fori_loop(
+        0, nblk, body,
+        (jnp.zeros((dh,), jnp.float32), jnp.float32(0.0), jnp.float32(-1e30)),
+    )
+    pl.store(o_ref, (b, t, slice(None)), o / l)
+
+
+def sha_decode(q, k, v, head_idx, lengths):
+    B, H, dh = q.shape
+    topk = head_idx.shape[1]
+    return pl.pallas_call(
+        sha_decode_kernel,
+        out_shape=jax.ShapeDtypeStruct((B, topk, dh), jnp.float32),
+        grid=(B, topk),
+        interpret=True,
+    )(head_idx, lengths, q, k, v)
+
+
+def ref_sha(q, k, v, head_idx, lengths):
+    B, H, dh = q.shape
+    N = k.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    qs = jnp.take_along_axis(q, head_idx[:, :, None], axis=1)  # [B,topk,dh]
+    ks = jnp.take_along_axis(k, head_idx[:, :, None, None], axis=1)
+    vs = jnp.take_along_axis(v, head_idx[:, :, None, None], axis=1)
+    s = jnp.einsum("btd,btnd->btn", qs, ks) * scale
+    mask = jnp.arange(N)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("btn,btnd->btd", p, vs)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    B, H, N, dh, topk = 2, 4, 64, 16, 2
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((B, H, dh), dtype=np.float32)
+    k = rng.standard_normal((B, H, N, dh), dtype=np.float32)
+    v = rng.standard_normal((B, H, N, dh), dtype=np.float32)
+    head_idx = np.array([[0, 2], [1, 3]], dtype=np.int32)
+    lengths = np.array([40, 64], dtype=np.int32)
+
+    out = sha_decode(q, k, v, head_idx, lengths)
+    ref = ref_sha(q, k, v, head_idx, lengths)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    print("pallas vs ref OK", np.asarray(out).ravel()[:4])
+
+    fn = lambda hi, ln, q, k, v: (sha_decode(q, k, v, hi, ln),)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((B, topk), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, N, dh), jnp.float32),
+        jax.ShapeDtypeStruct((B, H, N, dh), jnp.float32),
+    )
+    text = to_hlo_text(lowered)
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/sha_hlo.txt"
+    with open(out_path, "w") as f:
+        f.write(text)
+    np.save("/tmp/sha_expected.npy", np.asarray(out))
+    np.save("/tmp/sha_q.npy", q)
+    np.save("/tmp/sha_k.npy", k)
+    np.save("/tmp/sha_v.npy", v)
+    print(f"wrote {len(text)} chars to {out_path}")
+
+
+if __name__ == "__main__":
+    main()

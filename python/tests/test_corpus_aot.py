@@ -1,0 +1,106 @@
+"""Corpus determinism + task-suite semantics + (if built) artifact
+manifest integrity."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.configs import BOS, CONFIGS, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_stream_deterministic_and_in_vocab():
+    a = corpus.training_stream(1, 5000)
+    b = corpus.training_stream(1, 5000)
+    np.testing.assert_array_equal(a, b)
+    assert a[0] == BOS
+    assert a.max() < 259 and a.min() >= 0
+
+
+def test_task_answers_are_correct_by_construction():
+    rng = np.random.default_rng(0)
+    for fam in corpus.TASK_FAMILIES:
+        for _ in range(25):
+            p, a = corpus._sample(rng, fam)
+            assert p.endswith("="), (fam, p)
+            if fam == "copy":
+                assert a == p[len("copy:"):-1]
+            elif fam == "rev":
+                assert a == p[len("rev:"):-1][::-1]
+            elif fam == "add":
+                x, y = p[len("add:"):-1].split("+")
+                assert int(a) == int(x) + int(y)
+            elif fam == "srt":
+                assert a == "".join(sorted(p[len("srt:"):-1]))
+            elif fam == "cmp":
+                x, y = p[len("cmp:"):-1].split(",")
+                assert a == ("<" if int(x) < int(y) else ">")
+            elif fam == "succ":
+                c = p[len("succ:"):-1]
+                assert ord(a) == ord(c) + 1
+            elif fam == "maj":
+                s = p[len("maj:"):-1]
+                assert s.count(a) > len(s) / 2
+            elif fam == "kv":
+                body, q = p[len("kv:"):-1].split("?")
+                pairs = dict((x[0], x[1]) for x in body.split(" "))
+                assert pairs[q] == a
+            elif fam == "pat":
+                s = p[len("pat:"):-2]  # strip "*="
+                assert a * (len(s) // len(a)) == s
+
+
+def test_eval_suite_fixed_and_balanced():
+    a = corpus.eval_suite(seed=1234, per_family=5)
+    b = corpus.eval_suite(seed=1234, per_family=5)
+    assert a == b
+    fams = [x["family"] for x in a]
+    for f in corpus.TASK_FAMILIES:
+        assert fams.count(f) == 5
+
+
+def test_encode_decode_roundtrip():
+    s = "kv:a1 b2?a=1\n"
+    assert corpus.decode(corpus.encode(s)) == s
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "opt-tiny", "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_manifest_matches_weights(name):
+    mdir = os.path.join(ART, name)
+    if not os.path.exists(os.path.join(mdir, "manifest.json")):
+        pytest.skip(f"{name} not built")
+    man = json.load(open(os.path.join(mdir, "manifest.json")))
+    weights = dict(np.load(os.path.join(mdir, "model.npz")))
+    assert [p["name"] for p in man["params"]] == sorted(weights)
+    for p in man["params"]:
+        assert list(weights[p["name"]].shape) == p["shape"], p["name"]
+    cfg = get_config(name)
+    assert man["config"]["d_model"] == cfg.d_model
+    assert man["config"]["n_layers"] == cfg.n_layers
+    # every entry's HLO file exists and is non-trivial
+    for e in man["entries"]:
+        path = os.path.join(mdir, e["file"])
+        assert os.path.exists(path), e["name"]
+        assert os.path.getsize(path) > 500, e["name"]
+
+
+@needs_artifacts
+def test_decode_entry_coverage_opt_tiny():
+    man = json.load(open(os.path.join(ART, "opt-tiny", "manifest.json")))
+    names = {e["name"] for e in man["entries"]}
+    for b in man["buckets"]["batch"]:
+        assert f"prefill_b{b}" in names
+        for n in man["buckets"]["seq"]:
+            for tag in ("dense", "dejavu", "polar_d0500"):
+                assert f"decode_{tag}_b{b}_n{n}" in names, (tag, b, n)

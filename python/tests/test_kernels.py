@@ -1,0 +1,182 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/top-k; these are the core numeric signal for the
+AOT path (everything the rust runtime executes lowers through these ops).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sel_gemm, sha_decode
+
+RTOL, ATOL = 2e-4, 2e-4
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Selective Head Attention (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    g=st.sampled_from([2, 4, 8]),
+    nblk=st.integers(1, 4),
+    dh=st.sampled_from([8, 16, 24]),
+    data=st.data(),
+)
+def test_sha_mha_matches_ref(b, g, nblk, dh, data):
+    n = nblk * 32
+    t = data.draw(st.integers(1, g))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    q = rand(rng, b, g, dh)
+    k = rand(rng, b, g, n, dh)
+    v = rand(rng, b, g, n, dh)
+    hi = np.stack([
+        rng.choice(g, t, replace=False).astype(np.int32) for _ in range(b)
+    ])
+    lens = rng.integers(1, n + 1, b).astype(np.int32)
+    out = sha_decode.sha_decode(q, k, v, hi, lens)
+    want = ref.sha_decode_ref(q, k, v, hi, lens)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    g=st.sampled_from([2, 4]),
+    qpg=st.sampled_from([2, 4]),
+    data=st.data(),
+)
+def test_sha_gqa_matches_ref(b, g, qpg, data):
+    n, dh = 64, 16
+    t = data.draw(st.integers(1, g))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    q = rand(rng, b, g * qpg, dh)
+    k = rand(rng, b, g, n, dh)
+    v = rand(rng, b, g, n, dh)
+    hi = np.stack([
+        rng.choice(g, t, replace=False).astype(np.int32) for _ in range(b)
+    ])
+    lens = rng.integers(1, n + 1, b).astype(np.int32)
+    out = sha_decode.sha_decode(q, k, v, hi, lens, q_per_group=qpg)
+    want = ref.sha_decode_ref(q, k, v, hi, lens, q_per_group=qpg)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_sha_dense_equals_identity_index():
+    rng = np.random.default_rng(0)
+    q, k, v = rand(rng, 2, 4, 16), rand(rng, 2, 4, 64, 16), rand(rng, 2, 4, 64, 16)
+    lens = np.array([30, 64], np.int32)
+    a = sha_decode.dense_decode_attention(q, k, v, lens)
+    b = ref.dense_decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+
+def test_sha_masks_beyond_length():
+    """Values past `lengths` must not influence the output."""
+    rng = np.random.default_rng(1)
+    q, k, v = rand(rng, 1, 2, 16), rand(rng, 1, 2, 64, 16), rand(rng, 1, 2, 64, 16)
+    lens = np.array([17], np.int32)
+    hi = np.array([[0, 1]], np.int32)
+    base = np.asarray(sha_decode.sha_decode(q, k, v, hi, lens))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 17:, :] = 1e6
+    v2[:, :, 17:, :] = -1e6
+    pert = np.asarray(sha_decode.sha_decode(q, k2, v2, hi, lens))
+    np.testing.assert_allclose(base, pert, rtol=1e-5, atol=1e-5)
+
+
+def test_sha_rejects_bad_shapes():
+    rng = np.random.default_rng(2)
+    q, k, v = rand(rng, 1, 4, 16), rand(rng, 1, 2, 64, 16), rand(rng, 1, 2, 64, 16)
+    with pytest.raises(ValueError):
+        sha_decode.sha_decode(q, k, v, np.zeros((1, 1), np.int32),
+                              np.array([64], np.int32))  # H != G*qpg
+    with pytest.raises(ValueError):
+        sha_decode.sha_decode(
+            rand(rng, 1, 2, 16), rand(rng, 1, 2, 60, 16), rand(rng, 1, 2, 60, 16),
+            np.zeros((1, 1), np.int32), np.array([60], np.int32),
+        )  # N not multiple of blk
+
+
+# ---------------------------------------------------------------------------
+# Sparse fused GEMM (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 16, 32]),
+    kdim=st.sampled_from([32, 128]),
+    dcap=st.sampled_from([128, 512]),
+    sblk=st.integers(1, 4),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31),
+)
+def test_sel_gemm_nt_matches_ref(m, kdim, dcap, sblk, act, seed):
+    s = sblk * 32
+    if s > dcap:
+        s = dcap
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, kdim)
+    w = rand(rng, dcap, kdim)
+    idx = rng.choice(dcap, s, replace=False).astype(np.int32)
+    out = sel_gemm.sel_gemm_nt(a, w, idx, activation=act)
+    want = ref.sel_gemm_nt_ref(a, w, idx, activation=act)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 16]),
+    sblk=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_sel_gemm_nn_matches_ref(m, sblk, seed):
+    s, dcap, kdim = sblk * 32, 256, 64
+    rng = np.random.default_rng(seed)
+    h = rand(rng, m, s)
+    w = rand(rng, dcap, kdim)
+    idx = rng.choice(dcap, s, replace=False).astype(np.int32)
+    out = sel_gemm.sel_gemm_nn(h, w, idx)
+    want = ref.sel_gemm_nn_ref(h, w, idx)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_sparse_mlp_full_index_equals_dense():
+    """With every neuron selected, the sparse MLP is the dense MLP."""
+    rng = np.random.default_rng(3)
+    m, d, dff = 4, 32, 64
+    x = rand(rng, m, d)
+    w1, w2 = rand(rng, dff, d), rand(rng, dff, d)
+    b1, b2 = rand(rng, dff), rand(rng, d)
+    idx = np.arange(dff, dtype=np.int32)
+    sparse = np.asarray(sel_gemm.sparse_mlp(x, w1, b1, w2, b2, idx))
+    dense = np.maximum(x @ w1.T + b1, 0.0) @ w2 + b2
+    np.testing.assert_allclose(sparse, dense, rtol=RTOL, atol=ATOL)
+
+
+def test_sparse_mlp_masks_unselected_neurons():
+    """Unselected neurons contribute nothing (the paper's exact-sparsity
+    property: selective != approximate for the selected set)."""
+    rng = np.random.default_rng(4)
+    m, d, dff, s = 2, 16, 64, 32
+    x = rand(rng, m, d)
+    w1, w2 = rand(rng, dff, d), rand(rng, dff, d)
+    b1, b2 = rand(rng, dff), rand(rng, d)
+    idx = rng.choice(dff, s, replace=False).astype(np.int32)
+    out = np.asarray(ref.sparse_mlp_ref(x, w1, b1, w2, b2, idx))
+    # corrupt the unselected rows: output must not change
+    mask = np.ones(dff, bool)
+    mask[idx] = False
+    w1c, w2c = w1.copy(), w2.copy()
+    w1c[mask] = 1e9
+    w2c[mask] = -1e9
+    out2 = np.asarray(ref.sparse_mlp_ref(x, w1c, b1, w2c, b2, idx))
+    np.testing.assert_allclose(out, out2)

@@ -1,0 +1,201 @@
+"""L2 correctness: prefill/decode parity, sparse-mode semantics, TP/PP
+decompositions, and the AOT lowering contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from dataclasses import replace
+
+from compile import model
+from compile.configs import get_config
+
+RTOL, ATOL = 1e-3, 1e-3
+
+
+def tiny(name="opt-tiny", **kw):
+    return replace(get_config(name), **kw) if kw else get_config(name)
+
+
+@pytest.fixture(scope="module", params=["opt-tiny", "llama-gqa"])
+def setup(request):
+    cfg = get_config(request.param)
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=3).items()}
+    return cfg, params
+
+
+def test_prefill_matches_full_forward(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    B, S = 2, 12
+    toks = rng.integers(0, 250, (B, S)).astype(np.int32)
+    lens = np.array([S, S - 3], np.int32)
+    logits_full, _, _ = model.forward_full(cfg, params, jnp.asarray(toks), jnp.asarray(lens))
+    last, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens), 64)
+    for b in range(B):
+        np.testing.assert_allclose(
+            last[b], logits_full[b, lens[b] - 1], rtol=RTOL, atol=ATOL
+        )
+    assert kv.shape == (cfg.n_layers, 2, B, cfg.n_kv_heads, 64, cfg.d_head)
+
+
+def test_decode_chain_matches_full_forward(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    B, S, extra = 2, 8, 4
+    toks = rng.integers(0, 250, (B, S + extra)).astype(np.int32)
+    full_lens = np.array([S + extra, S + extra], np.int32)
+    logits_full, _, _ = model.forward_full(
+        cfg, params, jnp.asarray(toks), jnp.asarray(full_lens)
+    )
+    lens = np.array([S, S], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks[:, :S]), jnp.asarray(lens), 64)
+    for step in range(extra):
+        new = toks[:, S + step].astype(np.int32)
+        lens = lens + 1
+        logits, kv = model.decode_step(
+            cfg, params, jnp.asarray(new), jnp.asarray(lens), kv, mode="dense"
+        )
+        for b in range(B):
+            np.testing.assert_allclose(
+                logits[b], logits_full[b, lens[b] - 1], rtol=RTOL, atol=ATOL
+            )
+
+
+def test_polar_full_density_equals_dense(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    B = 2
+    toks = rng.integers(0, 250, (B, 6)).astype(np.int32)
+    lens0 = np.array([6, 6], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), 64)
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    a, _ = model.decode_step(cfg, params, new, lens, kv, mode="dense")
+    b, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar", density=1.0)
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+
+def test_polar_layer0_attention_stays_dense():
+    """Zeroing layer-0 attention-router weights must not change polar
+    output (layer 0 is always dense, §3.2)."""
+    cfg = get_config("opt-tiny")
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=5).items()}
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 250, (1, 6)).astype(np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray([6]), 64)
+    new, lens = jnp.asarray([9], dtype=jnp.int32), jnp.asarray([7], dtype=jnp.int32)
+    a, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar", density=0.5)
+    p2 = dict(params)
+    arw = np.asarray(p2["ar_w"]).copy()
+    arw[0] = 1e9  # would reorder layer-0 head selection if it were used
+    p2["ar_w"] = jnp.asarray(arw)
+    b, _ = model.decode_step(cfg, p2, new, lens, kv, mode="polar", density=0.5)
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+
+def test_dejavu_ignores_attention_router():
+    cfg = get_config("opt-tiny")
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=6).items()}
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 250, (1, 6)).astype(np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray([6]), 64)
+    new, lens = jnp.asarray([9], dtype=jnp.int32), jnp.asarray([7], dtype=jnp.int32)
+    topk = (64,) * cfg.n_layers
+    a, _ = model.decode_step(cfg, params, new, lens, kv, mode="dejavu", mlp_topk=topk)
+    p2 = dict(params)
+    p2["ar_w"] = jnp.asarray(np.asarray(p2["ar_w"]) * 0 + 123.0)
+    b, _ = model.decode_step(cfg, p2, new, lens, kv, mode="dejavu", mlp_topk=topk)
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+
+def test_teal_cats_modes_run_and_differ_from_dense():
+    cfg = get_config("llama-tiny")
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=7).items()}
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, 250, (1, 6)).astype(np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray([6]), 64)
+    new, lens = jnp.asarray([9], dtype=jnp.int32), jnp.asarray([7], dtype=jnp.int32)
+    dense, _ = model.decode_step(cfg, params, new, lens, kv, mode="dense")
+    for m in ("teal", "cats"):
+        out, _ = model.decode_step(cfg, params, new, lens, kv, mode=m, density=0.25)
+        assert np.isfinite(np.asarray(out)).all()
+        assert not np.allclose(np.asarray(out), np.asarray(dense), atol=1e-5), m
+
+
+def test_pp_stages_compose_to_decode_step(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    toks = rng.integers(0, 250, (2, 6)).astype(np.int32)
+    lens0 = np.array([6, 6], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), 64)
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    want, kv_want = model.decode_step(cfg, params, new, lens, kv, mode="dense")
+    lh = cfg.n_layers // 2
+    x = model._embed(cfg, params, new, lens - 1)
+    x, kv0 = model.decode_core(cfg, params, x, lens, kv[:lh], layer_begin=0, layer_end=lh)
+    x, kv1 = model.decode_core(cfg, params, x, lens, kv[lh:], layer_begin=lh,
+                               layer_end=cfg.n_layers)
+    got = model.final_logits(cfg, params, x)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(kv0), np.asarray(kv1)]), np.asarray(kv_want),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+def test_tp_shards_compose_to_decode_step():
+    cfg = get_config("opt-tiny")
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=8).items()}
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 250, (2, 6)).astype(np.int32)
+    lens0 = np.array([6, 6], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), 64)
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    want, _ = model.decode_step(cfg, params, new, lens, kv, mode="dense")
+
+    n_shards = 2
+    gs = cfg.n_kv_heads // n_shards
+    x = model.tp_embed(cfg, params, new, lens)
+    for l in range(cfg.n_layers):
+        li = jnp.int32(l)
+        partials = []
+        for s in range(n_shards):
+            kv_shard = kv[l, :, :, s * gs:(s + 1) * gs]
+            p, _, _ = model.tp_attn_shard(cfg, params, li, x, kv_shard, lens,
+                                          shard=s, n_shards=n_shards)
+            partials.append(p)
+        x = x + sum(partials)
+        partials = [
+            model.tp_mlp_shard(cfg, params, li, x, shard=s, n_shards=n_shards)
+            for s in range(n_shards)
+        ]
+        x = x + sum(partials)
+    got = model.tp_final(cfg, params, x)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_aot_lowering_keeps_all_params():
+    """The manifest calling convention: every weight appears as an entry
+    parameter even when unused (keep_unused=True)."""
+    from jax._src.lib import xla_client as xc
+
+    cfg = get_config("opt-tiny")
+    params = model.init_params(cfg, seed=0)
+    avals = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in params.items()}
+    fn = lambda toks, lens, params: (model._embed(cfg, params, toks, lens - 1),)
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+        avals,
+    )
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False, return_tuple=True
+    )
+    txt = comp.as_hlo_text()
+    entry = txt[txt.index("ENTRY"):]
+    body = entry[: entry.index("\n}")]
+    n_params = body.count("parameter(")
+    assert n_params == 2 + len(params), f"{n_params} vs {2 + len(params)}"

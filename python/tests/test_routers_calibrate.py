@@ -1,0 +1,98 @@
+"""Router training + Algorithm 2 calibration invariants (micro model so
+the whole path runs in seconds)."""
+
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from compile import calibrate, corpus, model, routers, train
+from compile.configs import get_config
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = replace(get_config("opt-tiny"), train_steps=6, train_batch=4, train_seq=48)
+    params, _ = train.train(cfg)
+    data = routers.collect(cfg, params, n_batches=2)
+    return cfg, params, data
+
+
+def test_collect_shapes(micro):
+    cfg, _, data = micro
+    n = 2 * cfg.train_batch * cfg.train_seq
+    assert data["h_mlp"].shape == (cfg.n_layers, n, cfg.d_model)
+    assert data["h_attn"].shape == (cfg.n_layers, n, cfg.d_model)
+    assert data["head_norms"].shape == (cfg.n_layers, n, cfg.n_heads)
+    assert data["mlp_active"].shape == (cfg.n_layers, n, cfg.d_ff)
+    assert data["mlp_active"].dtype == bool
+    # ReLU sparsity exists: not everything active, not everything dead
+    frac = data["mlp_active"].mean()
+    assert 0.01 < frac < 0.99
+
+
+def test_group_labels_pick_top_half(micro):
+    cfg, _, data = micro
+    labels, norms = routers.group_labels(cfg, data["head_norms"])
+    k = cfg.n_groups // 2
+    assert labels.shape == (cfg.n_layers, data["head_norms"].shape[1], cfg.n_groups)
+    per_token = labels.sum(axis=-1)
+    assert (per_token >= k).all()  # ties can only add
+    # labelled groups have norms >= the unlabelled ones
+    l, i = 0, 0
+    row_norm, row_lab = norms[l, i], labels[l, i]
+    assert row_norm[row_lab > 0].min() >= row_norm[row_lab == 0].max() - 1e-6
+
+
+def test_router_training_beats_chance(micro):
+    cfg, params, data = micro
+    merged, metrics = routers.train_routers(cfg, params, data)
+    assert set(merged) >= {"ar_w", "ar_b", "mr_w1", "mr_b1", "mr_w2", "mr_b2"}
+    # attention router should recall clearly above the 50% random baseline
+    for m in metrics["attn"]:
+        assert m["recall_at_half"] > 0.55, m
+    for m in metrics["mlp"]:
+        assert m["recall_at_mean_k"] > 0.55, m
+
+
+def test_calibration_monotone_in_recall_and_batch(micro):
+    cfg, params, data = micro
+    merged, _ = routers.train_routers(cfg, params, data)
+    full = {**params, **merged}
+    sup = {k: v for k, v in data.items() if v is not None}
+    out = calibrate.calibrate(cfg, full, sup)
+    t = out["recall_targets"]
+    for b in ("1", "4"):
+        ks_lo = t["0.9"][b]
+        ks_hi = t["0.99"][b]
+        assert all(h >= l for h, l in zip(ks_hi, ks_lo)), (ks_lo, ks_hi)
+    # union grows with batch -> calibrated k grows with batch (Fig 1b)
+    for target in ("0.9", "0.99"):
+        k1 = sum(t[target]["1"])
+        k16 = sum(t[target]["16"])
+        assert k16 >= k1, (k1, k16)
+    # union_stats fraction grows with batch too
+    assert np.mean(out["union_stats"]["16"]) >= np.mean(out["union_stats"]["1"])
+
+
+def test_greedy_topk_meets_target():
+    curve = np.linspace(0.0, 1.0, 512)  # recall grows linearly in k
+    k = calibrate.greedy_topk(curve, 0.9)
+    assert curve[k - 1] >= 0.9
+    assert k <= 512
+    # never exceeds Dff even for unreachable targets
+    assert calibrate.greedy_topk(np.zeros(128), 0.99) == 128
+
+
+def test_union_recall_curve_perfect_router():
+    """A router whose logits equal the ground truth has recall 1 at k=|union|."""
+    rng = np.random.default_rng(0)
+    n, dff = 64, 128
+    active = rng.random((n, dff)) < 0.2
+    logits = active.astype(np.float64) + rng.random((n, dff)) * 1e-3
+    batch_idx = rng.integers(0, n, size=(8, 4))
+    curve, frac = calibrate.union_recall_curve(logits, active, batch_idx)
+    assert 0.0 < frac < 1.0
+    # at k = Dff recall is exactly 1
+    assert abs(curve[-1] - 1.0) < 1e-9
+    # monotone
+    assert (np.diff(curve) >= -1e-12).all()

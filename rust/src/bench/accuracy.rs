@@ -1,0 +1,127 @@
+//! Zero-shot task-suite evaluation through the compiled engine — the
+//! lm-eval-harness analogue behind Fig 4, Table 1 and Table 2.
+//!
+//! Protocol: B=1 greedy decoding at the N=128 bucket (accuracy is
+//! batch-size-independent for head sparsity — §4.2; the MLP union effect is
+//! covered by the throughput benches). Every (model, mode, density) uses
+//! the same fixed eval set written at artifact-build time.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::kv::pad_n;
+use crate::coordinator::Mode;
+use crate::runtime::{Engine, KvCache, Manifest, Tensor};
+use crate::tokenizer::Tokenizer;
+use crate::workload::tasks::{load_suite, score, SuiteScore, TaskItem};
+
+pub const EVAL_N: usize = 128;
+
+/// Mode tag for accuracy entries (supports teal/cats baselines too).
+pub fn accuracy_tag(mode: Mode) -> String {
+    mode.tag()
+}
+
+/// Greedy-generate a continuation for one prompt at B=1.
+pub fn generate_one(
+    engine: &Engine,
+    tag: &str,
+    prompt_ids: &[i32],
+    max_new: usize,
+) -> Result<Vec<i32>> {
+    let m = engine.exec.manifest();
+    let s_len = m.prefill_len;
+    if prompt_ids.is_empty() {
+        bail!("empty prompt");
+    }
+    let plen = prompt_ids.len().min(s_len);
+    let mut toks = vec![crate::tokenizer::PAD; s_len];
+    toks[..plen].copy_from_slice(&prompt_ids[..plen]);
+    let out = engine.prefill(
+        &Tensor::i32(toks, vec![1, s_len])?,
+        &Tensor::i32(vec![plen as i32], vec![1])?,
+    )?;
+    // promote prefill KV (n=prefill bucket) to the eval bucket
+    let kvt = out.kv.to_tensor()?;
+    let mut kv = KvCache::from_tensor(&pad_n(&kvt, EVAL_N)?, 1, EVAL_N)?;
+    let mut logits = out.logits;
+    let mut ids = Vec::with_capacity(max_new);
+    let mut len = plen;
+    for _ in 0..max_new {
+        let row = logits.as_f32()?;
+        let next = crate::substrate::rng::argmax(row) as i32;
+        ids.push(next);
+        if next == b'\n' as i32 {
+            break;
+        }
+        len += 1;
+        if len + 1 > EVAL_N {
+            break;
+        }
+        let name = m.decode_entry_name(tag, 1, EVAL_N);
+        if m.entries.get(&name).is_none() {
+            bail!("manifest missing accuracy entry {name}");
+        }
+        let step = engine.decode(tag, &[next], &[(len) as i32], kv)?;
+        logits = step.logits;
+        kv = step.kv;
+    }
+    Ok(ids)
+}
+
+/// Evaluate the fixed suite at a sparsity mode. `per_family` limits items
+/// per family (the full set is 50/family).
+pub fn eval_suite(
+    engine: &Engine,
+    mode: Mode,
+    suite_path: &Path,
+    per_family: usize,
+    max_new: usize,
+) -> Result<SuiteScore> {
+    let tag = accuracy_tag(mode);
+    eval_suite_tag(engine, &tag, suite_path, per_family, max_new)
+}
+
+/// Same, for a raw entry tag ("teal_d0500", ...).
+pub fn eval_suite_tag(
+    engine: &Engine,
+    tag: &str,
+    suite_path: &Path,
+    per_family: usize,
+    max_new: usize,
+) -> Result<SuiteScore> {
+    let all = load_suite(suite_path).context("loading eval suite")?;
+    let tok = Tokenizer::new();
+    let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut results: Vec<(TaskItem, String)> = Vec::new();
+    for item in all {
+        let c = counts.entry(item.family.clone()).or_default();
+        if *c >= per_family {
+            continue;
+        }
+        *c += 1;
+        let prompt_ids = tok.encode_prompt(&item.prompt);
+        let gen = generate_one(engine, tag, &prompt_ids, max_new)?;
+        results.push((item, tok.decode(&gen)));
+    }
+    Ok(score(&results))
+}
+
+/// Lookup: which polar densities have accuracy entries for this model?
+pub fn available_densities(m: &Manifest) -> Vec<f64> {
+    let mut out: Vec<f64> = m
+        .entries
+        .values()
+        .filter(|e| {
+            e.kind == "decode"
+                && e.batch() == 1
+                && e.seq_bucket() == EVAL_N
+                && e.mode() == "polar"
+        })
+        .map(|e| e.density())
+        .collect();
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.dedup();
+    out
+}

@@ -1,0 +1,692 @@
+//! One module per paper figure/table (DESIGN.md experiment index).
+//! `polar-sparsity bench <id>` regenerates the rows into results/<id>.csv.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Mode;
+use crate::runtime::{Engine, Executor, Manifest, Tensor};
+use crate::substrate::argparse::Args;
+use crate::substrate::rng::Rng;
+
+use super::accuracy::{self};
+use super::harness::{fmt_ms, fmt_x, BenchOpts, Report};
+use super::throughput::{
+    decode_throughput, decode_throughput_pp2, decode_throughput_tp, micro_latency,
+    steady_len,
+};
+
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub opts: BenchOpts,
+    pub per_family: usize,
+    engines: std::cell::RefCell<std::collections::HashMap<String, Engine>>,
+}
+
+impl Ctx {
+    pub fn engine(&self, model: &str) -> Result<Engine> {
+        if let Some(e) = self.engines.borrow().get(model) {
+            return Ok(e.clone());
+        }
+        let exec = Arc::new(Executor::load(&self.artifacts.join(model))?);
+        let e = Engine::new(exec);
+        self.engines
+            .borrow_mut()
+            .insert(model.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+pub fn run(rest: &[String]) -> Result<()> {
+    let args = Args::new("bench", "regenerate paper figures/tables")
+        .flag("artifacts", "artifacts", "artifacts root")
+        .flag("results", "results", "output directory for CSVs")
+        .flag("iters", "8", "timed iterations per point")
+        .flag("warmup", "2", "warmup iterations per point")
+        .flag("per-family", "12", "eval items per task family (accuracy)")
+        .positional("figure", "fig1a|fig3a|fig3b|fig4|fig5|fig6|fig10|fig11|fig12|fig13|fig14|table1|table2|all");
+    let p = match args.parse(rest) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let ctx = Ctx {
+        artifacts: PathBuf::from(p.get("artifacts")),
+        results: PathBuf::from(p.get("results")),
+        opts: BenchOpts {
+            warmup: p.get_usize("warmup").map_err(anyhow::Error::msg)?,
+            iters: p.get_usize("iters").map_err(anyhow::Error::msg)?,
+        },
+        per_family: p.get_usize("per-family").map_err(anyhow::Error::msg)?,
+        engines: Default::default(),
+    };
+    let which = p.positional(0).unwrap_or("all").to_string();
+    let all: &[(&str, fn(&Ctx) -> Result<()>)] = &[
+        ("fig1a", fig1a),
+        ("fig3a", fig3a),
+        ("fig3b", fig3b),
+        ("fig4", fig4),
+        ("fig5", fig5),
+        ("fig6", fig6),
+        ("fig10", fig10),
+        ("fig11", fig11),
+        ("fig12", fig12),
+        ("fig13", fig13),
+        ("fig14", fig14),
+        ("table1", table1),
+        ("table2", table2),
+    ];
+    if which == "all" {
+        for (name, f) in all {
+            println!("\n===== {name} =====");
+            f(&ctx).with_context(|| format!("bench {name}"))?;
+        }
+        return Ok(());
+    }
+    for (name, f) in all {
+        if *name == which {
+            return f(&ctx);
+        }
+    }
+    bail!("unknown figure {which:?}");
+}
+
+fn rand_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.f64() as f32 - 0.5) * scale).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1a — decode latency breakdown vs batch size (opt-small, N=256)
+// ---------------------------------------------------------------------------
+fn fig1a(ctx: &Ctx) -> Result<()> {
+    let e = ctx.engine("opt-small")?;
+    let c = e.exec.config().clone();
+    let n = 256;
+    let mut rng = Rng::new(7);
+    let mut rep = Report::new(
+        "Fig 1a — decode latency breakdown (opt-small, N=256)",
+        &["batch", "qkv_ms", "attn_ms", "out_proj_ms", "mlp_ms", "other_ms", "total_ms", "attn_share"],
+    );
+    for &b in &[1usize, 4, 16] {
+        let x = Tensor::f32(rand_f32(&mut rng, b * c.d_model, 0.2), vec![b, c.d_model])?;
+        let q = Tensor::f32(
+            rand_f32(&mut rng, b * c.n_heads * c.d_head, 0.2),
+            vec![b, c.n_heads, c.d_head],
+        )?;
+        let kv1 = Tensor::f32(
+            rand_f32(&mut rng, b * c.n_kv_heads * n * c.d_head, 0.2),
+            vec![b, c.n_kv_heads, n, c.d_head],
+        )?;
+        let o = Tensor::f32(
+            rand_f32(&mut rng, b * c.n_heads * c.d_head, 0.2),
+            vec![b, c.n_heads * c.d_head],
+        )?;
+        let lens = Tensor::i32(vec![steady_len(n) as i32; b], vec![b])?;
+
+        let l = c.n_layers as f64; // micro entries measure ONE layer
+        let qkv = micro_latency(&e, &format!("micro_qkv_b{b}"), &[x.clone()], ctx.opts)?.mean() * l;
+        let attn = micro_latency(
+            &e,
+            &format!("micro_attn_dense_b{b}_n{n}"),
+            &[q, kv1.clone(), kv1, lens],
+            ctx.opts,
+        )?
+        .mean() * l;
+        let outp =
+            micro_latency(&e, &format!("micro_out_proj_b{b}"), &[o], ctx.opts)?.mean() * l;
+        let mlp =
+            micro_latency(&e, &format!("micro_mlp_dense_b{b}"), &[x], ctx.opts)?.mean() * l;
+        let total = decode_throughput(&e, "dense", b, n, ctx.opts)?.step.mean();
+        let other = (total - qkv - attn - outp - mlp).max(0.0);
+        rep.row(vec![
+            b.to_string(),
+            fmt_ms(qkv),
+            fmt_ms(attn),
+            fmt_ms(outp),
+            fmt_ms(mlp),
+            fmt_ms(other),
+            fmt_ms(total),
+            format!("{:.2}", attn / total),
+        ]);
+    }
+    rep.emit(&ctx.results, "fig1a")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3a — Selective GEMM kernel speedup vs sparsity (opt-small, B=16)
+// ---------------------------------------------------------------------------
+fn fig3a(ctx: &Ctx) -> Result<()> {
+    let e = ctx.engine("opt-small")?;
+    let c = e.exec.config().clone();
+    let b = 16;
+    let dff = c.d_ff;
+    let mut rng = Rng::new(11);
+    let x = Tensor::f32(rand_f32(&mut rng, b * c.d_model, 0.2), vec![b, c.d_model])?;
+    let dense_ms = micro_latency(&e, &format!("micro_mlp_dense_b{b}"), &[std::clone::Clone::clone(&x)], ctx.opts)?
+        .mean();
+    let mut rep = Report::new(
+        "Fig 3a — Selective GEMM speedup vs sparsity (opt-small, B=16)",
+        &["top_k", "density", "xla_ms", "pallas_ms", "xla_speedup_vs_dense", "pallas_speedup_vs_pallas_dense"],
+    );
+    let ks: Vec<usize> = vec![dff / 8, dff / 4, dff / 2, 3 * dff / 4, dff];
+    // pallas dense baseline = pallas kernel at k = Dff (same machinery)
+    let full_idx = Tensor::i32((0..dff as i32).collect(), vec![dff])?;
+    let pallas_dense = micro_latency(
+        &e,
+        &format!("micro_mlp_sparse_pallas_k{dff}_b{b}"),
+        &[x.clone(), full_idx],
+        ctx.opts,
+    )?
+    .mean();
+    for k in ks {
+        let mut pool: Vec<i32> = (0..dff as i32).collect();
+        rng.shuffle(&mut pool);
+        let idx = Tensor::i32(pool[..k].to_vec(), vec![k])?;
+        let xla = micro_latency(
+            &e,
+            &format!("micro_mlp_sparse_xla_k{k}_b{b}"),
+            &[x.clone(), idx.clone()],
+            ctx.opts,
+        )?
+        .mean();
+        let pallas = micro_latency(
+            &e,
+            &format!("micro_mlp_sparse_pallas_k{k}_b{b}"),
+            &[x.clone(), idx],
+            ctx.opts,
+        )?
+        .mean();
+        rep.row(vec![
+            k.to_string(),
+            format!("{:.3}", k as f64 / dff as f64),
+            fmt_ms(xla),
+            fmt_ms(pallas),
+            fmt_x(dense_ms / xla),
+            fmt_x(pallas_dense / pallas),
+        ]);
+    }
+    rep.emit(&ctx.results, "fig3a")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3b — Selective Head Attention kernel speedup (opt-small, B=16, N=256)
+// ---------------------------------------------------------------------------
+fn fig3b(ctx: &Ctx) -> Result<()> {
+    let e = ctx.engine("opt-small")?;
+    let c = e.exec.config().clone();
+    let (b, n, g) = (16usize, 256usize, c.n_groups());
+    let mut rng = Rng::new(13);
+    let q = Tensor::f32(
+        rand_f32(&mut rng, b * c.n_heads * c.d_head, 0.2),
+        vec![b, c.n_heads, c.d_head],
+    )?;
+    let k_ = Tensor::f32(
+        rand_f32(&mut rng, b * g * n * c.d_head, 0.2),
+        vec![b, g, n, c.d_head],
+    )?;
+    let v = Tensor::f32(
+        rand_f32(&mut rng, b * g * n * c.d_head, 0.2),
+        vec![b, g, n, c.d_head],
+    )?;
+    let lens = Tensor::i32(vec![steady_len(n) as i32; b], vec![b])?;
+    let dense_ms = micro_latency(
+        &e,
+        &format!("micro_attn_dense_b{b}_n{n}"),
+        &[q.clone(), k_.clone(), v.clone(), lens.clone()],
+        ctx.opts,
+    )?
+    .mean();
+    let mut rep = Report::new(
+        "Fig 3b — Selective Head Attention speedup (opt-small, B=16, N=256)",
+        &["top_k", "density", "sha_xla_ms", "sha_pallas_ms", "xla_speedup_vs_dense", "pallas_speedup_vs_pallas_dense"],
+    );
+    let mut head_index_for = |kk: usize| -> Result<Tensor> {
+        let mut rows = Vec::with_capacity(b * kk);
+        for _ in 0..b {
+            let mut pool: Vec<i32> = (0..g as i32).collect();
+            rng.shuffle(&mut pool);
+            rows.extend_from_slice(&pool[..kk]);
+        }
+        Tensor::i32(rows, vec![b, kk])
+    };
+    let hi_full = head_index_for(g)?;
+    let pallas_dense = micro_latency(
+        &e,
+        &format!("micro_attn_sha_pallas_k{g}_b{b}_n{n}"),
+        &[q.clone(), k_.clone(), v.clone(), lens.clone(), hi_full],
+        ctx.opts,
+    )?
+    .mean();
+    for kk in [g / 4, g / 2, 3 * g / 4, g] {
+        let kk = kk.max(1);
+        let hi = head_index_for(kk)?;
+        let xla = micro_latency(
+            &e,
+            &format!("micro_attn_sha_xla_k{kk}_b{b}_n{n}"),
+            &[q.clone(), k_.clone(), v.clone(), lens.clone(), hi.clone()],
+            ctx.opts,
+        )?
+        .mean();
+        let pallas = micro_latency(
+            &e,
+            &format!("micro_attn_sha_pallas_k{kk}_b{b}_n{n}"),
+            &[q.clone(), k_.clone(), v.clone(), lens.clone(), hi],
+            ctx.opts,
+        )?
+        .mean();
+        rep.row(vec![
+            kk.to_string(),
+            format!("{:.3}", kk as f64 / g as f64),
+            fmt_ms(xla),
+            fmt_ms(pallas),
+            fmt_x(dense_ms / xla),
+            fmt_x(pallas_dense / pallas),
+        ]);
+    }
+    rep.emit(&ctx.results, "fig3b")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4 — accuracy vs attention density (3 panels)
+// ---------------------------------------------------------------------------
+fn fig4(ctx: &Ctx) -> Result<()> {
+    let suite = ctx.artifacts.join("eval_tasks.jsonl");
+    let mut rep = Report::new(
+        "Fig 4 — task accuracy vs attention density",
+        &["model", "density", "avg_accuracy"],
+    );
+    for model in ["opt-small", "llama-tiny", "llama-gqa"] {
+        let e = ctx.engine(model)?;
+        let dense = accuracy::eval_suite(&e, Mode::Dense, &suite, ctx.per_family, 12)?;
+        rep.row(vec![model.into(), "1.000(dense)".into(), format!("{:.3}", dense.average)]);
+        for d in accuracy::available_densities(e.exec.manifest()) {
+            let s = accuracy::eval_suite(&e, Mode::Polar { density: d }, &suite, ctx.per_family, 12)?;
+            rep.row(vec![model.into(), format!("{d:.3}"), format!("{:.3}", s.average)]);
+        }
+    }
+    rep.emit(&ctx.results, "fig4")
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — zero-shot eval at critical thresholds (all models)
+// ---------------------------------------------------------------------------
+fn table1(ctx: &Ctx) -> Result<()> {
+    let suite = ctx.artifacts.join("eval_tasks.jsonl");
+    let mut cols: Vec<&str> = vec!["model", "config"];
+    cols.extend(crate::workload::tasks::FAMILIES);
+    cols.push("average");
+    let mut rep = Report::new("Table 1 — zero-shot eval at critical thresholds", &cols);
+    for model in ["opt-tiny", "opt-small", "llama-tiny", "llama-gqa"] {
+        let e = ctx.engine(model)?;
+        let crit = e.exec.config().critical_density;
+        for (label, mode) in [
+            ("dense".to_string(), Mode::Dense),
+            (format!("PolarSparse-{crit}"), Mode::Polar { density: crit }),
+        ] {
+            let s = accuracy::eval_suite(&e, mode, &suite, ctx.per_family, 12)?;
+            let mut row = vec![model.to_string(), label];
+            for fam in crate::workload::tasks::FAMILIES {
+                let acc = s
+                    .per_family
+                    .iter()
+                    .find(|(f, _, _)| f == fam)
+                    .map(|(_, a, _)| *a)
+                    .unwrap_or(f64::NAN);
+                row.push(format!("{acc:.2}"));
+            }
+            row.push(format!("{:.3}", s.average));
+            rep.row(row);
+        }
+    }
+    rep.emit(&ctx.results, "table1")
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — sparsity methods on the LLaMA-2-7b analogue
+// ---------------------------------------------------------------------------
+fn table2(ctx: &Ctx) -> Result<()> {
+    let suite = ctx.artifacts.join("eval_tasks.jsonl");
+    let mut cols: Vec<&str> = vec!["method"];
+    cols.extend(crate::workload::tasks::FAMILIES);
+    cols.push("average");
+    let mut rep = Report::new("Table 2 — sparsity methods, llama-tiny", &cols);
+    let e = ctx.engine("llama-tiny")?;
+    let add = |rep: &mut Report, label: &str, s: crate::workload::tasks::SuiteScore| {
+        let mut row = vec![label.to_string()];
+        for fam in crate::workload::tasks::FAMILIES {
+            let acc = s
+                .per_family
+                .iter()
+                .find(|(f, _, _)| f == fam)
+                .map(|(_, a, _)| *a)
+                .unwrap_or(f64::NAN);
+            row.push(format!("{acc:.2}"));
+        }
+        row.push(format!("{:.3}", s.average));
+        rep.row(row);
+    };
+    add(&mut rep, "Dense baseline",
+        accuracy::eval_suite(&e, Mode::Dense, &suite, ctx.per_family, 12)?);
+    add(&mut rep, "PolarSparse-50%",
+        accuracy::eval_suite(&e, Mode::Polar { density: 0.5 }, &suite, ctx.per_family, 12)?);
+    add(&mut rep, "TEAL-50% (magnitude)",
+        accuracy::eval_suite_tag(&e, "teal_d0500", &suite, ctx.per_family, 12)?);
+    add(&mut rep, "CATS-50% (gate threshold)",
+        accuracy::eval_suite_tag(&e, "cats_d0500", &suite, ctx.per_family, 12)?);
+    // ReLUfication baseline: separately-trained llama-relu model
+    let er = ctx.engine("llama-relu")?;
+    add(&mut rep, "ReLUfication (dense)",
+        accuracy::eval_suite_tag(&er, "dense", &suite, ctx.per_family, 12)?);
+    add(&mut rep, "ReLUfication + DejaVu MLP",
+        accuracy::eval_suite_tag(&er, "dejavu", &suite, ctx.per_family, 12)?);
+    rep.emit(&ctx.results, "table2")
+}
+
+// ---------------------------------------------------------------------------
+// Figs 5/6 — decode throughput vs batch size
+// ---------------------------------------------------------------------------
+fn throughput_fig(
+    ctx: &Ctx,
+    name: &str,
+    title: &str,
+    models: &[(&str, &[&str])], // (model, mode tags)
+) -> Result<()> {
+    let mut rep = Report::new(title, &["model", "batch", "mode", "tok_per_s", "step_ms", "speedup_vs_dense"]);
+    let n = 256;
+    for (model, tags) in models {
+        let e = ctx.engine(model)?;
+        for &b in &[1usize, 2, 4, 8, 16] {
+            let mut dense_tps = f64::NAN;
+            for tag in tags.iter() {
+                let r = decode_throughput(&e, tag, b, n, ctx.opts)?;
+                if *tag == "dense" {
+                    dense_tps = r.tok_per_s;
+                }
+                rep.row(vec![
+                    model.to_string(),
+                    b.to_string(),
+                    tag.to_string(),
+                    format!("{:.1}", r.tok_per_s),
+                    fmt_ms(r.step.mean()),
+                    fmt_x(r.tok_per_s / dense_tps),
+                ]);
+            }
+        }
+    }
+    rep.emit(&ctx.results, name)
+}
+
+fn fig5(ctx: &Ctx) -> Result<()> {
+    throughput_fig(
+        ctx,
+        "fig5",
+        "Fig 5 — OPT decode throughput vs batch (N=256)",
+        &[
+            ("opt-tiny", &["dense", "dejavu", "polar_d0500"]),
+            ("opt-small", &["dense", "dejavu", "polar_d0250"]),
+        ],
+    )
+}
+
+fn fig6(ctx: &Ctx) -> Result<()> {
+    throughput_fig(
+        ctx,
+        "fig6",
+        "Fig 6 — LLaMA decode throughput vs batch (N=256)",
+        &[
+            ("llama-tiny", &["dense", "polar_d0500"]),
+            ("llama-gqa", &["dense", "polar_d0625"]),
+        ],
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 — router ablation (opt-small, B=16)
+// ---------------------------------------------------------------------------
+fn fig10(ctx: &Ctx) -> Result<()> {
+    let e = ctx.engine("opt-small")?;
+    let c = e.exec.config().clone();
+    let (b, n) = (16usize, 256usize);
+    let mut rng = Rng::new(17);
+    let x = Tensor::f32(rand_f32(&mut rng, b * c.d_model, 0.2), vec![b, c.d_model])?;
+    let q = Tensor::f32(
+        rand_f32(&mut rng, b * c.n_heads * c.d_head, 0.2),
+        vec![b, c.n_heads, c.d_head],
+    )?;
+    let kv1 = Tensor::f32(
+        rand_f32(&mut rng, b * c.n_kv_heads * n * c.d_head, 0.2),
+        vec![b, c.n_kv_heads, n, c.d_head],
+    )?;
+    let lens = Tensor::i32(vec![steady_len(n) as i32; b], vec![b])?;
+
+    let r_mlp = micro_latency(&e, &format!("micro_router_mlp_b{b}"), &[x.clone()], ctx.opts)?.mean();
+    let r_attn = micro_latency(&e, &format!("micro_router_attn_b{b}"), &[x.clone()], ctx.opts)?.mean();
+    let mlp_dense = micro_latency(&e, &format!("micro_mlp_dense_b{b}"), &[x.clone()], ctx.opts)?.mean();
+    let attn_dense = micro_latency(
+        &e,
+        &format!("micro_attn_dense_b{b}_n{n}"),
+        &[q.clone(), kv1.clone(), kv1.clone(), lens.clone()],
+        ctx.opts,
+    )?
+    .mean();
+
+    let mut rep = Report::new(
+        "Fig 10 — router ablation (opt-small, B=16): block+router latency vs sparsity",
+        &["density", "mlp_sparse_ms", "mlp_router_ms", "mlp_total_vs_dense", "attn_sha_ms", "attn_router_ms", "attn_total_vs_dense"],
+    );
+    let dff = c.d_ff;
+    for (frac, k_mlp, k_attn) in [
+        (0.25, dff / 4, c.n_groups() / 4),
+        (0.5, dff / 2, c.n_groups() / 2),
+        (0.75, 3 * dff / 4, 3 * c.n_groups() / 4),
+    ] {
+        let mut pool: Vec<i32> = (0..dff as i32).collect();
+        rng.shuffle(&mut pool);
+        let idx = Tensor::i32(pool[..k_mlp].to_vec(), vec![k_mlp])?;
+        let mlp_sparse = micro_latency(
+            &e,
+            &format!("micro_mlp_sparse_xla_k{k_mlp}_b{b}"),
+            &[x.clone(), idx],
+            ctx.opts,
+        )?
+        .mean();
+        let kk = k_attn.max(1);
+        let mut rows = Vec::with_capacity(b * kk);
+        for _ in 0..b {
+            let mut hp: Vec<i32> = (0..c.n_groups() as i32).collect();
+            rng.shuffle(&mut hp);
+            rows.extend_from_slice(&hp[..kk]);
+        }
+        let hi = Tensor::i32(rows, vec![b, kk])?;
+        let sha = micro_latency(
+            &e,
+            &format!("micro_attn_sha_xla_k{kk}_b{b}_n{n}"),
+            &[q.clone(), kv1.clone(), kv1.clone(), lens.clone(), hi],
+            ctx.opts,
+        )?
+        .mean();
+        rep.row(vec![
+            format!("{frac}"),
+            fmt_ms(mlp_sparse),
+            fmt_ms(r_mlp),
+            fmt_x((mlp_sparse + r_mlp) / mlp_dense),
+            fmt_ms(sha),
+            fmt_ms(r_attn),
+            fmt_x((sha + r_attn) / attn_dense),
+        ]);
+    }
+    rep.emit(&ctx.results, "fig10")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11 — pipeline-parallel decode throughput
+// ---------------------------------------------------------------------------
+fn fig11(ctx: &Ctx) -> Result<()> {
+    let mut rep = Report::new(
+        "Fig 11 — 2-stage pipeline-parallel decode throughput (N=256)",
+        &["model", "batch", "mode", "tok_per_s", "step_ms", "speedup_vs_dense"],
+    );
+    for (model, polar_tag) in [("opt-small", "polar_d0250"), ("llama-tiny", "polar_d0500")] {
+        let e = ctx.engine(model)?;
+        for &b in &[1usize, 2, 4, 8, 16] {
+            let mut dense_tps = f64::NAN;
+            for tag in ["dense", polar_tag] {
+                let r = decode_throughput_pp2(&e, tag, b, 256, ctx.opts)?;
+                if tag == "dense" {
+                    dense_tps = r.tok_per_s;
+                }
+                rep.row(vec![
+                    model.to_string(),
+                    b.to_string(),
+                    tag.to_string(),
+                    format!("{:.1}", r.tok_per_s),
+                    fmt_ms(r.step.mean()),
+                    fmt_x(r.tok_per_s / dense_tps),
+                ]);
+            }
+        }
+    }
+    rep.emit(&ctx.results, "fig11")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 — tensor-parallel decode throughput (opt-small)
+// ---------------------------------------------------------------------------
+fn mlp_tag_for(m: &Manifest, n_shards: usize, b: usize) -> String {
+    // discover the sparse MLP shard tag baked at AOT time (k depends on the
+    // calibrated table); fall back to dense when absent
+    let prefix = format!("tp{n_shards}_mlp_s0_k");
+    let suffix = format!("_b{b}");
+    for name in m.entry_names() {
+        if name.starts_with(&prefix) && name.ends_with(&suffix) {
+            let k = &name[prefix.len() - 1..name.len() - suffix.len()];
+            return k.to_string(); // "kNNN"
+        }
+    }
+    "dense".to_string()
+}
+
+fn fig12(ctx: &Ctx) -> Result<()> {
+    let e = ctx.engine("opt-small")?;
+    let crit = e.exec.config().critical_density;
+    let sha_tag = format!("sha_d{:04}", (crit * 1000.0).round() as usize);
+    let mut rep = Report::new(
+        "Fig 12 — Megatron-style TP decode throughput (opt-small, N=256)",
+        &["tp", "batch", "mode", "tok_per_s", "step_ms", "speedup_vs_dense"],
+    );
+    for n_shards in [2usize, 4] {
+        for &b in &[1usize, 4, 16] {
+            let mlp_sparse_tag = mlp_tag_for(e.exec.manifest(), n_shards, b);
+            let mut dense_tps = f64::NAN;
+            for (label, attn, mlp) in [
+                ("dense", "dense", "dense".to_string()),
+                ("polar", sha_tag.as_str(), mlp_sparse_tag),
+            ] {
+                let r = decode_throughput_tp(
+                    &e, n_shards, attn, &mlp, b, 256, ctx.opts, true,
+                )?;
+                if label == "dense" {
+                    dense_tps = r.tok_per_s;
+                }
+                rep.row(vec![
+                    n_shards.to_string(),
+                    b.to_string(),
+                    label.to_string(),
+                    format!("{:.1}", r.tok_per_s),
+                    fmt_ms(r.step.mean()),
+                    fmt_x(r.tok_per_s / dense_tps),
+                ]);
+            }
+        }
+    }
+    rep.emit(&ctx.results, "fig12")
+}
+
+// ---------------------------------------------------------------------------
+// Figs 13/14 — inter-token latency vs sequence bucket at B=16
+// ---------------------------------------------------------------------------
+fn latency_fig(
+    ctx: &Ctx,
+    name: &str,
+    title: &str,
+    models: &[(&str, &[&str])],
+) -> Result<()> {
+    let mut rep = Report::new(title, &["model", "seq_bucket", "mode", "itl_ms", "speedup_vs_dense"]);
+    let b = 16;
+    for (model, tags) in models {
+        let e = ctx.engine(model)?;
+        for &n in &[64usize, 128, 256] {
+            let mut dense_ms = f64::NAN;
+            for tag in tags.iter() {
+                let r = decode_throughput(&e, tag, b, n, ctx.opts)?;
+                let ms = r.step.mean();
+                if *tag == "dense" {
+                    dense_ms = ms;
+                }
+                rep.row(vec![
+                    model.to_string(),
+                    n.to_string(),
+                    tag.to_string(),
+                    fmt_ms(ms),
+                    fmt_x(dense_ms / ms),
+                ]);
+            }
+        }
+    }
+    rep.emit(&ctx.results, name)
+}
+
+fn fig13(ctx: &Ctx) -> Result<()> {
+    latency_fig(
+        ctx,
+        "fig13",
+        "Fig 13 — OPT inter-token latency vs seq bucket (B=16)",
+        &[
+            ("opt-tiny", &["dense", "dejavu", "polar_d0500"]),
+            ("opt-small", &["dense", "dejavu", "polar_d0250"]),
+        ],
+    )
+}
+
+fn fig14(ctx: &Ctx) -> Result<()> {
+    latency_fig(
+        ctx,
+        "fig14",
+        "Fig 14 — LLaMA inter-token latency vs seq bucket (B=16)",
+        &[
+            ("llama-tiny", &["dense", "polar_d0500"]),
+            ("llama-gqa", &["dense", "polar_d0625"]),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_tag_parsing() {
+        // uses the suffix-stripping logic: "tp2_mlp_s0_k188_b4" -> "k188"
+        let dir = std::env::temp_dir().join("ps_fig_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model":"m","analogue":"x",
+                "config":{"d_model":8,"n_layers":2,"n_heads":2,"n_kv_heads":2,
+                          "d_ff":16,"d_head":4,"vocab":10,"max_seq":32,
+                          "mlp":"relu","pos":"learned","critical_density":0.5},
+                "params":[],"buckets":{"batch":[1],"seq":[16],"prefill":16},
+                "entries":[{"name":"tp2_mlp_s0_k188_b4","kind":"tp_mlp",
+                  "file":"x","data":[],"outputs":[],"meta":{}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(mlp_tag_for(&m, 2, 4), "k188");
+        assert_eq!(mlp_tag_for(&m, 4, 4), "dense");
+    }
+}

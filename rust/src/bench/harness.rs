@@ -1,0 +1,143 @@
+//! Micro/E2E bench harness (criterion is not vendored; this provides the
+//! warmup + timed-iterations + stats loop the figures need) and the
+//! CSV/markdown report writer that regenerates the paper's tables.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::substrate::stats::Samples;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 3, iters: 10 }
+    }
+}
+
+/// Time `f` for opts.iters iterations after warmup; returns samples (sec).
+pub fn time_it<F: FnMut() -> Result<()>>(opts: BenchOpts, mut f: F) -> Result<Samples> {
+    for _ in 0..opts.warmup {
+        f()?;
+    }
+    let mut s = Samples::new();
+    for _ in 0..opts.iters {
+        let t0 = Instant::now();
+        f()?;
+        s.push_duration(t0.elapsed());
+    }
+    Ok(s)
+}
+
+/// Tabular result collector -> CSV + aligned-markdown, echoed to stdout.
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str(&fmt_row(&self.columns));
+        s.push('|');
+        for w in &widths {
+            s.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&fmt_row(r));
+        }
+        s
+    }
+
+    /// Write CSV to results/<name>.csv and echo markdown to stdout.
+    pub fn emit(&self, results_dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(results_dir)
+            .with_context(|| format!("mkdir {}", results_dir.display()))?;
+        let path = results_dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("{}", self.to_markdown());
+        println!("[wrote {}]", path.display());
+        Ok(())
+    }
+}
+
+pub fn fmt_ms(sec: f64) -> String {
+    format!("{:.3}", sec * 1e3)
+}
+
+pub fn fmt_x(ratio: f64) -> String {
+    format!("{ratio:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_counts_iters() {
+        let mut n = 0;
+        let s = time_it(BenchOpts { warmup: 2, iters: 5 }, || {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn report_csv_and_markdown() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        assert_eq!(r.to_csv(), "a,b\n1,2\n");
+        let md = r.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

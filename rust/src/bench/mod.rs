@@ -1,0 +1,10 @@
+//! Benchmark harness regenerating every table and figure of the paper's
+//! evaluation (see DESIGN.md experiment index). Each `figNN` module prints
+//! the rows the paper reports and writes results/<fig>.csv.
+
+pub mod accuracy;
+pub mod figures;
+pub mod harness;
+pub mod throughput;
+
+pub use harness::{fmt_ms, fmt_x, time_it, BenchOpts, Report};

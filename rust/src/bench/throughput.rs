@@ -1,0 +1,162 @@
+//! Decode-throughput and latency measurement helpers shared by the
+//! figure benches (Figs 1a, 5, 6, 11, 12, 13, 14).
+//!
+//! Protocol mirrors the paper: steady-state batched decoding at a fixed
+//! (batch, kv-bucket) with sequences deep into the bucket (the paper uses
+//! seq len 1920 with 2048-token caches; we use 7/8 of the bucket).
+
+use anyhow::Result;
+
+use crate::coordinator::kv::split_groups;
+use crate::runtime::{Engine, KvCache, Tensor};
+use crate::substrate::rng::Rng;
+use crate::substrate::stats::Samples;
+
+use super::harness::BenchOpts;
+
+/// Sequence length used inside a bucket (paper: 1920 in 2048).
+pub fn steady_len(n_bucket: usize) -> usize {
+    (n_bucket * 7 / 8).max(1)
+}
+
+pub struct DecodeBench {
+    pub tok_per_s: f64,
+    pub step: Samples,
+}
+
+fn synthetic_inputs(engine: &Engine, b: usize, n: usize, seed: u64)
+    -> Result<(Vec<i32>, Vec<i32>, Tensor)> {
+    let cfg = engine.exec.config();
+    let mut rng = Rng::new(seed);
+    let tokens: Vec<i32> = (0..b).map(|_| rng.below(256) as i32).collect();
+    let lengths = vec![steady_len(n) as i32; b];
+    // small random KV values: realistic softmax spread without NaN risk
+    let kv_elems = cfg.kv_elems(b, n);
+    let data: Vec<f32> = (0..kv_elems)
+        .map(|_| (rng.f64() as f32 - 0.5) * 0.2)
+        .collect();
+    let kvt = Tensor::f32(data, cfg.kv_shape(b, n))?;
+    Ok((tokens, lengths, kvt))
+}
+
+/// Steady-state decode throughput for one (tag, batch, bucket).
+pub fn decode_throughput(
+    engine: &Engine,
+    tag: &str,
+    b: usize,
+    n: usize,
+    opts: BenchOpts,
+) -> Result<DecodeBench> {
+    let (tokens, lengths, kvt) = synthetic_inputs(engine, b, n, 42)?;
+    let mut kv = Some(KvCache::from_tensor(&kvt, b, n)?);
+    let mut run = |s: &mut Option<Samples>| -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let out = engine.decode(tag, &tokens, &lengths, kv.take().unwrap())?;
+        if let Some(samples) = s {
+            samples.push_duration(t0.elapsed());
+        }
+        kv = Some(out.kv);
+        Ok(())
+    };
+    for _ in 0..opts.warmup {
+        run(&mut None)?;
+    }
+    let mut step = Samples::new();
+    for _ in 0..opts.iters {
+        let mut s = Some(std::mem::take(&mut step));
+        run(&mut s)?;
+        step = s.unwrap();
+    }
+    let tok_per_s = b as f64 / step.mean();
+    Ok(DecodeBench { tok_per_s, step })
+}
+
+/// Same through the 2-stage pipeline (Fig 11).
+pub fn decode_throughput_pp2(
+    engine: &Engine,
+    tag: &str,
+    b: usize,
+    n: usize,
+    opts: BenchOpts,
+) -> Result<DecodeBench> {
+    let cfg = engine.exec.config();
+    let (tokens, lengths, kvt) = synthetic_inputs(engine, b, n, 43)?;
+    let l0 = cfg.n_layers / 2;
+    let (k0, k1) = crate::coordinator::kv::split_layers(&kvt, l0)?;
+    let mut kv0 = Some(KvCache::from_tensor(&k0, b, n)?);
+    let mut kv1 = Some(KvCache::from_tensor(&k1, b, n)?);
+    let mut step = Samples::new();
+    for i in 0..opts.warmup + opts.iters {
+        let t0 = std::time::Instant::now();
+        let (_logits, a, b2) = engine.decode_pp2(
+            tag,
+            &tokens,
+            &lengths,
+            kv0.take().unwrap(),
+            kv1.take().unwrap(),
+            n,
+        )?;
+        if i >= opts.warmup {
+            step.push_duration(t0.elapsed());
+        }
+        kv0 = Some(a);
+        kv1 = Some(b2);
+    }
+    Ok(DecodeBench { tok_per_s: b as f64 / step.mean(), step })
+}
+
+/// Megatron-style TP decode (Fig 12). attn_tag: "dense"|"sha_dXXXX";
+/// mlp_tag: "dense"|"kNN".
+#[allow(clippy::too_many_arguments)]
+pub fn decode_throughput_tp(
+    engine: &Engine,
+    n_shards: usize,
+    attn_tag: &str,
+    mlp_tag: &str,
+    b: usize,
+    n: usize,
+    opts: BenchOpts,
+    parallel: bool,
+) -> Result<DecodeBench> {
+    let (tokens, lengths, kvt) = synthetic_inputs(engine, b, n, 44)?;
+    let shards = split_groups(&kvt, n_shards)?;
+    let mut kv: Vec<Vec<xla::Literal>> = shards
+        .into_iter()
+        .map(|per_layer| {
+            per_layer
+                .into_iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut step = Samples::new();
+    for i in 0..opts.warmup + opts.iters {
+        let t0 = std::time::Instant::now();
+        let (_logits, kv_new) = engine.decode_tp(
+            n_shards, attn_tag, mlp_tag, &tokens, &lengths, kv, n, parallel,
+        )?;
+        if i >= opts.warmup {
+            step.push_duration(t0.elapsed());
+        }
+        kv = kv_new;
+    }
+    Ok(DecodeBench { tok_per_s: b as f64 / step.mean(), step })
+}
+
+/// Time one micro entry (module-level benches, Figs 1a/3/10).
+pub fn micro_latency(
+    engine: &Engine,
+    name: &str,
+    data: &[Tensor],
+    opts: BenchOpts,
+) -> Result<Samples> {
+    let lits: Vec<xla::Literal> = data
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let entry = engine.exec.compiled(name)?;
+    super::harness::time_it(opts, || {
+        engine.exec.run_literals(&entry, &lits)?;
+        Ok(())
+    })
+}

@@ -1,0 +1,41 @@
+// Prototype loader: validates the pallas-SHA-kernel HLO text produced by
+// python/proto_sha.py round-trips through the xla crate's PJRT CPU client.
+use anyhow::Result;
+use xla::FromRawBytes;
+
+fn main() -> Result<()> {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "/tmp/sha_hlo.txt".to_string());
+    let client = xla::PjRtClient::cpu()?;
+    println!("platform={} devices={}", client.platform_name(), client.device_count());
+
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let t0 = std::time::Instant::now();
+    let exe = client.compile(&comp)?;
+    println!("compile: {:?}", t0.elapsed());
+
+    let q = xla::Literal::read_npy("/tmp/sha_q.npy", &())?;
+    let k = xla::Literal::read_npy("/tmp/sha_k.npy", &())?;
+    let v = xla::Literal::read_npy("/tmp/sha_v.npy", &())?;
+    let hi = xla::Literal::vec1(&[0i32, 2, 1, 3]).reshape(&[2, 2])?;
+    let ln = xla::Literal::vec1(&[40i32, 64]);
+
+    let t0 = std::time::Instant::now();
+    let result = exe.execute::<xla::Literal>(&[hi, ln, q, k, v])?[0][0].to_literal_sync()?;
+    println!("execute: {:?}", t0.elapsed());
+    let out = result.to_tuple1()?;
+    let got = out.to_vec::<f32>()?;
+
+    let expected = xla::Literal::read_npy("/tmp/sha_expected.npy", &())?;
+    let want = expected.to_vec::<f32>()?;
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("n={} max_err={max_err:.2e}", got.len());
+    assert!(max_err < 1e-4, "numerics mismatch");
+    println!("proto_load OK");
+    Ok(())
+}

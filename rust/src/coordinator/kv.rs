@@ -1,0 +1,325 @@
+//! KV-cache surgery on host tensors.
+//!
+//! Layout everywhere: `[L, 2, B, G, N, dh]` (layer, k/v, slot, kv-head,
+//! position, head dim). The batch group's cache lives as an engine literal
+//! on the hot path; these routines run only on composition changes
+//! (admission, completion, bucket promotion) and for the PP/TP splits.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ModelConfig, Tensor};
+
+/// Shape helper for one sequence's cache (B == 1).
+pub fn seq_kv_shape(cfg: &ModelConfig, n: usize) -> Vec<usize> {
+    cfg.kv_shape(1, n)
+}
+
+fn dims6(t: &Tensor) -> Result<(usize, usize, usize, usize, usize, usize)> {
+    let s = t.shape();
+    if s.len() != 6 || s[1] != 2 {
+        bail!("expected KV shape [L,2,B,G,N,dh], got {:?}", s);
+    }
+    Ok((s[0], s[1], s[2], s[3], s[4], s[5]))
+}
+
+/// Copy one slot out of a batch cache -> [L,2,1,G,N,dh].
+pub fn extract_slot(kv: &Tensor, b: usize) -> Result<Tensor> {
+    let (l, two, bsz, g, n, dh) = dims6(kv)?;
+    if b >= bsz {
+        bail!("slot {b} out of range (B={bsz})");
+    }
+    let src = kv.as_f32()?;
+    let block = g * n * dh;
+    let mut out = vec![0f32; l * two * block];
+    for li in 0..l {
+        for c in 0..two {
+            let s0 = ((li * two + c) * bsz + b) * block;
+            let d0 = (li * two + c) * block;
+            out[d0..d0 + block].copy_from_slice(&src[s0..s0 + block]);
+        }
+    }
+    Tensor::f32(out, vec![l, two, 1, g, n, dh])
+}
+
+/// Write a single-sequence cache (n_src <= n_dst positions) into slot `b`
+/// of a batch cache. Extra positions in the destination are zeroed.
+pub fn write_slot(kv: &mut Tensor, slot_kv: &Tensor, b: usize) -> Result<()> {
+    let (l, two, bsz, g, n_dst, dh) = dims6(kv)?;
+    let (l2, _, one, g2, n_src, dh2) = dims6(slot_kv)?;
+    if l2 != l || g2 != g || dh2 != dh || one != 1 {
+        bail!(
+            "slot kv {:?} incompatible with batch kv {:?}",
+            slot_kv.shape(),
+            kv.shape()
+        );
+    }
+    if n_src > n_dst || b >= bsz {
+        bail!("write_slot: n_src {n_src} > n_dst {n_dst} or slot {b} >= {bsz}");
+    }
+    let src = slot_kv.as_f32()?.to_vec();
+    let dst = kv.as_f32_mut()?;
+    let row = dh;
+    for li in 0..l {
+        for c in 0..two {
+            for gi in 0..g {
+                let dbase = ((((li * two + c) * bsz + b) * g) + gi) * n_dst * row;
+                let sbase = ((((li * two + c) * 1) * g) + gi) * n_src * row;
+                dst[dbase..dbase + n_src * row]
+                    .copy_from_slice(&src[sbase..sbase + n_src * row]);
+                for x in &mut dst[dbase + n_src * row..dbase + n_dst * row] {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Zero a slot (freed sequence) so stale KV never leaks into attention.
+pub fn clear_slot(kv: &mut Tensor, b: usize) -> Result<()> {
+    let (l, two, bsz, g, n, dh) = dims6(kv)?;
+    if b >= bsz {
+        bail!("slot {b} out of range");
+    }
+    let dst = kv.as_f32_mut()?;
+    let block = g * n * dh;
+    for li in 0..l {
+        for c in 0..two {
+            let d0 = ((li * two + c) * bsz + b) * block;
+            for x in &mut dst[d0..d0 + block] {
+                *x = 0.0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Grow the position axis to a larger bucket (zero-padded).
+pub fn pad_n(kv: &Tensor, n_new: usize) -> Result<Tensor> {
+    let (l, two, bsz, g, n, dh) = dims6(kv)?;
+    if n_new < n {
+        bail!("pad_n: {n_new} < current {n}");
+    }
+    if n_new == n {
+        return Ok(kv.clone());
+    }
+    let src = kv.as_f32()?;
+    let mut out = vec![0f32; l * two * bsz * g * n_new * dh];
+    let row = dh;
+    for li in 0..l {
+        for c in 0..two {
+            for b in 0..bsz {
+                for gi in 0..g {
+                    let sbase = ((((li * two + c) * bsz + b) * g) + gi) * n * row;
+                    let dbase = ((((li * two + c) * bsz + b) * g) + gi) * n_new * row;
+                    out[dbase..dbase + n * row]
+                        .copy_from_slice(&src[sbase..sbase + n * row]);
+                }
+            }
+        }
+    }
+    Tensor::f32(out, vec![l, two, bsz, g, n_new, dh])
+}
+
+/// Rebuild a batch cache at a new capacity from per-slot caches.
+/// `slots[i] = Some(seq kv [L,2,1,G,n_i,dh])` with n_i <= n_bucket.
+pub fn assemble(
+    cfg: &ModelConfig,
+    slots: &[Option<Tensor>],
+    n_bucket: usize,
+) -> Result<Tensor> {
+    let b = slots.len();
+    let mut kv = Tensor::zeros_f32(cfg.kv_shape(b, n_bucket));
+    for (i, s) in slots.iter().enumerate() {
+        if let Some(t) = s {
+            write_slot(&mut kv, t, i)?;
+        }
+    }
+    Ok(kv)
+}
+
+/// Split along layers for 2-stage pipeline parallelism.
+pub fn split_layers(kv: &Tensor, l0: usize) -> Result<(Tensor, Tensor)> {
+    let (l, two, bsz, g, n, dh) = dims6(kv)?;
+    if l0 == 0 || l0 >= l {
+        bail!("split_layers: bad split {l0} of {l}");
+    }
+    let src = kv.as_f32()?;
+    let block = two * bsz * g * n * dh;
+    let a = src[..l0 * block].to_vec();
+    let b2 = src[l0 * block..].to_vec();
+    Ok((
+        Tensor::f32(a, vec![l0, two, bsz, g, n, dh])?,
+        Tensor::f32(b2, vec![l - l0, two, bsz, g, n, dh])?,
+    ))
+}
+
+/// Merge two stage caches back (inverse of split_layers).
+pub fn merge_layers(kv0: &Tensor, kv1: &Tensor) -> Result<Tensor> {
+    let (l0, two, bsz, g, n, dh) = dims6(kv0)?;
+    let (l1, ..) = dims6(kv1)?;
+    let mut data = kv0.as_f32()?.to_vec();
+    data.extend_from_slice(kv1.as_f32()?);
+    Tensor::f32(data, vec![l0 + l1, two, bsz, g, n, dh])
+}
+
+/// Split into per-shard, per-layer caches for tensor parallelism:
+/// result[shard][layer] = [2, B, G/n_shards, N, dh].
+pub fn split_groups(kv: &Tensor, n_shards: usize) -> Result<Vec<Vec<Tensor>>> {
+    let (l, two, bsz, g, n, dh) = dims6(kv)?;
+    if g % n_shards != 0 {
+        bail!("split_groups: G={g} not divisible by {n_shards}");
+    }
+    let gs = g / n_shards;
+    let src = kv.as_f32()?;
+    let mut out = vec![Vec::with_capacity(l); n_shards];
+    for s in 0..n_shards {
+        for li in 0..l {
+            let mut data = Vec::with_capacity(two * bsz * gs * n * dh);
+            for c in 0..two {
+                for b in 0..bsz {
+                    let base = (((li * two + c) * bsz + b) * g + s * gs) * n * dh;
+                    data.extend_from_slice(&src[base..base + gs * n * dh]);
+                }
+            }
+            out[s].push(Tensor::f32(data, vec![two, bsz, gs, n, dh])?);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::substrate::prop::check;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            analogue: "t".into(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 16,
+            d_head: 4,
+            vocab: 10,
+            max_seq: 16,
+            mlp: "relu".into(),
+            pos: "learned".into(),
+            critical_density: 0.5,
+        }
+    }
+
+    fn filled(shape: Vec<usize>, seed: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::f32((0..n).map(|i| seed + i as f32).collect(), shape).unwrap()
+    }
+
+    #[test]
+    fn extract_write_roundtrip() {
+        let c = cfg();
+        let mut kv = filled(c.kv_shape(3, 8), 0.0);
+        let slot1 = extract_slot(&kv, 1).unwrap();
+        let mut kv2 = Tensor::zeros_f32(c.kv_shape(3, 8));
+        write_slot(&mut kv2, &slot1, 1).unwrap();
+        let back = extract_slot(&kv2, 1).unwrap();
+        assert_eq!(slot1, back);
+        // other slots untouched (zero)
+        assert!(extract_slot(&kv2, 0).unwrap().as_f32().unwrap().iter().all(|&x| x == 0.0));
+        // clear works
+        clear_slot(&mut kv, 1).unwrap();
+        assert!(extract_slot(&kv, 1).unwrap().as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pad_preserves_prefix() {
+        let c = cfg();
+        let kv = filled(c.kv_shape(2, 4), 1.0);
+        let padded = pad_n(&kv, 8).unwrap();
+        assert_eq!(padded.shape(), &[2, 2, 2, 2, 8, 4]);
+        // spot check: first row of each (l,c,b,g) group survives
+        let s = extract_slot(&kv, 0).unwrap();
+        let p = extract_slot(&padded, 0).unwrap();
+        let (sn, pn) = (s.as_f32().unwrap(), p.as_f32().unwrap());
+        // row 0 of group 0, layer 0, k
+        assert_eq!(&sn[0..4], &pn[0..4]);
+    }
+
+    #[test]
+    fn split_merge_layers_roundtrip() {
+        let c = cfg();
+        let kv = filled(c.kv_shape(2, 4), 3.0);
+        let (a, b) = split_layers(&kv, 1).unwrap();
+        assert_eq!(a.shape()[0], 1);
+        assert_eq!(b.shape()[0], 1);
+        assert_eq!(merge_layers(&a, &b).unwrap(), kv);
+    }
+
+    #[test]
+    fn split_groups_shapes() {
+        let c = cfg();
+        let kv = filled(c.kv_shape(2, 4), 0.0);
+        let shards = split_groups(&kv, 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].len(), 2);
+        assert_eq!(shards[0][0].shape(), &[2, 2, 1, 4, 4]);
+    }
+
+    #[test]
+    fn prop_write_then_extract_identity() {
+        check("kv-write-extract", 30, |g| {
+            let c = cfg();
+            let b = g.usize_in(1, 5);
+            let n_src = g.usize_in(1, 5);
+            let n_dst = g.usize_in(n_src, 9);
+            let slot = g.usize_in(0, b);
+            let data = g.vec_f32(c.kv_elems(1, n_src), -1.0, 1.0);
+            let s = Tensor::f32(data, c.kv_shape(1, n_src)).unwrap();
+            let mut kv = Tensor::zeros_f32(c.kv_shape(b, n_dst));
+            write_slot(&mut kv, &s, slot).unwrap();
+            let out = extract_slot(&kv, slot).unwrap();
+            // prefix must match the source; suffix zero
+            let padded = pad_n(&s, n_dst).unwrap();
+            prop_assert!(out == padded, "slot roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_assemble_no_aliasing() {
+        check("kv-assemble", 20, |g| {
+            let c = cfg();
+            let b = g.usize_in(2, 5);
+            let n = 4;
+            let slots: Vec<Option<Tensor>> = (0..b)
+                .map(|i| {
+                    if g.bool() {
+                        Some(
+                            Tensor::f32(
+                                vec![i as f32 + 1.0; c.kv_elems(1, n)],
+                                c.kv_shape(1, n),
+                            )
+                            .unwrap(),
+                        )
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let kv = assemble(&c, &slots, n).unwrap();
+            for (i, s) in slots.iter().enumerate() {
+                let got = extract_slot(&kv, i).unwrap();
+                match s {
+                    Some(t) => prop_assert!(got == *t, "slot {i} clobbered"),
+                    None => prop_assert!(
+                        got.as_f32().unwrap().iter().all(|&x| x == 0.0),
+                        "empty slot {i} non-zero"
+                    ),
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,89 @@
+//! Engine + per-request serving metrics.
+
+use std::time::Duration;
+
+use crate::substrate::json::Json;
+use crate::substrate::stats::Samples;
+
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    /// Wall time of each decode step (all slots).
+    pub step_latency: Samples,
+    /// Wall time of each prefill call.
+    pub prefill_latency: Samples,
+    /// Inter-token latency samples (per generated token across requests).
+    pub itl: Samples,
+    /// Time-to-first-token per request.
+    pub ttft: Samples,
+    /// End-to-end per request.
+    pub e2e: Samples,
+    pub decode_steps: u64,
+    pub generated_tokens: u64,
+    pub completed_requests: u64,
+    pub kv_rebuilds: u64,
+    pub bucket_promotions: u64,
+    pub decode_wall_s: f64,
+    pub total_wall_s: f64,
+}
+
+impl EngineMetrics {
+    pub fn record_step(&mut self, d: Duration, active: usize) {
+        self.step_latency.push_duration(d);
+        self.decode_steps += 1;
+        self.decode_wall_s += d.as_secs_f64();
+        self.generated_tokens += active as u64;
+        if active > 0 {
+            // each active slot observed this step as its inter-token gap
+            for _ in 0..active {
+                self.itl.push(d.as_secs_f64());
+            }
+        }
+    }
+
+    /// Decode throughput in generated tokens / second of decode wall time.
+    pub fn decode_throughput(&self) -> f64 {
+        if self.decode_wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.decode_wall_s
+    }
+
+    /// Overall throughput incl. prefill + scheduling overheads.
+    pub fn total_throughput(&self) -> f64 {
+        if self.total_wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.total_wall_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("decode_steps", (self.decode_steps as usize).into()),
+            ("generated_tokens", (self.generated_tokens as usize).into()),
+            ("completed_requests", (self.completed_requests as usize).into()),
+            ("decode_tok_per_s", self.decode_throughput().into()),
+            ("total_tok_per_s", self.total_throughput().into()),
+            ("step_ms_p50", (self.step_latency.p50() * 1e3).into()),
+            ("step_ms_p99", (self.step_latency.p99() * 1e3).into()),
+            ("itl_ms_mean", (self.itl.mean() * 1e3).into()),
+            ("ttft_ms_p50", (self.ttft.p50() * 1e3).into()),
+            ("e2e_ms_p50", (self.e2e.p50() * 1e3).into()),
+            ("kv_rebuilds", (self.kv_rebuilds as usize).into()),
+            ("bucket_promotions", (self.bucket_promotions as usize).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts_active_slots() {
+        let mut m = EngineMetrics::default();
+        m.record_step(Duration::from_millis(10), 4);
+        m.record_step(Duration::from_millis(10), 4);
+        assert_eq!(m.generated_tokens, 8);
+        assert!((m.decode_throughput() - 400.0).abs() < 1.0);
+    }
+}

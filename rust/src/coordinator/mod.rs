@@ -1,0 +1,267 @@
+//! L3 coordinator: the paper's serving-system contribution.
+//!
+//! Modules: continuous batching scheduler over static-shape executables,
+//! KV-slot surgery, sparsity controller (dense / DejaVu / Polar), sampler,
+//! metrics.
+
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod scheduler;
+pub mod sparsity;
+
+pub use request::{Completion, FinishReason, Request, SamplingParams};
+pub use scheduler::{Scheduler, SchedulerConfig, StepEngine};
+pub use sparsity::{Mode, SparsityController};
+
+#[cfg(test)]
+mod scheduler_tests {
+    use std::time::Instant;
+
+    use anyhow::Result;
+
+    use crate::prop_assert;
+    use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
+    use crate::substrate::prop::check;
+    use crate::tokenizer::PAD;
+
+    use super::scheduler::{Scheduler, SchedulerConfig, StepEngine};
+    use super::sparsity::{Mode, SparsityController};
+    use super::*;
+
+    /// Mock engine: deterministic "LM" that, for a prompt whose first id is
+    /// `c`, emits `c+1` for `c+1 - prompt-first-id` steps then the stop
+    /// token. Verifies scheduling, not numerics. KV carries a per-slot
+    /// fingerprint in position 0 so tests can detect slot aliasing.
+    struct MockEngine {
+        cfg: ModelConfig,
+        batch_buckets: Vec<usize>,
+        seq_buckets: Vec<usize>,
+    }
+
+    impl MockEngine {
+        fn new() -> Self {
+            MockEngine {
+                cfg: ModelConfig {
+                    name: "mock".into(),
+                    analogue: "mock".into(),
+                    d_model: 8,
+                    n_layers: 2,
+                    n_heads: 2,
+                    n_kv_heads: 2,
+                    d_ff: 16,
+                    d_head: 2,
+                    vocab: 300,
+                    max_seq: 64,
+                    mlp: "relu".into(),
+                    pos: "learned".into(),
+                    critical_density: 0.5,
+                },
+                batch_buckets: vec![1, 2, 4, 8],
+                seq_buckets: vec![16, 32, 64],
+            }
+        }
+
+        fn logits_for(&self, token: i32) -> Vec<f32> {
+            // next token = token + 1 (wrapping inside byte range)
+            let mut row = vec![0.0f32; self.cfg.vocab];
+            let next = if token >= 255 { b'\n' as i32 } else { token + 1 };
+            row[next as usize] = 10.0;
+            row
+        }
+    }
+
+    impl StepEngine for MockEngine {
+        fn config(&self) -> &ModelConfig {
+            &self.cfg
+        }
+        fn batch_buckets(&self) -> &[usize] {
+            &self.batch_buckets
+        }
+        fn seq_buckets(&self) -> &[usize] {
+            &self.seq_buckets
+        }
+        fn prefill_len(&self) -> usize {
+            16
+        }
+        fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
+            let b = tokens.shape()[0];
+            let s = tokens.shape()[1];
+            let toks = tokens.as_i32()?;
+            let lens = lengths.as_i32()?;
+            let mut logits = Vec::with_capacity(b * self.cfg.vocab);
+            for i in 0..b {
+                let last = toks[i * s + (lens[i] as usize - 1).min(s - 1)];
+                logits.extend(self.logits_for(last));
+            }
+            let mut kvt = Tensor::zeros_f32(self.cfg.kv_shape(b, 16));
+            // fingerprint: first element per slot = last prompt token
+            for i in 0..b {
+                let block = self.cfg.n_kv_heads * 16 * self.cfg.d_head;
+                kvt.as_f32_mut()?[i * block] = toks[i * s] as f32;
+            }
+            Ok(StepOutput {
+                logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
+                kv: KvCache::from_tensor(&kvt, b, 16)?,
+            })
+        }
+        fn decode(
+            &self,
+            _tag: &str,
+            tokens: &[i32],
+            _lengths: &[i32],
+            kv: KvCache,
+        ) -> Result<StepOutput> {
+            let b = tokens.len();
+            let mut logits = Vec::with_capacity(b * self.cfg.vocab);
+            for &t in tokens {
+                logits.extend(self.logits_for(if t == PAD { 0 } else { t }));
+            }
+            Ok(StepOutput {
+                logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
+                kv,
+            })
+        }
+    }
+
+    fn req(id: u64, first: i32, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt_ids: vec![first, first],
+            params: SamplingParams {
+                max_new_tokens: max_new,
+                ..Default::default()
+            },
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    fn sched() -> Scheduler<MockEngine> {
+        Scheduler::new(
+            MockEngine::new(),
+            SparsityController::new(Mode::Polar { density: 0.5 }),
+            SchedulerConfig { max_batch: 8, compact: true },
+        )
+    }
+
+    #[test]
+    fn single_request_generates_increments() {
+        let mut s = sched();
+        s.enqueue(req(1, 10, 5));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        // prompt [10,10]: prefill emits 11, then 12, 13, 14, 15
+        assert_eq!(done[0].output_ids, vec![11, 12, 13, 14, 15]);
+        assert_eq!(done[0].finish, FinishReason::Length);
+    }
+
+    #[test]
+    fn stop_token_halts() {
+        let mut s = sched();
+        s.enqueue(req(1, (b'\n' as i32) - 1, 50)); // first sampled == '\n'
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::Stop);
+        assert_eq!(done[0].output_ids, vec![b'\n' as i32]);
+    }
+
+    #[test]
+    fn batch_of_mixed_lengths_completes_all() {
+        let mut s = sched();
+        for i in 0..6 {
+            s.enqueue(req(i, 20 + i as i32, 3 + i as usize));
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            let first = 20 + c.id as i32;
+            assert_eq!(c.output_ids[0], first + 1, "req {}", c.id);
+            assert_eq!(c.output_ids.len(), 3 + c.id as usize);
+        }
+        assert_eq!(s.metrics.completed_requests, 6);
+        // batch bucket grew past 4
+        assert!(s.metrics.kv_rebuilds >= 1);
+    }
+
+    #[test]
+    fn late_arrivals_join_running_batch() {
+        let mut s = sched();
+        s.enqueue(req(1, 30, 10));
+        // run a few steps, then add another request mid-flight
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        s.enqueue(req(2, 40, 4));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let c2 = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.output_ids, vec![41, 42, 43, 44]);
+    }
+
+    #[test]
+    fn seq_bucket_promotes_for_long_generation() {
+        let mut s = sched();
+        // prompt 2 + 40 generated > 32 bucket -> at least one promotion
+        // (start at 100 so the +1 chain never hits the '\n' stop token)
+        s.enqueue(req(1, 100, 40));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].output_ids.len(), 40);
+        assert!(s.metrics.bucket_promotions >= 1);
+    }
+
+    #[test]
+    fn cache_limit_finishes_gracefully() {
+        let mut s = sched();
+        s.enqueue(req(1, 100, 1000)); // would exceed max seq bucket 64
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::CacheLimit);
+        assert!(done[0].output_ids.len() < 1000);
+    }
+
+    #[test]
+    fn drains_and_compacts_to_empty() {
+        let mut s = sched();
+        s.enqueue(req(1, 10, 2));
+        s.run_to_completion().unwrap();
+        assert!(s.is_idle());
+        assert_eq!(s.capacity(), 0); // group dropped when drained
+    }
+
+    #[test]
+    fn prop_every_request_completes_exactly_once() {
+        check("scheduler-completeness", 15, |g| {
+            let mut s = sched();
+            let n = g.usize_in(1, 12);
+            let mut expected = std::collections::BTreeMap::new();
+            for id in 0..n as u64 {
+                let first = g.usize_in(30, 200) as i32;
+                let max_new = g.usize_in(1, 12);
+                expected.insert(id, (first, max_new));
+                s.enqueue(req(id, first, max_new));
+            }
+            let mut done = Vec::new();
+            let mut guard = 0;
+            while !s.is_idle() {
+                done.extend(s.step().map_err(|e| e.to_string())?);
+                guard += 1;
+                prop_assert!(guard < 10_000, "scheduler did not converge");
+            }
+            prop_assert!(done.len() == n, "{} of {} completed", done.len(), n);
+            let mut seen = std::collections::BTreeSet::new();
+            for c in &done {
+                prop_assert!(seen.insert(c.id), "request {} completed twice", c.id);
+                let (first, max_new) = expected[&c.id];
+                prop_assert!(
+                    !c.output_ids.is_empty() && c.output_ids[0] == first + 1,
+                    "req {} first token {} != {}",
+                    c.id, c.output_ids[0], first + 1
+                );
+                prop_assert!(
+                    c.output_ids.len() <= max_new,
+                    "req {} overshot max_new", c.id
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Request/response types and generation parameters.
+
+use std::time::Instant;
+
+/// Sampling configuration for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    /// 0.0 => greedy (argmax).
+    pub temperature: f32,
+    /// Restrict sampling to the top-k logits (0 => no restriction).
+    pub top_k: usize,
+    pub max_new_tokens: usize,
+    /// Stop when this token id is produced (the corpus line separator '\n'
+    /// by default). Negative disables.
+    pub stop_token: i32,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            max_new_tokens: 32,
+            stop_token: b'\n' as i32,
+            seed: 0,
+        }
+    }
+}
+
+/// An admitted generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_ids: Vec<i32>,
+    pub params: SamplingParams,
+    pub enqueued_at: Instant,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Stop,
+    Length,
+    CacheLimit,
+}
+
+/// Completed generation, with per-request latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub output_ids: Vec<i32>,
+    pub finish: FinishReason,
+    pub prompt_len: usize,
+    /// queue-entry -> first token
+    pub ttft_s: f64,
+    /// queue-entry -> completion
+    pub e2e_s: f64,
+    pub decode_steps: usize,
+}

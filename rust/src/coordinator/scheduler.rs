@@ -1,0 +1,451 @@
+//! Iteration-level scheduler: continuous batching over static-shape
+//! executables (the CUDA-graph-style constraint, DESIGN.md).
+//!
+//! Responsibilities per step:
+//!   1. reap finished slots -> completions
+//!   2. admit pending requests: pick the batch bucket, batch-prefill the
+//!      newcomers, splice their KV into the group cache
+//!   3. promote the seq bucket when any sequence outgrows it
+//!   4. run one decode step through the sparsity controller's entry
+//!   5. sample next tokens per active slot
+//!
+//! The group KV cache stays an engine literal between steps; host-side
+//! surgery happens only on composition changes (admission/re-bucketing).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
+use crate::tokenizer::PAD;
+
+use super::kv;
+use super::metrics::EngineMetrics;
+use super::request::{Completion, FinishReason, Request};
+use super::sampler::Sampler;
+use super::sparsity::SparsityController;
+
+/// What the scheduler needs from an engine (the real PJRT engine or a mock).
+pub trait StepEngine {
+    fn config(&self) -> &ModelConfig;
+    fn batch_buckets(&self) -> &[usize];
+    fn seq_buckets(&self) -> &[usize];
+    fn prefill_len(&self) -> usize;
+    fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput>;
+    fn decode(&self, tag: &str, tokens: &[i32], lengths: &[i32], kv: KvCache)
+        -> Result<StepOutput>;
+}
+
+impl StepEngine for crate::runtime::Engine {
+    fn config(&self) -> &ModelConfig {
+        self.exec.config()
+    }
+    fn batch_buckets(&self) -> &[usize] {
+        &self.exec.manifest().batch_buckets
+    }
+    fn seq_buckets(&self) -> &[usize] {
+        &self.exec.manifest().seq_buckets
+    }
+    fn prefill_len(&self) -> usize {
+        self.exec.manifest().prefill_len
+    }
+    fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
+        crate::runtime::Engine::prefill(self, tokens, lengths)
+    }
+    fn decode(&self, tag: &str, tokens: &[i32], lengths: &[i32], kv: KvCache)
+        -> Result<StepOutput> {
+        crate::runtime::Engine::decode(self, tag, tokens, lengths, kv)
+    }
+}
+
+struct Slot {
+    req: Request,
+    sampler: Sampler,
+    /// prompt_len + generated tokens (== attention length of the next step)
+    len: usize,
+    generated: Vec<i32>,
+    first_token_at: Option<Instant>,
+    finished: Option<FinishReason>,
+}
+
+impl Slot {
+    fn last_token(&self) -> i32 {
+        *self.generated.last().unwrap_or(&PAD)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Upper bound on the batch bucket (must be one of the buckets).
+    pub max_batch: usize,
+    /// Shrink the group when occupancy falls below half a smaller bucket.
+    pub compact: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch: 16, compact: true }
+    }
+}
+
+pub struct Scheduler<E: StepEngine> {
+    engine: E,
+    ctl: SparsityController,
+    cfg: SchedulerConfig,
+    pending: VecDeque<Request>,
+    slots: Vec<Option<Slot>>,
+    group_kv: Option<KvCache>,
+    n_bucket: usize,
+    pub metrics: EngineMetrics,
+}
+
+impl<E: StepEngine> Scheduler<E> {
+    pub fn new(engine: E, ctl: SparsityController, cfg: SchedulerConfig) -> Self {
+        let n0 = engine.seq_buckets().first().copied().unwrap_or(64);
+        Scheduler {
+            engine,
+            ctl,
+            cfg,
+            pending: VecDeque::new(),
+            slots: Vec::new(),
+            group_kv: None,
+            n_bucket: n0,
+            metrics: EngineMetrics::default(),
+        }
+    }
+
+    pub fn engine(&self) -> &E {
+        &self.engine
+    }
+
+    pub fn enqueue(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.slots.iter().flatten().filter(|s| s.finished.is_none()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        // finished-but-unreaped slots still count as work: their
+        // completions must be surfaced by a further step()
+        self.pending.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn n_bucket(&self) -> usize {
+        self.n_bucket
+    }
+
+    fn batch_bucket_for(&self, need: usize) -> usize {
+        let capped = need.min(self.cfg.max_batch).max(1);
+        self.engine
+            .batch_buckets()
+            .iter()
+            .copied()
+            .find(|&b| b >= capped)
+            .unwrap_or_else(|| *self.engine.batch_buckets().last().unwrap())
+    }
+
+    fn seq_bucket_for(&self, need: usize) -> Result<usize> {
+        self.engine
+            .seq_buckets()
+            .iter()
+            .copied()
+            .find(|&n| n >= need)
+            .with_context(|| format!("sequence length {need} exceeds the largest bucket"))
+    }
+
+    /// One scheduling iteration. Returns the completions it produced.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let t_start = Instant::now();
+        let mut done = self.reap();
+        self.admit()?;
+
+        if self.active_len() > 0 {
+            self.maybe_promote_seq_bucket()?;
+            self.decode_once()?;
+            done.extend(self.reap());
+        }
+        if self.pending.is_empty() {
+            self.maybe_compact()?;
+        }
+        self.metrics.total_wall_s += t_start.elapsed().as_secs_f64();
+        Ok(done)
+    }
+
+    /// Drive everything currently enqueued to completion.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    fn reap(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for slot in self.slots.iter_mut() {
+            let fin = match slot {
+                Some(s) => s.finished,
+                None => None,
+            };
+            if let Some(reason) = fin {
+                let s = slot.take().unwrap();
+                let now = Instant::now();
+                let e2e = now.duration_since(s.req.enqueued_at).as_secs_f64();
+                let ttft = s
+                    .first_token_at
+                    .map(|t| t.duration_since(s.req.enqueued_at).as_secs_f64())
+                    .unwrap_or(e2e);
+                self.metrics.ttft.push(ttft);
+                self.metrics.e2e.push(e2e);
+                self.metrics.completed_requests += 1;
+                out.push(Completion {
+                    id: s.req.id,
+                    output_ids: s.generated.clone(),
+                    finish: reason,
+                    prompt_len: s.req.prompt_ids.len(),
+                    ttft_s: ttft,
+                    e2e_s: e2e,
+                    decode_steps: s.generated.len(),
+                });
+            }
+        }
+        out
+    }
+
+    fn free_slots(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            self.maybe_compact()?;
+            return Ok(());
+        }
+        let want = self.active_len() + self.pending.len();
+        let target = self.batch_bucket_for(want);
+        if target != self.capacity() {
+            self.regroup(target)?;
+        }
+        let free = self.free_slots();
+        let n_new = free.len().min(self.pending.len());
+        if n_new == 0 {
+            return Ok(());
+        }
+        let newcomers: Vec<Request> = (0..n_new)
+            .map(|_| self.pending.pop_front().unwrap())
+            .collect();
+        self.prefill_into(&newcomers, &free[..n_new])?;
+        Ok(())
+    }
+
+    /// Batch-prefill newcomers and splice their KV into the group cache.
+    fn prefill_into(&mut self, reqs: &[Request], slots: &[usize]) -> Result<()> {
+        let s_len = self.engine.prefill_len();
+        let pb = self.batch_bucket_for(reqs.len());
+        let mut toks = vec![PAD; pb * s_len];
+        let mut lens = vec![1i32; pb];
+        for (i, r) in reqs.iter().enumerate() {
+            let p = &r.prompt_ids[..r.prompt_ids.len().min(s_len)];
+            toks[i * s_len..i * s_len + p.len()].copy_from_slice(p);
+            lens[i] = p.len() as i32;
+        }
+        let t0 = Instant::now();
+        let out = self.engine.prefill(
+            &Tensor::i32(toks, vec![pb, s_len])?,
+            &Tensor::i32(lens.clone(), vec![pb])?,
+        )?;
+        self.metrics.prefill_latency.push_duration(t0.elapsed());
+
+        // the prefill logits give every newcomer its first token now
+        let logits = out.logits.as_f32()?;
+        let vocab = self.engine.config().vocab;
+        let prefill_kv = out.kv.to_tensor()?;
+
+        // group cache must exist and cover max(len)+1 positions
+        let max_need = reqs
+            .iter()
+            .map(|r| r.prompt_ids.len().min(s_len) + 1)
+            .max()
+            .unwrap();
+        if self.group_kv.is_none() {
+            let n = self.seq_bucket_for(max_need.max(self.n_bucket))?;
+            self.n_bucket = n;
+            let cfg = self.engine.config().clone();
+            let t = Tensor::zeros_f32(cfg.kv_shape(self.capacity(), n));
+            self.group_kv = Some(KvCache::from_tensor(&t, self.capacity(), n)?);
+        } else if max_need > self.n_bucket {
+            let n = self.seq_bucket_for(max_need)?;
+            self.promote_seq_bucket(n)?;
+        }
+
+        let gkv = self.group_kv.take().unwrap();
+        let mut gt = gkv.to_tensor()?;
+        for (i, r) in reqs.iter().enumerate() {
+            let slot_idx = slots[i];
+            let seq_kv = kv::extract_slot(&prefill_kv, i)?;
+            kv::write_slot(&mut gt, &seq_kv, slot_idx)?;
+            let prompt_len = r.prompt_ids.len().min(s_len);
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let mut sampler = Sampler::new(r.params, r.id);
+            let first = sampler.sample(row);
+            let now = Instant::now();
+            let mut slot = Slot {
+                req: r.clone(),
+                sampler,
+                len: prompt_len + 1,
+                generated: vec![first],
+                first_token_at: Some(now),
+                finished: None,
+            };
+            if first == r.params.stop_token || r.params.max_new_tokens <= 1 {
+                slot.finished = Some(if first == r.params.stop_token {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                });
+            }
+            self.slots[slot_idx] = Some(slot);
+        }
+        self.metrics.kv_rebuilds += 1;
+        self.group_kv = Some(KvCache::from_tensor(&gt, self.capacity(), self.n_bucket)?);
+        Ok(())
+    }
+
+    /// Rebuild the group at a new batch bucket, keeping live slots.
+    fn regroup(&mut self, new_capacity: usize) -> Result<()> {
+        let cfg = self.engine.config().clone();
+        let mut live: Vec<(Slot, Tensor)> = Vec::new();
+        if let Some(gkv) = self.group_kv.take() {
+            let gt = gkv.to_tensor()?;
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                if let Some(s) = slot.take() {
+                    let t = kv::extract_slot(&gt, i)?;
+                    live.push((s, t));
+                }
+            }
+        }
+        assert!(live.len() <= new_capacity, "regroup would drop live slots");
+        let mut slots: Vec<Option<Slot>> = (0..new_capacity).map(|_| None).collect();
+        let mut kvs: Vec<Option<Tensor>> = (0..new_capacity).map(|_| None).collect();
+        for (i, (s, t)) in live.into_iter().enumerate() {
+            slots[i] = Some(s);
+            kvs[i] = Some(t);
+        }
+        let gt = kv::assemble(&cfg, &kvs, self.n_bucket)?;
+        self.slots = slots;
+        self.group_kv = Some(KvCache::from_tensor(&gt, new_capacity, self.n_bucket)?);
+        self.metrics.kv_rebuilds += 1;
+        Ok(())
+    }
+
+    fn maybe_compact(&mut self) -> Result<()> {
+        if !self.cfg.compact || self.capacity() == 0 {
+            return Ok(());
+        }
+        // count *occupied* slots (finished-but-unreaped ones still hold a
+        // completion that a later step must surface — never drop them)
+        let occupied = self.slots.iter().filter(|s| s.is_some()).count();
+        if occupied == 0 {
+            // drop the group entirely when drained
+            self.slots.clear();
+            self.group_kv = None;
+            return Ok(());
+        }
+        let smaller = self.batch_bucket_for(occupied);
+        if smaller < self.capacity() {
+            self.regroup(smaller)?;
+        }
+        Ok(())
+    }
+
+    fn required_n(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| s.finished.is_none())
+            .map(|s| s.len)
+            .max()
+            .unwrap_or(1)
+    }
+
+    fn maybe_promote_seq_bucket(&mut self) -> Result<()> {
+        let need = self.required_n();
+        if need > self.n_bucket {
+            let n = self.seq_bucket_for(need)?;
+            self.promote_seq_bucket(n)?;
+        }
+        Ok(())
+    }
+
+    fn promote_seq_bucket(&mut self, n_new: usize) -> Result<()> {
+        let gkv = self.group_kv.take().context("promote without group")?;
+        let gt = gkv.to_tensor()?;
+        let padded = kv::pad_n(&gt, n_new)?;
+        self.group_kv = Some(KvCache::from_tensor(&padded, self.capacity(), n_new)?);
+        self.n_bucket = n_new;
+        self.metrics.bucket_promotions += 1;
+        Ok(())
+    }
+
+    fn decode_once(&mut self) -> Result<()> {
+        let b = self.capacity();
+        let mut tokens = vec![PAD; b];
+        let mut lengths = vec![1i32; b];
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(s) = slot {
+                if s.finished.is_none() {
+                    tokens[i] = s.last_token();
+                    lengths[i] = s.len as i32;
+                }
+            }
+        }
+        let gkv = self.group_kv.take().context("decode without group kv")?;
+        let tag = self.ctl.decode_tag();
+        let t0 = Instant::now();
+        let out = self.engine.decode(&tag, &tokens, &lengths, gkv)?;
+        let dt = t0.elapsed();
+        self.group_kv = Some(out.kv);
+
+        let logits = out.logits.as_f32()?;
+        let vocab = self.engine.config().vocab;
+        let max_total = *self.engine.seq_buckets().last().unwrap();
+        let mut active = 0;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            if s.finished.is_some() {
+                continue;
+            }
+            active += 1;
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let next = s.sampler.sample(row);
+            s.generated.push(next);
+            s.len += 1;
+            if next == s.req.params.stop_token {
+                s.finished = Some(FinishReason::Stop);
+            } else if s.generated.len() >= s.req.params.max_new_tokens {
+                s.finished = Some(FinishReason::Length);
+            } else if s.len >= max_total {
+                s.finished = Some(FinishReason::CacheLimit);
+            }
+        }
+        self.metrics.record_step(dt, active);
+        Ok(())
+    }
+}

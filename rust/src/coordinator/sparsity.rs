@@ -1,0 +1,108 @@
+//! Sparsity controller: which decode-entry variant the scheduler executes.
+//!
+//! The policy object maps (model, operator intent) -> entry mode tag.
+//! `polar` uses SHA head/group sparsity at the model's critical density
+//! (Table 1) plus calibrated dynamic MLP top-k for ReLU models; `dejavu`
+//! is the MLP-only baseline (§5.2); `dense` disables sparsity.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    Dense,
+    DejaVu,
+    Polar { density: f64 },
+}
+
+impl Mode {
+    pub fn parse(s: &str, critical: f64) -> Result<Mode> {
+        match s {
+            "dense" => Ok(Mode::Dense),
+            "dejavu" => Ok(Mode::DejaVu),
+            "polar" => Ok(Mode::Polar { density: critical }),
+            other => {
+                if let Some(d) = other.strip_prefix("polar@") {
+                    let density: f64 = d
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad density in {other:?}"))?;
+                    Ok(Mode::Polar { density })
+                } else {
+                    bail!("unknown mode {other:?} (dense|dejavu|polar|polar@<d>)")
+                }
+            }
+        }
+    }
+
+    pub fn tag(&self) -> String {
+        match self {
+            Mode::Dense => "dense".to_string(),
+            Mode::DejaVu => "dejavu".to_string(),
+            Mode::Polar { density } => Manifest::mode_tag("polar", *density),
+        }
+    }
+}
+
+/// Controller consulted each scheduling step. Density is fixed per serving
+/// session in this release (the paper fixes top-k per layer too; adaptive
+/// per-step density is its future-work §6).
+#[derive(Debug, Clone)]
+pub struct SparsityController {
+    mode: Mode,
+}
+
+impl SparsityController {
+    pub fn new(mode: Mode) -> Self {
+        SparsityController { mode }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn decode_tag(&self) -> String {
+        self.mode.tag()
+    }
+
+    /// Check the manifest actually has the chosen variant at every
+    /// (batch, seq) bucket so the scheduler never faults mid-flight.
+    pub fn validate(&self, m: &Manifest) -> Result<()> {
+        let tag = self.decode_tag();
+        for &b in &m.batch_buckets {
+            for &n in &m.seq_buckets {
+                let name = m.decode_entry_name(&tag, b, n);
+                if m.entries.get(&name).is_none() {
+                    bail!("manifest missing {name} (mode {:?})", self.mode);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(Mode::parse("dense", 0.5).unwrap(), Mode::Dense);
+        assert_eq!(Mode::parse("dejavu", 0.5).unwrap(), Mode::DejaVu);
+        assert_eq!(
+            Mode::parse("polar", 0.25).unwrap(),
+            Mode::Polar { density: 0.25 }
+        );
+        assert_eq!(
+            Mode::parse("polar@0.625", 0.5).unwrap(),
+            Mode::Polar { density: 0.625 }
+        );
+        assert!(Mode::parse("nope", 0.5).is_err());
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(Mode::Dense.tag(), "dense");
+        assert_eq!(Mode::Polar { density: 0.5 }.tag(), "polar_d0500");
+    }
+}

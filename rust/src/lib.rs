@@ -1,0 +1,23 @@
+//! # Polar Sparsity — batched LLM serving with scalable contextual sparsity
+//!
+//! Reproduction of *Polar Sparsity: High Throughput Batched LLM Inferencing
+//! with Scalable Contextual Sparsity* (NeurIPS 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — serving coordinator: continuous batcher,
+//!   prefill/decode scheduler, KV-slot manager, sparsity controller,
+//!   sampler, metrics, TCP server, workload generator, bench harness.
+//! * **L2/L1 (python/, build-time only)** — JAX transformer + Pallas
+//!   selective-head-attention and fused sparse-GEMM kernels, AOT-lowered
+//!   to HLO text that this crate compiles and runs via PJRT.
+//!
+//! Python never runs on the request path: `artifacts/` is built once by
+//! `make artifacts`, after which the binary is self-contained.
+
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+pub mod server;
+pub mod substrate;
+pub mod tokenizer;
+pub mod workload;

@@ -1,0 +1,216 @@
+//! polar-sparsity CLI: serve / generate / eval / bench / info.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use polar_sparsity::bench;
+use polar_sparsity::coordinator::{
+    Mode, Request, SamplingParams, Scheduler, SchedulerConfig, SparsityController,
+};
+use polar_sparsity::runtime::{Engine, Executor};
+use polar_sparsity::server::{serve, Client, ServerConfig};
+use polar_sparsity::substrate::argparse::{Args, Parsed};
+use polar_sparsity::tokenizer::Tokenizer;
+
+const USAGE: &str = "polar-sparsity — batched LLM serving with scalable contextual sparsity
+
+usage: polar-sparsity <command> [flags]
+
+commands:
+  info       print model/manifest summary
+  generate   run prompts through the engine locally
+  serve      start the TCP JSON-lines server
+  client     send one request to a running server
+  eval       zero-shot task-suite accuracy at a sparsity mode
+  bench      regenerate a paper figure/table (fig1a..fig14, table1, table2, all)
+
+common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
+run `polar-sparsity <command> --help` for details";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "info" => cmd_info(rest),
+        "generate" => cmd_generate(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "eval" => cmd_eval(rest),
+        "bench" => bench::figures::run(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn common(args: Args) -> Args {
+    args.flag("model", "opt-tiny", "model name under the artifacts dir")
+        .flag("artifacts", "artifacts", "artifacts root directory")
+        .flag("mode", "polar", "dense | dejavu | polar | polar@<density>")
+}
+
+fn model_dir(p: &Parsed) -> PathBuf {
+    PathBuf::from(p.get("artifacts")).join(p.get("model"))
+}
+
+fn parse_or_usage(args: Args, rest: &[String]) -> Parsed {
+    match args.parse(rest) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_engine(p: &Parsed) -> Result<(Engine, Mode)> {
+    let dir = model_dir(p);
+    let exec = Arc::new(Executor::load(&dir).with_context(|| {
+        format!("loading {} — run `make artifacts` first", dir.display())
+    })?);
+    let engine = Engine::new(exec);
+    let mode = Mode::parse(p.get("mode"), engine.exec.config().critical_density)?;
+    Ok((engine, mode))
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let p = parse_or_usage(common(Args::new("info", "model/manifest summary")), rest);
+    let (engine, _) = load_engine(&p)?;
+    let m = engine.exec.manifest();
+    let c = engine.exec.config();
+    println!("model      : {} (analogue of {})", m.model, c.analogue);
+    println!(
+        "geometry   : d={} L={} H={} H_kv={} d_ff={} mlp={} pos={}",
+        c.d_model, c.n_layers, c.n_heads, c.n_kv_heads, c.d_ff, c.mlp, c.pos
+    );
+    println!("critical attention density: {}", c.critical_density);
+    println!(
+        "buckets    : batch {:?} seq {:?} prefill {}",
+        m.batch_buckets, m.seq_buckets, m.prefill_len
+    );
+    println!("entries    : {}", m.entries.len());
+    let mut kinds: std::collections::BTreeMap<&str, usize> = Default::default();
+    for e in m.entries.values() {
+        *kinds.entry(e.kind.as_str()).or_default() += 1;
+    }
+    for (k, n) in kinds {
+        println!("  {k:<12} {n}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(rest: &[String]) -> Result<()> {
+    let args = common(Args::new("generate", "run prompts locally"))
+        .flag("prompt", "copy:abc=", "prompt text (comma-join for several)")
+        .flag("max-new", "16", "max new tokens")
+        .flag("temperature", "0", "sampling temperature (0 = greedy)");
+    let p = parse_or_usage(args, rest);
+    let (engine, mode) = load_engine(&p)?;
+    let ctl = SparsityController::new(mode);
+    ctl.validate(engine.exec.manifest())?;
+    let tok = Tokenizer::new();
+    let mut sched = Scheduler::new(engine, ctl, SchedulerConfig::default());
+    let now = Instant::now();
+    for (i, prompt) in p.get("prompt").split(',').enumerate() {
+        sched.enqueue(Request {
+            id: i as u64,
+            prompt_ids: tok.encode_prompt(prompt),
+            params: SamplingParams {
+                max_new_tokens: p.get_usize("max-new").map_err(anyhow::Error::msg)?,
+                temperature: p.get_f64("temperature").map_err(anyhow::Error::msg)? as f32,
+                ..Default::default()
+            },
+            enqueued_at: now,
+        });
+    }
+    let mut done = sched.run_to_completion()?;
+    done.sort_by_key(|c| c.id);
+    for c in &done {
+        println!(
+            "[{}] {:?} ({:?}, {} tokens, ttft {:.1}ms, e2e {:.1}ms)",
+            c.id,
+            tok.decode(&c.output_ids),
+            c.finish,
+            c.output_ids.len(),
+            c.ttft_s * 1e3,
+            c.e2e_s * 1e3
+        );
+    }
+    println!("\nmetrics: {}", sched.metrics.to_json());
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = common(Args::new("serve", "TCP JSON-lines server"))
+        .flag("addr", "127.0.0.1:7878", "bind address")
+        .flag("max-batch", "16", "max batch bucket");
+    let p = parse_or_usage(args, rest);
+    let dir = model_dir(&p);
+    let manifest = polar_sparsity::runtime::Manifest::load(&dir)?;
+    let mode = Mode::parse(p.get("mode"), manifest.config.critical_density)?;
+    println!("serving {} ({:?}) on {}", p.get("model"), mode, p.get("addr"));
+    serve(
+        ServerConfig {
+            model_dir: dir,
+            addr: p.get("addr").to_string(),
+            mode,
+            max_batch: p.get_usize("max-batch").map_err(anyhow::Error::msg)?,
+        },
+        |addr| println!("listening on {addr}"),
+    )
+}
+
+fn cmd_client(rest: &[String]) -> Result<()> {
+    let args = Args::new("client", "send one request")
+        .flag("addr", "127.0.0.1:7878", "server address")
+        .flag("prompt", "copy:abc=", "prompt text")
+        .flag("max-new", "16", "max new tokens")
+        .switch("shutdown", "send shutdown instead");
+    let p = parse_or_usage(args, rest);
+    let mut c = Client::connect(p.get("addr"))?;
+    if p.get_bool("shutdown") {
+        c.shutdown()?;
+        println!("shutdown sent");
+        return Ok(());
+    }
+    let resp = c.request(
+        p.get("prompt"),
+        p.get_usize("max-new").map_err(anyhow::Error::msg)?,
+    )?;
+    println!("{resp}");
+    Ok(())
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let args = common(Args::new("eval", "zero-shot task-suite accuracy"))
+        .flag("per-family", "20", "items per task family")
+        .flag("max-new", "12", "max new tokens per item");
+    let p = parse_or_usage(args, rest);
+    let (engine, mode) = load_engine(&p)?;
+    let suite_path = PathBuf::from(p.get("artifacts")).join("eval_tasks.jsonl");
+    let per_family = p.get_usize("per-family").map_err(anyhow::Error::msg)?;
+    let max_new = p.get_usize("max-new").map_err(anyhow::Error::msg)?;
+    let score =
+        bench::accuracy::eval_suite(&engine, mode, &suite_path, per_family, max_new)?;
+    for (fam, acc, n) in &score.per_family {
+        println!("{fam:<6} {acc:.3}  (n={n})");
+    }
+    println!("average {:.3}", score.average);
+    Ok(())
+}

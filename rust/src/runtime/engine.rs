@@ -1,0 +1,283 @@
+//! Model engine: prefill / decode step API over compiled entries, plus the
+//! pipeline-parallel and tensor-parallel drivers (Figs 11, 12).
+//!
+//! The decode hot path keeps the KV cache as an `xla::Literal` that flows
+//! output -> input across steps without host-side reshaping. (The 0.1.6
+//! crate cannot donate buffers or decompose tuples on device, so each step
+//! still pays one host copy of the tuple output — see DESIGN.md §Perf.)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::executor::Executor;
+use super::tensor::Tensor;
+
+/// Batched KV cache at a fixed (batch, seq) bucket.
+pub struct KvCache {
+    pub lit: xla::Literal,
+    pub batch: usize,
+    pub n: usize,
+}
+
+impl KvCache {
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Tensor::from_literal(&self.lit)
+    }
+
+    pub fn from_tensor(t: &Tensor, batch: usize, n: usize) -> Result<KvCache> {
+        Ok(KvCache { lit: t.to_literal()?, batch, n })
+    }
+}
+
+pub struct StepOutput {
+    pub logits: Tensor, // [B, V]
+    pub kv: KvCache,
+}
+
+#[derive(Clone)]
+pub struct Engine {
+    pub exec: Arc<Executor>,
+}
+
+impl Engine {
+    pub fn new(exec: Arc<Executor>) -> Engine {
+        Engine { exec }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.exec.config().vocab
+    }
+
+    /// Pre-compile every (batch, seq) bucket of a decode mode plus the
+    /// prefill entries, so serving never pays a JIT stall mid-request
+    /// (the CUDA-graph capture analogue). Returns the number compiled.
+    pub fn precompile(&self, tag: &str) -> Result<usize> {
+        let m = self.exec.manifest();
+        let mut n = 0;
+        let names: Vec<String> = m
+            .batch_buckets
+            .iter()
+            .flat_map(|&b| {
+                let mut v: Vec<String> = m
+                    .seq_buckets
+                    .iter()
+                    .map(|&s| m.decode_entry_name(tag, b, s))
+                    .collect();
+                v.push(m.prefill_entry_name(b));
+                v
+            })
+            .collect();
+        for name in names {
+            if m.entries.contains_key(&name) && !self.exec.is_cached(&name) {
+                self.exec.compiled(&name)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Dense prompt pass at the prefill bucket. tokens: [B, S_prefill]
+    /// (padded), lengths: [B]. Returns last-position logits + KV (n =
+    /// prefill bucket).
+    pub fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
+        let b = tokens.shape()[0];
+        let name = self.exec.manifest().prefill_entry_name(b);
+        let outs = self
+            .exec
+            .run_raw(&name, &[tokens.to_literal()?, lengths.to_literal()?])?;
+        let logits = Tensor::from_literal(&outs[0])?;
+        let n = self.exec.manifest().prefill_len;
+        let kv = KvCache { lit: outs.into_iter().nth(1).unwrap(), batch: b, n };
+        Ok(StepOutput { logits, kv })
+    }
+
+    /// One decode step through the entry `decode_{tag}_b{B}_n{N}`.
+    /// tokens/lengths: per-slot [B]; lengths already include the new token.
+    pub fn decode(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        kv: KvCache,
+    ) -> Result<StepOutput> {
+        let b = kv.batch;
+        if tokens.len() != b || lengths.len() != b {
+            bail!("decode: tokens/lengths len != batch {b}");
+        }
+        if let Some(&max) = lengths.iter().max() {
+            if max as usize > kv.n {
+                bail!("decode: length {max} exceeds kv bucket {}", kv.n);
+            }
+        }
+        let name = self.exec.manifest().decode_entry_name(tag, b, kv.n);
+        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let outs = self.exec.run_raw(&name, &[toks, lens, kv.lit])?;
+        let logits = Tensor::from_literal(&outs[0])?;
+        let kv = KvCache { lit: outs.into_iter().nth(1).unwrap(), batch: b, n: kv.n };
+        Ok(StepOutput { logits, kv })
+    }
+
+    // -- pipeline parallel (2 stages, Fig 11) -----------------------------
+
+    /// One decode step through the two pipeline stages. kv0/kv1 hold the
+    /// stage-local layer slices (split by `coordinator::kv::split_layers`).
+    pub fn decode_pp2(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        kv0: KvCache,
+        kv1: KvCache,
+        n: usize,
+    ) -> Result<(Tensor, KvCache, KvCache)> {
+        let b = tokens.len();
+        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let s0 = format!("pp2_stage0_{tag}_b{b}_n{n}");
+        let outs0 = self.exec.run_raw(&s0, &[toks, lens, kv0.lit])?;
+        let mut it0 = outs0.into_iter();
+        let x = it0.next().context("stage0 x")?;
+        let kv0 = KvCache { lit: it0.next().context("stage0 kv")?, batch: b, n };
+
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let s1 = format!("pp2_stage1_{tag}_b{b}_n{n}");
+        let outs1 = self.exec.run_raw(&s1, &[x, lens, kv1.lit])?;
+        let mut it1 = outs1.into_iter();
+        let logits = Tensor::from_literal(&it1.next().context("stage1 logits")?)?;
+        let kv1 = KvCache { lit: it1.next().context("stage1 kv")?, batch: b, n };
+        Ok((logits, kv0, kv1))
+    }
+
+    // -- tensor parallel (Megatron-style, Fig 12) --------------------------
+
+    /// One decode step across `n_shards` TP shards with host all-reduce
+    /// after attention and MLP of every layer. `kv[shard][layer]` holds
+    /// [2,B,Gs,N,dh] literals. `attn_tag` is "dense" or "sha_dXXXX"
+    /// (layer 0 always uses "dense", §3.2); `mlp_tag` is "dense" or "kNN".
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_tp(
+        &self,
+        n_shards: usize,
+        attn_tag: &str,
+        mlp_tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        kv: Vec<Vec<xla::Literal>>,
+        n: usize,
+        parallel: bool,
+    ) -> Result<(Tensor, Vec<Vec<xla::Literal>>)> {
+        let b = tokens.len();
+        let cfg = self.exec.config();
+        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        let lens_t = Tensor::i32(lengths.to_vec(), vec![b])?;
+        let embed = self
+            .exec
+            .run_raw(&format!("tp{n_shards}_embed_b{b}"), &[toks, lens_t.to_literal()?])?;
+        let mut x = Tensor::from_literal(&embed[0])?;
+
+        let mut kv_new: Vec<Vec<xla::Literal>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        let mut kv = kv;
+        for l in 0..cfg.n_layers {
+            let tag = if l == 0 { "dense" } else { attn_tag };
+            // attention shards (+ local kv update)
+            let shard_outs = self.run_shards(
+                n_shards,
+                parallel,
+                |s| format!("tp{n_shards}_attn_s{s}_{tag}_b{b}_n{n}"),
+                |s| {
+                    Ok(vec![
+                        Tensor::i32(vec![l as i32], vec![])?.to_literal()?,
+                        x.to_literal()?,
+                        std::mem::replace(&mut kv[s][l], empty_literal()),
+                        lens_t.to_literal()?,
+                    ])
+                },
+            )?;
+            let xd = x.as_f32_mut()?;
+            for (s, outs) in shard_outs.into_iter().enumerate() {
+                let mut it = outs.into_iter();
+                let partial = Tensor::from_literal(&it.next().context("attn partial")?)?;
+                for (xi, pi) in xd.iter_mut().zip(partial.as_f32()?) {
+                    *xi += pi; // host all-reduce: sum partials into residual
+                }
+                kv_new[s].push(it.next().context("attn kv")?);
+            }
+            // MLP shards
+            let shard_outs = self.run_shards(
+                n_shards,
+                parallel,
+                |s| format!("tp{n_shards}_mlp_s{s}_{mlp_tag}_b{b}"),
+                |_| {
+                    Ok(vec![
+                        Tensor::i32(vec![l as i32], vec![])?.to_literal()?,
+                        x.to_literal()?,
+                    ])
+                },
+            )?;
+            let xd = x.as_f32_mut()?;
+            for outs in shard_outs {
+                let partial = Tensor::from_literal(&outs[0])?;
+                for (xi, pi) in xd.iter_mut().zip(partial.as_f32()?) {
+                    *xi += pi;
+                }
+            }
+        }
+        let fin = self
+            .exec
+            .run_raw(&format!("tp{n_shards}_final_b{b}"), &[x.to_literal()?])?;
+        Ok((Tensor::from_literal(&fin[0])?, kv_new))
+    }
+
+    /// Run one executable per shard, optionally on worker threads (the
+    /// host-side analogue of simultaneous multi-GPU dispatch).
+    fn run_shards(
+        &self,
+        n_shards: usize,
+        parallel: bool,
+        name: impl Fn(usize) -> String + Sync,
+        inputs: impl FnMut(usize) -> Result<Vec<xla::Literal>>,
+    ) -> Result<Vec<Vec<xla::Literal>>> {
+        let mut inputs = inputs;
+        let mut prepared = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            prepared.push((name(s), inputs(s)?));
+        }
+        if parallel {
+            // SAFETY: PJRT execution is thread-safe; Literal is only moved,
+            // not aliased, across the scope boundary (see Executor note).
+            struct SendLits(Vec<xla::Literal>);
+            unsafe impl Send for SendLits {}
+            let exec = &self.exec;
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = prepared
+                    .into_iter()
+                    .map(|(nm, ins)| {
+                        let ins = SendLits(ins);
+                        scope.spawn(move || {
+                            // rebind to defeat disjoint-field capture (which
+                            // would capture the inner Vec<Literal> directly)
+                            let ins = ins;
+                            exec.run_raw(&nm, &ins.0).map(SendLits)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard thread panicked").map(|r| r.0))
+                    .collect()
+            })
+        } else {
+            prepared
+                .into_iter()
+                .map(|(nm, ins)| self.exec.run_raw(&nm, &ins))
+                .collect()
+        }
+    }
+}
+
+fn empty_literal() -> xla::Literal {
+    xla::Literal::scalar(0f32)
+}

@@ -1,0 +1,226 @@
+//! PJRT executor: lazy per-entry compile cache + the weight set uploaded
+//! once per model. All python is out of the picture here — executables are
+//! compiled from AOT HLO text and run on the PJRT CPU client.
+//!
+//! Thread-safety: the PJRT C++ client is thread-safe; the rust wrapper
+//! types just hold raw pointers and are not marked Send/Sync. `Executor`
+//! is used from the engine thread and (for the TP driver) from short-lived
+//! worker threads via `unsafe impl Send + Sync` — see the safety note.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::FromRawBytes;
+
+use super::manifest::{EntrySpec, Manifest};
+use super::tensor::Tensor;
+
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    weights: Vec<xla::Literal>, // sorted by name, matches manifest.params
+    /// The same weights uploaded ONCE as device buffers. The hot path runs
+    /// `execute_b` over these, so per-step host->device traffic is only
+    /// the entry's data inputs (tokens/lengths/kv) — without this, PJRT
+    /// re-copies every weight literal on every call (§Perf).
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// A/B switch for EXPERIMENTS.md §Perf (env POLAR_WEIGHTS_LITERAL=1
+    /// forces the naive literal path).
+    use_weight_bufs: bool,
+    cache: Mutex<HashMap<String, Arc<CompiledEntry>>>,
+    pub compile_stats: Mutex<CompileStats>,
+}
+
+// SAFETY: PJRT's C API is thread-safe (all entry points lock internally or
+// are immutable after construction); Literal buffers are only read after
+// construction. The wrapper types lack Send/Sync solely because they hold
+// raw pointers.
+unsafe impl Send for Executor {}
+unsafe impl Sync for Executor {}
+
+pub struct CompiledEntry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CompileStats {
+    pub compiled: usize,
+    pub total_seconds: f64,
+}
+
+impl Executor {
+    /// Load the model directory: manifest + weights (npz) and create the
+    /// PJRT CPU client. HLO entries compile lazily on first use.
+    pub fn load(model_dir: &Path) -> Result<Executor> {
+        let manifest = Manifest::load(model_dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+
+        let npz = model_dir.join("model.npz");
+        let named: Vec<(String, xla::Literal)> = xla::Literal::read_npz(&npz, &())
+            .with_context(|| format!("reading {}", npz.display()))?;
+        let mut by_name: HashMap<String, xla::Literal> = named.into_iter().collect();
+        let mut weights = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let lit = by_name
+                .remove(&p.name)
+                .with_context(|| format!("weight {} missing from npz", p.name))?;
+            let shape: Vec<usize> = lit
+                .array_shape()?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            if shape != p.shape {
+                bail!(
+                    "weight {} shape {:?} != manifest {:?}",
+                    p.name, shape, p.shape
+                );
+            }
+            weights.push(lit);
+        }
+        let weight_bufs = weights
+            .iter()
+            .map(|w| client.buffer_from_host_literal(None, w))
+            .collect::<xla::Result<Vec<_>>>()
+            .context("uploading weight buffers")?;
+        let use_weight_bufs = std::env::var("POLAR_WEIGHTS_LITERAL").is_err();
+        Ok(Executor {
+            client,
+            manifest,
+            weights,
+            weight_bufs,
+            use_weight_bufs,
+            cache: Mutex::new(HashMap::new()),
+            compile_stats: Mutex::new(CompileStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn config(&self) -> &super::manifest::ModelConfig {
+        &self.manifest.config
+    }
+
+    /// Compile (or fetch from cache) an entry by name.
+    pub fn compiled(&self, name: &str) -> Result<Arc<CompiledEntry>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("hlo path utf-8")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.compile_stats.lock().unwrap();
+            st.compiled += 1;
+            st.total_seconds += dt;
+        }
+        let entry = Arc::new(CompiledEntry { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.cache.lock().unwrap().contains_key(name)
+    }
+
+    /// Run an entry: data literals (entry order) + the model weight set.
+    /// Returns the decomposed output tuple.
+    pub fn run_literals(
+        &self,
+        entry: &CompiledEntry,
+        data: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        if data.len() != entry.spec.data.len() {
+            bail!(
+                "{}: got {} data inputs, expected {}",
+                entry.spec.name,
+                data.len(),
+                entry.spec.data.len()
+            );
+        }
+        let result = if self.use_weight_bufs {
+            // hot path: persistent weight buffers + per-call data buffers
+            let data_bufs = data
+                .iter()
+                .map(|l| self.client.buffer_from_host_literal(None, l))
+                .collect::<xla::Result<Vec<_>>>()
+                .context("uploading data inputs")?;
+            let mut inputs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(data.len() + self.weight_bufs.len());
+            inputs.extend(data_bufs.iter());
+            inputs.extend(self.weight_bufs.iter());
+            entry
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&inputs)
+                .with_context(|| format!("executing {}", entry.spec.name))?
+        } else {
+            let mut inputs: Vec<&xla::Literal> =
+                Vec::with_capacity(data.len() + self.weights.len());
+            inputs.extend(data.iter());
+            inputs.extend(self.weights.iter());
+            entry
+                .exe
+                .execute::<&xla::Literal>(&inputs)
+                .with_context(|| format!("executing {}", entry.spec.name))?
+        };
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let parts = tuple.to_tuple().context("untuple result")?;
+        if parts.len() != entry.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, expected {}",
+                entry.spec.name,
+                parts.len(),
+                entry.spec.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Convenience: run by name with host tensors in, host tensors out.
+    pub fn run(&self, name: &str, data: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.compiled(name)?;
+        for (t, spec) in data.iter().zip(entry.spec.data.iter()) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{name}: input {} shape {:?} != expected {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> = data
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.run_literals(&entry, &lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Run by name with pre-built literals (hot path: kv literal reuse).
+    pub fn run_raw(&self, name: &str, data: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self.compiled(name)?;
+        self.run_literals(&entry, data)
+    }
+}

@@ -1,0 +1,280 @@
+//! Artifact manifest (written by python/compile/aot.py).
+//!
+//! The manifest pins the whole rust<->HLO calling convention: for every
+//! entry, inputs are the listed data tensors (in order) followed by the
+//! full weight set sorted by name; outputs are a result tuple in the
+//! listed order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::substrate::json::Json;
+use super::tensor::Dtype;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").as_str().context("spec name")?.to_string(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .context("spec shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape dim"))
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.get("dtype").as_str().unwrap_or("f32"))?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub data: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl EntrySpec {
+    pub fn batch(&self) -> usize {
+        self.meta.get("batch").as_usize().unwrap_or(0)
+    }
+    pub fn seq_bucket(&self) -> usize {
+        self.meta.get("seq_bucket").as_usize().unwrap_or(0)
+    }
+    pub fn mode(&self) -> &str {
+        self.meta.get("mode").as_str().unwrap_or("")
+    }
+    pub fn density(&self) -> f64 {
+        self.meta.get("density").as_f64().unwrap_or(1.0)
+    }
+}
+
+/// Model geometry (mirror of python ModelConfig, from the manifest).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub analogue: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub mlp: String,
+    pub pos: String,
+    pub critical_density: f64,
+}
+
+impl ModelConfig {
+    pub fn n_groups(&self) -> usize {
+        self.n_kv_heads
+    }
+    pub fn q_per_group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+    /// Elements in one KV cache tensor [L,2,B,G,N,dh].
+    pub fn kv_elems(&self, batch: usize, n: usize) -> usize {
+        self.n_layers * 2 * batch * self.n_kv_heads * n * self.d_head
+    }
+    pub fn kv_shape(&self, batch: usize, n: usize) -> Vec<usize> {
+        vec![self.n_layers, 2, batch, self.n_kv_heads, n, self.d_head]
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub config: ModelConfig,
+    pub params: Vec<TensorSpec>,
+    pub batch_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub prefill_len: usize,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(model_dir: &Path) -> Result<Manifest> {
+        let path = model_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = j.get("config");
+        let geta = |k: &str| -> Result<usize> {
+            c.get(k).as_usize().with_context(|| format!("config.{k}"))
+        };
+        let config = ModelConfig {
+            name: j.get("model").as_str().unwrap_or("").to_string(),
+            analogue: j.get("analogue").as_str().unwrap_or("").to_string(),
+            d_model: geta("d_model")?,
+            n_layers: geta("n_layers")?,
+            n_heads: geta("n_heads")?,
+            n_kv_heads: geta("n_kv_heads")?,
+            d_ff: geta("d_ff")?,
+            d_head: geta("d_head")?,
+            vocab: geta("vocab")?,
+            max_seq: geta("max_seq")?,
+            mlp: c.get("mlp").as_str().unwrap_or("relu").to_string(),
+            pos: c.get("pos").as_str().unwrap_or("learned").to_string(),
+            critical_density: c.get("critical_density").as_f64().unwrap_or(0.5),
+        };
+
+        let params = j
+            .get("params")
+            .as_arr()
+            .context("params")?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let buckets = j.get("buckets");
+        let to_usize_vec = |v: &Json| -> Vec<usize> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+
+        let mut entries = BTreeMap::new();
+        for e in j.get("entries").as_arr().context("entries")?.iter() {
+            let spec = EntrySpec {
+                name: e.get("name").as_str().context("entry name")?.to_string(),
+                kind: e.get("kind").as_str().unwrap_or("").to_string(),
+                file: e.get("file").as_str().context("entry file")?.to_string(),
+                data: e
+                    .get("data")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                meta: e.get("meta").clone(),
+            };
+            entries.insert(spec.name.clone(), spec);
+        }
+
+        Ok(Manifest {
+            dir: model_dir.to_path_buf(),
+            model: j.get("model").as_str().unwrap_or("").to_string(),
+            config,
+            params,
+            batch_buckets: to_usize_vec(buckets.get("batch")),
+            seq_buckets: to_usize_vec(buckets.get("seq")),
+            prefill_len: buckets.get("prefill").as_usize().unwrap_or(64),
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no entry {name:?} in manifest for {}", self.model))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn decode_entry_name(&self, tag: &str, batch: usize, n: usize) -> String {
+        format!("decode_{tag}_b{batch}_n{n}")
+    }
+
+    pub fn prefill_entry_name(&self, batch: usize) -> String {
+        format!("prefill_b{batch}")
+    }
+
+    /// Smallest batch bucket >= need (error if need exceeds the largest).
+    pub fn batch_bucket(&self, need: usize) -> Result<usize> {
+        self.batch_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= need)
+            .with_context(|| format!("no batch bucket >= {need}"))
+    }
+
+    /// Smallest seq bucket >= need.
+    pub fn seq_bucket(&self, need: usize) -> Result<usize> {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .find(|&n| n >= need)
+            .with_context(|| format!("no seq bucket >= {need}"))
+    }
+
+    /// Mode tag for a decode entry ("dense", "dejavu", "polar_d0500", ...).
+    pub fn mode_tag(mode: &str, density: f64) -> String {
+        if mode == "dense" || mode == "dejavu" {
+            mode.to_string()
+        } else {
+            format!("{mode}_d{:04}", (density * 1000.0).round() as usize)
+        }
+    }
+
+    pub fn entry_names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_tags() {
+        assert_eq!(Manifest::mode_tag("dense", 1.0), "dense");
+        assert_eq!(Manifest::mode_tag("dejavu", 0.5), "dejavu");
+        assert_eq!(Manifest::mode_tag("polar", 0.5), "polar_d0500");
+        assert_eq!(Manifest::mode_tag("polar", 0.625), "polar_d0625");
+        assert_eq!(Manifest::mode_tag("teal", 0.25), "teal_d0250");
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("ps_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "model": "m", "analogue": "x",
+          "config": {"d_model": 8, "n_layers": 2, "n_heads": 2, "n_kv_heads": 2,
+                     "d_ff": 16, "d_head": 4, "vocab": 10, "max_seq": 32,
+                     "mlp": "relu", "pos": "learned", "critical_density": 0.5},
+          "params": [{"name": "w", "shape": [2, 8], "dtype": "float32"}],
+          "buckets": {"batch": [1, 2, 4], "seq": [16, 32], "prefill": 16},
+          "entries": [{"name": "decode_dense_b1_n16", "kind": "decode",
+            "file": "hlo/decode_dense_b1_n16.hlo.txt",
+            "data": [{"name": "tokens", "shape": [1], "dtype": "i32"}],
+            "outputs": [{"name": "logits", "shape": [1, 10], "dtype": "f32"}],
+            "meta": {"batch": 1, "seq_bucket": 16, "mode": "dense", "density": 1.0}}]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.kv_shape(1, 16), vec![2, 2, 1, 2, 16, 4]);
+        assert_eq!(m.batch_bucket(3).unwrap(), 4);
+        assert!(m.batch_bucket(5).is_err());
+        assert_eq!(m.seq_bucket(17).unwrap(), 32);
+        let e = m.entry("decode_dense_b1_n16").unwrap();
+        assert_eq!(e.batch(), 1);
+        assert_eq!(e.mode(), "dense");
+        assert_eq!(e.data[0].dtype, Dtype::I32);
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client, artifact manifest, weight loading, lazy
+//! executable compilation and the prefill/decode/PP/TP step drivers.
+//! Adapted from the /opt/xla-example/load_hlo pattern (HLO **text** is the
+//! interchange format — see DESIGN.md).
+
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, KvCache, StepOutput};
+pub use executor::Executor;
+pub use manifest::{EntrySpec, Manifest, ModelConfig, TensorSpec};
+pub use tensor::{Dtype, Tensor};

@@ -1,0 +1,176 @@
+//! Host tensors + conversions to/from `xla::Literal`.
+//!
+//! The coordinator does all of its KV-cache surgery (slot splicing, bucket
+//! promotion, batch regrouping) on these host buffers; literals are built
+//! right before `execute`.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" | "float32" => Ok(Dtype::F32),
+            "i32" | "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Result<Tensor> {
+        if data.len() != numel(&shape) {
+            bail!("f32 tensor: {} elements vs shape {:?}", data.len(), shape);
+        }
+        Ok(Tensor::F32 { data, shape })
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Result<Tensor> {
+        if data.len() != numel(&shape) {
+            bail!("i32 tensor: {} elements vs shape {:?}", data.len(), shape);
+        }
+        Ok(Tensor::I32 { data, shape })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        Tensor::F32 { data: vec![0.0; numel(&shape)], shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32 { .. } => Dtype::F32,
+            Tensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        numel(self.shape())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (bytes, ty, shape): (&[u8], _, _) = match self {
+            Tensor::F32 { data, shape } => (
+                unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                },
+                xla::ElementType::F32,
+                shape,
+            ),
+            Tensor::I32 { data, shape } => (
+                unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                },
+                xla::ElementType::S32,
+                shape,
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, bytes)
+            .context("literal from tensor")
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Tensor::f32(lit.to_vec::<f32>()?, dims),
+            xla::ElementType::S32 => Tensor::i32(lit.to_vec::<i32>()?, dims),
+            other => bail!("unsupported literal dtype {other:?}"),
+        }
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let shape = self.shape();
+        let mut s = vec![1; shape.len()];
+        for i in (0..shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * shape[i + 1];
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::f32(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(Tensor::f32(vec![0.0; 5], vec![2, 3]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32((0..24).map(|i| i as f32).collect(), vec![2, 3, 4]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![5, -2, 7], vec![3]).unwrap();
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros_f32(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+}

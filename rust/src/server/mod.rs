@@ -1,0 +1,238 @@
+//! TCP JSON-lines serving front-end (std::net + threads; the vendored set
+//! has no tokio, and a blocking reactor keeps the single-core hot path
+//! free of executor overhead).
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"prompt": "copy:ab=", "max_new": 16, "temperature": 0.0}
+//!   <- {"id": 3, "text": "ab", "finish": "stop", "ttft_ms": ..,
+//!       "e2e_ms": .., "tokens": [..]}
+//!   -> {"cmd": "stats"}   <- engine metrics
+//!   -> {"cmd": "shutdown"}
+//!
+//! Architecture: acceptor + per-connection reader threads push
+//! (request, reply-sender) pairs into a shared queue; the engine thread —
+//! which owns the (non-Send) PJRT state — drains it, steps the scheduler,
+//! and routes completions back.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    Completion, Mode, Request, SamplingParams, Scheduler, SchedulerConfig,
+    SparsityController,
+};
+use crate::runtime::{Engine, Executor};
+use crate::substrate::json::Json;
+use crate::tokenizer::Tokenizer;
+
+pub struct ServerConfig {
+    pub model_dir: PathBuf,
+    pub addr: String,
+    pub mode: Mode,
+    pub max_batch: usize,
+}
+
+struct Inbound {
+    request: Request,
+    reply: Sender<Json>,
+}
+
+/// Run the server; blocks until a shutdown command arrives.
+/// `on_ready` receives the bound address (useful with port 0).
+pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr).context("bind")?;
+    let local = listener.local_addr()?.to_string();
+    let queue: Arc<Mutex<Vec<Inbound>>> = Arc::new(Mutex::new(Vec::new()));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let next_id = Arc::new(AtomicU64::new(1));
+
+    // Engine thread owns all PJRT state.
+    let q2 = queue.clone();
+    let sd2 = shutdown.clone();
+    let engine_thread = std::thread::spawn(move || -> Result<()> {
+        let exec = Arc::new(Executor::load(&cfg.model_dir)?);
+        let engine = Engine::new(exec);
+        let ctl = SparsityController::new(cfg.mode);
+        ctl.validate(engine.exec.manifest())?;
+        let mut sched = Scheduler::new(
+            engine,
+            ctl,
+            SchedulerConfig { max_batch: cfg.max_batch, compact: true },
+        );
+        let tok = Tokenizer::new();
+        let mut waiting: HashMap<u64, Sender<Json>> = HashMap::new();
+        loop {
+            // drain inbound
+            for inb in q2.lock().unwrap().drain(..) {
+                waiting.insert(inb.request.id, inb.reply);
+                sched.enqueue(inb.request);
+            }
+            if sched.is_idle() {
+                if sd2.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            for c in sched.step()? {
+                if let Some(reply) = waiting.remove(&c.id) {
+                    let _ = reply.send(completion_json(&tok, &c));
+                }
+            }
+        }
+    });
+
+    on_ready(local);
+
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let q = queue.clone();
+        let sd = shutdown.clone();
+        let ni = next_id.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, q, sd, ni);
+        });
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    engine_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+    Ok(())
+}
+
+fn completion_json(tok: &Tokenizer, c: &Completion) -> Json {
+    Json::obj(vec![
+        ("id", (c.id as usize).into()),
+        ("text", tok.decode(&c.output_ids).into()),
+        (
+            "tokens",
+            Json::arr(c.output_ids.iter().map(|&t| (t as i64).into())),
+        ),
+        (
+            "finish",
+            match c.finish {
+                crate::coordinator::FinishReason::Stop => "stop",
+                crate::coordinator::FinishReason::Length => "length",
+                crate::coordinator::FinishReason::CacheLimit => "cache_limit",
+            }
+            .into(),
+        ),
+        ("ttft_ms", (c.ttft_s * 1e3).into()),
+        ("e2e_ms", (c.e2e_s * 1e3).into()),
+    ])
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: Arc<Mutex<Vec<Inbound>>>,
+    shutdown: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+) -> Result<()> {
+    let tok = Tokenizer::new();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![("error", e.to_string().into())]))?;
+                continue;
+            }
+        };
+        match j.get("cmd").as_str() {
+            Some("shutdown") => {
+                shutdown.store(true, Ordering::SeqCst);
+                // poke the acceptor loop awake
+                writeln!(writer, "{}", Json::obj(vec![("ok", true.into())]))?;
+                let _ = TcpStream::connect(writer.local_addr()?);
+                return Ok(());
+            }
+            Some("ping") => {
+                writeln!(writer, "{}", Json::obj(vec![("ok", true.into())]))?;
+                continue;
+            }
+            _ => {}
+        }
+        let prompt = j.get("prompt").as_str().unwrap_or("").to_string();
+        let params = SamplingParams {
+            max_new_tokens: j.get("max_new").as_usize().unwrap_or(32),
+            temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
+            top_k: j.get("top_k").as_usize().unwrap_or(0),
+            ..Default::default()
+        };
+        let id = next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        queue.lock().unwrap().push(Inbound {
+            request: Request {
+                id,
+                prompt_ids: tok.encode_prompt(&prompt),
+                params,
+                enqueued_at: Instant::now(),
+            },
+            reply: tx,
+        });
+        match rx.recv_timeout(Duration::from_secs(600)) {
+            Ok(resp) => writeln!(writer, "{resp}")?,
+            Err(_) => writeln!(
+                writer,
+                "{}",
+                Json::obj(vec![("error", "timeout".into()), ("id", (id as usize).into())])
+            )?,
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client (examples + integration tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, prompt: &str, max_new: usize) -> Result<Json> {
+        let j = Json::obj(vec![
+            ("prompt", prompt.into()),
+            ("max_new", max_new.into()),
+        ]);
+        writeln!(self.writer, "{j}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(Into::into)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", Json::obj(vec![("cmd", "shutdown".into())]))?;
+        let mut line = String::new();
+        let _ = self.reader.read_line(&mut line);
+        Ok(())
+    }
+}

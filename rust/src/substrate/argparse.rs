@@ -1,0 +1,250 @@
+//! Tiny declarative CLI flag parser (no `clap` in the vendored set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults and required flags, and renders a usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+    required: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+    values: BTreeMap<String, String>,
+    pos_values: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+            required: true,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nusage: {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [flags]\n\nflags:\n");
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => String::new(),
+                (Some(d), _) if !d.is_empty() => format!(" (default: {d})"),
+                (Some(_), _) => String::new(),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse; returns Err(usage-or-error string) on bad input or --help.
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{name} needs a value"))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.pos_values.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !self.values.contains_key(&f.name) {
+                match &f.default {
+                    Some(d) => {
+                        self.values.insert(f.name.clone(), d.clone());
+                    }
+                    None if f.required => {
+                        return Err(format!("missing required --{}\n\n{}", f.name, self.usage()));
+                    }
+                    None => {}
+                }
+            }
+        }
+        if self.pos_values.len() > self.positionals.len() {
+            return Err(format!(
+                "unexpected positional {:?}\n\n{}",
+                self.pos_values[self.positionals.len()],
+                self.usage()
+            ));
+        }
+        Ok(Parsed {
+            values: self.values,
+            pos_values: self.pos_values,
+        })
+    }
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pos_values: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name} must be a number, got {:?}", self.get(name)))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.pos_values.get(i).map(|s| s.as_str())
+    }
+
+    /// Comma-separated list helper ("a,b,c" -> vec).
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            vec![]
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .flag("model", "opt-tiny", "model name")
+            .flag("batch", "8", "batch size")
+            .switch("verbose", "chatty")
+            .required("out", "output path")
+            .positional("cmd", "subcommand")
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let p = spec()
+            .parse(&argv(&["run", "--model=opt-small", "--batch", "16", "--out", "/tmp/x", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.positional(0), Some("run"));
+        assert_eq!(p.get("model"), "opt-small");
+        assert_eq!(p.get_usize("batch").unwrap(), 16);
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.get("out"), "/tmp/x");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&argv(&["--out", "x"])).unwrap();
+        assert_eq!(p.get("model"), "opt-tiny");
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&argv(&["run"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(spec().parse(&argv(&["--nope", "1", "--out", "x"])).is_err());
+    }
+
+    #[test]
+    fn list_helper() {
+        let p = Args::new("t", "")
+            .flag("models", "a,b", "")
+            .parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(p.get_list("models"), vec!["a", "b"]);
+    }
+}

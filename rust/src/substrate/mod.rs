@@ -1,0 +1,9 @@
+//! In-tree substrates (the offline image vendors only the `xla` crate's
+//! closure, so JSON, CLI parsing, PRNG, stats and property testing are all
+//! implemented here).
+
+pub mod argparse;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,126 @@
+//! Mini property-testing harness (no `proptest` in the vendored set).
+//!
+//! `check(name, cases, |g| { ... })` runs the closure against `cases`
+//! generated inputs drawn through the `Gen` handle. On failure it reruns
+//! with the failing seed to confirm, then panics with the seed so the case
+//! is reproducible (`PROP_SEED=<n>` reruns a single seed).
+
+use super::rng::Rng;
+
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f64() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// Random subset of size k from 0..n without replacement.
+    pub fn distinct(&mut self, k: usize, n: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut pool: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut pool);
+        pool.truncate(k);
+        pool
+    }
+
+    pub fn ascii_string(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(0, max_len + 1);
+        (0..len)
+            .map(|_| (self.usize_in(0x20, 0x7f) as u8) as char)
+            .collect()
+    }
+
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let len = self.usize_in(0, max_len + 1);
+        (0..len).map(|_| self.usize_in(0, 256) as u8).collect()
+    }
+}
+
+/// Run `f` over `cases` generated inputs; panics with the failing seed.
+pub fn check<F: Fn(&mut Gen) -> Result<(), String>>(name: &str, cases: u64, f: F) {
+    // env override: rerun a single seed
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().expect("PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        if let Err(msg) = f(&mut g) {
+            panic!("[{name}] failed at PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x9E3779B9u64.wrapping_mul(case + 1) ^ hash_name(name);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = f(&mut g) {
+            panic!("[{name}] case {case} failed (PROP_SEED={seed}): {msg}");
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// assert-style helper for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_is_distinct() {
+        check("distinct", 50, |g| {
+            let n = g.usize_in(1, 40);
+            let k = g.usize_in(0, n + 1);
+            let v = g.distinct(k, n);
+            let mut s = v.clone();
+            s.sort();
+            s.dedup();
+            prop_assert!(s.len() == v.len(), "duplicates in {v:?}");
+            prop_assert!(v.iter().all(|&x| x < n), "out of range in {v:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_| Err("nope".to_string()));
+    }
+}

@@ -1,0 +1,158 @@
+//! Latency/throughput statistics: reservoir-free exact percentile samples,
+//! streaming mean/std, and a fixed-window throughput meter.
+
+use std::time::Duration;
+
+/// Collects raw samples (seconds) and reports mean / std / percentiles.
+/// Exact (keeps all samples) — bench runs are small enough.
+#[derive(Debug, Default, Clone)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn push_duration(&mut self, d: Duration) {
+        self.push(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.xs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (q / 100.0) * (v.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            v[lo]
+        } else {
+            v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn summary_ms(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms",
+            self.len(),
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.p90() * 1e3,
+            self.p99() * 1e3
+        )
+    }
+}
+
+/// Tokens/requests per second over a measured wall-clock span.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Throughput {
+    pub units: u64,
+    pub elapsed_s: f64,
+}
+
+impl Throughput {
+    pub fn add(&mut self, units: u64, elapsed: Duration) {
+        self.units += units;
+        self.elapsed_s += elapsed.as_secs_f64();
+    }
+
+    pub fn per_second(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            return 0.0;
+        }
+        self.units as f64 / self.elapsed_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!(s.p99() > 98.0 && s.p99() <= 100.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn throughput() {
+        let mut t = Throughput::default();
+        t.add(100, Duration::from_secs_f64(0.5));
+        t.add(100, Duration::from_secs_f64(0.5));
+        assert!((t.per_second() - 200.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,91 @@
+//! Byte-level tokenizer, mirroring python/compile/corpus.py exactly:
+//! ids 0..=255 are raw bytes; 256 = PAD, 257 = BOS, 258 = EOS.
+
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+pub const VOCAB: usize = 259;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    /// UTF-8 bytes -> ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    /// Prompt encoding as the models were trained: the corpus stream is
+    /// BOS followed by newline-separated lines, so a fresh prompt is
+    /// [BOS, '\n', ...] — the newline puts the model at a line start.
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 2);
+        v.push(BOS);
+        v.push(b'\n' as i32);
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// ids -> text; specials and invalid UTF-8 are dropped/replaced.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&i| (0..256).contains(&i))
+            .map(|&i| i as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, id: i32) -> bool {
+        !(0..256).contains(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::substrate::prop::check;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = Tokenizer::new();
+        let s = "copy:abc=abc\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn prompt_has_bos_and_line_start() {
+        let t = Tokenizer::new();
+        let ids = t.encode_prompt("hi");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids[1], b'\n' as i32);
+        assert_eq!(&ids[2..], &[104, 105]);
+    }
+
+    #[test]
+    fn specials_dropped_in_decode() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS, PAD]), "hi");
+    }
+
+    #[test]
+    fn prop_bytes_roundtrip() {
+        check("tokenizer-roundtrip", 100, |g| {
+            let bytes = g.bytes(64);
+            let t = Tokenizer::new();
+            let ids: Vec<i32> = bytes.iter().map(|&b| b as i32).collect();
+            let text = t.decode(&ids);
+            // valid UTF-8 inputs round-trip exactly
+            if let Ok(s) = std::str::from_utf8(&bytes) {
+                prop_assert!(text == s, "mismatch for {bytes:?}");
+                prop_assert!(t.encode(s) == ids, "encode mismatch");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Zero-shot task suite (the lm-eval-harness analogue).
+//!
+//! The fixed eval set is produced by python/compile/corpus.py
+//! (artifacts/eval_tasks.jsonl) so rust and python score identical
+//! instances. Scoring protocol: greedy-decode after the prompt's '='
+//! delimiter; exact match of the expected answer (continuation up to the
+//! stop token).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::substrate::json::Json;
+
+pub const FAMILIES: [&str; 9] = [
+    "copy", "rev", "succ", "add", "maj", "cmp", "srt", "kv", "pat",
+];
+
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub family: String,
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Load the fixed eval suite written at artifact-build time.
+pub fn load_suite(path: &Path) -> Result<Vec<TaskItem>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut items = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("line {}", i + 1))?;
+        items.push(TaskItem {
+            family: j.get("family").as_str().context("family")?.to_string(),
+            prompt: j.get("prompt").as_str().context("prompt")?.to_string(),
+            answer: j.get("answer").as_str().context("answer")?.to_string(),
+        });
+    }
+    Ok(items)
+}
+
+/// Exact-match scoring of a generated continuation against the answer.
+/// The generation may include the stop token ('\n') after the answer.
+pub fn is_correct(item: &TaskItem, generated: &str) -> bool {
+    let g = generated.split('\n').next().unwrap_or("");
+    g == item.answer
+}
+
+/// Per-family + aggregate accuracy.
+#[derive(Debug, Default, Clone)]
+pub struct SuiteScore {
+    pub per_family: Vec<(String, f64, usize)>, // (family, accuracy, n)
+    pub average: f64,
+}
+
+pub fn score(results: &[(TaskItem, String)]) -> SuiteScore {
+    let mut agg: std::collections::BTreeMap<String, (usize, usize)> = Default::default();
+    for (item, gen) in results {
+        let e = agg.entry(item.family.clone()).or_default();
+        e.1 += 1;
+        if is_correct(item, gen) {
+            e.0 += 1;
+        }
+    }
+    let per_family: Vec<(String, f64, usize)> = agg
+        .into_iter()
+        .map(|(f, (c, n))| (f, c as f64 / n.max(1) as f64, n))
+        .collect();
+    let average = if per_family.is_empty() {
+        0.0
+    } else {
+        per_family.iter().map(|(_, a, _)| a).sum::<f64>() / per_family.len() as f64
+    };
+    SuiteScore { per_family, average }
+}
+
+/// A small built-in prompt set for workload generation (serving benches
+/// don't need the fixed suite, just realistic prompt shapes).
+pub fn builtin_prompts() -> Vec<String> {
+    vec![
+        "copy:abcde=".into(),
+        "rev:abc=".into(),
+        "succ:f=".into(),
+        "add:17+25=".into(),
+        "maj:aabab=".into(),
+        "cmp:4,7=".into(),
+        "srt:cab=".into(),
+        "kv:a1 b2 c3?b=".into(),
+        "pat:ababab*=".into(),
+        "the scheduler groups requests into batches. copy:ab=".into(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(fam: &str, prompt: &str, ans: &str) -> TaskItem {
+        TaskItem {
+            family: fam.into(),
+            prompt: prompt.into(),
+            answer: ans.into(),
+        }
+    }
+
+    #[test]
+    fn exact_match_scoring() {
+        let it = item("copy", "copy:ab=", "ab");
+        assert!(is_correct(&it, "ab"));
+        assert!(is_correct(&it, "ab\nextra"));
+        assert!(!is_correct(&it, "abx"));
+        assert!(!is_correct(&it, "a"));
+    }
+
+    #[test]
+    fn aggregate_score() {
+        let results = vec![
+            (item("copy", "p", "x"), "x".to_string()),
+            (item("copy", "p", "y"), "z".to_string()),
+            (item("rev", "p", "q"), "q".to_string()),
+        ];
+        let s = score(&results);
+        assert_eq!(s.per_family.len(), 2);
+        let copy = s.per_family.iter().find(|(f, _, _)| f == "copy").unwrap();
+        assert!((copy.1 - 0.5).abs() < 1e-9);
+        assert!((s.average - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("ps_tasks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tasks.jsonl");
+        std::fs::write(
+            &p,
+            "{\"family\":\"copy\",\"prompt\":\"copy:ab=\",\"answer\":\"ab\"}\n\
+             {\"family\":\"add\",\"prompt\":\"add:1+1=\",\"answer\":\"2\"}\n",
+        )
+        .unwrap();
+        let items = load_suite(&p).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].answer, "2");
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving-trace record/replay: persist a generated workload (arrival
+//! times + prompts) as JSONL so throughput experiments are replayable
+//! byte-for-byte across modes (dense vs DejaVu vs Polar use the *same*
+//! trace in the benches).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Request, SamplingParams};
+use crate::substrate::json::Json;
+
+use super::TimedRequest;
+
+pub fn save(path: &Path, reqs: &[TimedRequest]) -> Result<()> {
+    let mut out = String::new();
+    for r in reqs {
+        let j = Json::obj(vec![
+            ("id", (r.request.id as usize).into()),
+            ("at_s", r.at_s.into()),
+            (
+                "prompt_ids",
+                Json::arr(r.request.prompt_ids.iter().map(|&t| (t as i64).into())),
+            ),
+            ("max_new", r.request.params.max_new_tokens.into()),
+            ("temperature", (r.request.params.temperature as f64).into()),
+        ]);
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn load(path: &Path) -> Result<Vec<TimedRequest>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let now = Instant::now();
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+        let prompt_ids = j
+            .get("prompt_ids")
+            .as_arr()
+            .context("prompt_ids")?
+            .iter()
+            .map(|v| v.as_i64().map(|x| x as i32).context("token id"))
+            .collect::<Result<Vec<i32>>>()?;
+        out.push(TimedRequest {
+            at_s: j.get("at_s").as_f64().unwrap_or(0.0),
+            request: Request {
+                id: j.get("id").as_usize().unwrap_or(i) as u64,
+                prompt_ids,
+                params: SamplingParams {
+                    max_new_tokens: j.get("max_new").as_usize().unwrap_or(16),
+                    temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
+                    ..Default::default()
+                },
+                enqueued_at: now,
+            },
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, WorkloadConfig};
+
+    #[test]
+    fn roundtrip() {
+        let reqs = generate(&WorkloadConfig {
+            n_requests: 7,
+            arrival_rate: 10.0,
+            ..Default::default()
+        });
+        let dir = std::env::temp_dir().join("ps_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trace.jsonl");
+        save(&p, &reqs).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.request.id, b.request.id);
+            assert_eq!(a.request.prompt_ids, b.request.prompt_ids);
+            assert!((a.at_s - b.at_s).abs() < 1e-9);
+            assert_eq!(
+                a.request.params.max_new_tokens,
+                b.request.params.max_new_tokens
+            );
+        }
+    }
+}
