@@ -4,11 +4,10 @@
 //!   make artifacts && cargo run --release --example quickstart
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 use polar_sparsity::coordinator::{
-    Mode, Request, SamplingParams, Scheduler, SchedulerConfig, SparsityController,
+    Mode, Request, Scheduler, SchedulerConfig, SparsityController,
 };
 use polar_sparsity::runtime::{Engine, Executor};
 use polar_sparsity::tokenizer::Tokenizer;
@@ -29,14 +28,13 @@ fn main() -> Result<()> {
         ctl.validate(engine.exec.manifest())?;
         engine.precompile(&ctl.decode_tag())?; // JIT out of the timed path
         let mut sched = Scheduler::new(engine, ctl, SchedulerConfig::default());
-        let now = Instant::now();
         for (i, prompt) in ["succ:c=", "cmp:3,8=", "copy:ab="].iter().enumerate() {
-            sched.enqueue(Request {
-                id: i as u64,
-                prompt_ids: tok.encode_prompt(prompt),
-                params: SamplingParams { max_new_tokens: 8, ..Default::default() },
-                enqueued_at: now,
-            });
+            sched.enqueue(
+                Request::builder(tok.encode_prompt(prompt))
+                    .id(i as u64)
+                    .max_new_tokens(8)
+                    .build(),
+            );
         }
         let mut done = sched.run_to_completion()?;
         done.sort_by_key(|c| c.id);

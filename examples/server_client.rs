@@ -1,6 +1,7 @@
 //! Server + client demo: starts the TCP JSON-lines server in-process on an
-//! ephemeral port, drives it with concurrent clients (so requests batch),
-//! then shuts it down.
+//! ephemeral port, drives it with concurrent blocking clients (so requests
+//! batch), then shows the v2 protocol: a streaming client printing tokens
+//! as they arrive, a mid-generation cancel, and the stats command.
 //!
 //!   cargo run --release --example server_client
 
@@ -28,6 +29,7 @@ fn main() -> Result<()> {
     let addr = addr_rx.recv()?;
     println!("server up on {addr}");
 
+    // --- blocking clients in parallel: requests batch on the server -----
     let prompts = ["succ:a=", "succ:b=", "cmp:1,9=", "copy:xy=", "maj:aabab="];
     let handles: Vec<_> = prompts
         .iter()
@@ -49,7 +51,56 @@ fn main() -> Result<()> {
         println!("{}", h.join().expect("client thread")?);
     }
 
-    Client::connect(&addr)?.shutdown()?;
+    // --- streaming client: per-token events as they are emitted ---------
+    let mut c = Client::connect(&addr)?;
+    print!("stream succ:c=  -> ");
+    for ev in c.stream("succ:c=", 8)? {
+        let ev = ev?;
+        match ev.get("event").as_str() {
+            Some("token") => print!("{}", ev.get("text").as_str().unwrap_or("")),
+            Some("finished") => println!(
+                "  (finish {:?}, ttft {:.0} ms)",
+                ev.get("finish").as_str().unwrap_or("?"),
+                ev.get("ttft_ms").as_f64().unwrap_or(0.0)
+            ),
+            _ => {}
+        }
+    }
+
+    // --- cancel mid-generation: token flow stops within one step --------
+    let mut tokens_before_cancel = 0;
+    let mut stream = c.stream("copy:abcabcabc=", 64)?;
+    while let Some(ev) = stream.next() {
+        let ev = ev?;
+        match ev.get("event").as_str() {
+            Some("token") => {
+                tokens_before_cancel += 1;
+                if tokens_before_cancel == 2 {
+                    stream.cancel()?;
+                }
+            }
+            Some("cancelled") => {
+                println!(
+                    "cancelled after {} tokens (partial {:?})",
+                    tokens_before_cancel,
+                    ev.get("text").as_str().unwrap_or("")
+                );
+            }
+            _ => {}
+        }
+    }
+
+    // --- engine metrics over the wire ------------------------------------
+    let stats = c.stats()?;
+    let s = stats.get("stats");
+    println!(
+        "stats: {} completed, {} cancelled, {} decode steps",
+        s.get("completed_requests"),
+        s.get("cancelled_requests"),
+        s.get("decode_steps")
+    );
+
+    c.shutdown()?;
     server.join().expect("server thread")?;
     println!("server shut down cleanly");
     Ok(())

@@ -2,15 +2,16 @@
 //!
 //! Loads opt-tiny, replays an identical Poisson-arrival workload through
 //! the continuous-batching scheduler under dense, DejaVu and Polar modes,
-//! and reports throughput / TTFT / inter-token latency — the serving-paper
-//! analogue of "load a small real model and serve batched requests".
+//! and reports throughput / TTFT / inter-token latency — measured from
+//! the per-token event stream (bench::serving), exactly as a streaming
+//! client observes them.
 //!
 //!   cargo run --release --example serving_e2e [n_requests] [rate]
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::Result;
+use polar_sparsity::bench::serving::replay;
 use polar_sparsity::coordinator::{Mode, Scheduler, SchedulerConfig, SparsityController};
 use polar_sparsity::runtime::{Engine, Executor};
 use polar_sparsity::workload::{generate, WorkloadConfig};
@@ -50,35 +51,17 @@ fn main() -> Result<()> {
             SchedulerConfig { max_batch: 16, compact: true },
         );
         // replay the same trace: requests arrive on their Poisson schedule
-        let trace = generate(&wl);
-        let t0 = Instant::now();
-        let mut pending: std::collections::VecDeque<_> = trace.into();
-        let mut completed = 0usize;
-        while completed < n_requests {
-            while let Some(front) = pending.front() {
-                if t0.elapsed().as_secs_f64() >= front.at_s {
-                    let mut tr = pending.pop_front().unwrap();
-                    tr.request.enqueued_at = Instant::now();
-                    sched.enqueue(tr.request);
-                } else {
-                    break;
-                }
-            }
-            if sched.is_idle() {
-                std::thread::sleep(Duration::from_millis(1));
-                continue;
-            }
-            completed += sched.step()?.len();
-        }
-        let m = &sched.metrics;
+        // and every latency number comes from the event stream
+        let run = replay(&mut sched, generate(&wl))?;
+        assert_eq!(run.completions.len(), n_requests);
         println!(
             "{:<8} {:>10.1} {:>8.1}ms {:>8.1}ms {:>8.1}ms {:>9}",
             format!("{:?}", mode).split(' ').next().unwrap().to_lowercase(),
-            m.decode_throughput(),
-            m.itl.p50() * 1e3,
-            m.ttft.p50() * 1e3,
-            m.e2e.p50() * 1e3,
-            m.decode_steps,
+            sched.metrics.decode_throughput(),
+            run.itl.p50() * 1e3,
+            run.ttft.p50() * 1e3,
+            run.e2e.p50() * 1e3,
+            sched.metrics.decode_steps,
         );
     }
     println!("\n(record this run in EXPERIMENTS.md — serving e2e validation)");

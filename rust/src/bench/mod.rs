@@ -5,6 +5,7 @@
 pub mod accuracy;
 pub mod figures;
 pub mod harness;
+pub mod serving;
 pub mod throughput;
 
 pub use harness::{fmt_ms, fmt_x, time_it, BenchOpts, Report};

@@ -11,15 +11,22 @@ pub struct EngineMetrics {
     pub step_latency: Samples,
     /// Wall time of each prefill call.
     pub prefill_latency: Samples,
-    /// Inter-token latency samples (per generated token across requests).
+    /// Inter-token latency samples, measured between consecutive real
+    /// token emissions per slot (pushed by the scheduler's event loop).
     pub itl: Samples,
-    /// Time-to-first-token per request.
+    /// Time-to-first-token per request, measured when the first token is
+    /// actually emitted out of prefill (not back-computed at completion).
     pub ttft: Samples,
     /// End-to-end per request.
     pub e2e: Samples,
     pub decode_steps: u64,
     pub generated_tokens: u64,
+    /// Requests that reached a natural terminal (stop / length / cache
+    /// limit / stop sequence). Cancellations and deadline expiries are
+    /// counted separately below.
     pub completed_requests: u64,
+    pub cancelled_requests: u64,
+    pub deadline_expired: u64,
     pub kv_rebuilds: u64,
     pub bucket_promotions: u64,
     pub decode_wall_s: f64,
@@ -32,12 +39,6 @@ impl EngineMetrics {
         self.decode_steps += 1;
         self.decode_wall_s += d.as_secs_f64();
         self.generated_tokens += active as u64;
-        if active > 0 {
-            // each active slot observed this step as its inter-token gap
-            for _ in 0..active {
-                self.itl.push(d.as_secs_f64());
-            }
-        }
     }
 
     /// Decode throughput in generated tokens / second of decode wall time.
@@ -61,6 +62,8 @@ impl EngineMetrics {
             ("decode_steps", (self.decode_steps as usize).into()),
             ("generated_tokens", (self.generated_tokens as usize).into()),
             ("completed_requests", (self.completed_requests as usize).into()),
+            ("cancelled_requests", (self.cancelled_requests as usize).into()),
+            ("deadline_expired", (self.deadline_expired as usize).into()),
             ("decode_tok_per_s", self.decode_throughput().into()),
             ("total_tok_per_s", self.total_throughput().into()),
             ("step_ms_p50", (self.step_latency.p50() * 1e3).into()),

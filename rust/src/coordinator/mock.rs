@@ -1,0 +1,127 @@
+//! Deterministic mock [`StepEngine`](super::StepEngine) for scheduler and
+//! protocol tests (and offline protocol development — the v2 streaming
+//! server runs against it without any AOT artifacts).
+//!
+//! The "LM": for a prompt whose last id is `c`, it emits `c+1`, `c+2`, …
+//! until the id leaves byte range, then the `'\n'` stop token. It
+//! verifies scheduling and protocol behaviour, not numerics. KV carries a
+//! per-slot fingerprint in position 0 so tests can detect slot aliasing.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
+use crate::tokenizer::PAD;
+
+use super::scheduler::StepEngine;
+
+pub struct MockEngine {
+    cfg: ModelConfig,
+    batch_buckets: Vec<usize>,
+    seq_buckets: Vec<usize>,
+    /// Artificial per-decode-step delay, so tests can race cancellation
+    /// against generation deterministically.
+    step_delay: Duration,
+}
+
+impl Default for MockEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MockEngine {
+    pub fn new() -> Self {
+        MockEngine {
+            cfg: ModelConfig {
+                name: "mock".into(),
+                analogue: "mock".into(),
+                d_model: 8,
+                n_layers: 2,
+                n_heads: 2,
+                n_kv_heads: 2,
+                d_ff: 16,
+                d_head: 2,
+                vocab: 300,
+                max_seq: 64,
+                mlp: "relu".into(),
+                pos: "learned".into(),
+                critical_density: 0.5,
+            },
+            batch_buckets: vec![1, 2, 4, 8],
+            seq_buckets: vec![16, 32, 64],
+            step_delay: Duration::ZERO,
+        }
+    }
+
+    /// Sleep this long inside every decode step.
+    pub fn with_step_delay(mut self, d: Duration) -> Self {
+        self.step_delay = d;
+        self
+    }
+
+    fn logits_for(&self, token: i32) -> Vec<f32> {
+        // next token = token + 1 (wrapping to '\n' outside byte range)
+        let mut row = vec![0.0f32; self.cfg.vocab];
+        let next = if token >= 255 { b'\n' as i32 } else { token + 1 };
+        row[next as usize] = 10.0;
+        row
+    }
+}
+
+impl StepEngine for MockEngine {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+    fn batch_buckets(&self) -> &[usize] {
+        &self.batch_buckets
+    }
+    fn seq_buckets(&self) -> &[usize] {
+        &self.seq_buckets
+    }
+    fn prefill_len(&self) -> usize {
+        16
+    }
+    fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
+        let b = tokens.shape()[0];
+        let s = tokens.shape()[1];
+        let toks = tokens.as_i32()?;
+        let lens = lengths.as_i32()?;
+        let mut logits = Vec::with_capacity(b * self.cfg.vocab);
+        for i in 0..b {
+            let last = toks[i * s + (lens[i] as usize - 1).min(s - 1)];
+            logits.extend(self.logits_for(last));
+        }
+        let mut kvt = Tensor::zeros_f32(self.cfg.kv_shape(b, 16));
+        // fingerprint: first element per slot = first prompt token
+        for i in 0..b {
+            let block = self.cfg.n_kv_heads * 16 * self.cfg.d_head;
+            kvt.as_f32_mut()?[i * block] = toks[i * s] as f32;
+        }
+        Ok(StepOutput {
+            logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
+            kv: KvCache::from_tensor(&kvt, b, 16)?,
+        })
+    }
+    fn decode(
+        &self,
+        _tag: &str,
+        tokens: &[i32],
+        _lengths: &[i32],
+        kv: KvCache,
+    ) -> Result<StepOutput> {
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let b = tokens.len();
+        let mut logits = Vec::with_capacity(b * self.cfg.vocab);
+        for &t in tokens {
+            logits.extend(self.logits_for(if t == PAD { 0 } else { t }));
+        }
+        Ok(StepOutput {
+            logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
+            kv,
+        })
+    }
+}

@@ -1,147 +1,53 @@
 //! L3 coordinator: the paper's serving-system contribution.
 //!
-//! Modules: continuous batching scheduler over static-shape executables,
-//! KV-slot surgery, sparsity controller (dense / DejaVu / Polar), sampler,
-//! metrics.
+//! Modules: continuous batching scheduler over static-shape executables
+//! (event-driven: `Scheduler::step()` emits per-token
+//! [`GenerationEvent`]s), KV-slot surgery, sparsity controller (dense /
+//! DejaVu / Polar), sampler, metrics, and a deterministic mock engine for
+//! tests and offline protocol work.
 
 pub mod kv;
 pub mod metrics;
+pub mod mock;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
 pub mod sparsity;
 
-pub use request::{Completion, FinishReason, Request, SamplingParams};
+pub use request::{
+    Completion, FinishReason, GenerationEvent, Request, RequestBuilder, SamplingParams,
+};
 pub use scheduler::{Scheduler, SchedulerConfig, StepEngine};
 pub use sparsity::{Mode, SparsityController};
 
 #[cfg(test)]
 mod scheduler_tests {
-    use std::time::Instant;
-
-    use anyhow::Result;
+    use std::time::Duration;
 
     use crate::prop_assert;
-    use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
     use crate::substrate::prop::check;
-    use crate::tokenizer::PAD;
 
-    use super::scheduler::{Scheduler, SchedulerConfig, StepEngine};
+    use super::mock::MockEngine;
+    use super::scheduler::{Scheduler, SchedulerConfig};
     use super::sparsity::{Mode, SparsityController};
     use super::*;
 
-    /// Mock engine: deterministic "LM" that, for a prompt whose first id is
-    /// `c`, emits `c+1` for `c+1 - prompt-first-id` steps then the stop
-    /// token. Verifies scheduling, not numerics. KV carries a per-slot
-    /// fingerprint in position 0 so tests can detect slot aliasing.
-    struct MockEngine {
-        cfg: ModelConfig,
-        batch_buckets: Vec<usize>,
-        seq_buckets: Vec<usize>,
-    }
-
-    impl MockEngine {
-        fn new() -> Self {
-            MockEngine {
-                cfg: ModelConfig {
-                    name: "mock".into(),
-                    analogue: "mock".into(),
-                    d_model: 8,
-                    n_layers: 2,
-                    n_heads: 2,
-                    n_kv_heads: 2,
-                    d_ff: 16,
-                    d_head: 2,
-                    vocab: 300,
-                    max_seq: 64,
-                    mlp: "relu".into(),
-                    pos: "learned".into(),
-                    critical_density: 0.5,
-                },
-                batch_buckets: vec![1, 2, 4, 8],
-                seq_buckets: vec![16, 32, 64],
-            }
-        }
-
-        fn logits_for(&self, token: i32) -> Vec<f32> {
-            // next token = token + 1 (wrapping inside byte range)
-            let mut row = vec![0.0f32; self.cfg.vocab];
-            let next = if token >= 255 { b'\n' as i32 } else { token + 1 };
-            row[next as usize] = 10.0;
-            row
-        }
-    }
-
-    impl StepEngine for MockEngine {
-        fn config(&self) -> &ModelConfig {
-            &self.cfg
-        }
-        fn batch_buckets(&self) -> &[usize] {
-            &self.batch_buckets
-        }
-        fn seq_buckets(&self) -> &[usize] {
-            &self.seq_buckets
-        }
-        fn prefill_len(&self) -> usize {
-            16
-        }
-        fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
-            let b = tokens.shape()[0];
-            let s = tokens.shape()[1];
-            let toks = tokens.as_i32()?;
-            let lens = lengths.as_i32()?;
-            let mut logits = Vec::with_capacity(b * self.cfg.vocab);
-            for i in 0..b {
-                let last = toks[i * s + (lens[i] as usize - 1).min(s - 1)];
-                logits.extend(self.logits_for(last));
-            }
-            let mut kvt = Tensor::zeros_f32(self.cfg.kv_shape(b, 16));
-            // fingerprint: first element per slot = last prompt token
-            for i in 0..b {
-                let block = self.cfg.n_kv_heads * 16 * self.cfg.d_head;
-                kvt.as_f32_mut()?[i * block] = toks[i * s] as f32;
-            }
-            Ok(StepOutput {
-                logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
-                kv: KvCache::from_tensor(&kvt, b, 16)?,
-            })
-        }
-        fn decode(
-            &self,
-            _tag: &str,
-            tokens: &[i32],
-            _lengths: &[i32],
-            kv: KvCache,
-        ) -> Result<StepOutput> {
-            let b = tokens.len();
-            let mut logits = Vec::with_capacity(b * self.cfg.vocab);
-            for &t in tokens {
-                logits.extend(self.logits_for(if t == PAD { 0 } else { t }));
-            }
-            Ok(StepOutput {
-                logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
-                kv,
-            })
-        }
-    }
-
     fn req(id: u64, first: i32, max_new: usize) -> Request {
-        Request {
-            id,
-            prompt_ids: vec![first, first],
-            params: SamplingParams {
-                max_new_tokens: max_new,
-                ..Default::default()
-            },
-            enqueued_at: Instant::now(),
-        }
+        Request::builder(vec![first, first])
+            .id(id)
+            .max_new_tokens(max_new)
+            .build()
     }
 
     fn sched() -> Scheduler<MockEngine> {
+        sched_with(SchedulerConfig { max_batch: 8, compact: true })
+    }
+
+    fn sched_with(cfg: SchedulerConfig) -> Scheduler<MockEngine> {
         Scheduler::new(
             MockEngine::new(),
             SparsityController::new(Mode::Polar { density: 0.5 }),
-            SchedulerConfig { max_batch: 8, compact: true },
+            cfg,
         )
     }
 
@@ -228,6 +134,157 @@ mod scheduler_tests {
     }
 
     #[test]
+    fn event_stream_is_ordered_per_request() {
+        let mut s = sched();
+        s.enqueue(req(1, 10, 4));
+        let mut events = Vec::new();
+        while !s.is_idle() {
+            events.extend(s.step().unwrap());
+        }
+        // exact lifecycle: Queued, Prefilled, Token x4, Finished
+        assert_eq!(events.len(), 7, "events: {events:?}");
+        assert!(matches!(events[0], GenerationEvent::Queued { request: 1 }));
+        assert!(matches!(events[1], GenerationEvent::Prefilled { request: 1 }));
+        for (k, ev) in events[2..6].iter().enumerate() {
+            match ev {
+                GenerationEvent::Token { request, id, index, text_offset } => {
+                    assert_eq!(*request, 1);
+                    assert_eq!(*id, 11 + k as i32);
+                    assert_eq!(*index, k);
+                    // byte tokens: offset advances one byte per token
+                    assert_eq!(*text_offset, k);
+                }
+                other => panic!("expected Token, got {other:?}"),
+            }
+        }
+        match &events[6] {
+            GenerationEvent::Finished(c) => {
+                assert_eq!(c.output_ids, vec![11, 12, 13, 14]);
+                assert!(c.ttft_s <= c.e2e_s);
+            }
+            other => panic!("expected Finished, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_mid_generation_frees_slot_and_emits_partial() {
+        let mut s = sched();
+        s.enqueue(req(1, 100, 50));
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        assert_eq!(s.active_len(), 1);
+        assert!(s.cancel(1));
+        // slot freed immediately, before the next step runs
+        assert_eq!(s.active_len(), 0);
+        let events = s.step().unwrap();
+        let c = events
+            .into_iter()
+            .find_map(|e| match e {
+                GenerationEvent::Cancelled(c) => Some(c),
+                _ => None,
+            })
+            .expect("cancelled event");
+        assert_eq!(c.finish, FinishReason::Cancelled);
+        assert!(!c.output_ids.is_empty() && c.output_ids.len() < 50);
+        assert_eq!(s.metrics.cancelled_requests, 1);
+        // no further events for the cancelled request
+        while !s.is_idle() {
+            for ev in s.step().unwrap() {
+                panic!("unexpected event after cancel: {ev:?}");
+            }
+        }
+        assert!(!s.cancel(1), "cancel of finished id must report false");
+    }
+
+    #[test]
+    fn cancel_pending_request_never_prefills() {
+        let mut s = sched();
+        s.enqueue(req(1, 10, 5));
+        assert!(s.cancel(1));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert!(done[0].output_ids.is_empty());
+        assert_eq!(s.metrics.completed_requests, 0);
+        assert_eq!(s.metrics.cancelled_requests, 1);
+    }
+
+    #[test]
+    fn deadline_expires_pending_and_active() {
+        let mut s = sched();
+        // already-expired pending request never starts
+        s.enqueue(
+            Request::builder(vec![10, 10])
+                .id(1)
+                .max_new_tokens(5)
+                .deadline(Duration::ZERO)
+                .build(),
+        );
+        // generous deadline finishes normally
+        s.enqueue(
+            Request::builder(vec![20, 20])
+                .id(2)
+                .max_new_tokens(3)
+                .deadline(Duration::from_secs(60))
+                .build(),
+        );
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let c1 = done.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c1.finish, FinishReason::Deadline);
+        assert!(c1.output_ids.is_empty());
+        let c2 = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.finish, FinishReason::Length);
+        assert_eq!(s.metrics.deadline_expired, 1);
+    }
+
+    #[test]
+    fn stop_sequence_halts_generation() {
+        let mut s = sched();
+        // increments 11, 12, 13, 14, ... — stop when output ends [13, 14]
+        s.enqueue(
+            Request::builder(vec![10, 10])
+                .id(1)
+                .max_new_tokens(50)
+                .stop_sequence(vec![13, 14])
+                .build(),
+        );
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::StopSequence);
+        assert_eq!(done[0].output_ids, vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn priority_orders_admission() {
+        // capacity 1: requests run one at a time, so admission order is
+        // completion order
+        let mut s = sched_with(SchedulerConfig { max_batch: 1, compact: true });
+        s.enqueue(req(1, 10, 3)); // priority 0
+        s.enqueue(
+            Request::builder(vec![20, 20])
+                .id(2)
+                .max_new_tokens(3)
+                .priority(5)
+                .build(),
+        );
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, 2, "high priority must finish first");
+        assert_eq!(done[1].id, 1);
+    }
+
+    #[test]
+    fn ttft_and_itl_recorded_at_emission() {
+        let mut s = sched();
+        s.enqueue(req(1, 100, 8));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.ttft.len(), 1);
+        // 8 tokens -> 7 inter-token gaps
+        assert_eq!(s.metrics.itl.len(), 7);
+    }
+
+    #[test]
     fn prop_every_request_completes_exactly_once() {
         check("scheduler-completeness", 15, |g| {
             let mut s = sched();
@@ -242,7 +299,8 @@ mod scheduler_tests {
             let mut done = Vec::new();
             let mut guard = 0;
             while !s.is_idle() {
-                done.extend(s.step().map_err(|e| e.to_string())?);
+                let events = s.step().map_err(|e| e.to_string())?;
+                done.extend(events.into_iter().filter_map(GenerationEvent::completion));
                 guard += 1;
                 prop_assert!(guard < 10_000, "scheduler did not converge");
             }
@@ -259,6 +317,50 @@ mod scheduler_tests {
                 prop_assert!(
                     c.output_ids.len() <= max_new,
                     "req {} overshot max_new", c.id
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_event_stream_consistent_with_completions() {
+        check("scheduler-event-consistency", 10, |g| {
+            let mut s = sched();
+            let n = g.usize_in(1, 8);
+            for id in 0..n as u64 {
+                let first = g.usize_in(30, 200) as i32;
+                let max_new = g.usize_in(1, 10);
+                s.enqueue(req(id, first, max_new));
+            }
+            let mut token_counts = std::collections::BTreeMap::new();
+            let mut completions = Vec::new();
+            let mut guard = 0;
+            while !s.is_idle() {
+                for ev in s.step().map_err(|e| e.to_string())? {
+                    match ev {
+                        GenerationEvent::Token { request, index, .. } => {
+                            let c = token_counts.entry(request).or_insert(0usize);
+                            prop_assert!(
+                                index == *c,
+                                "req {request} token index {index} != {c}"
+                            );
+                            *c += 1;
+                        }
+                        GenerationEvent::Finished(c) => completions.push(c),
+                        _ => {}
+                    }
+                }
+                guard += 1;
+                prop_assert!(guard < 10_000, "did not converge");
+            }
+            prop_assert!(completions.len() == n, "missing completions");
+            for c in &completions {
+                let toks = token_counts.get(&c.id).copied().unwrap_or(0);
+                prop_assert!(
+                    toks == c.output_ids.len(),
+                    "req {}: {} token events but {} output ids",
+                    c.id, toks, c.output_ids.len()
                 );
             }
             Ok(())

@@ -1,6 +1,7 @@
-//! Request/response types and generation parameters.
+//! Request/response types, generation parameters, and the per-token
+//! generation event stream.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Sampling configuration for one request.
 #[derive(Debug, Clone, Copy)]
@@ -34,7 +35,85 @@ pub struct Request {
     pub id: u64,
     pub prompt_ids: Vec<i32>,
     pub params: SamplingParams,
+    /// Admission priority: higher values leave the pending queue first
+    /// (FIFO among equals).
+    pub priority: i32,
+    /// Relative deadline from `enqueued_at`. Expired requests finish with
+    /// `FinishReason::Deadline` — active slots stop decoding, pending ones
+    /// never start.
+    pub deadline: Option<Duration>,
+    /// Token-id sequences that terminate generation when the output ends
+    /// with one of them (`FinishReason::StopSequence`). The matched
+    /// sequence stays in the output.
+    pub stop_sequences: Vec<Vec<i32>>,
     pub enqueued_at: Instant,
+}
+
+impl Request {
+    /// Start building a request from its prompt token ids.
+    pub fn builder(prompt_ids: Vec<i32>) -> RequestBuilder {
+        RequestBuilder {
+            req: Request {
+                id: 0,
+                prompt_ids,
+                params: SamplingParams::default(),
+                priority: 0,
+                deadline: None,
+                stop_sequences: Vec::new(),
+                enqueued_at: Instant::now(),
+            },
+        }
+    }
+}
+
+/// Builder for [`Request`]; `build()` stamps `enqueued_at`.
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    req: Request,
+}
+
+impl RequestBuilder {
+    pub fn id(mut self, id: u64) -> Self {
+        self.req.id = id;
+        self
+    }
+
+    pub fn params(mut self, params: SamplingParams) -> Self {
+        self.req.params = params;
+        self
+    }
+
+    pub fn max_new_tokens(mut self, n: usize) -> Self {
+        self.req.params.max_new_tokens = n;
+        self
+    }
+
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.req.params.temperature = t;
+        self
+    }
+
+    pub fn priority(mut self, p: i32) -> Self {
+        self.req.priority = p;
+        self
+    }
+
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.req.deadline = Some(d);
+        self
+    }
+
+    pub fn stop_sequence(mut self, seq: Vec<i32>) -> Self {
+        if !seq.is_empty() {
+            self.req.stop_sequences.push(seq);
+        }
+        self
+    }
+
+    pub fn build(mut self) -> Request {
+        self.req.enqueued_at = Instant::now();
+        self.req
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +121,26 @@ pub enum FinishReason {
     Stop,
     Length,
     CacheLimit,
+    /// Output ended with one of the request's stop sequences.
+    StopSequence,
+    /// Reaped by `Scheduler::cancel`.
+    Cancelled,
+    /// The request's relative deadline expired before it finished.
+    Deadline,
+}
+
+impl FinishReason {
+    /// Wire-protocol string (PROTOCOL.md `finish` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::CacheLimit => "cache_limit",
+            FinishReason::StopSequence => "stop_sequence",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
+        }
+    }
 }
 
 /// Completed generation, with per-request latency breakdown.
@@ -51,9 +150,114 @@ pub struct Completion {
     pub output_ids: Vec<i32>,
     pub finish: FinishReason,
     pub prompt_len: usize,
-    /// queue-entry -> first token
+    /// queue-entry -> first token, measured when the token was emitted
+    /// (equals `e2e_s` for requests that never produced a token)
     pub ttft_s: f64,
     /// queue-entry -> completion
     pub e2e_s: f64,
     pub decode_steps: usize,
+}
+
+/// One item of the scheduler's per-step event stream. Every request
+/// produces `Queued`, then (unless it dies in the queue) `Prefilled`,
+/// one `Token` per generated token, and exactly one terminal event
+/// (`Finished` or `Cancelled`).
+#[derive(Debug, Clone)]
+pub enum GenerationEvent {
+    /// Accepted into the pending queue.
+    Queued { request: u64 },
+    /// Prompt prefilled into a batch slot; decoding starts this step.
+    Prefilled { request: u64 },
+    /// One generated token. `index` counts from 0; `text_offset` is the
+    /// byte offset in the decoded output text where this token's text
+    /// begins (specials contribute no bytes).
+    Token {
+        request: u64,
+        id: i32,
+        index: usize,
+        text_offset: usize,
+    },
+    /// Terminal: the request ran to a natural finish (or its deadline).
+    Finished(Completion),
+    /// Terminal: the request was cancelled; partial output inside.
+    Cancelled(Completion),
+}
+
+impl GenerationEvent {
+    pub fn request_id(&self) -> u64 {
+        match self {
+            GenerationEvent::Queued { request }
+            | GenerationEvent::Prefilled { request }
+            | GenerationEvent::Token { request, .. } => *request,
+            GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => c.id,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            GenerationEvent::Finished(_) | GenerationEvent::Cancelled(_)
+        )
+    }
+
+    /// Terminal payload, if any.
+    pub fn completion(self) -> Option<Completion> {
+        match self {
+            GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let r = Request::builder(vec![1, 2, 3])
+            .id(7)
+            .max_new_tokens(5)
+            .temperature(0.5)
+            .priority(2)
+            .deadline(Duration::from_millis(100))
+            .stop_sequence(vec![10, 11])
+            .stop_sequence(vec![]) // ignored
+            .build();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt_ids, vec![1, 2, 3]);
+        assert_eq!(r.params.max_new_tokens, 5);
+        assert_eq!(r.priority, 2);
+        assert_eq!(r.deadline, Some(Duration::from_millis(100)));
+        assert_eq!(r.stop_sequences, vec![vec![10, 11]]);
+    }
+
+    #[test]
+    fn event_accessors() {
+        let c = Completion {
+            id: 3,
+            output_ids: vec![1],
+            finish: FinishReason::Stop,
+            prompt_len: 2,
+            ttft_s: 0.0,
+            e2e_s: 0.0,
+            decode_steps: 1,
+        };
+        let ev = GenerationEvent::Finished(c.clone());
+        assert_eq!(ev.request_id(), 3);
+        assert!(ev.is_terminal());
+        assert!(ev.completion().is_some());
+        let tok = GenerationEvent::Token { request: 9, id: 65, index: 0, text_offset: 0 };
+        assert_eq!(tok.request_id(), 9);
+        assert!(!tok.is_terminal());
+        assert!(tok.completion().is_none());
+    }
+
+    #[test]
+    fn finish_reason_strings() {
+        assert_eq!(FinishReason::Stop.as_str(), "stop");
+        assert_eq!(FinishReason::StopSequence.as_str(), "stop_sequence");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::Deadline.as_str(), "deadline");
+    }
 }

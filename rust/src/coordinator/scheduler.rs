@@ -2,12 +2,17 @@
 //! executables (the CUDA-graph-style constraint, DESIGN.md).
 //!
 //! Responsibilities per step:
-//!   1. reap finished slots -> completions
-//!   2. admit pending requests: pick the batch bucket, batch-prefill the
-//!      newcomers, splice their KV into the group cache
+//!   1. expire deadlines, reap finished slots -> terminal events
+//!   2. admit pending requests by priority: pick the batch bucket,
+//!      batch-prefill the newcomers, splice their KV into the group cache
 //!   3. promote the seq bucket when any sequence outgrows it
 //!   4. run one decode step through the sparsity controller's entry
-//!   5. sample next tokens per active slot
+//!   5. sample next tokens per active slot -> `Token` events
+//!
+//! `step()` returns the [`GenerationEvent`]s produced this iteration: for
+//! every request the stream is `Queued` -> `Prefilled` -> `Token`+ ->
+//! `Finished`/`Cancelled`. TTFT and inter-token latency are recorded at
+//! the moment each token is emitted, not reconstructed at completion.
 //!
 //! The group KV cache stays an engine literal between steps; host-side
 //! surgery happens only on composition changes (admission/re-bucketing).
@@ -18,11 +23,11 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
-use crate::tokenizer::PAD;
+use crate::tokenizer::{token_byte_len, PAD};
 
 use super::kv;
 use super::metrics::EngineMetrics;
-use super::request::{Completion, FinishReason, Request};
+use super::request::{Completion, FinishReason, GenerationEvent, Request};
 use super::sampler::Sampler;
 use super::sparsity::SparsityController;
 
@@ -65,7 +70,11 @@ struct Slot {
     /// prompt_len + generated tokens (== attention length of the next step)
     len: usize,
     generated: Vec<i32>,
+    /// decoded-text byte length of `generated` (Token event text_offset)
+    text_len: usize,
     first_token_at: Option<Instant>,
+    /// last token emission (inter-token latency is measured between these)
+    last_token_at: Instant,
     finished: Option<FinishReason>,
 }
 
@@ -97,6 +106,9 @@ pub struct Scheduler<E: StepEngine> {
     slots: Vec<Option<Slot>>,
     group_kv: Option<KvCache>,
     n_bucket: usize,
+    /// Events produced since the last `step()` return (enqueue/cancel also
+    /// buffer here so lifecycle events are never lost between steps).
+    events: Vec<GenerationEvent>,
     pub metrics: EngineMetrics,
 }
 
@@ -111,6 +123,7 @@ impl<E: StepEngine> Scheduler<E> {
             slots: Vec::new(),
             group_kv: None,
             n_bucket: n0,
+            events: Vec::new(),
             metrics: EngineMetrics::default(),
         }
     }
@@ -120,6 +133,7 @@ impl<E: StepEngine> Scheduler<E> {
     }
 
     pub fn enqueue(&mut self, req: Request) {
+        self.events.push(GenerationEvent::Queued { request: req.id });
         self.pending.push_back(req);
     }
 
@@ -132,9 +146,11 @@ impl<E: StepEngine> Scheduler<E> {
     }
 
     pub fn is_idle(&self) -> bool {
-        // finished-but-unreaped slots still count as work: their
-        // completions must be surfaced by a further step()
-        self.pending.is_empty() && self.slots.iter().all(|s| s.is_none())
+        // finished-but-unreaped slots and buffered events still count as
+        // work: they must be surfaced by a further step()
+        self.pending.is_empty()
+            && self.slots.iter().all(|s| s.is_none())
+            && self.events.is_empty()
     }
 
     pub fn capacity(&self) -> usize {
@@ -143,6 +159,31 @@ impl<E: StepEngine> Scheduler<E> {
 
     pub fn n_bucket(&self) -> usize {
         self.n_bucket
+    }
+
+    /// Cancel a pending or in-flight request. The slot (and its KV) is
+    /// freed immediately; the terminal `Cancelled` event (with any partial
+    /// output) is delivered by the next `step()`. Returns false when the
+    /// id is unknown (never enqueued, or already finished — including
+    /// finished-but-unreaped slots, whose natural `Finished` event is
+    /// already owed and must not be rewritten as a cancellation).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
+            let r = self.pending.remove(pos).unwrap();
+            self.finish_unstarted(r, FinishReason::Cancelled);
+            return true;
+        }
+        let found = self.slots.iter().position(|s| {
+            s.as_ref().map_or(false, |s| s.req.id == id && s.finished.is_none())
+        });
+        if let Some(i) = found {
+            let s = self.slots[i].take().unwrap();
+            self.metrics.cancelled_requests += 1;
+            let c = Self::completion_of(&mut self.metrics, s, FinishReason::Cancelled);
+            self.events.push(GenerationEvent::Cancelled(c));
+            return true;
+        }
+        false
     }
 
     fn batch_bucket_for(&self, need: usize) -> usize {
@@ -164,64 +205,130 @@ impl<E: StepEngine> Scheduler<E> {
             .with_context(|| format!("sequence length {need} exceeds the largest bucket"))
     }
 
-    /// One scheduling iteration. Returns the completions it produced.
-    pub fn step(&mut self) -> Result<Vec<Completion>> {
+    /// One scheduling iteration. Returns the generation events it produced
+    /// (including any buffered by `enqueue`/`cancel` since the last step).
+    pub fn step(&mut self) -> Result<Vec<GenerationEvent>> {
         let t_start = Instant::now();
-        let mut done = self.reap();
+        self.expire_deadlines();
+        self.reap_finished();
         self.admit()?;
 
         if self.active_len() > 0 {
             self.maybe_promote_seq_bucket()?;
             self.decode_once()?;
-            done.extend(self.reap());
+            self.reap_finished();
         }
         if self.pending.is_empty() {
             self.maybe_compact()?;
         }
         self.metrics.total_wall_s += t_start.elapsed().as_secs_f64();
-        Ok(done)
+        Ok(std::mem::take(&mut self.events))
     }
 
-    /// Drive everything currently enqueued to completion.
+    /// Drive everything currently enqueued to a terminal event; thin
+    /// compatibility wrapper over the event loop.
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
         let mut out = Vec::new();
         while !self.is_idle() {
-            out.extend(self.step()?);
+            out.extend(self.step()?.into_iter().filter_map(GenerationEvent::completion));
         }
         Ok(out)
     }
 
     // ------------------------------------------------------------------
-    fn reap(&mut self) -> Vec<Completion> {
-        let mut out = Vec::new();
-        for slot in self.slots.iter_mut() {
-            let fin = match slot {
-                Some(s) => s.finished,
-                None => None,
-            };
-            if let Some(reason) = fin {
-                let s = slot.take().unwrap();
-                let now = Instant::now();
-                let e2e = now.duration_since(s.req.enqueued_at).as_secs_f64();
-                let ttft = s
-                    .first_token_at
-                    .map(|t| t.duration_since(s.req.enqueued_at).as_secs_f64())
-                    .unwrap_or(e2e);
-                self.metrics.ttft.push(ttft);
-                self.metrics.e2e.push(e2e);
-                self.metrics.completed_requests += 1;
-                out.push(Completion {
-                    id: s.req.id,
-                    output_ids: s.generated.clone(),
-                    finish: reason,
-                    prompt_len: s.req.prompt_ids.len(),
-                    ttft_s: ttft,
-                    e2e_s: e2e,
-                    decode_steps: s.generated.len(),
-                });
+    /// Build the completion for a reaped slot, recording e2e metrics.
+    /// (TTFT was already recorded when the first token was emitted.)
+    fn completion_of(metrics: &mut EngineMetrics, s: Slot, finish: FinishReason) -> Completion {
+        let now = Instant::now();
+        let e2e = now.duration_since(s.req.enqueued_at).as_secs_f64();
+        let ttft = s
+            .first_token_at
+            .map(|t| t.duration_since(s.req.enqueued_at).as_secs_f64())
+            .unwrap_or(e2e);
+        metrics.e2e.push(e2e);
+        let decode_steps = s.generated.len();
+        Completion {
+            id: s.req.id,
+            output_ids: s.generated,
+            finish,
+            prompt_len: s.req.prompt_ids.len(),
+            ttft_s: ttft,
+            e2e_s: e2e,
+            decode_steps,
+        }
+    }
+
+    /// Terminal event for a request that never reached a slot.
+    fn finish_unstarted(&mut self, r: Request, finish: FinishReason) {
+        let e2e = Instant::now().duration_since(r.enqueued_at).as_secs_f64();
+        self.metrics.e2e.push(e2e);
+        let c = Completion {
+            id: r.id,
+            output_ids: Vec::new(),
+            finish,
+            prompt_len: r.prompt_ids.len(),
+            ttft_s: e2e,
+            e2e_s: e2e,
+            decode_steps: 0,
+        };
+        match finish {
+            FinishReason::Cancelled => {
+                self.metrics.cancelled_requests += 1;
+                self.events.push(GenerationEvent::Cancelled(c));
+            }
+            _ => {
+                if finish == FinishReason::Deadline {
+                    self.metrics.deadline_expired += 1;
+                }
+                self.events.push(GenerationEvent::Finished(c));
             }
         }
-        out
+    }
+
+    /// Mark expired requests (active and pending) with `Deadline`.
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot {
+                if s.finished.is_none() {
+                    if let Some(d) = s.req.deadline {
+                        if now.duration_since(s.req.enqueued_at) >= d {
+                            s.finished = Some(FinishReason::Deadline);
+                        }
+                    }
+                }
+            }
+        }
+        // fast path: deadlines are rare, skip the queue rebuild entirely
+        if self.pending.iter().all(|r| r.deadline.is_none()) {
+            return;
+        }
+        let mut keep = VecDeque::with_capacity(self.pending.len());
+        while let Some(r) = self.pending.pop_front() {
+            match r.deadline {
+                Some(d) if now.duration_since(r.enqueued_at) >= d => {
+                    self.finish_unstarted(r, FinishReason::Deadline);
+                }
+                _ => keep.push_back(r),
+            }
+        }
+        self.pending = keep;
+    }
+
+    fn reap_finished(&mut self) {
+        for i in 0..self.slots.len() {
+            let fin = self.slots[i].as_ref().and_then(|s| s.finished);
+            if let Some(reason) = fin {
+                let s = self.slots[i].take().unwrap();
+                if reason == FinishReason::Deadline {
+                    self.metrics.deadline_expired += 1;
+                } else {
+                    self.metrics.completed_requests += 1;
+                }
+                let c = Self::completion_of(&mut self.metrics, s, reason);
+                self.events.push(GenerationEvent::Finished(c));
+            }
+        }
     }
 
     fn free_slots(&self) -> Vec<usize> {
@@ -237,6 +344,18 @@ impl<E: StepEngine> Scheduler<E> {
         if self.pending.is_empty() {
             self.maybe_compact()?;
             return Ok(());
+        }
+        // highest priority first; stable sort keeps FIFO among equals
+        // (skipped in the common all-equal case)
+        let mixed_priorities = self
+            .pending
+            .iter()
+            .zip(self.pending.iter().skip(1))
+            .any(|(a, b)| a.priority != b.priority);
+        if mixed_priorities {
+            self.pending
+                .make_contiguous()
+                .sort_by_key(|r| std::cmp::Reverse(r.priority));
         }
         let want = self.active_len() + self.pending.len();
         let target = self.batch_bucket_for(want);
@@ -306,20 +425,33 @@ impl<E: StepEngine> Scheduler<E> {
             let mut sampler = Sampler::new(r.params, r.id);
             let first = sampler.sample(row);
             let now = Instant::now();
+            // TTFT measured at first-token emission, not back-computed
+            self.metrics
+                .ttft
+                .push(now.duration_since(r.enqueued_at).as_secs_f64());
+            self.events.push(GenerationEvent::Prefilled { request: r.id });
+            self.events.push(GenerationEvent::Token {
+                request: r.id,
+                id: first,
+                index: 0,
+                text_offset: 0,
+            });
             let mut slot = Slot {
                 req: r.clone(),
                 sampler,
                 len: prompt_len + 1,
                 generated: vec![first],
+                text_len: token_byte_len(first),
                 first_token_at: Some(now),
+                last_token_at: now,
                 finished: None,
             };
-            if first == r.params.stop_token || r.params.max_new_tokens <= 1 {
-                slot.finished = Some(if first == r.params.stop_token {
-                    FinishReason::Stop
-                } else {
-                    FinishReason::Length
-                });
+            if first == r.params.stop_token {
+                slot.finished = Some(FinishReason::Stop);
+            } else if hits_stop_sequence(&slot.generated, &r.stop_sequences) {
+                slot.finished = Some(FinishReason::StopSequence);
+            } else if r.params.max_new_tokens <= 1 {
+                slot.finished = Some(FinishReason::Length);
             }
             self.slots[slot_idx] = Some(slot);
         }
@@ -435,10 +567,25 @@ impl<E: StepEngine> Scheduler<E> {
             active += 1;
             let row = &logits[i * vocab..(i + 1) * vocab];
             let next = s.sampler.sample(row);
+            let now = Instant::now();
+            // inter-token latency measured between real emissions
+            self.metrics
+                .itl
+                .push(now.duration_since(s.last_token_at).as_secs_f64());
+            s.last_token_at = now;
+            self.events.push(GenerationEvent::Token {
+                request: s.req.id,
+                id: next,
+                index: s.generated.len(),
+                text_offset: s.text_len,
+            });
             s.generated.push(next);
+            s.text_len += token_byte_len(next);
             s.len += 1;
             if next == s.req.params.stop_token {
                 s.finished = Some(FinishReason::Stop);
+            } else if hits_stop_sequence(&s.generated, &s.req.stop_sequences) {
+                s.finished = Some(FinishReason::StopSequence);
             } else if s.generated.len() >= s.req.params.max_new_tokens {
                 s.finished = Some(FinishReason::Length);
             } else if s.len >= max_total {
@@ -448,4 +595,9 @@ impl<E: StepEngine> Scheduler<E> {
         self.metrics.record_step(dt, active);
         Ok(())
     }
+}
+
+/// Does `generated` end with any of the stop sequences?
+fn hits_stop_sequence(generated: &[i32], stops: &[Vec<i32>]) -> bool {
+    stops.iter().any(|s| !s.is_empty() && generated.ends_with(s))
 }

@@ -2,13 +2,13 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use polar_sparsity::bench;
 use polar_sparsity::coordinator::{
-    Mode, Request, SamplingParams, Scheduler, SchedulerConfig, SparsityController,
+    GenerationEvent, Mode, Request, SamplingParams, Scheduler, SchedulerConfig,
+    SparsityController,
 };
 use polar_sparsity::runtime::{Engine, Executor};
 use polar_sparsity::server::{serve, Client, ServerConfig};
@@ -21,9 +21,9 @@ usage: polar-sparsity <command> [flags]
 
 commands:
   info       print model/manifest summary
-  generate   run prompts through the engine locally
-  serve      start the TCP JSON-lines server
-  client     send one request to a running server
+  generate   run prompts through the engine locally (--stream for events)
+  serve      start the TCP JSON-lines server (protocol v2, PROTOCOL.md)
+  client     send a request to a running server (--stream, --cancel-after, --stats)
   eval       zero-shot task-suite accuracy at a sparsity mode
   bench      regenerate a paper figure/table (fig1a..fig14, table1, table2, all)
 
@@ -115,42 +115,71 @@ fn cmd_info(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn print_completion(tok: &Tokenizer, c: &polar_sparsity::coordinator::Completion) {
+    println!(
+        "[{}] {:?} ({:?}, {} tokens, ttft {:.1}ms, e2e {:.1}ms)",
+        c.id,
+        tok.decode(&c.output_ids),
+        c.finish,
+        c.output_ids.len(),
+        c.ttft_s * 1e3,
+        c.e2e_s * 1e3
+    );
+}
+
 fn cmd_generate(rest: &[String]) -> Result<()> {
     let args = common(Args::new("generate", "run prompts locally"))
         .flag("prompt", "copy:abc=", "prompt text (comma-join for several)")
         .flag("max-new", "16", "max new tokens")
-        .flag("temperature", "0", "sampling temperature (0 = greedy)");
+        .flag("temperature", "0", "sampling temperature (0 = greedy)")
+        .flag("stop", "", "stop sequences, comma-separated text")
+        .switch("stream", "print per-token events as they are emitted");
     let p = parse_or_usage(args, rest);
     let (engine, mode) = load_engine(&p)?;
     let ctl = SparsityController::new(mode);
     ctl.validate(engine.exec.manifest())?;
     let tok = Tokenizer::new();
     let mut sched = Scheduler::new(engine, ctl, SchedulerConfig::default());
-    let now = Instant::now();
+    let params = SamplingParams {
+        max_new_tokens: p.get_usize("max-new").map_err(anyhow::Error::msg)?,
+        temperature: p.get_f64("temperature").map_err(anyhow::Error::msg)? as f32,
+        ..Default::default()
+    };
     for (i, prompt) in p.get("prompt").split(',').enumerate() {
-        sched.enqueue(Request {
-            id: i as u64,
-            prompt_ids: tok.encode_prompt(prompt),
-            params: SamplingParams {
-                max_new_tokens: p.get_usize("max-new").map_err(anyhow::Error::msg)?,
-                temperature: p.get_f64("temperature").map_err(anyhow::Error::msg)? as f32,
-                ..Default::default()
-            },
-            enqueued_at: now,
-        });
+        let mut b = Request::builder(tok.encode_prompt(prompt))
+            .id(i as u64)
+            .params(params);
+        for stop in p.get_list("stop") {
+            b = b.stop_sequence(tok.encode(&stop));
+        }
+        sched.enqueue(b.build());
     }
-    let mut done = sched.run_to_completion()?;
-    done.sort_by_key(|c| c.id);
-    for c in &done {
-        println!(
-            "[{}] {:?} ({:?}, {} tokens, ttft {:.1}ms, e2e {:.1}ms)",
-            c.id,
-            tok.decode(&c.output_ids),
-            c.finish,
-            c.output_ids.len(),
-            c.ttft_s * 1e3,
-            c.e2e_s * 1e3
-        );
+    if p.get_bool("stream") {
+        // drive the event loop directly, printing tokens as they land
+        while !sched.is_idle() {
+            for ev in sched.step()? {
+                match ev {
+                    GenerationEvent::Queued { request } => {
+                        println!("[{request}] queued");
+                    }
+                    GenerationEvent::Prefilled { request } => {
+                        println!("[{request}] prefilled");
+                    }
+                    GenerationEvent::Token { request, id, index, .. } => {
+                        println!("[{request}] token {index}: {:?}", tok.decode(&[id]));
+                    }
+                    GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => {
+                        print_completion(&tok, &c);
+                    }
+                }
+            }
+        }
+    } else {
+        let mut done = sched.run_to_completion()?;
+        done.sort_by_key(|c| c.id);
+        for c in &done {
+            print_completion(&tok, c);
+        }
     }
     println!("\nmetrics: {}", sched.metrics.to_json());
     Ok(())
@@ -181,6 +210,9 @@ fn cmd_client(rest: &[String]) -> Result<()> {
         .flag("addr", "127.0.0.1:7878", "server address")
         .flag("prompt", "copy:abc=", "prompt text")
         .flag("max-new", "16", "max new tokens")
+        .flag("cancel-after", "0", "with --stream: cancel after N tokens (0 = never)")
+        .switch("stream", "stream per-token event lines (protocol v2)")
+        .switch("stats", "fetch engine metrics instead")
         .switch("shutdown", "send shutdown instead");
     let p = parse_or_usage(args, rest);
     let mut c = Client::connect(p.get("addr"))?;
@@ -189,10 +221,28 @@ fn cmd_client(rest: &[String]) -> Result<()> {
         println!("shutdown sent");
         return Ok(());
     }
-    let resp = c.request(
-        p.get("prompt"),
-        p.get_usize("max-new").map_err(anyhow::Error::msg)?,
-    )?;
+    if p.get_bool("stats") {
+        println!("{}", c.stats()?);
+        return Ok(());
+    }
+    let max_new = p.get_usize("max-new").map_err(anyhow::Error::msg)?;
+    if p.get_bool("stream") {
+        let cancel_after = p.get_usize("cancel-after").map_err(anyhow::Error::msg)?;
+        let mut tokens_seen = 0usize;
+        let mut stream = c.stream(p.get("prompt"), max_new)?;
+        while let Some(ev) = stream.next() {
+            let ev = ev?;
+            println!("{ev}");
+            if ev.get("event").as_str() == Some("token") {
+                tokens_seen += 1;
+                if cancel_after > 0 && tokens_seen == cancel_after {
+                    stream.cancel()?;
+                }
+            }
+        }
+        return Ok(());
+    }
+    let resp = c.request(p.get("prompt"), max_new)?;
     println!("{resp}");
     Ok(())
 }

@@ -1,33 +1,57 @@
-//! TCP JSON-lines serving front-end (std::net + threads; the vendored set
-//! has no tokio, and a blocking reactor keeps the single-core hot path
-//! free of executor overhead).
+//! TCP JSON-lines serving front-end, protocol v2 (std::net + threads; the
+//! vendored set has no tokio, and a blocking reactor keeps the
+//! single-core hot path free of executor overhead).
 //!
-//! Protocol (one JSON object per line):
-//!   -> {"prompt": "copy:ab=", "max_new": 16, "temperature": 0.0}
+//! See PROTOCOL.md for the full wire specification. One JSON object per
+//! line; every server reply is tagged with the server-assigned request
+//! `id`, and a connection may hold any number of requests in flight.
+//!
+//!   -> {"prompt": "copy:ab=", "max_new": 16}
 //!   <- {"id": 3, "text": "ab", "finish": "stop", "ttft_ms": ..,
 //!       "e2e_ms": .., "tokens": [..]}
-//!   -> {"cmd": "stats"}   <- engine metrics
+//!
+//!   -> {"prompt": "copy:ab=", "max_new": 16, "stream": true}
+//!   <- {"id": 4, "event": "queued"}
+//!   <- {"id": 4, "event": "prefilled"}
+//!   <- {"id": 4, "event": "token", "token": 97, "text": "a",
+//!       "index": 0, "text_offset": 0}
+//!   <- ... one line per token ...
+//!   <- {"id": 4, "event": "finished", "text": "ab", "finish": "stop",
+//!       "ttft_ms": .., "e2e_ms": .., "tokens": [..]}
+//!
+//!   -> {"cmd": "cancel", "id": 4}   <- {"ok": true, "id": 4}  (plus the
+//!      cancelled request's own terminal {"event": "cancelled", ...} line)
+//!   -> {"cmd": "stats"}             <- {"ok": true, "stats": {...}}
+//!   -> {"cmd": "ping"}              <- {"ok": true}
 //!   -> {"cmd": "shutdown"}
 //!
-//! Architecture: acceptor + per-connection reader threads push
-//! (request, reply-sender) pairs into a shared queue; the engine thread —
-//! which owns the (non-Send) PJRT state — drains it, steps the scheduler,
-//! and routes completions back.
+//! Malformed lines and promptless generation requests are rejected with a
+//! structured {"error": ..., "id": ...} line and never reach the
+//! scheduler.
+//!
+//! Architecture: the acceptor spawns a reader thread per connection; a
+//! dedicated writer thread per connection serialises all reply lines
+//! (events for concurrent requests interleave safely). Readers push typed
+//! `Inbound` messages into a shared queue; the engine thread — which owns
+//! the (non-Send) PJRT state — drains it, steps the scheduler's event
+//! loop, and routes each `GenerationEvent` to its connection. If a
+//! client disconnects mid-stream, its requests are cancelled so their
+//! batch slots free immediately.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{
-    Completion, Mode, Request, SamplingParams, Scheduler, SchedulerConfig,
-    SparsityController,
+    Completion, FinishReason, GenerationEvent, Mode, Request, SamplingParams, Scheduler,
+    SchedulerConfig, SparsityController, StepEngine,
 };
 use crate::runtime::{Engine, Executor};
 use crate::substrate::json::Json;
@@ -40,40 +64,116 @@ pub struct ServerConfig {
     pub max_batch: usize,
 }
 
-struct Inbound {
-    request: Request,
-    reply: Sender<Json>,
+/// Typed message from a connection thread to the engine thread.
+enum Inbound {
+    Submit {
+        request: Request,
+        sink: Sender<Json>,
+        stream: bool,
+        /// Cleared by the connection on hard disconnect (reader error or
+        /// failed write), so the engine can reap in-flight requests whose
+        /// client is gone without waiting for a send to fail.
+        alive: Arc<AtomicBool>,
+    },
+    Cancel {
+        id: u64,
+        /// `None` suppresses the ack line (quiet cancel: used while a
+        /// stream is being consumed, where an ack racing the terminal
+        /// event would desynchronize the connection's reply stream).
+        sink: Option<Sender<Json>>,
+    },
+    Stats {
+        sink: Sender<Json>,
+    },
 }
 
-/// Run the server; blocks until a shutdown command arrives.
-/// `on_ready` receives the bound address (useful with port 0).
+struct ReqSink {
+    tx: Sender<Json>,
+    stream: bool,
+    alive: Arc<AtomicBool>,
+}
+
+/// Run the server against the real PJRT engine; blocks until a shutdown
+/// command arrives. `on_ready` receives the bound address (useful with
+/// port 0).
 pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
-    let listener = TcpListener::bind(&cfg.addr).context("bind")?;
+    let ServerConfig { model_dir, addr, mode, max_batch } = cfg;
+    serve_with(&addr, on_ready, move || {
+        let exec = Arc::new(Executor::load(&model_dir)?);
+        let engine = Engine::new(exec);
+        let ctl = SparsityController::new(mode);
+        ctl.validate(engine.exec.manifest())?;
+        Ok(Scheduler::new(
+            engine,
+            ctl,
+            SchedulerConfig { max_batch, compact: true },
+        ))
+    })
+}
+
+/// Run the server over any [`StepEngine`]-backed scheduler. The factory
+/// runs inside the engine thread, so the engine itself need not be `Send`
+/// (PJRT state is not). Used directly by the protocol tests, which serve
+/// the mock engine without AOT artifacts.
+pub fn serve_with<E, F>(addr: &str, on_ready: impl FnOnce(String), make: F) -> Result<()>
+where
+    E: StepEngine + 'static,
+    F: FnOnce() -> Result<Scheduler<E>> + Send + 'static,
+{
+    let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?.to_string();
     let queue: Arc<Mutex<Vec<Inbound>>> = Arc::new(Mutex::new(Vec::new()));
     let shutdown = Arc::new(AtomicBool::new(false));
     let next_id = Arc::new(AtomicU64::new(1));
 
-    // Engine thread owns all PJRT state.
+    // Engine thread owns all engine state and the scheduler.
     let q2 = queue.clone();
     let sd2 = shutdown.clone();
+    let poke_addr = local.clone();
     let engine_thread = std::thread::spawn(move || -> Result<()> {
-        let exec = Arc::new(Executor::load(&cfg.model_dir)?);
-        let engine = Engine::new(exec);
-        let ctl = SparsityController::new(cfg.mode);
-        ctl.validate(engine.exec.manifest())?;
-        let mut sched = Scheduler::new(
-            engine,
-            ctl,
-            SchedulerConfig { max_batch: cfg.max_batch, compact: true },
-        );
+        let mut sched = match make() {
+            Ok(s) => s,
+            Err(e) => {
+                // a server that cannot build its engine must not sit
+                // accepting connections it can never answer
+                fail_queue(&q2, &format!("engine error: {e:#}"));
+                sd2.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(&poke_addr); // wake the acceptor
+                return Err(e);
+            }
+        };
         let tok = Tokenizer::new();
-        let mut waiting: HashMap<u64, Sender<Json>> = HashMap::new();
+        let mut sinks: HashMap<u64, ReqSink> = HashMap::new();
         loop {
-            // drain inbound
             for inb in q2.lock().unwrap().drain(..) {
-                waiting.insert(inb.request.id, inb.reply);
-                sched.enqueue(inb.request);
+                match inb {
+                    Inbound::Submit { request, sink, stream, alive } => {
+                        sinks.insert(request.id, ReqSink { tx: sink, stream, alive });
+                        sched.enqueue(request);
+                    }
+                    Inbound::Cancel { id, sink } => {
+                        let found = sched.cancel(id);
+                        if let Some(sink) = sink {
+                            let mut ack = Json::obj(vec![
+                                ("ok", found.into()),
+                                ("id", (id as usize).into()),
+                            ]);
+                            if !found {
+                                ack.set("error", "unknown or finished request id".into());
+                            }
+                            let _ = sink.send(ack);
+                        }
+                    }
+                    Inbound::Stats { sink } => {
+                        let mut stats = sched.metrics.to_json();
+                        stats.set("pending", sched.pending_len().into());
+                        stats.set("active", sched.active_len().into());
+                        let _ = sink.send(Json::obj(vec![
+                            ("ok", true.into()),
+                            ("stats", stats),
+                        ]));
+                    }
+                }
             }
             if sched.is_idle() {
                 if sd2.load(Ordering::SeqCst) {
@@ -82,10 +182,31 @@ pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
                 std::thread::sleep(Duration::from_millis(2));
                 continue;
             }
-            for c in sched.step()? {
-                if let Some(reply) = waiting.remove(&c.id) {
-                    let _ = reply.send(completion_json(&tok, &c));
+            // route this iteration's events; requests whose client has hung
+            // up are cancelled so their slots free immediately
+            let events = match sched.step() {
+                Ok(events) => events,
+                Err(e) => {
+                    // a dead engine must not leave clients blocked on a
+                    // reply that will never come: error out every
+                    // in-flight request and every undrained inbound
+                    // message, then bring the server down
+                    let msg = format!("engine error: {e:#}");
+                    for (id, sink) in sinks.drain() {
+                        let _ = sink.tx.send(error_json(&msg, (id as usize).into()));
+                    }
+                    fail_queue(&q2, &msg);
+                    sd2.store(true, Ordering::SeqCst);
+                    let _ = TcpStream::connect(&poke_addr); // wake the acceptor
+                    return Err(e);
                 }
+            };
+            let mut dead: Vec<u64> = Vec::new();
+            for ev in events {
+                route_event(&tok, &mut sinks, ev, &mut dead);
+            }
+            for id in dead {
+                sched.cancel(id);
             }
         }
     });
@@ -116,26 +237,110 @@ pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
     Ok(())
 }
 
-fn completion_json(tok: &Tokenizer, c: &Completion) -> Json {
-    Json::obj(vec![
+/// Send one event to its request's connection; drop + flag the request if
+/// the connection is gone. Terminal events release the sink.
+fn route_event(
+    tok: &Tokenizer,
+    sinks: &mut HashMap<u64, ReqSink>,
+    ev: GenerationEvent,
+    dead: &mut Vec<u64>,
+) {
+    let rid = ev.request_id();
+    let Some(sink) = sinks.get(&rid) else { return };
+    let terminal = ev.is_terminal();
+    // client hard-disconnected: reap without waiting for a send to fail
+    // (non-streaming requests would otherwise hold their slot until the
+    // terminal write)
+    if !sink.alive.load(Ordering::SeqCst) {
+        sinks.remove(&rid);
+        if !terminal {
+            dead.push(rid);
+        }
+        return;
+    }
+    let line = match ev {
+        // non-stream requests get only the terminal summary (v1 shape)
+        GenerationEvent::Queued { request } if sink.stream => {
+            Some(lifecycle_json(request, "queued"))
+        }
+        GenerationEvent::Prefilled { request } if sink.stream => {
+            Some(lifecycle_json(request, "prefilled"))
+        }
+        GenerationEvent::Token { request, id, index, text_offset } if sink.stream => {
+            Some(Json::obj(vec![
+                ("id", (request as usize).into()),
+                ("event", "token".into()),
+                ("token", (id as i64).into()),
+                ("text", tok.decode(&[id]).into()),
+                ("index", index.into()),
+                ("text_offset", text_offset.into()),
+            ]))
+        }
+        GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => {
+            Some(summary_json(tok, &c, sink.stream))
+        }
+        _ => None,
+    };
+    if let Some(line) = line {
+        if sink.tx.send(line).is_err() {
+            sinks.remove(&rid);
+            if !terminal {
+                dead.push(rid);
+            }
+            return;
+        }
+    }
+    if terminal {
+        sinks.remove(&rid);
+    }
+}
+
+fn lifecycle_json(id: u64, event: &str) -> Json {
+    Json::obj(vec![("id", (id as usize).into()), ("event", event.into())])
+}
+
+/// Terminal summary line; identical to the v1 reply, plus an `event`
+/// field in stream mode.
+fn summary_json(tok: &Tokenizer, c: &Completion, stream: bool) -> Json {
+    let mut j = Json::obj(vec![
         ("id", (c.id as usize).into()),
         ("text", tok.decode(&c.output_ids).into()),
         (
             "tokens",
             Json::arr(c.output_ids.iter().map(|&t| (t as i64).into())),
         ),
-        (
-            "finish",
-            match c.finish {
-                crate::coordinator::FinishReason::Stop => "stop",
-                crate::coordinator::FinishReason::Length => "length",
-                crate::coordinator::FinishReason::CacheLimit => "cache_limit",
-            }
-            .into(),
-        ),
+        ("finish", c.finish.as_str().into()),
         ("ttft_ms", (c.ttft_s * 1e3).into()),
         ("e2e_ms", (c.e2e_s * 1e3).into()),
-    ])
+    ]);
+    if stream {
+        let event = if c.finish == FinishReason::Cancelled {
+            "cancelled"
+        } else {
+            "finished"
+        };
+        j.set("event", event.into());
+    }
+    j
+}
+
+fn error_json(msg: &str, id: Json) -> Json {
+    Json::obj(vec![("error", msg.into()), ("id", id)])
+}
+
+/// Error out every message still sitting in the inbound queue (used when
+/// the engine dies so no submitter is left waiting on a dead channel).
+fn fail_queue(queue: &Mutex<Vec<Inbound>>, msg: &str) {
+    for inb in queue.lock().unwrap().drain(..) {
+        let sink = match inb {
+            Inbound::Submit { sink, .. } => Some(sink),
+            Inbound::Cancel { sink, .. } => sink,
+            Inbound::Stats { sink } => Some(sink),
+        };
+        if let Some(sink) = sink {
+            let _ = sink.send(error_json(msg, Json::Null));
+        }
+    }
 }
 
 fn handle_conn(
@@ -146,93 +351,379 @@ fn handle_conn(
 ) -> Result<()> {
     let tok = Tokenizer::new();
     let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
+    // one writer thread per connection serialises all reply lines, so
+    // events for interleaved requests never corrupt each other
+    let (wtx, wrx) = channel::<Json>();
+    let wstream = stream.try_clone()?;
+    // liveness flag: cleared on reader error (hard disconnect) or failed
+    // write, letting the engine reap this connection's requests. A clean
+    // EOF (client half-closed after sending, netcat-style) keeps it set
+    // so pending replies still go out.
+    let alive = Arc::new(AtomicBool::new(true));
+    let walive = alive.clone();
+    let writer = std::thread::spawn(move || writer_loop(wstream, wrx, walive));
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => {
+                alive.store(false, Ordering::SeqCst);
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
         let j = match Json::parse(&line) {
             Ok(j) => j,
             Err(e) => {
-                writeln!(writer, "{}", Json::obj(vec![("error", e.to_string().into())]))?;
+                let _ = wtx.send(error_json(&e.to_string(), Json::Null));
                 continue;
             }
         };
         match j.get("cmd").as_str() {
             Some("shutdown") => {
                 shutdown.store(true, Ordering::SeqCst);
+                let _ = wtx.send(Json::obj(vec![("ok", true.into())]));
+                drop(wtx);
+                let _ = writer.join();
                 // poke the acceptor loop awake
-                writeln!(writer, "{}", Json::obj(vec![("ok", true.into())]))?;
-                let _ = TcpStream::connect(writer.local_addr()?);
+                let _ = TcpStream::connect(stream.local_addr()?);
                 return Ok(());
             }
             Some("ping") => {
-                writeln!(writer, "{}", Json::obj(vec![("ok", true.into())]))?;
+                let _ = wtx.send(Json::obj(vec![("ok", true.into())]));
                 continue;
             }
-            _ => {}
+            Some("stats") => {
+                queue.lock().unwrap().push(Inbound::Stats { sink: wtx.clone() });
+                continue;
+            }
+            Some("cancel") => {
+                match j.get("id").as_usize() {
+                    Some(id) => {
+                        // {"quiet": true} suppresses the ack (PROTOCOL.md)
+                        let quiet = j.get("quiet").as_bool().unwrap_or(false);
+                        queue.lock().unwrap().push(Inbound::Cancel {
+                            id: id as u64,
+                            sink: if quiet { None } else { Some(wtx.clone()) },
+                        });
+                    }
+                    None => {
+                        let _ = wtx.send(error_json(
+                            "cancel requires a numeric \"id\"",
+                            j.get("id").clone(),
+                        ));
+                    }
+                }
+                continue;
+            }
+            Some(other) => {
+                let _ = wtx.send(error_json(&format!("unknown cmd {other:?}"), Json::Null));
+                continue;
+            }
+            None => {}
         }
-        let prompt = j.get("prompt").as_str().unwrap_or("").to_string();
+        // generation request: validated before it can touch a scheduler slot
+        let prompt = match j.get("prompt").as_str() {
+            Some(p) if !p.trim().is_empty() => p.to_string(),
+            Some(_) => {
+                let _ = wtx.send(error_json("\"prompt\" must not be empty", Json::Null));
+                continue;
+            }
+            None => {
+                let _ = wtx.send(error_json(
+                    "request must carry a string \"prompt\" (or a \"cmd\")",
+                    Json::Null,
+                ));
+                continue;
+            }
+        };
         let params = SamplingParams {
             max_new_tokens: j.get("max_new").as_usize().unwrap_or(32),
             temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
             top_k: j.get("top_k").as_usize().unwrap_or(0),
+            seed: j.get("seed").as_usize().unwrap_or(0) as u64,
             ..Default::default()
         };
         let id = next_id.fetch_add(1, Ordering::SeqCst);
-        let (tx, rx) = channel();
-        queue.lock().unwrap().push(Inbound {
-            request: Request {
-                id,
-                prompt_ids: tok.encode_prompt(&prompt),
-                params,
-                enqueued_at: Instant::now(),
-            },
-            reply: tx,
-        });
-        match rx.recv_timeout(Duration::from_secs(600)) {
-            Ok(resp) => writeln!(writer, "{resp}")?,
-            Err(_) => writeln!(
-                writer,
-                "{}",
-                Json::obj(vec![("error", "timeout".into()), ("id", (id as usize).into())])
-            )?,
+        let mut b = Request::builder(tok.encode_prompt(&prompt)).id(id).params(params);
+        if let Some(p) = j.get("priority").as_i64() {
+            b = b.priority(p as i32);
         }
+        if let Some(ms) = j.get("deadline_ms").as_f64() {
+            b = b.deadline(Duration::from_secs_f64((ms / 1e3).max(0.0)));
+        }
+        if let Some(stops) = j.get("stop").as_arr() {
+            for s in stops {
+                if let Some(s) = s.as_str() {
+                    b = b.stop_sequence(tok.encode(s));
+                }
+            }
+        }
+        let stream_mode = j.get("stream").as_bool().unwrap_or(false);
+        queue.lock().unwrap().push(Inbound::Submit {
+            request: b.build(),
+            sink: wtx.clone(),
+            stream: stream_mode,
+            alive: alive.clone(),
+        });
     }
+    drop(wtx);
+    let _ = writer.join();
     Ok(())
 }
 
-/// Minimal blocking client (examples + integration tests).
+/// Drain reply lines onto the socket until every sender is gone or the
+/// client disconnects (a failed write clears the liveness flag and drops
+/// the receiver, which makes the engine thread cancel this connection's
+/// in-flight requests).
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Json>, alive: Arc<AtomicBool>) {
+    for line in rx {
+        if writeln!(stream, "{line}").is_err() {
+            alive.store(false, Ordering::SeqCst);
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Minimal blocking client (examples + integration tests). `request()`
+/// keeps the v1 one-line contract; `stream()` exposes the v2 per-token
+/// event iterator.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Request ids of streams dropped before their terminal event; their
+    /// leftover lines are skipped by `recv()` so the connection stays
+    /// usable.
+    abandoned: Vec<u64>,
+    /// Set after a timed-out or failed read: replies can no longer be
+    /// attributed to requests, so further use fails fast instead of
+    /// returning another request's reply. Reconnect to recover.
+    poisoned: bool,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connect")?;
+        // the v1 server replied {"error": "timeout"} after 600s; v2 keeps
+        // the same bound client-side so a wedged engine can never leave a
+        // blocking call stuck forever
+        stream.set_read_timeout(Some(Duration::from_secs(600)))?;
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            abandoned: Vec::new(),
+            poisoned: false,
         })
     }
 
+    fn send(&mut self, j: &Json) -> Result<()> {
+        if self.poisoned {
+            bail!("client desynchronized after a timed-out or failed read; reconnect");
+        }
+        writeln!(self.writer, "{j}")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Json> {
+        if self.poisoned {
+            bail!("client desynchronized after a timed-out or failed read; reconnect");
+        }
+        loop {
+            let mut line = String::new();
+            match self.reader.read_line(&mut line) {
+                Ok(0) => bail!("connection closed by server"),
+                Ok(_) => {}
+                Err(e) => {
+                    // a timed-out read leaves the next reply unattributable
+                    // (it may be the late reply of the request that timed
+                    // out); poison rather than desynchronize
+                    self.poisoned = true;
+                    return Err(e.into());
+                }
+            }
+            let j = Json::parse(&line).map_err(anyhow::Error::from)?;
+            if let Some(id) = j.get("id").as_usize().map(|x| x as u64) {
+                if self.abandoned.contains(&id) {
+                    // leftover line from a dropped stream; swallow it and
+                    // forget the id once its terminal goes by
+                    let terminal = matches!(
+                        j.get("event").as_str(),
+                        Some("finished" | "cancelled")
+                    ) || !j.get("error").is_null();
+                    if terminal {
+                        self.abandoned.retain(|&x| x != id);
+                    }
+                    continue;
+                }
+            }
+            return Ok(j);
+        }
+    }
+
+    /// Blocking generation: one request, one summary line.
     pub fn request(&mut self, prompt: &str, max_new: usize) -> Result<Json> {
-        let j = Json::obj(vec![
+        self.send(&Json::obj(vec![
             ("prompt", prompt.into()),
             ("max_new", max_new.into()),
+        ]))?;
+        self.recv()
+    }
+
+    /// Streaming generation: returns an iterator over this request's
+    /// event lines (`queued`, `prefilled`, `token`+, then a terminal
+    /// `finished`/`cancelled` summary). Extra fields are passed through in
+    /// `extra` (e.g. `stop`, `priority`, `deadline_ms`).
+    ///
+    /// Dropping the iterator mid-stream cancels the request and keeps the
+    /// connection usable (remaining lines are swallowed); dropping it
+    /// before the *first* event arrives leaves the connection
+    /// desynchronized, since the request's id is not yet known — consume
+    /// at least one event, or discard the `Client`.
+    pub fn stream(&mut self, prompt: &str, max_new: usize) -> Result<TokenStream<'_>> {
+        self.stream_with(prompt, max_new, vec![])
+    }
+
+    pub fn stream_with(
+        &mut self,
+        prompt: &str,
+        max_new: usize,
+        extra: Vec<(&str, Json)>,
+    ) -> Result<TokenStream<'_>> {
+        let mut req = Json::obj(vec![
+            ("prompt", prompt.into()),
+            ("max_new", max_new.into()),
+            ("stream", true.into()),
         ]);
-        writeln!(self.writer, "{j}")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(Into::into)
+        for (k, v) in extra {
+            req.set(k, v);
+        }
+        self.send(&req)?;
+        Ok(TokenStream { client: self, id: None, done: false })
+    }
+
+    /// Cancel a request by server-assigned id and wait for the ack. Use
+    /// [`TokenStream::cancel`] instead while a stream is being consumed.
+    pub fn cancel(&mut self, id: u64) -> Result<Json> {
+        self.send(&Json::obj(vec![
+            ("cmd", "cancel".into()),
+            ("id", (id as usize).into()),
+        ]))?;
+        self.recv()
+    }
+
+    /// Fetch engine metrics ({"ok": true, "stats": {...}}).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.send(&Json::obj(vec![("cmd", "stats".into())]))?;
+        self.recv()
+    }
+
+    pub fn ping(&mut self) -> Result<Json> {
+        self.send(&Json::obj(vec![("cmd", "ping".into())]))?;
+        self.recv()
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
-        writeln!(self.writer, "{}", Json::obj(vec![("cmd", "shutdown".into())]))?;
+        self.send(&Json::obj(vec![("cmd", "shutdown".into())]))?;
         let mut line = String::new();
         let _ = self.reader.read_line(&mut line);
         Ok(())
+    }
+}
+
+/// Iterator over one streamed request's event lines. Lines for other
+/// requests on the same connection and command acks are skipped; the
+/// iterator ends after the terminal `finished`/`cancelled` (or an error
+/// line, which is yielded).
+pub struct TokenStream<'a> {
+    client: &'a mut Client,
+    id: Option<u64>,
+    done: bool,
+}
+
+/// `{"cmd": "cancel", "id": .., "quiet": true}` — no ack line, so it can
+/// never desynchronize a connection whose reply stream is being consumed.
+fn quiet_cancel_json(id: u64) -> Json {
+    Json::obj(vec![
+        ("cmd", "cancel".into()),
+        ("id", (id as usize).into()),
+        ("quiet", true.into()),
+    ])
+}
+
+impl TokenStream<'_> {
+    /// Server-assigned request id, known once the first event arrives.
+    pub fn id(&self) -> Option<u64> {
+        self.id
+    }
+
+    /// Cancel this stream's request. Sent as a quiet cancel (no ack
+    /// line), so the connection's reply stream stays in sync even when
+    /// the cancel races a natural finish; the outcome is observed via
+    /// the terminal event (`cancelled`, or `finished` if the race was
+    /// lost).
+    pub fn cancel(&mut self) -> Result<()> {
+        let id = self
+            .id
+            .context("stream id not known yet (consume at least one event first)")?;
+        writeln!(self.client.writer, "{}", quiet_cancel_json(id))?;
+        Ok(())
+    }
+}
+
+impl Drop for TokenStream<'_> {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        if let Some(id) = self.id {
+            // keep the connection usable after an abandoned stream: cancel
+            // quietly and have recv() swallow the remaining lines up to
+            // this request's terminal
+            let _ = writeln!(self.client.writer, "{}", quiet_cancel_json(id));
+            self.client.abandoned.push(id);
+        }
+        // id unknown (no event consumed yet): lines cannot be attributed —
+        // see the `stream()` docs.
+    }
+}
+
+impl Iterator for TokenStream<'_> {
+    type Item = Result<Json>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        loop {
+            let j = match self.client.recv() {
+                Ok(j) => j,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            };
+            if !j.get("error").is_null() {
+                self.done = true;
+                return Some(Ok(j));
+            }
+            if j.get("event").as_str().is_none() {
+                continue; // command ack for this connection; not an event
+            }
+            let id = j.get("id").as_usize().map(|x| x as u64);
+            match (self.id, id) {
+                (None, Some(i)) => self.id = Some(i),
+                (Some(mine), Some(i)) if i != mine => continue, // other request
+                _ => {}
+            }
+            if matches!(j.get("event").as_str(), Some("finished" | "cancelled")) {
+                self.done = true;
+            }
+            return Some(Ok(j));
+        }
     }
 }

@@ -88,6 +88,14 @@ impl Json {
         matches!(self, Json::Null)
     }
 
+    /// Insert/overwrite an object field; no-op on non-objects.
+    pub fn set(&mut self, key: &str, v: Json) -> &mut Json {
+        if let Json::Obj(o) = self {
+            o.insert(key.to_string(), v);
+        }
+        self
+    }
+
     // -- builders ---------------------------------------------------------
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -481,5 +489,18 @@ mod tests {
     fn integers_stay_integral() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn set_inserts_and_overwrites() {
+        let mut j = Json::obj(vec![("a", 1usize.into())]);
+        j.set("b", "x".into());
+        j.set("a", 2usize.into());
+        assert_eq!(j.get("a").as_i64(), Some(2));
+        assert_eq!(j.get("b").as_str(), Some("x"));
+        // no-op on non-objects
+        let mut n = Json::Num(1.0);
+        n.set("a", Json::Null);
+        assert_eq!(n, Json::Num(1.0));
     }
 }

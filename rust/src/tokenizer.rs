@@ -6,6 +6,16 @@ pub const BOS: i32 = 257;
 pub const EOS: i32 = 258;
 pub const VOCAB: usize = 259;
 
+/// Bytes a token contributes to decoded text (specials contribute none).
+/// Used by the scheduler to compute `Token { text_offset }` incrementally.
+pub fn token_byte_len(id: i32) -> usize {
+    if (0..256).contains(&id) {
+        1
+    } else {
+        0
+    }
+}
+
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Tokenizer;
 

@@ -6,8 +6,6 @@
 pub mod tasks;
 pub mod trace;
 
-use std::time::Instant;
-
 use crate::coordinator::{Request, SamplingParams};
 use crate::substrate::rng::Rng;
 use crate::tokenizer::Tokenizer;
@@ -52,7 +50,6 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<TimedRequest> {
     let tok = Tokenizer::new();
     let suite = tasks::builtin_prompts();
     let mut t = 0.0f64;
-    let now = Instant::now();
     (0..cfg.n_requests)
         .map(|i| {
             if cfg.arrival_rate > 0.0 {
@@ -71,17 +68,15 @@ pub fn generate(cfg: &WorkloadConfig) -> Vec<TimedRequest> {
             prompt_ids.truncate(target.max(2));
             TimedRequest {
                 at_s: t,
-                request: Request {
-                    id: i as u64,
-                    prompt_ids,
-                    params: SamplingParams {
+                request: Request::builder(prompt_ids)
+                    .id(i as u64)
+                    .params(SamplingParams {
                         temperature: cfg.temperature,
                         max_new_tokens: cfg.max_new_tokens,
                         seed: cfg.seed,
                         ..Default::default()
-                    },
-                    enqueued_at: now,
-                },
+                    })
+                    .build(),
             }
         })
         .collect()

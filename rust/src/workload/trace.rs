@@ -4,7 +4,6 @@
 //! trace in the benches).
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -35,7 +34,6 @@ pub fn save(path: &Path, reqs: &[TimedRequest]) -> Result<()> {
 pub fn load(path: &Path) -> Result<Vec<TimedRequest>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
-    let now = Instant::now();
     let mut out = Vec::new();
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
@@ -51,16 +49,14 @@ pub fn load(path: &Path) -> Result<Vec<TimedRequest>> {
             .collect::<Result<Vec<i32>>>()?;
         out.push(TimedRequest {
             at_s: j.get("at_s").as_f64().unwrap_or(0.0),
-            request: Request {
-                id: j.get("id").as_usize().unwrap_or(i) as u64,
-                prompt_ids,
-                params: SamplingParams {
+            request: Request::builder(prompt_ids)
+                .id(j.get("id").as_usize().unwrap_or(i) as u64)
+                .params(SamplingParams {
                     max_new_tokens: j.get("max_new").as_usize().unwrap_or(16),
                     temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
                     ..Default::default()
-                },
-                enqueued_at: now,
-            },
+                })
+                .build(),
         });
     }
     Ok(out)

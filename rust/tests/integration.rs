@@ -7,12 +7,11 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
 
 use polar_sparsity::bench::accuracy::generate_one;
 use polar_sparsity::coordinator::kv::{pad_n, split_groups, split_layers};
 use polar_sparsity::coordinator::{
-    Mode, Request, SamplingParams, Scheduler, SchedulerConfig, SparsityController,
+    Mode, Request, Scheduler, SchedulerConfig, SparsityController,
 };
 use polar_sparsity::runtime::{Engine, Executor, KvCache, Tensor};
 use polar_sparsity::tokenizer::Tokenizer;
@@ -106,17 +105,16 @@ fn scheduler_serves_batch_with_real_engine() {
     ctl.validate(e.exec.manifest()).unwrap();
     let mut sched = Scheduler::new(e, ctl, SchedulerConfig::default());
     let tok = Tokenizer::new();
-    let now = Instant::now();
     for (i, p) in ["succ:a=", "succ:b=", "cmp:1,9=", "copy:ab=", "maj:aabab="]
         .iter()
         .enumerate()
     {
-        sched.enqueue(Request {
-            id: i as u64,
-            prompt_ids: tok.encode_prompt(p),
-            params: SamplingParams { max_new_tokens: 6, ..Default::default() },
-            enqueued_at: now,
-        });
+        sched.enqueue(
+            Request::builder(tok.encode_prompt(p))
+                .id(i as u64)
+                .max_new_tokens(6)
+                .build(),
+        );
     }
     let done = sched.run_to_completion().unwrap();
     assert_eq!(done.len(), 5);

@@ -1,0 +1,269 @@
+//! Protocol-v2 integration tests: the TCP server over the mock engine
+//! (no AOT artifacts needed). Covers streaming event ordering, interleaved
+//! multi-request connections, mid-generation cancellation, the stats
+//! command, and structured rejection of malformed input.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use polar_sparsity::coordinator::mock::MockEngine;
+use polar_sparsity::coordinator::{Mode, Scheduler, SchedulerConfig, SparsityController};
+use polar_sparsity::server::{serve_with, Client};
+use polar_sparsity::substrate::json::Json;
+
+/// Serve the mock engine on an ephemeral port; returns (addr, join handle).
+fn spawn_server(step_delay: Duration) -> (String, JoinHandle<anyhow::Result<()>>) {
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        serve_with(
+            "127.0.0.1:0",
+            move |addr| {
+                let _ = tx.send(addr);
+            },
+            move || {
+                Ok(Scheduler::new(
+                    MockEngine::new().with_step_delay(step_delay),
+                    SparsityController::new(Mode::Dense),
+                    SchedulerConfig { max_batch: 8, compact: true },
+                ))
+            },
+        )
+    });
+    (rx.recv().expect("server address"), h)
+}
+
+fn shut_down(addr: &str, h: JoinHandle<anyhow::Result<()>>) {
+    Client::connect(addr).unwrap().shutdown().unwrap();
+    h.join().expect("server thread").expect("server result");
+}
+
+#[test]
+fn streaming_events_are_ordered_and_ttft_is_measured() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let mut c = Client::connect(&addr).unwrap();
+    // mock LM: prompt ending 'A' (65) generates 66, 67, ... ("BCDEF")
+    let events: Vec<Json> = c
+        .stream("A", 5)
+        .unwrap()
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let kinds: Vec<&str> = events
+        .iter()
+        .map(|e| e.get("event").as_str().unwrap())
+        .collect();
+    assert_eq!(
+        kinds,
+        vec!["queued", "prefilled", "token", "token", "token", "token", "token", "finished"],
+        "events: {events:?}"
+    );
+    // all events tagged with the same server-assigned id
+    let id = events[0].get("id").as_usize().unwrap();
+    assert!(events.iter().all(|e| e.get("id").as_usize() == Some(id)));
+    // token payloads: id, decoded text, index, text_offset
+    for (k, ev) in events[2..7].iter().enumerate() {
+        assert_eq!(ev.get("token").as_i64(), Some(66 + k as i64));
+        assert_eq!(ev.get("index").as_usize(), Some(k));
+        assert_eq!(ev.get("text_offset").as_usize(), Some(k));
+    }
+    // at least one token strictly precedes the terminal line, and the
+    // summary's TTFT comes from the first-token event timestamp
+    let fin = events.last().unwrap();
+    assert_eq!(fin.get("text").as_str(), Some("BCDEF"));
+    assert_eq!(fin.get("finish").as_str(), Some("length"));
+    let ttft = fin.get("ttft_ms").as_f64().unwrap();
+    let e2e = fin.get("e2e_ms").as_f64().unwrap();
+    assert!(ttft >= 0.0 && ttft <= e2e, "ttft {ttft} e2e {e2e}");
+    shut_down(&addr, h);
+}
+
+#[test]
+fn interleaved_requests_share_one_connection() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    // raw socket: two streaming requests pipelined back-to-back
+    let sock = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut w = sock.try_clone().unwrap();
+    writeln!(w, r#"{{"prompt": "A", "max_new": 4, "stream": true}}"#).unwrap();
+    writeln!(w, r#"{{"prompt": "K", "max_new": 4, "stream": true}}"#).unwrap();
+    let mut by_id: std::collections::BTreeMap<usize, Vec<Json>> = Default::default();
+    let mut finished = 0;
+    while finished < 2 {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed early");
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("error").is_null(), "unexpected error line: {j}");
+        let id = j.get("id").as_usize().unwrap();
+        if j.get("event").as_str() == Some("finished") {
+            finished += 1;
+        }
+        by_id.entry(id).or_default().push(j);
+    }
+    assert_eq!(by_id.len(), 2, "expected two interleaved requests");
+    // each request's own event stream is well-ordered and complete
+    let mut texts: Vec<String> = Vec::new();
+    for (_, evs) in by_id {
+        let kinds: Vec<&str> = evs.iter().map(|e| e.get("event").as_str().unwrap()).collect();
+        assert_eq!(
+            kinds,
+            vec!["queued", "prefilled", "token", "token", "token", "token", "finished"]
+        );
+        texts.push(evs.last().unwrap().get("text").as_str().unwrap().to_string());
+    }
+    texts.sort();
+    // 'A' (65) -> BCDE; 'K' (75) -> LMNO
+    assert_eq!(texts, vec!["BCDE".to_string(), "LMNO".to_string()]);
+    shut_down(&addr, h);
+}
+
+#[test]
+fn cancel_stops_token_flow_and_frees_the_slot() {
+    // slow the mock down so the cancel lands mid-generation
+    let (addr, h) = spawn_server(Duration::from_millis(5));
+    let mut c = Client::connect(&addr).unwrap();
+    // start at 'A' with a huge budget: would run ~60 steps to cache limit
+    let mut stream = c.stream("A", 1000).unwrap();
+    let mut tokens = 0;
+    let mut terminal: Option<Json> = None;
+    while let Some(ev) = stream.next() {
+        let ev = ev.unwrap();
+        match ev.get("event").as_str() {
+            Some("token") => {
+                tokens += 1;
+                if tokens == 3 {
+                    stream.cancel().unwrap();
+                }
+            }
+            Some("cancelled") => terminal = Some(ev),
+            Some("finished") => panic!("request finished despite cancel"),
+            _ => {}
+        }
+    }
+    let term = terminal.expect("terminal cancelled event");
+    assert_eq!(term.get("finish").as_str(), Some("cancelled"));
+    let emitted = term.get("tokens").as_arr().unwrap().len();
+    assert!(
+        (3..20).contains(&emitted),
+        "token flow should stop promptly after cancel (saw {emitted})"
+    );
+    // the scheduler released the slot: server-side metrics agree
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    let s = stats.get("stats");
+    assert_eq!(s.get("active").as_usize(), Some(0));
+    assert_eq!(s.get("pending").as_usize(), Some(0));
+    assert_eq!(s.get("cancelled_requests").as_usize(), Some(1));
+    shut_down(&addr, h);
+}
+
+#[test]
+fn stats_command_reports_engine_metrics() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let mut c = Client::connect(&addr).unwrap();
+    let resp = c.request("A", 4).unwrap();
+    assert_eq!(resp.get("finish").as_str(), Some("length"));
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    let s = stats.get("stats");
+    assert_eq!(s.get("completed_requests").as_usize(), Some(1));
+    assert!(s.get("decode_steps").as_usize().unwrap() > 0);
+    assert!(!s.get("ttft_ms_p50").is_null());
+    shut_down(&addr, h);
+}
+
+#[test]
+fn malformed_and_promptless_requests_are_rejected() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let sock = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut w = sock.try_clone().unwrap();
+    let read_json = |reader: &mut BufReader<TcpStream>| {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0);
+        Json::parse(&line).unwrap()
+    };
+    // broken JSON -> structured error, connection stays usable
+    writeln!(w, "this is not json").unwrap();
+    let e = read_json(&mut reader);
+    assert!(!e.get("error").is_null());
+    assert!(e.get("id").is_null());
+    // promptless object -> rejected before reaching the scheduler
+    writeln!(w, "{{}}").unwrap();
+    let e = read_json(&mut reader);
+    assert!(e.get("error").as_str().unwrap().contains("prompt"));
+    // empty prompt -> rejected too
+    writeln!(w, r#"{{"prompt": "   "}}"#).unwrap();
+    let e = read_json(&mut reader);
+    assert!(!e.get("error").is_null());
+    // unknown command -> structured error
+    writeln!(w, r#"{{"cmd": "nope"}}"#).unwrap();
+    let e = read_json(&mut reader);
+    assert!(e.get("error").as_str().unwrap().contains("unknown cmd"));
+    // the connection still serves valid requests afterwards
+    writeln!(w, r#"{{"prompt": "A", "max_new": 2}}"#).unwrap();
+    let ok = read_json(&mut reader);
+    assert_eq!(ok.get("text").as_str(), Some("BC"));
+    // none of the rejects burned a scheduler slot
+    let mut c = Client::connect(&addr).unwrap();
+    let s = c.stats().unwrap();
+    assert_eq!(s.get("stats").get("completed_requests").as_usize(), Some(1));
+    shut_down(&addr, h);
+}
+
+#[test]
+fn dropped_stream_cancels_and_connection_stays_usable() {
+    let (addr, h) = spawn_server(Duration::from_millis(5));
+    let mut c = Client::connect(&addr).unwrap();
+    {
+        let mut stream = c.stream("A", 1000).unwrap();
+        // consume a couple of events so the id is known, then drop the
+        // iterator mid-stream
+        stream.next().unwrap().unwrap();
+        stream.next().unwrap().unwrap();
+    }
+    // the abandoned request was cancelled and its leftover lines are
+    // swallowed: the same connection keeps answering correctly
+    let resp = c.request("K", 2).unwrap();
+    assert_eq!(resp.get("text").as_str(), Some("LM"));
+    let s = c.stats().unwrap();
+    assert_eq!(s.get("stats").get("cancelled_requests").as_usize(), Some(1));
+    assert_eq!(s.get("stats").get("active").as_usize(), Some(0));
+    shut_down(&addr, h);
+}
+
+#[test]
+fn cancel_unknown_id_acks_with_error() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let mut c = Client::connect(&addr).unwrap();
+    let ack = c.cancel(424242).unwrap();
+    assert_eq!(ack.get("ok").as_bool(), Some(false));
+    assert!(!ack.get("error").is_null());
+    shut_down(&addr, h);
+}
+
+#[test]
+fn stop_sequences_and_deadline_ride_the_wire() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let mut c = Client::connect(&addr).unwrap();
+    // 'A' generates "BCDEF..."; stop once the output ends with "CD"
+    let events: Vec<Json> = c
+        .stream_with("A", 50, vec![("stop", Json::arr(vec![Json::str("CD")]))])
+        .unwrap()
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let fin = events.last().unwrap();
+    assert_eq!(fin.get("finish").as_str(), Some("stop_sequence"));
+    assert_eq!(fin.get("text").as_str(), Some("BCD"));
+    // an already-expired deadline finishes with "deadline" and no tokens
+    let events: Vec<Json> = c
+        .stream_with("A", 50, vec![("deadline_ms", 0.0.into())])
+        .unwrap()
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let fin = events.last().unwrap();
+    assert_eq!(fin.get("finish").as_str(), Some("deadline"));
+    assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 0);
+    shut_down(&addr, h);
+}
