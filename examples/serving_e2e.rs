@@ -48,7 +48,7 @@ fn main() -> Result<()> {
         let mut sched = Scheduler::new(
             engine,
             ctl,
-            SchedulerConfig { max_batch: 16, compact: true },
+            SchedulerConfig { max_batch: 16, compact: true, ..Default::default() },
         );
         // replay the same trace: requests arrive on their Poisson schedule
         // and every latency number comes from the event stream

@@ -1,0 +1,205 @@
+//! `bench decode-breakdown` — A/B breakdown of one decode step's cost:
+//! h2d / compute / d2h / host-surgery time and, crucially, the bytes
+//! crossing the host<->device boundary per step, for the legacy host-KV
+//! path vs. the resident-device-KV path. Emits `BENCH_decode.json` so
+//! every PR's CI run records the perf trajectory.
+//!
+//! `--smoke` runs against the deterministic mock engine (no AOT
+//! artifacts): byte counters are analytic and reproducible; timing fields
+//! are whatever the host measured.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::mock::MockEngine;
+use crate::coordinator::{Mode, SparsityController, StepEngine};
+use crate::runtime::{Engine, Executor, StepProfile, Tensor};
+use crate::substrate::argparse::Args;
+use crate::substrate::json::Json;
+use crate::tokenizer::PAD;
+
+struct PathRun {
+    profile: StepProfile,
+    n: usize,
+    wall_s: f64,
+}
+
+/// Prefill a steady batch, then run `steps` decode steps, feeding each
+/// step's KV output into the next — exactly the scheduler's hot loop,
+/// minus composition changes. The profile covers only the decode loop.
+fn run_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Result<PathRun> {
+    let s_len = e.prefill_len();
+    let prompt_len = 4.min(s_len);
+    let mut toks = vec![PAD; b * s_len];
+    let mut lens = vec![1i32; b];
+    for i in 0..b {
+        for j in 0..prompt_len {
+            toks[i * s_len + j] = 40 + i as i32;
+        }
+        lens[i] = prompt_len as i32;
+    }
+    let out = e.prefill(
+        &Tensor::i32(toks, vec![b, s_len])?,
+        &Tensor::i32(lens, vec![b])?,
+    )?;
+    let mut kv = out.kv;
+    let n = kv.n;
+    e.reset_profile();
+    let tokens: Vec<i32> = (0..b).map(|i| 60 + i as i32).collect();
+    let lengths = vec![(prompt_len + 1) as i32; b];
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let o = e.decode(tag, &tokens, &lengths, kv)?;
+        kv = o.kv;
+    }
+    Ok(PathRun { profile: e.profile_snapshot(), n, wall_s: t0.elapsed().as_secs_f64() })
+}
+
+fn path_json(r: &PathRun) -> Json {
+    let mut j = r.profile.to_json();
+    j.set("wall_ms", (r.wall_s * 1e3).into());
+    j
+}
+
+fn per_step_host_copy(r: &PathRun) -> f64 {
+    r.profile.host_copy_bytes() as f64 / r.profile.decode_steps.max(1) as f64
+}
+
+pub fn run(rest: &[String]) -> Result<()> {
+    let args = Args::new(
+        "bench decode-breakdown",
+        "A/B per-step decode cost breakdown (host-KV vs resident-KV)",
+    )
+    .flag("model", "opt-tiny", "model name under the artifacts dir")
+    .flag("artifacts", "artifacts", "artifacts root directory")
+    .flag("mode", "dense", "dense | dejavu | polar | polar@<density>")
+    .flag("batch", "8", "decode batch size")
+    .flag("steps", "64", "timed decode steps per path")
+    .flag("out", "BENCH_decode.json", "output JSON path")
+    .switch("smoke", "run on the deterministic mock engine (no artifacts)");
+    let p = match args.parse(rest) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let b = p.get_usize("batch").map_err(anyhow::Error::msg)?;
+    let steps = p.get_usize("steps").map_err(anyhow::Error::msg)?;
+
+    let (engine_label, base, fast) = if p.get_bool("smoke") {
+        let base_e = MockEngine::new().with_host_kv_path(true);
+        let fast_e = MockEngine::new();
+        (
+            "mock".to_string(),
+            run_path(&base_e, "dense", b, steps)?,
+            run_path(&fast_e, "dense", b, steps)?,
+        )
+    } else {
+        let dir = std::path::PathBuf::from(p.get("artifacts")).join(p.get("model"));
+        let exec = std::sync::Arc::new(
+            Executor::load(&dir)
+                .with_context(|| format!("loading {} — run `make artifacts` first", dir.display()))?,
+        );
+        let mode = Mode::parse(p.get("mode"), exec.config().critical_density)?;
+        let tag = SparsityController::new(mode).decode_tag();
+        let base_e = Engine::new(exec.clone()).with_kv_host_path(true);
+        let fast_e = Engine::new(exec).with_kv_host_path(false);
+        (
+            p.get("model").to_string(),
+            run_path(&base_e, &tag, b, steps)?,
+            run_path(&fast_e, &tag, b, steps)?,
+        )
+    };
+
+    let (hc_base, hc_fast) = (per_step_host_copy(&base), per_step_host_copy(&fast));
+    let reduction = if hc_fast > 0.0 { hc_base / hc_fast } else { f64::INFINITY };
+    let reduction = (reduction * 1e4).round() / 1e4;
+    let report = Json::obj(vec![
+        ("bench", "decode-breakdown".into()),
+        ("engine", engine_label.into()),
+        ("batch", b.into()),
+        ("seq_bucket", base.n.into()),
+        ("steps", steps.into()),
+        (
+            "paths",
+            Json::obj(vec![
+                ("baseline_host_kv", path_json(&base)),
+                ("resident_device_kv", path_json(&fast)),
+            ]),
+        ),
+        ("host_copy_bytes_reduction", reduction.into()),
+    ]);
+
+    let out_path = p.get("out").to_string();
+    std::fs::write(&out_path, format!("{}\n", pretty(&report, 0)))
+        .with_context(|| format!("writing {out_path}"))?;
+
+    println!("decode-breakdown ({engine_label}, b={b}, n={}, {steps} steps)", base.n);
+    println!(
+        "  host-copy bytes/step: {:.0} (host-KV baseline) -> {:.0} (resident) = {reduction}x reduction",
+        hc_base, hc_fast
+    );
+    println!(
+        "  step wall: {:.3} ms -> {:.3} ms",
+        base.wall_s * 1e3 / steps.max(1) as f64,
+        fast.wall_s * 1e3 / steps.max(1) as f64
+    );
+    println!("[wrote {out_path}]");
+    Ok(())
+}
+
+/// Indented JSON for the committed artifact (key order matches the
+/// compact serializer: alphabetical).
+fn pretty(v: &Json, indent: usize) -> String {
+    let pad = "  ".repeat(indent);
+    let pad_in = "  ".repeat(indent + 1);
+    match v {
+        Json::Obj(o) if !o.is_empty() => {
+            let fields: Vec<String> = o
+                .iter()
+                .map(|(k, x)| format!("{pad_in}{}: {}", Json::str(k.clone()), pretty(x, indent + 1)))
+                .collect();
+            format!("{{\n{}\n{pad}}}", fields.join(",\n"))
+        }
+        Json::Arr(a) if !a.is_empty() => {
+            let items: Vec<String> =
+                a.iter().map(|x| format!("{pad_in}{}", pretty(x, indent + 1))).collect();
+            format!("[\n{}\n{pad}]", items.join(",\n"))
+        }
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance gate: at b=8 the resident path must move under half
+    /// the bytes per step of the host-KV baseline.
+    #[test]
+    fn smoke_breakdown_reports_2x_reduction() {
+        let base = MockEngine::new().with_host_kv_path(true);
+        let fast = MockEngine::new();
+        let rb = run_path(&base, "dense", 8, 64).unwrap();
+        let rf = run_path(&fast, "dense", 8, 64).unwrap();
+        // analytic expectations for the mock config (L=2,G=2,dh=2,n=16):
+        // kv 8192 B, logits 9600 B, tokens+lengths 64 B per step
+        assert_eq!(rb.profile.decode_steps, 64);
+        assert_eq!(per_step_host_copy(&rb), 26048.0);
+        assert_eq!(per_step_host_copy(&rf), 9792.0);
+        let reduction = per_step_host_copy(&rb) / per_step_host_copy(&rf);
+        assert!(reduction >= 2.0, "got {reduction}x");
+    }
+
+    #[test]
+    fn pretty_json_roundtrips() {
+        let j = Json::obj(vec![
+            ("a", 1usize.into()),
+            ("b", Json::obj(vec![("c", 2.5.into())])),
+        ]);
+        let s = pretty(&j, 0);
+        assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+}

@@ -3,6 +3,7 @@
 //! the rows the paper reports and writes results/<fig>.csv.
 
 pub mod accuracy;
+pub mod decode_breakdown;
 pub mod figures;
 pub mod harness;
 pub mod serving;

@@ -103,7 +103,7 @@ mod tests {
         let mut sched = Scheduler::new(
             MockEngine::new(),
             SparsityController::new(Mode::Dense),
-            SchedulerConfig { max_batch: 4, compact: true },
+            SchedulerConfig { max_batch: 4, compact: true, ..Default::default() },
         );
         let trace = generate(&WorkloadConfig {
             n_requests: 6,

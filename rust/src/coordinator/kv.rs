@@ -1,9 +1,15 @@
 //! KV-cache surgery on host tensors.
 //!
 //! Layout everywhere: `[L, 2, B, G, N, dh]` (layer, k/v, slot, kv-head,
-//! position, head dim). The batch group's cache lives as an engine literal
-//! on the hot path; these routines run only on composition changes
-//! (admission, completion, bucket promotion) and for the PP/TP splits.
+//! position, head dim). The batch group's cache lives as a resident
+//! engine buffer on the hot path; these routines run only on composition
+//! changes (admission, completion, bucket promotion) and for the PP/TP
+//! splits. Composition changes are slot-incremental: [`copy_slot`] moves
+//! exactly one slot between caches with no intermediate allocation, and
+//! [`KvPool`] recycles the destination buffers so promote/regroup churn
+//! settles into a steady set of allocations.
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -20,6 +26,45 @@ fn dims6(t: &Tensor) -> Result<(usize, usize, usize, usize, usize, usize)> {
         bail!("expected KV shape [L,2,B,G,N,dh], got {:?}", s);
     }
     Ok((s[0], s[1], s[2], s[3], s[4], s[5]))
+}
+
+/// Copy slot `sb` of `src` into slot `db` of `dst` — the incremental
+/// surgery primitive. Caches must agree on (L, G, dh); the source's
+/// position count may be smaller (the destination's tail is zeroed, so a
+/// pooled/reused destination never leaks stale positions).
+pub fn copy_slot(dst: &mut Tensor, db: usize, src: &Tensor, sb: usize) -> Result<()> {
+    let (l, two, b_dst, g, n_dst, dh) = dims6(dst)?;
+    let (l2, _, b_src, g2, n_src, dh2) = dims6(src)?;
+    if l2 != l || g2 != g || dh2 != dh {
+        bail!(
+            "copy_slot: src {:?} incompatible with dst {:?}",
+            src.shape(),
+            dst.shape()
+        );
+    }
+    if n_src > n_dst {
+        bail!("copy_slot: n_src {n_src} > n_dst {n_dst}");
+    }
+    if db >= b_dst || sb >= b_src {
+        bail!("copy_slot: slot {db} >= {b_dst} or {sb} >= {b_src}");
+    }
+    let s = src.as_f32()?;
+    let d = dst.as_f32_mut()?;
+    let row = dh;
+    for li in 0..l {
+        for c in 0..two {
+            for gi in 0..g {
+                let sbase = ((((li * two + c) * b_src + sb) * g) + gi) * n_src * row;
+                let dbase = ((((li * two + c) * b_dst + db) * g) + gi) * n_dst * row;
+                d[dbase..dbase + n_src * row]
+                    .copy_from_slice(&s[sbase..sbase + n_src * row]);
+                for x in &mut d[dbase + n_src * row..dbase + n_dst * row] {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Copy one slot out of a batch cache -> [L,2,1,G,N,dh].
@@ -44,35 +89,11 @@ pub fn extract_slot(kv: &Tensor, b: usize) -> Result<Tensor> {
 /// Write a single-sequence cache (n_src <= n_dst positions) into slot `b`
 /// of a batch cache. Extra positions in the destination are zeroed.
 pub fn write_slot(kv: &mut Tensor, slot_kv: &Tensor, b: usize) -> Result<()> {
-    let (l, two, bsz, g, n_dst, dh) = dims6(kv)?;
-    let (l2, _, one, g2, n_src, dh2) = dims6(slot_kv)?;
-    if l2 != l || g2 != g || dh2 != dh || one != 1 {
-        bail!(
-            "slot kv {:?} incompatible with batch kv {:?}",
-            slot_kv.shape(),
-            kv.shape()
-        );
+    let (_, _, one, _, _, _) = dims6(slot_kv)?;
+    if one != 1 {
+        bail!("write_slot: source is not a single-slot cache");
     }
-    if n_src > n_dst || b >= bsz {
-        bail!("write_slot: n_src {n_src} > n_dst {n_dst} or slot {b} >= {bsz}");
-    }
-    let src = slot_kv.as_f32()?.to_vec();
-    let dst = kv.as_f32_mut()?;
-    let row = dh;
-    for li in 0..l {
-        for c in 0..two {
-            for gi in 0..g {
-                let dbase = ((((li * two + c) * bsz + b) * g) + gi) * n_dst * row;
-                let sbase = ((((li * two + c) * 1) * g) + gi) * n_src * row;
-                dst[dbase..dbase + n_src * row]
-                    .copy_from_slice(&src[sbase..sbase + n_src * row]);
-                for x in &mut dst[dbase + n_src * row..dbase + n_dst * row] {
-                    *x = 0.0;
-                }
-            }
-        }
-    }
-    Ok(())
+    copy_slot(kv, b, slot_kv, 0)
 }
 
 /// Zero a slot (freed sequence) so stale KV never leaks into attention.
@@ -94,6 +115,41 @@ pub fn clear_slot(kv: &mut Tensor, b: usize) -> Result<()> {
     Ok(())
 }
 
+/// Copy `src` into a same-batch, wider-position `dst` (bucket promotion
+/// into a preallocated/pooled buffer). The destination tail is zeroed.
+pub fn pad_n_into(src: &Tensor, dst: &mut Tensor) -> Result<()> {
+    let (l, two, bsz, g, n, dh) = dims6(src)?;
+    let (l2, _, b2, g2, n_new, dh2) = dims6(dst)?;
+    if l2 != l || b2 != bsz || g2 != g || dh2 != dh {
+        bail!(
+            "pad_n_into: src {:?} incompatible with dst {:?}",
+            src.shape(),
+            dst.shape()
+        );
+    }
+    if n_new < n {
+        bail!("pad_n_into: destination bucket {n_new} < source {n}");
+    }
+    let s = src.as_f32()?;
+    let d = dst.as_f32_mut()?;
+    let row = dh;
+    for li in 0..l {
+        for c in 0..two {
+            for b in 0..bsz {
+                for gi in 0..g {
+                    let sbase = ((((li * two + c) * bsz + b) * g) + gi) * n * row;
+                    let dbase = ((((li * two + c) * bsz + b) * g) + gi) * n_new * row;
+                    d[dbase..dbase + n * row].copy_from_slice(&s[sbase..sbase + n * row]);
+                    for x in &mut d[dbase + n * row..dbase + n_new * row] {
+                        *x = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Grow the position axis to a larger bucket (zero-padded).
 pub fn pad_n(kv: &Tensor, n_new: usize) -> Result<Tensor> {
     let (l, two, bsz, g, n, dh) = dims6(kv)?;
@@ -103,39 +159,9 @@ pub fn pad_n(kv: &Tensor, n_new: usize) -> Result<Tensor> {
     if n_new == n {
         return Ok(kv.clone());
     }
-    let src = kv.as_f32()?;
-    let mut out = vec![0f32; l * two * bsz * g * n_new * dh];
-    let row = dh;
-    for li in 0..l {
-        for c in 0..two {
-            for b in 0..bsz {
-                for gi in 0..g {
-                    let sbase = ((((li * two + c) * bsz + b) * g) + gi) * n * row;
-                    let dbase = ((((li * two + c) * bsz + b) * g) + gi) * n_new * row;
-                    out[dbase..dbase + n * row]
-                        .copy_from_slice(&src[sbase..sbase + n * row]);
-                }
-            }
-        }
-    }
-    Tensor::f32(out, vec![l, two, bsz, g, n_new, dh])
-}
-
-/// Rebuild a batch cache at a new capacity from per-slot caches.
-/// `slots[i] = Some(seq kv [L,2,1,G,n_i,dh])` with n_i <= n_bucket.
-pub fn assemble(
-    cfg: &ModelConfig,
-    slots: &[Option<Tensor>],
-    n_bucket: usize,
-) -> Result<Tensor> {
-    let b = slots.len();
-    let mut kv = Tensor::zeros_f32(cfg.kv_shape(b, n_bucket));
-    for (i, s) in slots.iter().enumerate() {
-        if let Some(t) = s {
-            write_slot(&mut kv, t, i)?;
-        }
-    }
-    Ok(kv)
+    let mut out = Tensor::zeros_f32(vec![l, two, bsz, g, n_new, dh]);
+    pad_n_into(kv, &mut out)?;
+    Ok(out)
 }
 
 /// Split along layers for 2-stage pipeline parallelism.
@@ -188,6 +214,70 @@ pub fn split_groups(kv: &Tensor, n_shards: usize) -> Result<Vec<Vec<Tensor>>> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// buffer pool
+// ---------------------------------------------------------------------------
+
+/// Reusable zeroed f32 host buffers keyed by element count. Composition
+/// changes acquire their target cache here instead of allocating, so the
+/// promote/regroup path reuses a steady set of per-(batch,seq)-bucket
+/// buffers instead of reallocating the dominant tensor every change.
+#[derive(Debug, Default)]
+pub struct KvPool {
+    free: HashMap<usize, Vec<Vec<f32>>>,
+    pub reuses: u64,
+    pub allocs: u64,
+}
+
+impl KvPool {
+    /// Bound on retained buffers per size class (a group cycles through at
+    /// most a couple of shapes; anything more is churn worth dropping).
+    const MAX_PER_CLASS: usize = 4;
+
+    pub fn new() -> KvPool {
+        KvPool::default()
+    }
+
+    /// A zeroed tensor of `shape`, reusing a released buffer when one of
+    /// the right size exists.
+    pub fn acquire(&mut self, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        if let Some(mut data) = self.free.get_mut(&n).and_then(|v| v.pop()) {
+            data.fill(0.0);
+            self.reuses += 1;
+            Tensor::f32(data, shape).expect("pooled buffer length")
+        } else {
+            self.allocs += 1;
+            Tensor::zeros_f32(shape)
+        }
+    }
+
+    /// Like [`KvPool::acquire`] but WITHOUT zeroing reused storage: for
+    /// callers that overwrite every element (e.g. [`pad_n_into`], which
+    /// writes all rows and zero-fills the tail itself). Using this for a
+    /// partially-written destination would leak stale KV between slots.
+    pub fn acquire_overwritten(&mut self, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        if let Some(data) = self.free.get_mut(&n).and_then(|v| v.pop()) {
+            self.reuses += 1;
+            Tensor::f32(data, shape).expect("pooled buffer length")
+        } else {
+            self.allocs += 1;
+            Tensor::zeros_f32(shape)
+        }
+    }
+
+    /// Return a tensor's storage to the pool (f32 only; others dropped).
+    pub fn release(&mut self, t: Tensor) {
+        if let Tensor::F32 { data, .. } = t {
+            let class = self.free.entry(data.len()).or_default();
+            if class.len() < Self::MAX_PER_CLASS {
+                class.push(data);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +305,11 @@ mod tests {
     fn filled(shape: Vec<usize>, seed: f32) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor::f32((0..n).map(|i| seed + i as f32).collect(), shape).unwrap()
+    }
+
+    /// [L,2,B,G,N,dh] shape from generated dims.
+    fn shape(l: usize, b: usize, g: usize, n: usize, dh: usize) -> Vec<usize> {
+        vec![l, 2, b, g, n, dh]
     }
 
     #[test]
@@ -268,6 +363,38 @@ mod tests {
     }
 
     #[test]
+    fn copy_slot_moves_one_slot_and_zero_pads() {
+        let c = cfg();
+        let src = filled(c.kv_shape(3, 4), 5.0);
+        let mut dst = filled(c.kv_shape(2, 8), 9.0);
+        copy_slot(&mut dst, 0, &src, 2).unwrap();
+        // moved slot matches the source slot padded to the wider bucket
+        let want = pad_n(&extract_slot(&src, 2).unwrap(), 8).unwrap();
+        assert_eq!(extract_slot(&dst, 0).unwrap(), want);
+        // the other destination slot is untouched
+        let before = filled(c.kv_shape(2, 8), 9.0);
+        assert_eq!(
+            extract_slot(&dst, 1).unwrap(),
+            extract_slot(&before, 1).unwrap()
+        );
+    }
+
+    #[test]
+    fn pool_reuses_and_zeroes() {
+        let mut pool = KvPool::new();
+        let mut t = pool.acquire(vec![2, 2, 1, 2, 4, 4]);
+        assert_eq!(pool.allocs, 1);
+        t.as_f32_mut().unwrap()[0] = 7.0;
+        pool.release(t);
+        let t2 = pool.acquire(vec![2, 2, 1, 2, 4, 4]);
+        assert_eq!(pool.reuses, 1);
+        assert!(t2.as_f32().unwrap().iter().all(|&x| x == 0.0), "stale data");
+        // different size class: fresh allocation
+        let _t3 = pool.acquire(vec![2, 2, 2, 2, 4, 4]);
+        assert_eq!(pool.allocs, 2);
+    }
+
+    #[test]
     fn prop_write_then_extract_identity() {
         check("kv-write-extract", 30, |g| {
             let c = cfg();
@@ -285,6 +412,22 @@ mod tests {
             prop_assert!(out == padded, "slot roundtrip mismatch");
             Ok(())
         });
+    }
+
+    /// write_slot-based rebuild (the old `assemble` helper, now test-only:
+    /// production regroup is slot-incremental via copy_slot).
+    fn assemble_via_write_slot(
+        c: &ModelConfig,
+        slots: &[Option<Tensor>],
+        n_bucket: usize,
+    ) -> Tensor {
+        let mut kv = Tensor::zeros_f32(c.kv_shape(slots.len(), n_bucket));
+        for (i, s) in slots.iter().enumerate() {
+            if let Some(t) = s {
+                write_slot(&mut kv, t, i).unwrap();
+            }
+        }
+        kv
     }
 
     #[test]
@@ -308,7 +451,7 @@ mod tests {
                     }
                 })
                 .collect();
-            let kv = assemble(&c, &slots, n).unwrap();
+            let kv = assemble_via_write_slot(&c, &slots, n);
             for (i, s) in slots.iter().enumerate() {
                 let got = extract_slot(&kv, i).unwrap();
                 match s {
@@ -319,6 +462,73 @@ mod tests {
                     ),
                 }
             }
+            Ok(())
+        });
+    }
+
+    /// Slot-incremental regroup over a random permutation: every surviving
+    /// slot must land bit-exactly, across random (L,B,G,N,dh) shapes.
+    #[test]
+    fn prop_copy_slot_permutation_preserves_slots() {
+        check("kv-permute-slots", 30, |g| {
+            let (l, gg, dh) = (g.usize_in(1, 4), g.usize_in(1, 4), g.usize_in(1, 5));
+            let n_src = g.usize_in(1, 6);
+            let n_dst = g.usize_in(n_src, 8);
+            let b_src = g.usize_in(1, 6);
+            let b_dst = g.usize_in(b_src, 8);
+            let elems: usize = shape(l, b_src, gg, n_src, dh).iter().product();
+            let src = Tensor::f32(g.vec_f32(elems, -2.0, 2.0), shape(l, b_src, gg, n_src, dh))
+                .unwrap();
+            // random injective old-slot -> new-slot mapping
+            let keep = g.usize_in(0, b_src + 1);
+            let from = g.distinct(keep, b_src);
+            let to = g.distinct(keep, b_dst);
+            let mut dst = Tensor::zeros_f32(shape(l, b_dst, gg, n_dst, dh));
+            for (&f, &t) in from.iter().zip(to.iter()) {
+                copy_slot(&mut dst, t, &src, f).map_err(|e| e.to_string())?;
+            }
+            let mut moved = vec![false; b_dst];
+            for (&f, &t) in from.iter().zip(to.iter()) {
+                moved[t] = true;
+                let got = extract_slot(&dst, t).unwrap();
+                let want = pad_n(&extract_slot(&src, f).unwrap(), n_dst).unwrap();
+                prop_assert!(got == want, "slot {f}->{t} not preserved");
+            }
+            for (t, m) in moved.iter().enumerate() {
+                if !m {
+                    let got = extract_slot(&dst, t).unwrap();
+                    prop_assert!(
+                        got.as_f32().unwrap().iter().all(|&x| x == 0.0),
+                        "untouched slot {t} non-zero"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Pooled promotion must equal the allocating path bit-exactly, even
+    /// when the pooled destination held stale data.
+    #[test]
+    fn prop_pad_n_into_matches_pad_n() {
+        check("kv-pad-into", 30, |g| {
+            let (l, b, gg, dh) = (
+                g.usize_in(1, 3),
+                g.usize_in(1, 4),
+                g.usize_in(1, 3),
+                g.usize_in(1, 4),
+            );
+            let n = g.usize_in(1, 5);
+            let n_new = g.usize_in(n, 8);
+            let elems: usize = shape(l, b, gg, n, dh).iter().product();
+            let src = Tensor::f32(g.vec_f32(elems, -1.0, 1.0), shape(l, b, gg, n, dh)).unwrap();
+            let want = pad_n(&src, n_new).unwrap();
+            // stale destination: promotion must overwrite every position
+            let delems: usize = shape(l, b, gg, n_new, dh).iter().product();
+            let mut dst =
+                Tensor::f32(vec![42.0; delems], shape(l, b, gg, n_new, dh)).unwrap();
+            pad_n_into(&src, &mut dst).map_err(|e| e.to_string())?;
+            prop_assert!(dst == want, "pooled promotion diverged");
             Ok(())
         });
     }

@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::runtime::StepProfile;
 use crate::substrate::json::Json;
 use crate::substrate::stats::Samples;
 
@@ -27,8 +28,23 @@ pub struct EngineMetrics {
     pub completed_requests: u64,
     pub cancelled_requests: u64,
     pub deadline_expired: u64,
+    /// Composition changes that touched the group cache (prefill splices
+    /// and batch re-buckets).
     pub kv_rebuilds: u64,
+    /// Batch-bucket changes specifically (each one a full-group copy —
+    /// the quantity the shrink hysteresis bounds).
+    pub regroups: u64,
+    /// Individual slots copied by incremental surgery.
+    pub slot_copies: u64,
     pub bucket_promotions: u64,
+    /// Host-side KV surgery wall time (also in `surgery.host_surgery_ns`).
+    pub host_surgery_s: f64,
+    pub kv_pool_reuses: u64,
+    pub kv_pool_allocs: u64,
+    /// Scheduler-side contribution to the step breakdown (surgery time +
+    /// resident-cache materialization bytes); merged with the engine's
+    /// profile by `Scheduler::profile()`.
+    pub surgery: StepProfile,
     pub decode_wall_s: f64,
     pub total_wall_s: f64,
 }
@@ -72,8 +88,23 @@ impl EngineMetrics {
             ("ttft_ms_p50", (self.ttft.p50() * 1e3).into()),
             ("e2e_ms_p50", (self.e2e.p50() * 1e3).into()),
             ("kv_rebuilds", (self.kv_rebuilds as usize).into()),
+            ("regroups", (self.regroups as usize).into()),
+            ("slot_copies", (self.slot_copies as usize).into()),
             ("bucket_promotions", (self.bucket_promotions as usize).into()),
+            ("host_surgery_ms", (self.host_surgery_s * 1e3).into()),
+            ("kv_pool_reuses", (self.kv_pool_reuses as usize).into()),
+            ("kv_pool_allocs", (self.kv_pool_allocs as usize).into()),
         ])
+    }
+
+    /// Serving metrics plus a step-cost breakdown under `"step_profile"`.
+    /// Pass the ALREADY-merged profile — `Scheduler::profile()` is the
+    /// single place engine transfers/compute and scheduler surgery are
+    /// combined; this method does no merging of its own.
+    pub fn to_json_with_profile(&self, profile: &StepProfile) -> Json {
+        let mut j = self.to_json();
+        j.set("step_profile", profile.to_json());
+        j
     }
 }
 
@@ -88,5 +119,20 @@ mod tests {
         m.record_step(Duration::from_millis(10), 4);
         assert_eq!(m.generated_tokens, 8);
         assert!((m.decode_throughput() - 400.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn profile_json_embeds_step_profile_verbatim() {
+        let m = EngineMetrics::default();
+        let p = StepProfile {
+            h2d_bytes: 100,
+            host_surgery_ns: 2_000_000,
+            decode_steps: 1,
+            ..Default::default()
+        };
+        let j = m.to_json_with_profile(&p);
+        let sp = j.get("step_profile");
+        assert_eq!(sp.get("h2d_bytes_per_step").as_f64(), Some(100.0));
+        assert_eq!(sp.get("host_surgery_ms").as_f64(), Some(2.0));
     }
 }

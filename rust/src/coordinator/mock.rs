@@ -6,12 +6,20 @@
 //! until the id leaves byte range, then the `'\n'` stop token. It
 //! verifies scheduling and protocol behaviour, not numerics. KV carries a
 //! per-slot fingerprint in position 0 so tests can detect slot aliasing.
+//!
+//! The mock also mirrors the engine's two KV paths for `bench
+//! decode-breakdown --smoke`: in the default *resident* mode a host KV is
+//! "uploaded" once and then flows step-to-step as a buffer; in
+//! `with_host_kv_path` mode every step pays the full round trip. Byte
+//! accounting is analytic (computed from the shapes the real paths would
+//! move), so the breakdown is deterministic.
 
-use std::time::Duration;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
+use crate::runtime::{KvCache, KvStore, ModelConfig, StepOutput, StepProfile, Tensor};
 use crate::tokenizer::PAD;
 
 use super::scheduler::StepEngine;
@@ -23,6 +31,10 @@ pub struct MockEngine {
     /// Artificial per-decode-step delay, so tests can race cancellation
     /// against generation deterministically.
     step_delay: Duration,
+    /// A/B: model the legacy host-KV path (full cache both ways per step).
+    host_kv_path: bool,
+    client: xla::PjRtClient,
+    profile: Mutex<StepProfile>,
 }
 
 impl Default for MockEngine {
@@ -52,12 +64,21 @@ impl MockEngine {
             batch_buckets: vec![1, 2, 4, 8],
             seq_buckets: vec![16, 32, 64],
             step_delay: Duration::ZERO,
+            host_kv_path: false,
+            client: xla::PjRtClient::cpu().expect("shim client"),
+            profile: Mutex::new(StepProfile::default()),
         }
     }
 
     /// Sleep this long inside every decode step.
     pub fn with_step_delay(mut self, d: Duration) -> Self {
         self.step_delay = d;
+        self
+    }
+
+    /// Model the legacy host-KV decode path (the A/B baseline).
+    pub fn with_host_kv_path(mut self, host: bool) -> Self {
+        self.host_kv_path = host;
         self
     }
 
@@ -82,6 +103,12 @@ impl StepEngine for MockEngine {
     }
     fn prefill_len(&self) -> usize {
         16
+    }
+    fn profile_snapshot(&self) -> StepProfile {
+        *self.profile.lock().unwrap()
+    }
+    fn reset_profile(&self) {
+        *self.profile.lock().unwrap() = StepProfile::default();
     }
     fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
         let b = tokens.shape()[0];
@@ -108,9 +135,10 @@ impl StepEngine for MockEngine {
         &self,
         _tag: &str,
         tokens: &[i32],
-        _lengths: &[i32],
+        lengths: &[i32],
         kv: KvCache,
     ) -> Result<StepOutput> {
+        let t0 = Instant::now();
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
         }
@@ -119,9 +147,38 @@ impl StepEngine for MockEngine {
         for &t in tokens {
             logits.extend(self.logits_for(if t == PAD { 0 } else { t }));
         }
+        // transfer accounting, mirroring the real engine's two paths
+        let kv_bytes = (self.cfg.kv_elems(kv.batch, kv.n) * 4) as u64;
+        let io_bytes = (tokens.len() * 4 + lengths.len() * 4) as u64;
+        let logits_bytes = (b * self.cfg.vocab * 4) as u64;
+        let kv_out = if self.host_kv_path {
+            // legacy path: cache crosses the boundary both ways each step
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += io_bytes + kv_bytes;
+            p.d2h_bytes += logits_bytes + kv_bytes;
+            p.decode_steps += 1;
+            kv
+        } else {
+            // resident path: the cache is uploaded once (when it arrives
+            // as a host literal after surgery) and then stays put
+            let (batch, n) = (kv.batch, kv.n);
+            let (store, uploaded) = match kv.store {
+                KvStore::Buf(buf) => (KvStore::Buf(buf), 0),
+                KvStore::Lit(lit) => (
+                    KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?),
+                    kv_bytes,
+                ),
+            };
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += io_bytes + uploaded;
+            p.d2h_bytes += logits_bytes;
+            p.decode_steps += 1;
+            KvCache { store, batch, n }
+        };
+        self.profile.lock().unwrap().compute_ns += t0.elapsed().as_nanos() as u64;
         Ok(StepOutput {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
-            kv,
+            kv: kv_out,
         })
     }
 }

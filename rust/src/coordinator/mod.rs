@@ -40,7 +40,7 @@ mod scheduler_tests {
     }
 
     fn sched() -> Scheduler<MockEngine> {
-        sched_with(SchedulerConfig { max_batch: 8, compact: true })
+        sched_with(SchedulerConfig { max_batch: 8, compact: true, ..Default::default() })
     }
 
     fn sched_with(cfg: SchedulerConfig) -> Scheduler<MockEngine> {
@@ -259,7 +259,8 @@ mod scheduler_tests {
     fn priority_orders_admission() {
         // capacity 1: requests run one at a time, so admission order is
         // completion order
-        let mut s = sched_with(SchedulerConfig { max_batch: 1, compact: true });
+        let mut s =
+            sched_with(SchedulerConfig { max_batch: 1, compact: true, ..Default::default() });
         s.enqueue(req(1, 10, 3)); // priority 0
         s.enqueue(
             Request::builder(vec![20, 20])
@@ -282,6 +283,92 @@ mod scheduler_tests {
         assert_eq!(s.metrics.ttft.len(), 1);
         // 8 tokens -> 7 inter-token gaps
         assert_eq!(s.metrics.itl.len(), 7);
+    }
+
+    #[test]
+    fn bucket_oscillation_does_not_thrash_regroups() {
+        // 4 long-runners pin the group at bucket 4; a stream of 1-token
+        // requests pushes occupancy across the 4/8 boundary every cycle.
+        // With hysteresis the group grows to 8 once and stays there while
+        // the churn lasts — the admit/finish oscillation must NOT produce
+        // a full-cache regroup per cycle.
+        let mut s = sched_with(SchedulerConfig {
+            max_batch: 8,
+            compact: true,
+            shrink_patience: 6,
+        });
+        for i in 0..4 {
+            s.enqueue(req(i, 100 + i as i32, 30));
+        }
+        s.step().unwrap();
+        assert_eq!(s.capacity(), 4);
+        let after_admit = s.metrics.regroups;
+        for k in 0..12u64 {
+            s.enqueue(req(100 + k, 50, 1));
+            s.step().unwrap();
+        }
+        assert_eq!(s.capacity(), 8, "group must have grown for the churn");
+        assert!(
+            s.metrics.regroups <= after_admit + 1,
+            "oscillation re-bucketed the group: {} regroups for 12 cycles",
+            s.metrics.regroups
+        );
+        // once the churn stops, sustained low occupancy does shrink —
+        // hysteresis defers compaction, it must not disable it
+        for _ in 0..8 {
+            s.step().unwrap();
+        }
+        assert_eq!(s.capacity(), 4, "group must shrink after the churn ends");
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 16);
+        assert!(s.metrics.regroups <= after_admit + 2);
+    }
+
+    #[test]
+    fn eager_shrink_rebuckets_every_cycle() {
+        // control for the hysteresis test: patience 1 restores the old
+        // eager behaviour and the same churn thrashes grow/shrink
+        let run = |patience: usize| {
+            let mut s = sched_with(SchedulerConfig {
+                max_batch: 8,
+                compact: true,
+                shrink_patience: patience,
+            });
+            for i in 0..4 {
+                s.enqueue(req(i, 100 + i as i32, 30));
+            }
+            s.step().unwrap();
+            for k in 0..12u64 {
+                s.enqueue(req(100 + k, 50, 1));
+                s.step().unwrap();
+            }
+            s.run_to_completion().unwrap();
+            s.metrics.regroups
+        };
+        let eager = run(1);
+        let patient = run(6);
+        assert!(
+            eager > patient + 6,
+            "eager {eager} vs patient {patient}: hysteresis saved no rebuilds"
+        );
+    }
+
+    #[test]
+    fn surgery_metrics_account_composition_changes() {
+        let mut s = sched();
+        for i in 0..3 {
+            s.enqueue(req(i, 100 + i as i32, 4));
+        }
+        s.run_to_completion().unwrap();
+        // 3 newcomers spliced slot-incrementally
+        assert!(s.metrics.slot_copies >= 3);
+        assert!(s.metrics.kv_pool_allocs >= 1);
+        assert!(s.metrics.host_surgery_s >= 0.0);
+        let p = s.profile();
+        assert!(p.host_surgery_ns > 0, "surgery time not recorded");
+        // mock resident path: per-step d2h is logits-only, h2d is
+        // tokens/lengths (+ one cache upload after each composition change)
+        assert!(p.d2h_bytes > 0 && p.h2d_bytes > 0);
     }
 
     #[test]

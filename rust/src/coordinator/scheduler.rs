@@ -14,15 +14,21 @@
 //! `Finished`/`Cancelled`. TTFT and inter-token latency are recorded at
 //! the moment each token is emitted, not reconstructed at completion.
 //!
-//! The group KV cache stays an engine literal between steps; host-side
-//! surgery happens only on composition changes (admission/re-bucketing).
+//! The group KV cache stays resident on the engine between steps;
+//! host-side surgery happens only on composition changes (admission /
+//! re-bucketing) and is slot-incremental through a pooled buffer
+//! ([`kv::KvPool`]). Batch-bucket *growth* is immediate (a bigger batch
+//! cannot run in the current bucket), but *shrinking* waits
+//! `shrink_patience` consecutive eligible steps so an admit/finish
+//! oscillation around a bucket boundary cannot trigger a full-cache
+//! rebuild every step.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{KvCache, ModelConfig, StepOutput, Tensor};
+use crate::runtime::{KvCache, ModelConfig, StepOutput, StepProfile, Tensor};
 use crate::tokenizer::{token_byte_len, PAD};
 
 use super::kv;
@@ -40,6 +46,12 @@ pub trait StepEngine {
     fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput>;
     fn decode(&self, tag: &str, tokens: &[i32], lengths: &[i32], kv: KvCache)
         -> Result<StepOutput>;
+    /// Cumulative transfer/compute breakdown since the last reset (engines
+    /// without instrumentation report zeros).
+    fn profile_snapshot(&self) -> StepProfile {
+        StepProfile::default()
+    }
+    fn reset_profile(&self) {}
 }
 
 impl StepEngine for crate::runtime::Engine {
@@ -61,6 +73,12 @@ impl StepEngine for crate::runtime::Engine {
     fn decode(&self, tag: &str, tokens: &[i32], lengths: &[i32], kv: KvCache)
         -> Result<StepOutput> {
         crate::runtime::Engine::decode(self, tag, tokens, lengths, kv)
+    }
+    fn profile_snapshot(&self) -> StepProfile {
+        self.exec.profile_snapshot()
+    }
+    fn reset_profile(&self) {
+        self.exec.reset_profile()
     }
 }
 
@@ -88,13 +106,18 @@ impl Slot {
 pub struct SchedulerConfig {
     /// Upper bound on the batch bucket (must be one of the buckets).
     pub max_batch: usize,
-    /// Shrink the group when occupancy falls below half a smaller bucket.
+    /// Shrink the group when occupancy falls below a smaller bucket.
     pub compact: bool,
+    /// Consecutive steps a smaller batch bucket must suffice before the
+    /// group actually shrinks. 1 = shrink eagerly (the pre-hysteresis
+    /// behaviour); higher values absorb admit/finish oscillation around a
+    /// bucket boundary, each avoided re-bucket being a full-cache copy.
+    pub shrink_patience: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 16, compact: true }
+        SchedulerConfig { max_batch: 16, compact: true, shrink_patience: 8 }
     }
 }
 
@@ -106,6 +129,10 @@ pub struct Scheduler<E: StepEngine> {
     slots: Vec<Option<Slot>>,
     group_kv: Option<KvCache>,
     n_bucket: usize,
+    /// Pooled host buffers for composition-change surgery.
+    pool: kv::KvPool,
+    /// Consecutive steps a shrink has been possible (bucket hysteresis).
+    shrink_streak: usize,
     /// Events produced since the last `step()` return (enqueue/cancel also
     /// buffer here so lifecycle events are never lost between steps).
     events: Vec<GenerationEvent>,
@@ -123,6 +150,8 @@ impl<E: StepEngine> Scheduler<E> {
             slots: Vec::new(),
             group_kv: None,
             n_bucket: n0,
+            pool: kv::KvPool::new(),
+            shrink_streak: 0,
             events: Vec::new(),
             metrics: EngineMetrics::default(),
         }
@@ -130,6 +159,14 @@ impl<E: StepEngine> Scheduler<E> {
 
     pub fn engine(&self) -> &E {
         &self.engine
+    }
+
+    /// Combined step breakdown: engine transfers/compute + the
+    /// scheduler's host-surgery time.
+    pub fn profile(&self) -> StepProfile {
+        let mut p = self.engine.profile_snapshot();
+        p.merge(&self.metrics.surgery);
+        p
     }
 
     pub fn enqueue(&mut self, req: Request) {
@@ -342,7 +379,6 @@ impl<E: StepEngine> Scheduler<E> {
 
     fn admit(&mut self) -> Result<()> {
         if self.pending.is_empty() {
-            self.maybe_compact()?;
             return Ok(());
         }
         // highest priority first; stable sort keeps FIFO among equals
@@ -359,8 +395,14 @@ impl<E: StepEngine> Scheduler<E> {
         }
         let want = self.active_len() + self.pending.len();
         let target = self.batch_bucket_for(want);
-        if target != self.capacity() {
+        // growth is mandatory (the bigger batch cannot run otherwise);
+        // shrinking is maybe_compact's job, behind hysteresis
+        if target > self.capacity() {
             self.regroup(target)?;
+        } else if target == self.capacity() {
+            // demand needed the current bucket this step: a shrink now
+            // would be undone immediately, so the streak restarts
+            self.shrink_streak = 0;
         }
         let free = self.free_slots();
         let n_new = free.len().min(self.pending.len());
@@ -395,7 +437,6 @@ impl<E: StepEngine> Scheduler<E> {
         // the prefill logits give every newcomer its first token now
         let logits = out.logits.as_f32()?;
         let vocab = self.engine.config().vocab;
-        let prefill_kv = out.kv.to_tensor()?;
 
         // group cache must exist and cover max(len)+1 positions
         let max_need = reqs
@@ -404,22 +445,33 @@ impl<E: StepEngine> Scheduler<E> {
             .max()
             .unwrap();
         if self.group_kv.is_none() {
-            let n = self.seq_bucket_for(max_need.max(self.n_bucket))?;
-            self.n_bucket = n;
-            let cfg = self.engine.config().clone();
-            let t = Tensor::zeros_f32(cfg.kv_shape(self.capacity(), n));
-            self.group_kv = Some(KvCache::from_tensor(&t, self.capacity(), n)?);
+            // fresh group: pick the bucket now; the zeroed cache is
+            // acquired directly as the splice target below (no interim
+            // literal roundtrip of an all-zeros tensor)
+            self.n_bucket = self.seq_bucket_for(max_need.max(self.n_bucket))?;
         } else if max_need > self.n_bucket {
             let n = self.seq_bucket_for(max_need)?;
             self.promote_seq_bucket(n)?;
         }
 
-        let gkv = self.group_kv.take().unwrap();
-        let mut gt = gkv.to_tensor()?;
+        // slot-incremental splice: each newcomer's prefill KV is copied
+        // straight into its group slot, no per-slot intermediate
+        let t_surgery = Instant::now();
+        let mut gt = match self.group_kv.take() {
+            Some(gkv) => {
+                self.note_materialize(&gkv);
+                gkv.to_tensor()?
+            }
+            None => {
+                let cfg = self.engine.config().clone();
+                self.pool.acquire(cfg.kv_shape(self.capacity(), self.n_bucket))
+            }
+        };
+        let prefill_kv = out.kv.to_tensor()?;
         for (i, r) in reqs.iter().enumerate() {
             let slot_idx = slots[i];
-            let seq_kv = kv::extract_slot(&prefill_kv, i)?;
-            kv::write_slot(&mut gt, &seq_kv, slot_idx)?;
+            kv::copy_slot(&mut gt, slot_idx, &prefill_kv, i)?;
+            self.metrics.slot_copies += 1;
             let prompt_len = r.prompt_ids.len().min(s_len);
             let row = &logits[i * vocab..(i + 1) * vocab];
             let mut sampler = Sampler::new(r.params, r.id);
@@ -457,33 +509,46 @@ impl<E: StepEngine> Scheduler<E> {
         }
         self.metrics.kv_rebuilds += 1;
         self.group_kv = Some(KvCache::from_tensor(&gt, self.capacity(), self.n_bucket)?);
+        self.pool.release(gt);
+        self.note_surgery(t_surgery);
         Ok(())
     }
 
     /// Rebuild the group at a new batch bucket, keeping live slots.
+    /// Slot-incremental: only surviving slots are copied, into a pooled
+    /// destination buffer.
     fn regroup(&mut self, new_capacity: usize) -> Result<()> {
-        let cfg = self.engine.config().clone();
-        let mut live: Vec<(Slot, Tensor)> = Vec::new();
+        let t_surgery = Instant::now();
+        let mut new_slots: Vec<Option<Slot>> = (0..new_capacity).map(|_| None).collect();
         if let Some(gkv) = self.group_kv.take() {
+            let cfg = self.engine.config().clone();
+            let mut dst = self.pool.acquire(cfg.kv_shape(new_capacity, self.n_bucket));
+            self.note_materialize(&gkv);
             let gt = gkv.to_tensor()?;
-            for (i, slot) in self.slots.iter_mut().enumerate() {
-                if let Some(s) = slot.take() {
-                    let t = kv::extract_slot(&gt, i)?;
-                    live.push((s, t));
+            let mut j = 0;
+            for i in 0..self.slots.len() {
+                if let Some(s) = self.slots[i].take() {
+                    assert!(j < new_capacity, "regroup would drop live slots");
+                    kv::copy_slot(&mut dst, j, &gt, i)?;
+                    self.metrics.slot_copies += 1;
+                    new_slots[j] = Some(s);
+                    j += 1;
                 }
             }
+            self.pool.release(gt);
+            self.group_kv = Some(KvCache::from_tensor(&dst, new_capacity, self.n_bucket)?);
+            self.pool.release(dst);
+            // only an actual full-group copy counts: initial bucket
+            // creation (no prior group) moves no KV bytes
+            self.metrics.kv_rebuilds += 1;
+            self.metrics.regroups += 1;
         }
-        assert!(live.len() <= new_capacity, "regroup would drop live slots");
-        let mut slots: Vec<Option<Slot>> = (0..new_capacity).map(|_| None).collect();
-        let mut kvs: Vec<Option<Tensor>> = (0..new_capacity).map(|_| None).collect();
-        for (i, (s, t)) in live.into_iter().enumerate() {
-            slots[i] = Some(s);
-            kvs[i] = Some(t);
-        }
-        let gt = kv::assemble(&cfg, &kvs, self.n_bucket)?;
-        self.slots = slots;
-        self.group_kv = Some(KvCache::from_tensor(&gt, new_capacity, self.n_bucket)?);
-        self.metrics.kv_rebuilds += 1;
+        // no prior group: stays None — prefill_into acquires the zeroed
+        // cache directly as its splice target (no literal roundtrip of an
+        // all-zeros tensor)
+        self.slots = new_slots;
+        self.shrink_streak = 0;
+        self.note_surgery(t_surgery);
         Ok(())
     }
 
@@ -498,11 +563,19 @@ impl<E: StepEngine> Scheduler<E> {
             // drop the group entirely when drained
             self.slots.clear();
             self.group_kv = None;
+            self.shrink_streak = 0;
             return Ok(());
         }
         let smaller = self.batch_bucket_for(occupied);
         if smaller < self.capacity() {
-            self.regroup(smaller)?;
+            // hysteresis: only shrink after the smaller bucket has been
+            // sufficient for `shrink_patience` consecutive steps
+            self.shrink_streak += 1;
+            if self.shrink_streak >= self.cfg.shrink_patience.max(1) {
+                self.regroup(smaller)?;
+            }
+        } else {
+            self.shrink_streak = 0;
         }
         Ok(())
     }
@@ -526,14 +599,41 @@ impl<E: StepEngine> Scheduler<E> {
         Ok(())
     }
 
+    /// Grow the position bucket in place: one pooled destination, rows
+    /// copied once (no allocate-then-copy churn).
     fn promote_seq_bucket(&mut self, n_new: usize) -> Result<()> {
+        let t_surgery = Instant::now();
         let gkv = self.group_kv.take().context("promote without group")?;
+        self.note_materialize(&gkv);
         let gt = gkv.to_tensor()?;
-        let padded = kv::pad_n(&gt, n_new)?;
-        self.group_kv = Some(KvCache::from_tensor(&padded, self.capacity(), n_new)?);
+        let cfg = self.engine.config().clone();
+        // pad_n_into overwrites every destination element, so the pooled
+        // buffer is taken without the redundant zero pass
+        let mut dst = self.pool.acquire_overwritten(cfg.kv_shape(self.capacity(), n_new));
+        kv::pad_n_into(&gt, &mut dst)?;
+        self.pool.release(gt);
+        self.group_kv = Some(KvCache::from_tensor(&dst, self.capacity(), n_new)?);
+        self.pool.release(dst);
         self.n_bucket = n_new;
         self.metrics.bucket_promotions += 1;
+        self.note_surgery(t_surgery);
         Ok(())
+    }
+
+    /// Account the d2h cost of pulling a resident cache home for surgery.
+    fn note_materialize(&mut self, gkv: &KvCache) {
+        if gkv.is_resident() {
+            let cfg = self.engine.config();
+            self.metrics.surgery.d2h_bytes += (cfg.kv_elems(gkv.batch, gkv.n) * 4) as u64;
+        }
+    }
+
+    fn note_surgery(&mut self, t0: Instant) {
+        let ns = t0.elapsed().as_nanos() as u64;
+        self.metrics.surgery.host_surgery_ns += ns;
+        self.metrics.host_surgery_s += ns as f64 * 1e-9;
+        self.metrics.kv_pool_reuses = self.pool.reuses;
+        self.metrics.kv_pool_allocs = self.pool.allocs;
     }
 
     fn decode_once(&mut self) -> Result<()> {

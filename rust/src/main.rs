@@ -26,6 +26,8 @@ commands:
   client     send a request to a running server (--stream, --cancel-after, --stats)
   eval       zero-shot task-suite accuracy at a sparsity mode
   bench      regenerate a paper figure/table (fig1a..fig14, table1, table2, all)
+             or `bench decode-breakdown [--smoke]` for the per-step decode
+             cost breakdown (BENCH_decode.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -43,6 +45,9 @@ fn main() {
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
         "eval" => cmd_eval(rest),
+        "bench" if rest.first().map(|s| s.as_str()) == Some("decode-breakdown") => {
+            bench::decode_breakdown::run(&rest[1..])
+        }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");

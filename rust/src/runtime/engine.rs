@@ -1,32 +1,72 @@
 //! Model engine: prefill / decode step API over compiled entries, plus the
 //! pipeline-parallel and tensor-parallel drivers (Figs 11, 12).
 //!
-//! The decode hot path keeps the KV cache as an `xla::Literal` that flows
-//! output -> input across steps without host-side reshaping. (The 0.1.6
-//! crate cannot donate buffers or decompose tuples on device, so each step
-//! still pays one host copy of the tuple output — see DESIGN.md §Perf.)
+//! The decode hot path keeps the KV cache **resident on the device**: each
+//! step's KV output buffer is fed straight into the next step
+//! ([`Executor::run_bufs`]), so the only per-step host traffic is
+//! tokens/lengths up and logits down. Host literals exist only around
+//! composition changes (admission, re-bucketing), when the coordinator
+//! needs the cache bytes for slot surgery. Env `POLAR_KV_HOST=1` forces
+//! the legacy literal-per-step path, kept as the A/B baseline for
+//! `bench decode-breakdown`.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::executor::Executor;
+use super::executor::{DeviceInput, Executor};
 use super::tensor::Tensor;
+
+/// Where a batch group's KV cache currently lives.
+pub enum KvStore {
+    /// Host literal — produced by prefill and by coordinator surgery; the
+    /// engine uploads it on the next decode step.
+    Lit(xla::Literal),
+    /// Device-resident buffer — flows output -> input across decode steps
+    /// without crossing the host boundary.
+    Buf(xla::PjRtBuffer),
+}
 
 /// Batched KV cache at a fixed (batch, seq) bucket.
 pub struct KvCache {
-    pub lit: xla::Literal,
+    pub store: KvStore,
     pub batch: usize,
     pub n: usize,
 }
 
 impl KvCache {
+    /// Materialize the cache on the host for slot surgery. For a resident
+    /// cache this is the one d2h copy a composition change costs.
     pub fn to_tensor(&self) -> Result<Tensor> {
-        Tensor::from_literal(&self.lit)
+        match &self.store {
+            KvStore::Lit(l) => Tensor::from_literal(l),
+            KvStore::Buf(b) => {
+                Tensor::from_literal(&b.to_literal_sync().context("fetch resident kv")?)
+            }
+        }
     }
 
     pub fn from_tensor(t: &Tensor, batch: usize, n: usize) -> Result<KvCache> {
-        Ok(KvCache { lit: t.to_literal()?, batch, n })
+        Ok(KvCache { store: KvStore::Lit(t.to_literal()?), batch, n })
+    }
+
+    /// True when the cache lives on the device (no host copy per step).
+    pub fn is_resident(&self) -> bool {
+        matches!(self.store, KvStore::Buf(_))
+    }
+
+    fn into_input(self) -> DeviceInput {
+        match self.store {
+            KvStore::Lit(l) => DeviceInput::Host(l),
+            KvStore::Buf(b) => DeviceInput::Buf(b),
+        }
+    }
+
+    fn into_literal(self, exec: &Executor) -> Result<xla::Literal> {
+        match self.store {
+            KvStore::Lit(l) => Ok(l),
+            KvStore::Buf(b) => exec.fetch_literal(&b),
+        }
     }
 }
 
@@ -38,11 +78,25 @@ pub struct StepOutput {
 #[derive(Clone)]
 pub struct Engine {
     pub exec: Arc<Executor>,
+    /// A/B switch: true = legacy host-literal KV path (env POLAR_KV_HOST).
+    kv_host_path: bool,
 }
 
 impl Engine {
     pub fn new(exec: Arc<Executor>) -> Engine {
-        Engine { exec }
+        let kv_host_path = std::env::var("POLAR_KV_HOST").is_ok();
+        Engine { exec, kv_host_path }
+    }
+
+    /// Force the legacy host-KV path (the `bench decode-breakdown`
+    /// baseline) regardless of the environment.
+    pub fn with_kv_host_path(mut self, host: bool) -> Engine {
+        self.kv_host_path = host;
+        self
+    }
+
+    pub fn kv_resident(&self) -> bool {
+        !self.kv_host_path
     }
 
     pub fn vocab(&self) -> usize {
@@ -79,7 +133,8 @@ impl Engine {
 
     /// Dense prompt pass at the prefill bucket. tokens: [B, S_prefill]
     /// (padded), lengths: [B]. Returns last-position logits + KV (n =
-    /// prefill bucket).
+    /// prefill bucket). The KV comes back as a host literal: the
+    /// coordinator splices it into the group cache before decoding.
     pub fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
         let b = tokens.shape()[0];
         let name = self.exec.manifest().prefill_entry_name(b);
@@ -88,7 +143,11 @@ impl Engine {
             .run_raw(&name, &[tokens.to_literal()?, lengths.to_literal()?])?;
         let logits = Tensor::from_literal(&outs[0])?;
         let n = self.exec.manifest().prefill_len;
-        let kv = KvCache { lit: outs.into_iter().nth(1).unwrap(), batch: b, n };
+        let kv = KvCache {
+            store: KvStore::Lit(outs.into_iter().nth(1).unwrap()),
+            batch: b,
+            n,
+        };
         Ok(StepOutput { logits, kv })
     }
 
@@ -102,27 +161,55 @@ impl Engine {
         kv: KvCache,
     ) -> Result<StepOutput> {
         let b = kv.batch;
+        let n = kv.n;
         if tokens.len() != b || lengths.len() != b {
             bail!("decode: tokens/lengths len != batch {b}");
         }
         if let Some(&max) = lengths.iter().max() {
-            if max as usize > kv.n {
-                bail!("decode: length {max} exceeds kv bucket {}", kv.n);
+            if max as usize > n {
+                bail!("decode: length {max} exceeds kv bucket {n}");
             }
         }
-        let name = self.exec.manifest().decode_entry_name(tag, b, kv.n);
+        let name = self.exec.manifest().decode_entry_name(tag, b, n);
         let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
         let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
-        let outs = self.exec.run_raw(&name, &[toks, lens, kv.lit])?;
-        let logits = Tensor::from_literal(&outs[0])?;
-        let kv = KvCache { lit: outs.into_iter().nth(1).unwrap(), batch: b, n: kv.n };
-        Ok(StepOutput { logits, kv })
+        let out = if self.kv_host_path {
+            // A/B baseline: full output tuple (logits + KV) fetched to the
+            // host every step, KV re-uploaded next step.
+            let kv_lit = kv.into_literal(&self.exec)?;
+            let outs = self.exec.run_raw(&name, &[toks, lens, kv_lit])?;
+            let logits = Tensor::from_literal(&outs[0])?;
+            let kv = KvCache {
+                store: KvStore::Lit(outs.into_iter().nth(1).unwrap()),
+                batch: b,
+                n,
+            };
+            StepOutput { logits, kv }
+        } else {
+            // hot path: KV stays device-resident; only logits come home
+            let outs = self.exec.run_bufs(
+                &name,
+                vec![DeviceInput::Host(toks), DeviceInput::Host(lens), kv.into_input()],
+            )?;
+            let mut it = outs.into_iter();
+            let logits_buf = it.next().context("decode logits")?;
+            let kv_buf = it.next().context("decode kv")?;
+            let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
+            StepOutput {
+                logits,
+                kv: KvCache { store: KvStore::Buf(kv_buf), batch: b, n },
+            }
+        };
+        self.exec.profile_mut().decode_steps += 1;
+        Ok(out)
     }
 
     // -- pipeline parallel (2 stages, Fig 11) -----------------------------
 
     /// One decode step through the two pipeline stages. kv0/kv1 hold the
     /// stage-local layer slices (split by `coordinator::kv::split_layers`).
+    /// On the resident path the stage-0 activation crosses to stage 1 as a
+    /// device buffer and both stage KVs stay resident.
     pub fn decode_pp2(
         &self,
         tag: &str,
@@ -134,20 +221,63 @@ impl Engine {
     ) -> Result<(Tensor, KvCache, KvCache)> {
         let b = tokens.len();
         let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        // built once, shared by both stages (Literal clone is O(1) in the
+        // vendored shim — Arc-backed storage)
         let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
         let s0 = format!("pp2_stage0_{tag}_b{b}_n{n}");
-        let outs0 = self.exec.run_raw(&s0, &[toks, lens, kv0.lit])?;
-        let mut it0 = outs0.into_iter();
-        let x = it0.next().context("stage0 x")?;
-        let kv0 = KvCache { lit: it0.next().context("stage0 kv")?, batch: b, n };
-
-        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
         let s1 = format!("pp2_stage1_{tag}_b{b}_n{n}");
-        let outs1 = self.exec.run_raw(&s1, &[x, lens, kv1.lit])?;
-        let mut it1 = outs1.into_iter();
-        let logits = Tensor::from_literal(&it1.next().context("stage1 logits")?)?;
-        let kv1 = KvCache { lit: it1.next().context("stage1 kv")?, batch: b, n };
-        Ok((logits, kv0, kv1))
+        let out = if self.kv_host_path {
+            let kv0_lit = kv0.into_literal(&self.exec)?;
+            let outs0 = self.exec.run_raw(&s0, &[toks, lens.clone(), kv0_lit])?;
+            let mut it0 = outs0.into_iter();
+            let x = it0.next().context("stage0 x")?;
+            let kv0 = KvCache {
+                store: KvStore::Lit(it0.next().context("stage0 kv")?),
+                batch: b,
+                n,
+            };
+            let kv1_lit = kv1.into_literal(&self.exec)?;
+            let outs1 = self.exec.run_raw(&s1, &[x, lens, kv1_lit])?;
+            let mut it1 = outs1.into_iter();
+            let logits = Tensor::from_literal(&it1.next().context("stage1 logits")?)?;
+            let kv1 = KvCache {
+                store: KvStore::Lit(it1.next().context("stage1 kv")?),
+                batch: b,
+                n,
+            };
+            (logits, kv0, kv1)
+        } else {
+            let outs0 = self.exec.run_bufs(
+                &s0,
+                vec![
+                    DeviceInput::Host(toks),
+                    DeviceInput::Host(lens.clone()),
+                    kv0.into_input(),
+                ],
+            )?;
+            let mut it0 = outs0.into_iter();
+            let x = it0.next().context("stage0 x")?;
+            let kv0 = KvCache {
+                store: KvStore::Buf(it0.next().context("stage0 kv")?),
+                batch: b,
+                n,
+            };
+            let outs1 = self.exec.run_bufs(
+                &s1,
+                vec![DeviceInput::Buf(x), DeviceInput::Host(lens), kv1.into_input()],
+            )?;
+            let mut it1 = outs1.into_iter();
+            let logits_buf = it1.next().context("stage1 logits")?;
+            let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
+            let kv1 = KvCache {
+                store: KvStore::Buf(it1.next().context("stage1 kv")?),
+                batch: b,
+                n,
+            };
+            (logits, kv0, kv1)
+        };
+        self.exec.profile_mut().decode_steps += 1;
+        Ok(out)
     }
 
     // -- tensor parallel (Megatron-style, Fig 12) --------------------------
@@ -156,6 +286,11 @@ impl Engine {
     /// after attention and MLP of every layer. `kv[shard][layer]` holds
     /// [2,B,Gs,N,dh] literals. `attn_tag` is "dense" or "sha_dXXXX"
     /// (layer 0 always uses "dense", §3.2); `mlp_tag` is "dense" or "kNN".
+    ///
+    /// Loop-invariant literals (`lengths`, the per-layer activation and
+    /// layer index) are serialized once and shared across shards — Literal
+    /// clones are O(1) Arc bumps in the vendored shim, so the per-shard
+    /// closures no longer re-serialize per shard per op.
     #[allow(clippy::too_many_arguments)]
     pub fn decode_tp(
         &self,
@@ -171,10 +306,10 @@ impl Engine {
         let b = tokens.len();
         let cfg = self.exec.config();
         let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
-        let lens_t = Tensor::i32(lengths.to_vec(), vec![b])?;
+        let lens_lit = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
         let embed = self
             .exec
-            .run_raw(&format!("tp{n_shards}_embed_b{b}"), &[toks, lens_t.to_literal()?])?;
+            .run_raw(&format!("tp{n_shards}_embed_b{b}"), &[toks, lens_lit.clone()])?;
         let mut x = Tensor::from_literal(&embed[0])?;
 
         let mut kv_new: Vec<Vec<xla::Literal>> =
@@ -182,17 +317,19 @@ impl Engine {
         let mut kv = kv;
         for l in 0..cfg.n_layers {
             let tag = if l == 0 { "dense" } else { attn_tag };
-            // attention shards (+ local kv update)
+            let l_lit = Tensor::i32(vec![l as i32], vec![])?.to_literal()?;
+            // attention shards (+ local kv update); x serialized once here
+            let x_lit = x.to_literal()?;
             let shard_outs = self.run_shards(
                 n_shards,
                 parallel,
                 |s| format!("tp{n_shards}_attn_s{s}_{tag}_b{b}_n{n}"),
                 |s| {
                     Ok(vec![
-                        Tensor::i32(vec![l as i32], vec![])?.to_literal()?,
-                        x.to_literal()?,
+                        l_lit.clone(),
+                        x_lit.clone(),
                         std::mem::replace(&mut kv[s][l], empty_literal()),
-                        lens_t.to_literal()?,
+                        lens_lit.clone(),
                     ])
                 },
             )?;
@@ -205,17 +342,13 @@ impl Engine {
                 }
                 kv_new[s].push(it.next().context("attn kv")?);
             }
-            // MLP shards
+            // MLP shards; x re-serialized once after the attention reduce
+            let x_lit = x.to_literal()?;
             let shard_outs = self.run_shards(
                 n_shards,
                 parallel,
                 |s| format!("tp{n_shards}_mlp_s{s}_{mlp_tag}_b{b}"),
-                |_| {
-                    Ok(vec![
-                        Tensor::i32(vec![l as i32], vec![])?.to_literal()?,
-                        x.to_literal()?,
-                    ])
-                },
+                |_| Ok(vec![l_lit.clone(), x_lit.clone()]),
             )?;
             let xd = x.as_f32_mut()?;
             for outs in shard_outs {
@@ -232,7 +365,9 @@ impl Engine {
     }
 
     /// Run one executable per shard, optionally on worker threads (the
-    /// host-side analogue of simultaneous multi-GPU dispatch).
+    /// host-side analogue of simultaneous multi-GPU dispatch). In parallel
+    /// mode each shard is dispatched as soon as its inputs are prepared,
+    /// so shard s+1's input prep overlaps shard s's execution.
     fn run_shards(
         &self,
         n_shards: usize,
@@ -241,10 +376,6 @@ impl Engine {
         inputs: impl FnMut(usize) -> Result<Vec<xla::Literal>>,
     ) -> Result<Vec<Vec<xla::Literal>>> {
         let mut inputs = inputs;
-        let mut prepared = Vec::with_capacity(n_shards);
-        for s in 0..n_shards {
-            prepared.push((name(s), inputs(s)?));
-        }
         if parallel {
             // SAFETY: PJRT execution is thread-safe; Literal is only moved,
             // not aliased, across the scope boundary (see Executor note).
@@ -252,24 +383,27 @@ impl Engine {
             unsafe impl Send for SendLits {}
             let exec = &self.exec;
             std::thread::scope(|scope| {
-                let handles: Vec<_> = prepared
-                    .into_iter()
-                    .map(|(nm, ins)| {
-                        let ins = SendLits(ins);
-                        scope.spawn(move || {
-                            // rebind to defeat disjoint-field capture (which
-                            // would capture the inner Vec<Literal> directly)
-                            let ins = ins;
-                            exec.run_raw(&nm, &ins.0).map(SendLits)
-                        })
-                    })
-                    .collect();
+                let mut handles = Vec::with_capacity(n_shards);
+                for s in 0..n_shards {
+                    let nm = name(s);
+                    let ins = SendLits(inputs(s)?);
+                    handles.push(scope.spawn(move || {
+                        // rebind to defeat disjoint-field capture (which
+                        // would capture the inner Vec<Literal> directly)
+                        let ins = ins;
+                        exec.run_raw(&nm, &ins.0).map(SendLits)
+                    }));
+                }
                 handles
                     .into_iter()
                     .map(|h| h.join().expect("shard thread panicked").map(|r| r.0))
                     .collect()
             })
         } else {
+            let mut prepared = Vec::with_capacity(n_shards);
+            for s in 0..n_shards {
+                prepared.push((name(s), inputs(s)?));
+            }
             prepared
                 .into_iter()
                 .map(|(nm, ins)| self.exec.run_raw(&nm, &ins))

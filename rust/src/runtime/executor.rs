@@ -2,6 +2,19 @@
 //! once per model. All python is out of the picture here — executables are
 //! compiled from AOT HLO text and run on the PJRT CPU client.
 //!
+//! Two execution paths:
+//!   * [`Executor::run_bufs`] — buffer-in/buffer-out (untupled outputs).
+//!     The decode hot path feeds one step's KV output buffer straight into
+//!     the next step, so per-step host traffic is only tokens/lengths up
+//!     and logits down. Host literals are uploaded lazily, which is how
+//!     the KV cache re-enters the device after composition changes.
+//!   * [`Executor::run_literals`] — the legacy literal-in/tuple-out path,
+//!     kept as the A/B baseline (env `POLAR_KV_HOST=1` forces the engine
+//!     onto it) and for prefill/micro entries.
+//!
+//! Every call records bytes and nanoseconds per phase into a shared
+//! [`StepProfile`] so `bench decode-breakdown` can attribute step time.
+//!
 //! Thread-safety: the PJRT C++ client is thread-safe; the rust wrapper
 //! types just hold raw pointers and are not marked Send/Sync. `Executor`
 //! is used from the engine thread and (for the TP driver) from short-lived
@@ -16,7 +29,15 @@ use anyhow::{bail, Context, Result};
 use xla::FromRawBytes;
 
 use super::manifest::{EntrySpec, Manifest};
+use super::profile::StepProfile;
 use super::tensor::Tensor;
+
+/// One input to a buffer-path execution: either already device-resident
+/// (flows across steps for free) or a host literal to upload this call.
+pub enum DeviceInput {
+    Host(xla::Literal),
+    Buf(xla::PjRtBuffer),
+}
 
 pub struct Executor {
     client: xla::PjRtClient,
@@ -32,6 +53,7 @@ pub struct Executor {
     use_weight_bufs: bool,
     cache: Mutex<HashMap<String, Arc<CompiledEntry>>>,
     pub compile_stats: Mutex<CompileStats>,
+    profile: Mutex<StepProfile>,
 }
 
 // SAFETY: PJRT's C API is thread-safe (all entry points lock internally or
@@ -96,6 +118,7 @@ impl Executor {
             use_weight_bufs,
             cache: Mutex::new(HashMap::new()),
             compile_stats: Mutex::new(CompileStats::default()),
+            profile: Mutex::new(StepProfile::default()),
         })
     }
 
@@ -105,6 +128,19 @@ impl Executor {
 
     pub fn config(&self) -> &super::manifest::ModelConfig {
         &self.manifest.config
+    }
+
+    /// Cumulative transfer/compute profile since the last reset.
+    pub fn profile_snapshot(&self) -> StepProfile {
+        *self.profile.lock().unwrap()
+    }
+
+    pub fn reset_profile(&self) {
+        *self.profile.lock().unwrap() = StepProfile::default();
+    }
+
+    pub(crate) fn profile_mut(&self) -> std::sync::MutexGuard<'_, StepProfile> {
+        self.profile.lock().unwrap()
     }
 
     /// Compile (or fetch from cache) an entry by name.
@@ -142,8 +178,92 @@ impl Executor {
         self.cache.lock().unwrap().contains_key(name)
     }
 
+    /// Upload one host literal to the device (h2d accounted).
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading literal")?;
+        let mut p = self.profile.lock().unwrap();
+        p.h2d_bytes += lit.size_bytes() as u64;
+        p.h2d_ns += t0.elapsed().as_nanos() as u64;
+        Ok(buf)
+    }
+
+    /// Fetch one output buffer back to the host (d2h accounted).
+    pub fn fetch_literal(&self, buf: &xla::PjRtBuffer) -> Result<xla::Literal> {
+        let t0 = Instant::now();
+        let lit = buf.to_literal_sync().context("fetching buffer")?;
+        let mut p = self.profile.lock().unwrap();
+        p.d2h_bytes += lit.size_bytes() as u64;
+        p.d2h_ns += t0.elapsed().as_nanos() as u64;
+        Ok(lit)
+    }
+
+    /// Buffer-in/buffer-out execution with untupled outputs: the decode
+    /// hot path. Device-resident inputs cross no boundary; host inputs
+    /// are uploaded here; outputs STAY on device — the caller fetches
+    /// only what it needs (logits) via [`Executor::fetch_literal`].
+    pub fn run_bufs(
+        &self,
+        name: &str,
+        inputs: Vec<DeviceInput>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let entry = self.compiled(name)?;
+        if inputs.len() != entry.spec.data.len() {
+            bail!(
+                "{}: got {} data inputs, expected {}",
+                entry.spec.name,
+                inputs.len(),
+                entry.spec.data.len()
+            );
+        }
+        let data_bufs = inputs
+            .into_iter()
+            .map(|i| match i {
+                DeviceInput::Buf(b) => Ok(b),
+                DeviceInput::Host(l) => self.upload(&l),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // POLAR_WEIGHTS_LITERAL=1 must stay honest on this path too: the
+        // naive baseline re-uploads every weight each call (accounted as
+        // h2d) instead of using the persistent device set.
+        let naive_weight_bufs: Vec<xla::PjRtBuffer>;
+        let weight_bufs: &[xla::PjRtBuffer] = if self.use_weight_bufs {
+            &self.weight_bufs
+        } else {
+            naive_weight_bufs = self
+                .weights
+                .iter()
+                .map(|w| self.upload(w))
+                .collect::<Result<Vec<_>>>()?;
+            &naive_weight_bufs
+        };
+        let mut all: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(data_bufs.len() + weight_bufs.len());
+        all.extend(data_bufs.iter());
+        all.extend(weight_bufs.iter());
+        let t0 = Instant::now();
+        let outs = entry
+            .exe
+            .execute_untupled_b::<&xla::PjRtBuffer>(&all)
+            .with_context(|| format!("executing {} (buffer path)", entry.spec.name))?;
+        self.profile.lock().unwrap().compute_ns += t0.elapsed().as_nanos() as u64;
+        if outs.len() != entry.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, expected {}",
+                entry.spec.name,
+                outs.len(),
+                entry.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
     /// Run an entry: data literals (entry order) + the model weight set.
-    /// Returns the decomposed output tuple.
+    /// Returns the decomposed output tuple (one full d2h of the tuple —
+    /// the A/B baseline cost the resident-buffer path removes).
     pub fn run_literals(
         &self,
         entry: &CompiledEntry,
@@ -157,6 +277,8 @@ impl Executor {
                 entry.spec.data.len()
             );
         }
+        let h2d: u64 = data.iter().map(|l| l.size_bytes() as u64).sum();
+        let t_up = Instant::now();
         let result = if self.use_weight_bufs {
             // hot path: persistent weight buffers + per-call data buffers
             let data_bufs = data
@@ -164,27 +286,48 @@ impl Executor {
                 .map(|l| self.client.buffer_from_host_literal(None, l))
                 .collect::<xla::Result<Vec<_>>>()
                 .context("uploading data inputs")?;
+            let up_ns = t_up.elapsed().as_nanos() as u64;
             let mut inputs: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(data.len() + self.weight_bufs.len());
             inputs.extend(data_bufs.iter());
             inputs.extend(self.weight_bufs.iter());
-            entry
+            let t0 = Instant::now();
+            let r = entry
                 .exe
                 .execute_b::<&xla::PjRtBuffer>(&inputs)
-                .with_context(|| format!("executing {}", entry.spec.name))?
+                .with_context(|| format!("executing {}", entry.spec.name))?;
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += h2d;
+            p.h2d_ns += up_ns;
+            p.compute_ns += t0.elapsed().as_nanos() as u64;
+            r
         } else {
             let mut inputs: Vec<&xla::Literal> =
                 Vec::with_capacity(data.len() + self.weights.len());
             inputs.extend(data.iter());
             inputs.extend(self.weights.iter());
-            entry
+            let t0 = Instant::now();
+            let r = entry
                 .exe
                 .execute::<&xla::Literal>(&inputs)
-                .with_context(|| format!("executing {}", entry.spec.name))?
+                .with_context(|| format!("executing {}", entry.spec.name))?;
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += h2d;
+            // PJRT copies the literals inside execute on this path, so
+            // upload time is not separable: it lands in compute_ns and
+            // h2d_ns stays 0 despite nonzero h2d_bytes.
+            p.compute_ns += t0.elapsed().as_nanos() as u64;
+            r
         };
+        let t_down = Instant::now();
         let tuple = result[0][0]
             .to_literal_sync()
             .context("fetch result")?;
+        {
+            let mut p = self.profile.lock().unwrap();
+            p.d2h_bytes += tuple.size_bytes() as u64;
+            p.d2h_ns += t_down.elapsed().as_nanos() as u64;
+        }
         let parts = tuple.to_tuple().context("untuple result")?;
         if parts.len() != entry.spec.outputs.len() {
             bail!(

@@ -6,9 +6,11 @@
 pub mod engine;
 pub mod executor;
 pub mod manifest;
+pub mod profile;
 pub mod tensor;
 
-pub use engine::{Engine, KvCache, StepOutput};
-pub use executor::Executor;
+pub use engine::{Engine, KvCache, KvStore, StepOutput};
+pub use executor::{DeviceInput, Executor};
 pub use manifest::{EntrySpec, Manifest, ModelConfig, TensorSpec};
+pub use profile::StepProfile;
 pub use tensor::{Dtype, Tensor};

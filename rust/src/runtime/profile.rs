@@ -1,0 +1,93 @@
+//! Per-step decode cost breakdown: where a serving step's wall time and
+//! host<->device traffic go. Filled by the [`Executor`](super::Executor)
+//! (transfers + compute), by the scheduler (host-side KV surgery), and by
+//! the mock engine (analytic byte accounting), then surfaced through
+//! `bench decode-breakdown` / `BENCH_decode.json` and the server's stats
+//! command. All counters are cumulative since the last reset.
+
+use crate::substrate::json::Json;
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StepProfile {
+    /// Host -> device payload bytes (data inputs; weights are uploaded
+    /// once at load and never counted here).
+    pub h2d_bytes: u64,
+    /// Device -> host payload bytes (fetched outputs).
+    pub d2h_bytes: u64,
+    pub h2d_ns: u64,
+    pub compute_ns: u64,
+    pub d2h_ns: u64,
+    /// Host-side KV surgery (slot copies, bucket promotion, regroup).
+    pub host_surgery_ns: u64,
+    /// Decode steps the counters cover (for per-step averages).
+    pub decode_steps: u64,
+}
+
+impl StepProfile {
+    pub fn merge(&mut self, o: &StepProfile) {
+        self.h2d_bytes += o.h2d_bytes;
+        self.d2h_bytes += o.d2h_bytes;
+        self.h2d_ns += o.h2d_ns;
+        self.compute_ns += o.compute_ns;
+        self.d2h_ns += o.d2h_ns;
+        self.host_surgery_ns += o.host_surgery_ns;
+        self.decode_steps += o.decode_steps;
+    }
+
+    /// Total bytes crossing the host<->device boundary.
+    pub fn host_copy_bytes(&self) -> u64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+
+    fn per_step(&self, v: u64) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            v as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Per-step averages (bytes, milliseconds) for reports. The counters
+    /// are cumulative since the last reset, so on a mixed serving run the
+    /// averages amortize prefill/composition traffic over decode steps;
+    /// `bench decode-breakdown` isolates pure decode cost by resetting
+    /// the profile after prefill.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("decode_steps", (self.decode_steps as usize).into()),
+            ("h2d_bytes_per_step", self.per_step(self.h2d_bytes).into()),
+            ("d2h_bytes_per_step", self.per_step(self.d2h_bytes).into()),
+            (
+                "host_copy_bytes_per_step",
+                self.per_step(self.host_copy_bytes()).into(),
+            ),
+            ("h2d_ms", (self.h2d_ns as f64 * 1e-6).into()),
+            ("compute_ms", (self.compute_ns as f64 * 1e-6).into()),
+            ("d2h_ms", (self.d2h_ns as f64 * 1e-6).into()),
+            ("host_surgery_ms", (self.host_surgery_ns as f64 * 1e-6).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_per_step() {
+        let mut a = StepProfile { h2d_bytes: 10, d2h_bytes: 30, decode_steps: 2, ..Default::default() };
+        let b = StepProfile { h2d_bytes: 10, compute_ns: 500, decode_steps: 2, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.host_copy_bytes(), 50);
+        assert_eq!(a.decode_steps, 4);
+        let j = a.to_json();
+        assert_eq!(j.get("h2d_bytes_per_step").as_f64(), Some(5.0));
+        assert_eq!(j.get("host_copy_bytes_per_step").as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn zero_steps_has_no_nan() {
+        let p = StepProfile::default();
+        assert_eq!(p.to_json().get("h2d_bytes_per_step").as_f64(), Some(0.0));
+    }
+}

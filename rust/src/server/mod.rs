@@ -106,7 +106,7 @@ pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
         Ok(Scheduler::new(
             engine,
             ctl,
-            SchedulerConfig { max_batch, compact: true },
+            SchedulerConfig { max_batch, compact: true, ..Default::default() },
         ))
     })
 }
@@ -165,7 +165,7 @@ where
                         }
                     }
                     Inbound::Stats { sink } => {
-                        let mut stats = sched.metrics.to_json();
+                        let mut stats = sched.metrics.to_json_with_profile(&sched.profile());
                         stats.set("pending", sched.pending_len().into());
                         stats.set("active", sched.active_len().into());
                         let _ = sink.send(Json::obj(vec![

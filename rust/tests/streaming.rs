@@ -27,7 +27,7 @@ fn spawn_server(step_delay: Duration) -> (String, JoinHandle<anyhow::Result<()>>
                 Ok(Scheduler::new(
                     MockEngine::new().with_step_delay(step_delay),
                     SparsityController::new(Mode::Dense),
-                    SchedulerConfig { max_batch: 8, compact: true },
+                    SchedulerConfig { max_batch: 8, compact: true, ..Default::default() },
                 ))
             },
         )

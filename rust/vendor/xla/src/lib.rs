@@ -1,0 +1,579 @@
+//! Host-only shim of the `xla` (xla-rs 0.1.6) API surface used by the
+//! polar-sparsity runtime.
+//!
+//! * [`Literal`] — host tensors (optionally tuples) with cheap `Clone`
+//!   (`Arc`-backed storage), npy/npz readers, and untyped construction.
+//! * [`PjRtClient`] / [`PjRtBuffer`] — "device" buffers. The shim has no
+//!   device, so a buffer is a resident literal; the *interface* (explicit
+//!   host->device upload, explicit `to_literal_sync` readback) mirrors
+//!   PJRT so the engine's transfer accounting is structurally faithful.
+//! * [`PjRtLoadedExecutable::execute*`] — returns a structured error: no
+//!   XLA runtime is linked in this image. Everything up to execution
+//!   (manifest load, HLO parse, compile-cache bookkeeping, buffer
+//!   management) works, which is what the in-tree tests exercise.
+//!
+//! API parity note: `execute`/`execute_b` mirror xla-rs 0.1.6.
+//! [`PjRtLoadedExecutable::execute_untupled_b`], `PjRtBuffer: Clone` and
+//! O(1) `Literal: Clone` EXTEND that surface — PJRT itself supports
+//! untupled results (`ExecuteOptions::untuple_result`), but the 0.1.6
+//! wrapper does not expose it. Swapping this shim for the real crate
+//! therefore needs a small wrapper patch for the resident-KV decode
+//! path; until then `POLAR_KV_HOST=1` keeps the engine on the
+//! 0.1.6-compatible literal path.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(format!("io: {e}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// element types
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::Pred => 1,
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::F64 | ElementType::S64 => 8,
+        }
+    }
+}
+
+/// Rust scalar <-> XLA element type mapping (4-byte types only; that is
+/// all the AOT artifacts use).
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+    fn to_le_bytes(self) -> [u8; 4];
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+    fn to_le_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+    fn to_le_bytes(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shapes + literals
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// Host literal. `Clone` is O(1) for arrays (shared `Arc` storage), which
+/// the TP driver relies on to share one serialized tensor across shards.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array {
+        ty: ElementType,
+        dims: Vec<i64>,
+        data: Arc<Vec<u8>>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal::Array {
+            ty: T::TY,
+            dims: Vec::new(),
+            data: Arc::new(v.to_le_bytes().to_vec()),
+        }
+    }
+
+    pub fn vec1<T: NativeType>(vs: &[T]) -> Literal {
+        let mut data = Vec::with_capacity(vs.len() * 4);
+        for v in vs {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Literal::Array { ty: T::TY, dims: vec![vs.len() as i64], data: Arc::new(data) }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if elems * ty.size_bytes() != data.len() {
+            return err(format!(
+                "literal: {} bytes for shape {dims:?} of {ty:?} (expected {})",
+                data.len(),
+                elems * ty.size_bytes()
+            ));
+        }
+        Ok(Literal::Array {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: Arc::new(data.to_vec()),
+        })
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { ty, dims: old, data } => {
+                let n: i64 = old.iter().product();
+                let m: i64 = dims.iter().product();
+                if n != m {
+                    return err(format!("reshape {old:?} -> {dims:?}: element count"));
+                }
+                Ok(Literal::Array { ty: *ty, dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => err("reshape on tuple"),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { ty, dims, .. } => {
+                Ok(ArrayShape { ty: *ty, dims: dims.clone() })
+            }
+            Literal::Tuple(_) => err("array_shape on tuple"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return err(format!("to_vec: literal is {ty:?}"));
+                }
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|c| T::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => err("to_vec on tuple"),
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            Literal::Array { .. } => err("to_tuple on array literal"),
+        }
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut parts = self.to_tuple()?;
+        if parts.len() != 1 {
+            return err(format!("to_tuple1: {} elements", parts.len()));
+        }
+        Ok(parts.pop().unwrap())
+    }
+
+    /// Total payload size (tuples: sum of leaves) — the engine's transfer
+    /// accounting uses this.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Literal::Array { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(|p| p.size_bytes()).sum(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// npy / npz readers
+// ---------------------------------------------------------------------------
+
+pub trait FromRawBytes: Sized {
+    fn from_raw_bytes(ty: ElementType, dims: &[usize], data: &[u8]) -> Result<Self>;
+
+    fn read_npy<P: AsRef<Path>>(path: P, _ctx: &()) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())?;
+        let (ty, dims, payload) = parse_npy(&bytes)?;
+        Self::from_raw_bytes(ty, &dims, payload)
+    }
+
+    /// Read every array of an uncompressed (numpy default `np.savez`) zip
+    /// archive; entry names have their `.npy` suffix stripped.
+    fn read_npz<P: AsRef<Path>>(path: P, _ctx: &()) -> Result<Vec<(String, Self)>> {
+        let bytes = std::fs::read(path.as_ref())?;
+        let mut out = Vec::new();
+        for (name, entry) in parse_zip_stored(&bytes)? {
+            let (ty, dims, payload) = parse_npy(entry)?;
+            let name = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+            out.push((name, Self::from_raw_bytes(ty, &dims, payload)?));
+        }
+        Ok(out)
+    }
+}
+
+impl FromRawBytes for Literal {
+    fn from_raw_bytes(ty: ElementType, dims: &[usize], data: &[u8]) -> Result<Self> {
+        Literal::create_from_shape_and_untyped_data(ty, dims, data)
+    }
+}
+
+/// Parse one .npy payload: (dtype, shape, data slice).
+fn parse_npy(b: &[u8]) -> Result<(ElementType, Vec<usize>, &[u8])> {
+    if b.len() < 10 || &b[..6] != b"\x93NUMPY" {
+        return err("npy: bad magic");
+    }
+    let major = b[6];
+    let (hdr_len, hdr_off) = if major == 1 {
+        (u16::from_le_bytes([b[8], b[9]]) as usize, 10usize)
+    } else {
+        if b.len() < 12 {
+            return err("npy: truncated v2 header");
+        }
+        (u32::from_le_bytes([b[8], b[9], b[10], b[11]]) as usize, 12usize)
+    };
+    let body_off = hdr_off + hdr_len;
+    if b.len() < body_off {
+        return err("npy: truncated header");
+    }
+    let header = &b[hdr_off..body_off];
+    let header =
+        std::str::from_utf8(header).map_err(|_| Error("npy: header utf-8".into()))?;
+    let descr = dict_str(header, "descr").ok_or_else(|| Error("npy: no descr".into()))?;
+    let ty = match descr.trim_start_matches(&['<', '|', '='][..]) {
+        "f4" => ElementType::F32,
+        "i4" => ElementType::S32,
+        other => return err(format!("npy: unsupported dtype {other:?}")),
+    };
+    if header.contains("'fortran_order': True") {
+        return err("npy: fortran order unsupported");
+    }
+    let shape_src = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| Error("npy: no shape".into()))?;
+    let mut dims = Vec::new();
+    for part in shape_src.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        dims.push(part.parse::<usize>().map_err(|_| Error(format!("npy: dim {part:?}")))?);
+    }
+    let elems: usize = dims.iter().product();
+    let want = elems * ty.size_bytes();
+    if b.len() < body_off + want {
+        return err("npy: truncated data");
+    }
+    Ok((ty, dims, &b[body_off..body_off + want]))
+}
+
+fn dict_str<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("'{key}':");
+    let rest = header.split(&pat).nth(1)?;
+    let rest = rest.split('\'').nth(1)?;
+    Some(rest)
+}
+
+/// Walk the local-file-header chain of a zip archive; stored (method 0)
+/// entries only — numpy's default `savez` never compresses.
+fn parse_zip_stored(b: &[u8]) -> Result<Vec<(String, &[u8])>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 4 <= b.len() {
+        let sig = u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]);
+        if sig == 0x0201_4b50 || sig == 0x0605_4b50 {
+            break; // central directory / end record: done with entries
+        }
+        if sig != 0x0403_4b50 {
+            return err(format!("zip: bad signature {sig:#x} at {i}"));
+        }
+        if i + 30 > b.len() {
+            return err("zip: truncated local header");
+        }
+        let flags = u16::from_le_bytes([b[i + 6], b[i + 7]]);
+        let method = u16::from_le_bytes([b[i + 8], b[i + 9]]);
+        let csize = u32::from_le_bytes([b[i + 18], b[i + 19], b[i + 20], b[i + 21]]) as usize;
+        let name_len = u16::from_le_bytes([b[i + 26], b[i + 27]]) as usize;
+        let extra_len = u16::from_le_bytes([b[i + 28], b[i + 29]]) as usize;
+        if method != 0 {
+            return err("zip: compressed entries unsupported (use np.savez, not savez_compressed)");
+        }
+        if flags & 0x08 != 0 {
+            return err("zip: streamed entries (data descriptor) unsupported");
+        }
+        let name_off = i + 30;
+        let data_off = name_off + name_len + extra_len;
+        if data_off + csize > b.len() {
+            return err("zip: truncated entry data");
+        }
+        let name = std::str::from_utf8(&b[name_off..name_off + name_len])
+            .map_err(|_| Error("zip: entry name utf-8".into()))?
+            .to_string();
+        out.push((name, &b[data_off..data_off + csize]));
+        i = data_off + csize;
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// HLO + PJRT
+// ---------------------------------------------------------------------------
+
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// HLO **text** is the interchange format; the shim validates only
+    /// that the file reads (the real crate parses to a proto here).
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Ok(HloModuleProto { text: std::fs::read_to_string(path.as_ref())? })
+    }
+}
+
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(p: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: p.text.clone() }
+    }
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-shim".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// Host -> "device" upload. One payload copy, like a real transfer.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+
+    pub fn compile(&self, c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        if c.text.is_empty() {
+            return err("compile: empty HLO module");
+        }
+        Ok(PjRtLoadedExecutable { _hlo: c.text.clone() })
+    }
+}
+
+/// Device-resident buffer (shim: a resident literal).
+#[derive(Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    /// Device -> host readback.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.lit.size_bytes()
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _hlo: String,
+}
+
+fn exec_unsupported<T>() -> Result<T> {
+    err(
+        "shim cannot execute HLO: no XLA runtime is linked in this image. \
+         Build against the real `xla` crate (see rust/vendor/xla/Cargo.toml) \
+         to run AOT artifacts; in-tree tests use the mock engine",
+    )
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        exec_unsupported()
+    }
+
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        exec_unsupported()
+    }
+
+    /// PJRT `untuple_result=true` analogue: one buffer per output tuple
+    /// leaf, staying on device (the resident-KV decode path).
+    pub fn execute_untupled_b<T: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<PjRtBuffer>> {
+        exec_unsupported()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn npy_bytes(descr: &str, shape: &str, payload: &[u8]) -> Vec<u8> {
+        let header = format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}");
+        let mut b = b"\x93NUMPY\x01\x00".to_vec();
+        b.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        b.extend_from_slice(header.as_bytes());
+        b.extend_from_slice(payload);
+        b
+    }
+
+    fn zip_stored(entries: &[(&str, &[u8])]) -> Vec<u8> {
+        let mut b = Vec::new();
+        for (name, data) in entries {
+            b.extend_from_slice(&0x0403_4b50u32.to_le_bytes());
+            b.extend_from_slice(&[0u8; 2]); // version
+            b.extend_from_slice(&[0u8; 2]); // flags
+            b.extend_from_slice(&[0u8; 2]); // method: stored
+            b.extend_from_slice(&[0u8; 4]); // time/date
+            b.extend_from_slice(&[0u8; 4]); // crc (unchecked)
+            b.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            b.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            b.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            b.extend_from_slice(&[0u8; 2]); // extra len
+            b.extend_from_slice(name.as_bytes());
+            b.extend_from_slice(data);
+        }
+        b.extend_from_slice(&0x0201_4b50u32.to_le_bytes()); // central dir
+        b
+    }
+
+    #[test]
+    fn literal_roundtrip_and_size() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.size_bytes(), 16);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        // clone shares storage
+        let c = l.clone();
+        if let (Literal::Array { data: a, .. }, Literal::Array { data: b, .. }) = (&l, &c) {
+            assert!(Arc::ptr_eq(a, b));
+        } else {
+            panic!("expected arrays");
+        }
+    }
+
+    #[test]
+    fn npy_and_npz_parse() {
+        let payload: Vec<u8> = [1i32, -2, 3, 4, 5, 6]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let npy = npy_bytes("<i4", "(2, 3)", &payload);
+        let (ty, dims, body) = parse_npy(&npy).unwrap();
+        assert_eq!(ty, ElementType::S32);
+        assert_eq!(dims, vec![2, 3]);
+        assert_eq!(body, &payload[..]);
+
+        let f: Vec<u8> = [0.5f32, -0.5].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let npz = zip_stored(&[
+            ("w.npy", &npy_bytes("<i4", "(6,)", &payload)),
+            ("b.npy", &npy_bytes("<f4", "(2,)", &f)),
+        ]);
+        let dir = std::env::temp_dir().join("xla_shim_npz_test.npz");
+        std::fs::write(&dir, npz).unwrap();
+        let named = Literal::read_npz(&dir, &()).unwrap();
+        assert_eq!(named.len(), 2);
+        assert_eq!(named[0].0, "w");
+        assert_eq!(named[0].1.to_vec::<i32>().unwrap(), vec![1, -2, 3, 4, 5, 6]);
+        assert_eq!(named[1].0, "b");
+        assert_eq!(named[1].1.to_vec::<f32>().unwrap(), vec![0.5, -0.5]);
+    }
+
+    #[test]
+    fn scalar_shape_parses() {
+        let npy = npy_bytes("<f4", "()", &1.5f32.to_le_bytes());
+        let (ty, dims, body) = parse_npy(&npy).unwrap();
+        assert_eq!(ty, ElementType::F32);
+        assert!(dims.is_empty());
+        assert_eq!(body.len(), 4);
+    }
+
+    #[test]
+    fn execute_reports_shim_limit() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { text: "HloModule m".into() };
+        let exe = client.compile(&comp).unwrap();
+        let e = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(e.to_string().contains("shim cannot execute"));
+    }
+}
