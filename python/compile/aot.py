@@ -34,7 +34,7 @@ from jax._src.lib import xla_client as xc
 from . import model
 from .configs import (
     BATCH_BUCKETS, CONFIGS, DEFAULT_RECALL, DENSITY_SWEEP, PREFILL_LEN,
-    SEQ_BUCKETS, get_config,
+    SEQ_BUCKETS, get_config, heads_for_density,
 )
 from .kernels import ref as kref
 from .kernels import sel_gemm, sha_decode
@@ -100,22 +100,53 @@ def core_entries(cfg, out_dir):
         ))
 
     def decode_entry(B, N, mode, density, mlp_topk, tag):
-        fn = (lambda cfg_, m, d, tk: lambda toks, lens, kv, params:
-              model.decode_step(cfg_, params, toks, lens, kv, mode=m,
-                                density=d, mlp_topk=tk))(cfg, mode, density, mlp_topk)
+        # polar entries are *index-taking*: the runtime routing subsystem
+        # (rust/src/runtime/router.rs) computes per-request top-k head
+        # groups and the batch-union MLP neuron set each step and feeds
+        # them in as data inputs, so the contextual selection lives in
+        # the serving loop (and is measurable there), not in the graph.
+        # Kh = heads per request at `density`; Km = the union capacity
+        # (max calibrated per-layer top-k — a superset only improves
+        # recall, and one static width keeps the entry shape fixed).
+        routed = mode == "polar"
+        Kh = heads_for_density(cfg, density) if routed else 0
+        Km = int(max(mlp_topk)) if (routed and cfg.mlp_sparsity and mlp_topk) else 0
+        data = [
+            {"name": "tokens", "shape": [B], "dtype": "i32"},
+            {"name": "lengths", "shape": [B], "dtype": "i32"},
+            {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
+        ]
+        if routed:
+            data.append({"name": "head_idx", "shape": [L, B, Kh], "dtype": "i32"})
+            if Km:
+                data.append({"name": "mlp_idx", "shape": [L, Km], "dtype": "i32"})
+        if routed and Km:
+            fn = (lambda cfg_, m, d, tk:
+                  lambda toks, lens, kv, head_idx, mlp_idx, params:
+                  model.decode_step(cfg_, params, toks, lens, kv, mode=m,
+                                    density=d, mlp_topk=tk,
+                                    head_idx=head_idx, mlp_idx=mlp_idx)
+                  )(cfg, mode, density, mlp_topk)
+        elif routed:
+            fn = (lambda cfg_, m, d, tk:
+                  lambda toks, lens, kv, head_idx, params:
+                  model.decode_step(cfg_, params, toks, lens, kv, mode=m,
+                                    density=d, mlp_topk=tk, head_idx=head_idx)
+                  )(cfg, mode, density, mlp_topk)
+        else:
+            fn = (lambda cfg_, m, d, tk: lambda toks, lens, kv, params:
+                  model.decode_step(cfg_, params, toks, lens, kv, mode=m,
+                                    density=d, mlp_topk=tk))(cfg, mode, density, mlp_topk)
         return Entry(
             name=f"decode_{tag}_b{B}_n{N}", kind="decode", fn=fn,
-            data=[
-                {"name": "tokens", "shape": [B], "dtype": "i32"},
-                {"name": "lengths", "shape": [B], "dtype": "i32"},
-                {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
-            ],
+            data=data,
             outputs=[
                 {"name": "logits", "shape": [B, V], "dtype": "f32"},
                 {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
             ],
             meta={"batch": B, "seq_bucket": N, "mode": mode,
-                  "density": density, "mlp_topk": list(mlp_topk)},
+                  "density": density, "mlp_topk": list(mlp_topk),
+                  "routed": routed, "head_k": Kh, "mlp_idx_k": Km},
         )
 
     for B in batches:

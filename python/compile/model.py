@@ -168,12 +168,18 @@ def mlp_masked(cfg, params, l, h, mode: str, density: float):
     return a @ w2 + b2
 
 
-def mlp_sparse(cfg, params, l, h, top_k: int, impl: str = "xla"):
-    """Selective MLP: batch-union router top-k (§4.1). h: [B, d]."""
-    logits = mlp_router_logits(params, l, h)          # [B, Dff]
-    union = jnp.max(logits, axis=0)                   # union across batch
-    _, idx = top_k_desc(union, top_k)               # neuron index tensor
-    idx = idx.astype(jnp.int32)
+def mlp_sparse(cfg, params, l, h, top_k: int, impl: str = "xla", idx=None):
+    """Selective MLP: batch-union router top-k (§4.1). h: [B, d].
+
+    ``idx`` (i32 [S]) overrides the in-graph union router: the rust
+    runtime's router subsystem computes each step's batch union outside
+    the graph and feeds the neuron index tensor in as a data input.
+    """
+    if idx is None:
+        logits = mlp_router_logits(params, l, h)      # [B, Dff]
+        union = jnp.max(logits, axis=0)               # union across batch
+        _, idx = top_k_desc(union, top_k)             # neuron index tensor
+        idx = idx.astype(jnp.int32)
     args = (h, params["w1"][l], params["b1"][l], params["w2"][l],
             params["b2"][l], idx)
     if impl == "pallas":
@@ -276,11 +282,12 @@ def prefill(cfg: ModelConfig, params, tokens, lengths, n_bucket: int):
 
 
 def _decode_attention(cfg, params, l, x, h, kv_l, lengths, *, sparse: bool,
-                      top_k: int, impl: str):
+                      top_k: int, impl: str, head_idx=None):
     """One attention block in decode. x: residual [B,d], h: normed [B,d].
 
     kv_l: this layer's cache [2,B,G,N,dh] (weights indexed by absolute l).
-    Returns (attn_out [B,d], k_l, v_l new caches).
+    ``head_idx`` (i32 [B, top_k]) overrides the in-graph router with the
+    runtime's per-request selection. Returns (attn_out [B,d], k_l, v_l).
     """
     B = x.shape[0]
     G, qpg, dh = cfg.n_groups, cfg.q_per_group, cfg.d_head
@@ -300,9 +307,10 @@ def _decode_attention(cfg, params, l, x, h, kv_l, lengths, *, sparse: bool,
     v_l = jax.vmap(upd)(kv_l[1], v_new, pos)
 
     if sparse and top_k < G:
-        logits = attn_router_logits(params, l, h)          # [B,G]
-        _, head_idx = top_k_desc(logits, top_k)            # batch head index
-        head_idx = head_idx.astype(jnp.int32)
+        if head_idx is None:
+            logits = attn_router_logits(params, l, h)      # [B,G]
+            _, head_idx = top_k_desc(logits, top_k)        # batch head index
+            head_idx = head_idx.astype(jnp.int32)
         if impl == "pallas":
             o_sel = sha_decode.sha_decode(q, k_l, v_l, head_idx, lengths, qpg)
         else:
@@ -327,11 +335,15 @@ def decode_core(cfg: ModelConfig, params, x, lengths, kv, *,
                 layer_begin: int, layer_end: int,
                 mode: str = "dense", density: float = 1.0,
                 mlp_topk: tuple = (), attn_impl: str = "xla",
-                mlp_impl: str = "xla"):
+                mlp_impl: str = "xla", head_idx=None, mlp_idx=None):
     """Run decode layers [layer_begin, layer_end) on hidden x [B,d].
 
     kv holds only this slice's layers: [layer_end-layer_begin, 2, B,G,N,dh]
     (pipeline-parallel stages own disjoint KV shards). Returns (x, kv_new).
+
+    ``head_idx`` [L,B,K] / ``mlp_idx`` [L,Km] (both i32, indexed by
+    *absolute* layer) carry the runtime routers' per-step selection; when
+    None the routers execute inside the graph as before.
     """
     if mode not in ("dense", "dejavu", "polar", "teal", "cats"):
         raise ValueError(mode)
@@ -346,13 +358,17 @@ def decode_core(cfg: ModelConfig, params, x, lengths, kv, *,
         attn_out, k_l, v_l = _decode_attention(
             cfg, params, l, x, h, kv[lk], lengths,
             sparse=sparse_attn, top_k=attn_k, impl=attn_impl,
+            head_idx=None if head_idx is None else head_idx[l],
         )
         x = x + attn_out
         ks.append(k_l)
         vs.append(v_l)
         h2 = layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
         if mlp_sparse_on and mlp_topk[l] < cfg.d_ff:
-            mlp_out = mlp_sparse(cfg, params, l, h2, mlp_topk[l], mlp_impl)
+            mlp_out = mlp_sparse(
+                cfg, params, l, h2, mlp_topk[l], mlp_impl,
+                idx=None if mlp_idx is None else mlp_idx[l],
+            )
         elif mode in ("teal", "cats") and density < 1.0:
             mlp_out = mlp_masked(cfg, params, l, h2, mode, density)
         else:
@@ -374,7 +390,7 @@ def final_logits(cfg, params, x):
 def decode_step(cfg: ModelConfig, params, tokens, lengths, kv, *,
                 mode: str = "dense", density: float = 1.0,
                 mlp_topk: tuple = (), attn_impl: str = "xla",
-                mlp_impl: str = "xla"):
+                mlp_impl: str = "xla", head_idx=None, mlp_idx=None):
     """One decode step. tokens [B] (the *new* token, already appended to the
     sequence: lengths includes it). kv [L,2,B,G,N,dh]. Returns
     (logits [B,V], kv_new).
@@ -382,6 +398,10 @@ def decode_step(cfg: ModelConfig, params, tokens, lengths, kv, *,
     mode="polar": layer 0 attention dense (Fig 2b), layers >0 at `density`;
     MLP top-k per layer from `mlp_topk` (calibrated, Algorithm 2) for ReLU
     models. mode="dejavu": MLP sparsity only. mode="dense": no sparsity.
+
+    ``head_idx`` (i32 [L,B,K]) / ``mlp_idx`` (i32 [L,Km]) replace the
+    in-graph routers with externally computed selections — the calling
+    convention of the runtime routing subsystem's index-taking entries.
     """
     pos = lengths - 1
     x = _embed(cfg, params, tokens, pos)
@@ -389,6 +409,7 @@ def decode_step(cfg: ModelConfig, params, tokens, lengths, kv, *,
         cfg, params, x, lengths, kv,
         layer_begin=0, layer_end=cfg.n_layers, mode=mode, density=density,
         mlp_topk=mlp_topk, attn_impl=attn_impl, mlp_impl=mlp_impl,
+        head_idx=head_idx, mlp_idx=mlp_idx,
     )
     return final_logits(cfg, params, x), kv_new
 

@@ -187,11 +187,57 @@ def train_routers(cfg, params, data, seed: int = 0):
     return merged, metrics
 
 
+def export_fixture(out_dir: str, seed: int = 7):
+    """Committed cross-language fixture (rust/tests/fixtures/): tiny
+    attention-router weights, inputs and ground-truth labels plus the
+    python-side recall numbers, in the router_metrics.json shape. The
+    rust runtime router (rust/src/runtime/router.rs) must reproduce the
+    recalls from the same npz within tolerance — the contract that both
+    sides rank heads identically.
+
+    Written with uncompressed ``np.savez`` (the vendored npz reader does
+    not inflate), float32 throughout.
+    """
+    L, d, G, n = 2, 8, 4, 48
+    rng = np.random.default_rng(seed)
+    w_true = (rng.standard_normal((L, d, G)) * 0.7).astype(np.float32)
+    h = rng.standard_normal((L, n, d)).astype(np.float32)
+    noise = (rng.standard_normal((L, n, G)) * 0.35).astype(np.float32)
+    scores = np.einsum("lnd,ldg->lng", h, w_true) + noise
+    k = G // 2
+    kth = np.sort(scores, axis=-1)[..., -k][..., None]
+    labels = (scores >= kth).astype(np.float32)
+    # an imperfect router: true weights + perturbation, so recall lands
+    # strictly between chance and 1.0
+    ar_w = (w_true + (rng.standard_normal((L, d, G)) * 0.25).astype(np.float32))
+    ar_b = (rng.standard_normal((L, G)) * 0.1).astype(np.float32)
+    logits = np.einsum("lnd,ldg->lng", h, ar_w) + ar_b[:, None, :]
+    metrics = {
+        "k": k,
+        "attn": [
+            {"layer": l, "recall_at_half": recall_at_k(logits[l], labels[l], k)}
+            for l in range(L)
+        ],
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    np.savez(os.path.join(out_dir, "router_fixture.npz"),
+             ar_w=ar_w, ar_b=ar_b, h=h, labels=labels)
+    with open(os.path.join(out_dir, "router_fixture.json"), "w") as f:
+        json.dump(metrics, f, indent=1)
+    print(f"[fixture] wrote {out_dir}/router_fixture.{{npz,json}}:",
+          [round(m["recall_at_half"], 4) for m in metrics["attn"]])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="all")
     ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fixture", default=None, metavar="DIR",
+                    help="write the committed rust router fixture and exit")
     args = ap.parse_args()
+    if args.fixture:
+        export_fixture(args.fixture)
+        return
     names = list(CONFIGS) if args.model == "all" else [args.model]
     for name in names:
         cfg = get_config(name)

@@ -123,6 +123,112 @@ def test_teal_cats_modes_run_and_differ_from_dense():
         assert not np.allclose(np.asarray(out), np.asarray(dense), atol=1e-5), m
 
 
+def test_external_full_indices_match_internal_routing(setup):
+    """The index-taking calling convention (runtime routing subsystem):
+    with head_idx = every group and mlp_idx = every neuron the *selective*
+    kernels must reduce exactly to dense. density=0.5 keeps the selective
+    gate ON (sparse and top_k < G) while the external index width G feeds
+    the full set through the SHA kernel + GQA scatter — so this fails if
+    the selective path or the qidx reconstruction breaks, unlike a
+    density=1.0 run where the dense branch would execute."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    B = 2
+    toks = rng.integers(0, 250, (B, 6)).astype(np.int32)
+    lens0 = np.array([6, 6], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), 64)
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    L, G, Dff = cfg.n_layers, cfg.n_groups, cfg.d_ff
+    dense, _ = model.decode_step(cfg, params, new, lens, kv, mode="dense")
+    head_idx = jnp.broadcast_to(
+        jnp.arange(G, dtype=jnp.int32)[None, None, :], (L, B, G))
+    got, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                               density=0.5, mlp_topk=(), head_idx=head_idx)
+    np.testing.assert_allclose(got, dense, rtol=RTOL, atol=ATOL)
+    if cfg.mlp_sparsity:
+        # same for the selective GEMM: gated on (topk < Dff) but fed the
+        # full neuron set externally
+        topk = (Dff // 2,) * L
+        mlp_idx = jnp.broadcast_to(
+            jnp.arange(Dff, dtype=jnp.int32)[None, :], (L, Dff))
+        got2, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                                    density=0.5, mlp_topk=topk,
+                                    head_idx=head_idx, mlp_idx=mlp_idx)
+        np.testing.assert_allclose(got2, dense, rtol=RTOL, atol=ATOL)
+        # control: the in-graph run at the same settings truly sparsifies
+        want, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                                    density=0.5, mlp_topk=topk)
+        assert not np.allclose(np.asarray(want), np.asarray(dense), atol=1e-6)
+
+
+def test_external_head_selection_changes_output():
+    """Different externally supplied head sets must produce different
+    logits (the indices really steer the computation), and layer 0's row
+    must be ignored (always dense, §3.2)."""
+    cfg = get_config("opt-tiny")
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=9).items()}
+    rng = np.random.default_rng(12)
+    toks = rng.integers(0, 250, (1, 6)).astype(np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray([6]), 64)
+    new, lens = jnp.asarray([9], dtype=jnp.int32), jnp.asarray([7], dtype=jnp.int32)
+    L, G = cfg.n_layers, cfg.n_groups
+    k = G // 2
+    lo = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None, None, :], (L, 1, k))
+    hi = jnp.broadcast_to(
+        jnp.arange(G - k, G, dtype=jnp.int32)[None, None, :], (L, 1, k))
+    a, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                             density=0.5, head_idx=lo)
+    b, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                             density=0.5, head_idx=hi)
+    assert np.isfinite(np.asarray(a)).all() and np.isfinite(np.asarray(b)).all()
+    assert not np.allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # layer 0 row is dead: scrambling it cannot change the output
+    scrambled = lo.at[0].set(G - 1)
+    c, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                             density=0.5, head_idx=scrambled)
+    np.testing.assert_allclose(a, c, rtol=RTOL, atol=ATOL)
+
+
+def test_aot_polar_entries_declare_index_inputs(tmp_path):
+    """The manifest contract of the routing subsystem: every polar decode
+    entry takes head_idx [L,B,Kh] (+ mlp_idx [L,Km] for ReLU models with
+    a calibration table); dense/dejavu entries stay index-free."""
+    import json as _json
+    from compile import aot
+    from compile.configs import BATCH_BUCKETS, heads_for_density
+
+    cfg = get_config("opt-tiny")
+    table = {"recall_targets": {"0.99": {
+        str(b): [cfg.d_ff // 4] * cfg.n_layers for b in BATCH_BUCKETS}}}
+    mdir = tmp_path / cfg.name
+    mdir.mkdir(parents=True)
+    (mdir / "topk_table.json").write_text(_json.dumps(table))
+    entries = {e.name: e for e in aot.core_entries(cfg, str(tmp_path))}
+
+    polar = entries[f"decode_polar_d0500_b4_n64"]
+    names = [d["name"] for d in polar.data]
+    assert names == ["tokens", "lengths", "kv", "head_idx", "mlp_idx"]
+    kh = heads_for_density(cfg, 0.5)
+    assert polar.data[3]["shape"] == [cfg.n_layers, 4, kh]
+    assert polar.data[3]["dtype"] == "i32"
+    assert polar.data[4]["shape"] == [cfg.n_layers, cfg.d_ff // 4]
+    assert polar.meta["routed"] and polar.meta["head_k"] == kh
+
+    for tag in ("dense", "dejavu"):
+        e = entries[f"decode_{tag}_b4_n64"]
+        assert [d["name"] for d in e.data] == ["tokens", "lengths", "kv"], tag
+        assert not e.meta.get("routed"), tag
+
+    # swiglu model: no MLP routing, head_idx only
+    lcfg = get_config("llama-gqa")
+    lentries = {e.name: e for e in aot.core_entries(lcfg, str(tmp_path))}
+    lp = lentries["decode_polar_d0625_b4_n64"]
+    assert [d["name"] for d in lp.data] == ["tokens", "lengths", "kv", "head_idx"]
+    assert lp.data[3]["shape"] == [lcfg.n_layers, 4,
+                                   heads_for_density(lcfg, 0.625)]
+
+
 def test_pp_stages_compose_to_decode_step(setup):
     cfg, params = setup
     rng = np.random.default_rng(6)

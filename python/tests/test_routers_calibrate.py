@@ -96,3 +96,25 @@ def test_union_recall_curve_perfect_router():
     assert abs(curve[-1] - 1.0) < 1e-9
     # monotone
     assert (np.diff(curve) >= -1e-12).all()
+
+
+def test_export_fixture_writes_consistent_recalls(tmp_path):
+    """The committed rust fixture contract: uncompressed npz + recall
+    metrics that recompute from the stored weights/inputs/labels."""
+    import json
+    import zipfile
+
+    routers.export_fixture(str(tmp_path))
+    npz_path = tmp_path / "router_fixture.npz"
+    # the vendored rust npz reader only handles stored (uncompressed) zips
+    assert all(i.compress_type == 0 for i in zipfile.ZipFile(npz_path).infolist())
+    d = np.load(npz_path)
+    metrics = json.load(open(tmp_path / "router_fixture.json"))
+    k = metrics["k"]
+    logits = np.einsum("lnd,ldg->lng", d["h"], d["ar_w"]) + d["ar_b"][:, None, :]
+    for m in metrics["attn"]:
+        l = m["layer"]
+        got = routers.recall_at_k(logits[l], d["labels"][l], k)
+        assert abs(got - m["recall_at_half"]) < 1e-9
+        # imperfect but well above the chance recall of k/G = 0.5
+        assert 0.6 < m["recall_at_half"] < 1.0

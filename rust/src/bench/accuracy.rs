@@ -63,7 +63,9 @@ pub fn generate_one(
         if m.entries.get(&name).is_none() {
             bail!("manifest missing accuracy entry {name}");
         }
-        let step = engine.decode(tag, &[next], &[(len) as i32], kv)?;
+        // index-taking polar entries: the engine runs the artifact's
+        // routers itself when no routing is supplied
+        let step = engine.decode(tag, &[next], &[(len) as i32], kv, None)?;
         logits = step.logits;
         kv = step.kv;
     }

@@ -50,7 +50,7 @@ fn run_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Result<P
     let lengths = vec![(prompt_len + 1) as i32; b];
     let t0 = Instant::now();
     for _ in 0..steps {
-        let o = e.decode(tag, &tokens, &lengths, kv)?;
+        let o = e.decode(tag, &tokens, &lengths, kv, None)?;
         kv = o.kv;
     }
     Ok(PathRun { profile: e.profile_snapshot(), n, wall_s: t0.elapsed().as_secs_f64() })
@@ -151,8 +151,9 @@ pub fn run(rest: &[String]) -> Result<()> {
 }
 
 /// Indented JSON for the committed artifact (key order matches the
-/// compact serializer: alphabetical).
-fn pretty(v: &Json, indent: usize) -> String {
+/// compact serializer: alphabetical). Shared with `bench
+/// sparsity-scaling`.
+pub(crate) fn pretty(v: &Json, indent: usize) -> String {
     let pad = "  ".repeat(indent);
     let pad_in = "  ".repeat(indent + 1);
     match v {

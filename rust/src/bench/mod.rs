@@ -7,6 +7,7 @@ pub mod decode_breakdown;
 pub mod figures;
 pub mod harness;
 pub mod serving;
+pub mod sparsity_scaling;
 pub mod throughput;
 
 pub use harness::{fmt_ms, fmt_x, time_it, BenchOpts, Report};

@@ -1,0 +1,277 @@
+//! `bench sparsity-scaling` — the paper's central crossover, measured
+//! in-tree: sweep the batch buckets at a fixed sparsity mode and record
+//! per-layer **batch-union densities** from the runtime routers.
+//!
+//! Selective head attention consumes *per-request* top-k indices, so its
+//! union (and its per-request work density) stays flat as the batch
+//! grows; the selective MLP GEMM gathers the *union* of every request's
+//! top-k neurons, so its union density climbs toward dense — Deja Vu's
+//! failure mode at batch (§4.1 vs §4.2, Fig 1b). The emitted
+//! `BENCH_sparsity.json` records both curves plus router overhead per
+//! step.
+//!
+//! `--smoke` runs the mock engine with [`mock_router_bank`]: head routing
+//! is input-independent and MLP routing token-dependent, so the union
+//! densities are exact, deterministic functions of the batch size (the
+//! committed artifact's numbers reproduce bit-for-bit; only the
+//! router-overhead timings are machine-dependent).
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::mock::{mock_router_bank, MockEngine};
+use crate::coordinator::{
+    Mode, Request, Scheduler, SchedulerConfig, SparsityController, StepEngine,
+};
+use crate::runtime::{Engine, Executor, RoutingPolicy};
+use crate::substrate::argparse::Args;
+use crate::substrate::json::Json;
+
+use super::decode_breakdown::pretty;
+
+/// One batch point of the sweep.
+pub struct BatchPoint {
+    pub batch: usize,
+    pub routed_steps: u64,
+    pub head_union: Vec<f64>,
+    pub mlp_union: Vec<f64>,
+    pub head_density: f64,
+    pub router_ns_per_step: f64,
+}
+
+impl BatchPoint {
+    pub fn head_union_mean(&self) -> f64 {
+        mean(&self.head_union)
+    }
+    pub fn mlp_union_mean(&self) -> f64 {
+        mean(&self.mlp_union)
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Serve `batch` lockstep requests (distinct first tokens, identical
+/// lengths) through a scheduler and return the controller's accumulated
+/// routing telemetry. The scheduler path is the measurement: indices
+/// travel controller -> engine -> entry exactly as in production.
+fn sweep_point<E: StepEngine>(
+    make_engine: impl FnOnce() -> E,
+    ctl: SparsityController,
+    batch: usize,
+    max_new: usize,
+) -> Result<BatchPoint> {
+    let mut sched = Scheduler::new(
+        make_engine(),
+        ctl,
+        SchedulerConfig { max_batch: batch, compact: true, ..Default::default() },
+    );
+    for i in 0..batch {
+        // distinct tokens per request: the MLP union sees `batch` distinct
+        // activation sets while the head routers see the same ranking
+        let t = 100 + i as i32;
+        sched.enqueue(
+            Request::builder(vec![t, t])
+                .id(i as u64)
+                .max_new_tokens(max_new)
+                .build(),
+        );
+    }
+    let done = sched.run_to_completion()?;
+    if done.len() != batch {
+        anyhow::bail!("sweep point b={batch}: {} of {batch} completed", done.len());
+    }
+    let stats = &sched.sparsity().stats;
+    Ok(BatchPoint {
+        batch,
+        routed_steps: stats.routed_steps,
+        head_union: stats.head_union_mean(),
+        mlp_union: stats.mlp_union_mean(),
+        head_density: stats.head_density,
+        router_ns_per_step: stats.router_ns as f64 / stats.routed_steps.max(1) as f64,
+    })
+}
+
+/// The smoke sweep used by CI and the in-tree acceptance test.
+pub fn smoke_sweep(batches: &[usize], max_new: usize) -> Result<Vec<BatchPoint>> {
+    let policy = RoutingPolicy { head_k: 1, mlp_req_k: vec![2, 2], mlp_cap: 16 };
+    batches
+        .iter()
+        .map(|&b| {
+            let ctl = SparsityController::with_routers(
+                Mode::Polar { density: 0.5 },
+                Some(mock_router_bank()),
+                policy.clone(),
+            );
+            sweep_point(MockEngine::new, ctl, b, max_new)
+        })
+        .collect()
+}
+
+fn point_json(p: &BatchPoint) -> Json {
+    Json::obj(vec![
+        ("batch", p.batch.into()),
+        ("routed_steps", (p.routed_steps as usize).into()),
+        ("head_union_density", p.head_union_mean().into()),
+        ("mlp_union_density", p.mlp_union_mean().into()),
+        (
+            "head_union_per_layer",
+            Json::arr(p.head_union.iter().map(|&x| x.into())),
+        ),
+        (
+            "mlp_union_per_layer",
+            Json::arr(p.mlp_union.iter().map(|&x| x.into())),
+        ),
+        ("head_density_per_request", p.head_density.into()),
+        ("router_ns_per_step", p.router_ns_per_step.into()),
+    ])
+}
+
+/// Relative spread of the head-union curve: (max - min) / max.
+pub fn head_spread(points: &[BatchPoint]) -> f64 {
+    let vals: Vec<f64> = points.iter().map(|p| p.head_union_mean()).collect();
+    let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+    let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+    if max <= 0.0 {
+        0.0
+    } else {
+        (max - min) / max
+    }
+}
+
+pub fn mlp_monotone(points: &[BatchPoint]) -> bool {
+    points
+        .windows(2)
+        .all(|w| w[1].mlp_union_mean() >= w[0].mlp_union_mean() - 1e-12)
+}
+
+pub fn run(rest: &[String]) -> Result<()> {
+    let args = Args::new(
+        "bench sparsity-scaling",
+        "batch-union density scaling: head (flat) vs MLP (toward dense)",
+    )
+    .flag("model", "opt-tiny", "model name under the artifacts dir")
+    .flag("artifacts", "artifacts", "artifacts root directory")
+    .flag("mode", "polar", "polar | polar@<density>")
+    .flag("max-new", "16", "tokens generated per request at each point")
+    .flag("out", "BENCH_sparsity.json", "output JSON path")
+    .switch("smoke", "run on the deterministic mock engine (no artifacts)");
+    let p = match args.parse(rest) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let max_new = p.get_usize("max-new").map_err(anyhow::Error::msg)?;
+
+    let (engine_label, mode_tag, points) = if p.get_bool("smoke") {
+        let batches = [1usize, 2, 4, 8];
+        (
+            "mock".to_string(),
+            "polar_d0500".to_string(),
+            smoke_sweep(&batches, max_new)?,
+        )
+    } else {
+        let dir = std::path::PathBuf::from(p.get("artifacts")).join(p.get("model"));
+        let exec = std::sync::Arc::new(Executor::load(&dir).with_context(|| {
+            format!("loading {} — run `make artifacts` first", dir.display())
+        })?);
+        let mode = Mode::parse(p.get("mode"), exec.config().critical_density)?;
+        let batches = exec.manifest().batch_buckets.clone();
+        // one engine for the whole sweep (the router bank is built once);
+        // Engine is cheaply cloneable (Arc-backed) per point
+        let engine = Engine::new(exec);
+        SparsityController::for_engine(mode, &engine).validate(engine.exec.manifest())?;
+        let points = batches
+            .iter()
+            .map(|&b| {
+                let e = engine.clone();
+                let ctl = SparsityController::for_engine(mode, &e);
+                sweep_point(move || e, ctl, b, max_new)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        (p.get("model").to_string(), mode.tag(), points)
+    };
+
+    let spread = head_spread(&points);
+    let monotone = mlp_monotone(&points);
+    let report = Json::obj(vec![
+        ("bench", "sparsity-scaling".into()),
+        ("engine", engine_label.clone().into()),
+        ("mode", mode_tag.into()),
+        ("max_new", max_new.into()),
+        ("batches", Json::arr(points.iter().map(point_json))),
+        ("head_union_spread", spread.into()),
+        ("mlp_union_monotone", monotone.into()),
+    ]);
+
+    let out_path = p.get("out").to_string();
+    std::fs::write(&out_path, format!("{}\n", pretty(&report, 0)))
+        .with_context(|| format!("writing {out_path}"))?;
+
+    println!("sparsity-scaling ({engine_label}, {} batch points)", points.len());
+    for pt in &points {
+        println!(
+            "  b={:<3} head union {:.3} (per-request {:.3})  mlp union {:.3}  router {:.1} us/step",
+            pt.batch,
+            pt.head_union_mean(),
+            pt.head_density,
+            pt.mlp_union_mean(),
+            pt.router_ns_per_step / 1e3,
+        );
+    }
+    println!(
+        "  head-union spread {:.1}% across batches; mlp union monotone: {monotone}",
+        spread * 100.0
+    );
+    println!("[wrote {out_path}]");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance gate: head union density batch-invariant (flat
+    /// within 5% from b=1 to the max bucket) while MLP union density
+    /// rises monotonically to dense.
+    #[test]
+    fn smoke_head_flat_mlp_monotone_to_dense() {
+        let points = smoke_sweep(&[1, 2, 4, 8], 16).unwrap();
+        assert_eq!(points.len(), 4);
+        // exact analytic values for the mock bank
+        for p in &points {
+            assert_eq!(p.head_union_mean(), 0.5, "b={}", p.batch);
+            assert_eq!(p.head_density, 0.5, "b={}", p.batch);
+            assert_eq!(p.routed_steps, 15, "b={}", p.batch);
+        }
+        let mlp: Vec<f64> = points.iter().map(|p| p.mlp_union_mean()).collect();
+        assert_eq!(mlp, vec![0.125, 0.25, 0.5, 1.0]);
+        assert!(head_spread(&points) <= 0.05, "{}", head_spread(&points));
+        assert!(mlp_monotone(&points));
+        assert_eq!(points.last().unwrap().mlp_union_mean(), 1.0);
+    }
+
+    #[test]
+    fn spread_and_monotone_detect_violations() {
+        let mk = |h: f64, m: f64| BatchPoint {
+            batch: 1,
+            routed_steps: 1,
+            head_union: vec![h],
+            mlp_union: vec![m],
+            head_density: h,
+            router_ns_per_step: 0.0,
+        };
+        let flat = [mk(0.5, 0.1), mk(0.5, 0.4)];
+        assert_eq!(head_spread(&flat), 0.0);
+        assert!(mlp_monotone(&flat));
+        let bad = [mk(0.5, 0.4), mk(0.9, 0.1)];
+        assert!(head_spread(&bad) > 0.05);
+        assert!(!mlp_monotone(&bad));
+    }
+}

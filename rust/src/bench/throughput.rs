@@ -51,7 +51,7 @@ pub fn decode_throughput(
     let mut kv = Some(KvCache::from_tensor(&kvt, b, n)?);
     let mut run = |s: &mut Option<Samples>| -> Result<()> {
         let t0 = std::time::Instant::now();
-        let out = engine.decode(tag, &tokens, &lengths, kv.take().unwrap())?;
+        let out = engine.decode(tag, &tokens, &lengths, kv.take().unwrap(), None)?;
         if let Some(samples) = s {
             samples.push_duration(t0.elapsed());
         }

@@ -13,16 +13,87 @@
 //! `with_host_kv_path` mode every step pays the full round trip. Byte
 //! accounting is analytic (computed from the shapes the real paths would
 //! move), so the breakdown is deterministic.
+//!
+//! Routing: the mock *honors* router indices end-to-end. A step that
+//! arrives with a [`StepRouting`] has its `head_idx`/`mlp_idx` tensors
+//! shape- and range-checked against the mock geometry, counts toward
+//! `routed_steps()`, and nudges the logits by the selected head set — so
+//! scheduler-level tests can assert the controller's indices actually
+//! reach the engine and change the computation. [`mock_router_bank`]
+//! provides the deterministic bank `bench sparsity-scaling --smoke`
+//! routes with: head selection is input-independent (batch-union density
+//! stays flat as B grows) while MLP selection is token-dependent (union
+//! density climbs toward dense) — the paper's central crossover.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::runtime::{KvCache, KvStore, ModelConfig, StepOutput, StepProfile, Tensor};
+use crate::runtime::{
+    KvCache, KvStore, ModelConfig, RouterBank, StepOutput, StepProfile, StepRouting,
+    Tensor,
+};
 use crate::tokenizer::PAD;
 
 use super::scheduler::StepEngine;
+
+/// Deterministic router bank matching the mock geometry (L=2, d=8, G=2,
+/// d_ff=16, vocab=300).
+///
+/// * token embedding: one-hot on `token % 8` — routing depends only on
+///   the token id, never on wall time or rng.
+/// * attention router: zero weights, per-layer bias — every request gets
+///   the same top-k head groups, so the batch union never grows (the
+///   head-specialization regime the paper measures §4.2).
+/// * MLP router: identity bottleneck into per-token neuron pairs — token
+///   `t` scores neurons `{2*(t%8), 2*(t%8)+1}`, so the batch union grows
+///   with the number of distinct tokens in flight (Deja Vu's failure
+///   mode at batch, §4.1).
+pub fn mock_router_bank() -> RouterBank {
+    let (l, d, g, dff, rh, vocab) = (2usize, 8usize, 2usize, 16usize, 8usize, 300usize);
+    let mut tok_emb = vec![0f32; vocab * d];
+    for t in 0..vocab {
+        tok_emb[t * d + t % d] = 1.0;
+    }
+    let pos_emb = vec![0f32; 64 * d];
+    let attn_w = vec![0f32; l * d * g];
+    let mut attn_b = vec![0f32; l * g];
+    for li in 0..l {
+        for gi in 0..g {
+            attn_b[li * g + gi] = ((gi + li) % g) as f32;
+        }
+    }
+    let mut w1 = vec![0f32; l * d * rh];
+    for li in 0..l {
+        for j in 0..d {
+            w1[li * d * rh + j * rh + j] = 1.0; // identity bottleneck
+        }
+    }
+    let b1 = vec![0f32; l * rh];
+    let mut w2 = vec![0f32; l * rh * dff];
+    for li in 0..l {
+        for j in 0..rh {
+            w2[li * rh * dff + j * dff + 2 * j] = 1.0;
+            w2[li * rh * dff + j * dff + 2 * j + 1] = 1.0;
+        }
+    }
+    let b2 = vec![0f32; l * dff];
+    RouterBank::new(
+        l,
+        d,
+        g,
+        dff,
+        1,
+        tok_emb,
+        pos_emb,
+        attn_w,
+        attn_b,
+        Some(RouterBank::mlp_router(rh, w1, b1, w2, b2)),
+    )
+    .expect("mock router bank")
+}
 
 pub struct MockEngine {
     cfg: ModelConfig,
@@ -35,6 +106,8 @@ pub struct MockEngine {
     host_kv_path: bool,
     client: xla::PjRtClient,
     profile: Mutex<StepProfile>,
+    /// Decode steps that arrived with (validated) router indices.
+    routed_steps: AtomicU64,
 }
 
 impl Default for MockEngine {
@@ -67,7 +140,45 @@ impl MockEngine {
             host_kv_path: false,
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
+            routed_steps: AtomicU64::new(0),
         }
+    }
+
+    /// How many decode steps consumed router indices.
+    pub fn routed_steps(&self) -> u64 {
+        self.routed_steps.load(Ordering::Relaxed)
+    }
+
+    /// Shape/range-check one step's index tensors against the mock
+    /// geometry; returns each request's selected-group sum (the logits
+    /// nudge, so tests can observe which indices arrived).
+    fn check_routing(&self, r: &StepRouting, b: usize) -> Result<Vec<i64>> {
+        let (l, g, dff) = (self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.d_ff);
+        let shape = r.head_idx.shape();
+        if shape.len() != 3 || shape[0] != l || shape[1] != b {
+            bail!("mock: head_idx shape {shape:?} != [{l}, {b}, k]");
+        }
+        let idx = r.head_idx.as_i32()?;
+        let k = shape[2];
+        let mut sums = vec![0i64; b];
+        for (pos, &gi) in idx.iter().enumerate() {
+            if gi < 0 || gi as usize >= g {
+                bail!("mock: head_idx value {gi} out of range [0, {g})");
+            }
+            sums[(pos / k) % b] += gi as i64;
+        }
+        if let Some(m) = &r.mlp_idx {
+            let shape = m.shape();
+            if shape.len() != 2 || shape[0] != l {
+                bail!("mock: mlp_idx shape {shape:?} != [{l}, k]");
+            }
+            for &ni in m.as_i32()? {
+                if ni < 0 || ni as usize >= dff {
+                    bail!("mock: mlp_idx value {ni} out of range [0, {dff})");
+                }
+            }
+        }
+        Ok(sums)
     }
 
     /// Sleep this long inside every decode step.
@@ -137,15 +248,31 @@ impl StepEngine for MockEngine {
         tokens: &[i32],
         lengths: &[i32],
         kv: KvCache,
+        routing: Option<&StepRouting>,
     ) -> Result<StepOutput> {
         let t0 = Instant::now();
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
         }
         let b = tokens.len();
+        // honor router indices: validate, count, and let the selection
+        // perturb the logits (without moving the +1-chain argmax) so
+        // end-to-end tests can see exactly which indices arrived
+        let head_sums = match routing {
+            Some(r) => {
+                let sums = self.check_routing(r, b)?;
+                self.routed_steps.fetch_add(1, Ordering::Relaxed);
+                Some(sums)
+            }
+            None => None,
+        };
         let mut logits = Vec::with_capacity(b * self.cfg.vocab);
-        for &t in tokens {
-            logits.extend(self.logits_for(if t == PAD { 0 } else { t }));
+        for (i, &t) in tokens.iter().enumerate() {
+            let mut row = self.logits_for(if t == PAD { 0 } else { t });
+            if let Some(sums) = &head_sums {
+                row[sums[i] as usize % self.cfg.vocab] += 0.5;
+            }
+            logits.extend(row);
         }
         // transfer accounting, mirroring the real engine's two paths
         let kv_bytes = (self.cfg.kv_elems(kv.batch, kv.n) * 4) as u64;

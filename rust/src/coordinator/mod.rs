@@ -18,7 +18,7 @@ pub use request::{
     Completion, FinishReason, GenerationEvent, Request, RequestBuilder, SamplingParams,
 };
 pub use scheduler::{Scheduler, SchedulerConfig, StepEngine};
-pub use sparsity::{Mode, SparsityController};
+pub use sparsity::{Mode, RoutingStats, SparsityController, StepPlan};
 
 #[cfg(test)]
 mod scheduler_tests {
@@ -351,6 +351,101 @@ mod scheduler_tests {
             eager > patient + 6,
             "eager {eager} vs patient {patient}: hysteresis saved no rebuilds"
         );
+    }
+
+    #[test]
+    fn router_indices_flow_scheduler_to_engine() {
+        // polar + mock router bank: every decode step must carry
+        // controller-computed head/MLP indices into the engine, and the
+        // controller must record union densities + router overhead
+        use crate::runtime::RoutingPolicy;
+        let ctl = SparsityController::with_routers(
+            Mode::Polar { density: 0.5 },
+            Some(mock::mock_router_bank()),
+            RoutingPolicy { head_k: 1, mlp_req_k: vec![2, 2], mlp_cap: 16 },
+        );
+        let mut s = Scheduler::new(
+            MockEngine::new(),
+            ctl,
+            SchedulerConfig { max_batch: 4, compact: true, ..Default::default() },
+        );
+        for i in 0..4 {
+            s.enqueue(req(i, 100 + i as i32, 6));
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4);
+        // mock "+1 chain" semantics survive the routed entries
+        for c in &done {
+            assert_eq!(c.output_ids[0], 101 + c.id as i32);
+        }
+        let routed = s.engine().routed_steps();
+        assert!(routed > 0, "no decode step carried router indices");
+        let stats = &s.sparsity().stats;
+        assert_eq!(stats.routed_steps, routed);
+        assert_eq!(stats.fallback_steps, 0);
+        // head union is input-independent for the mock bank: exactly k/G
+        for u in stats.head_union_mean() {
+            assert!((u - 0.5).abs() < 1e-9, "head union {u}");
+        }
+        // 4 distinct tokens -> 4 neuron pairs of 16 = 0.5 union density
+        for u in stats.mlp_union_mean() {
+            assert!((u - 0.5).abs() < 1e-9, "mlp union {u}");
+        }
+        // selection histogram covers every routed layer
+        assert_eq!(stats.head_counts.iter().sum::<u64>(), routed * 4 * 2);
+        // router overhead lands in the merged step profile
+        assert_eq!(s.profile().router_ns, stats.router_ns);
+    }
+
+    #[test]
+    fn routing_excludes_finished_slots_from_union() {
+        // one request finishes early; the steps that follow decode at the
+        // same bucket with a PAD slot, which must not join the MLP union
+        use crate::runtime::RoutingPolicy;
+        let ctl = SparsityController::with_routers(
+            Mode::Polar { density: 0.5 },
+            Some(mock::mock_router_bank()),
+            RoutingPolicy { head_k: 1, mlp_req_k: vec![2, 2], mlp_cap: 16 },
+        );
+        let mut s = Scheduler::new(
+            MockEngine::new(),
+            ctl,
+            SchedulerConfig { max_batch: 2, compact: true, ..Default::default() },
+        );
+        s.enqueue(req(0, 100, 2));
+        s.enqueue(req(1, 101, 6));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let stats = &s.sparsity().stats;
+        // step 1 routes both slots (union 4/16), steps 2..5 only the
+        // survivor (2/16): mean = (0.25 + 4 * 0.125) / 5 = 0.15
+        assert_eq!(stats.routed_steps, 5);
+        for u in stats.mlp_union_mean() {
+            assert!((u - 0.15).abs() < 1e-9, "mlp union {u} (PAD slot routed?)");
+        }
+        // head union stays at k/G, computed over live slots only
+        for u in stats.head_union_mean() {
+            assert!((u - 0.5).abs() < 1e-9, "head union {u}");
+        }
+        // histogram: 2 live slots on step 1, 1 on steps 2..5, x2 layers
+        assert_eq!(stats.head_counts.iter().sum::<u64>(), (2 + 4) * 2);
+    }
+
+    #[test]
+    fn fallback_controller_serves_dense_on_mock() {
+        use crate::runtime::RoutingPolicy;
+        let ctl = SparsityController::with_routers(
+            Mode::Polar { density: 0.5 },
+            None,
+            RoutingPolicy { head_k: 1, ..Default::default() },
+        );
+        let mut s = Scheduler::new(MockEngine::new(), ctl, SchedulerConfig::default());
+        s.enqueue(req(1, 50, 4));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].output_ids, vec![51, 52, 53, 54]);
+        assert_eq!(s.engine().routed_steps(), 0);
+        assert!(s.sparsity().is_fallback());
+        assert_eq!(s.sparsity().stats.fallback_steps, 3);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //!   2. admit pending requests by priority: pick the batch bucket,
 //!      batch-prefill the newcomers, splice their KV into the group cache
 //!   3. promote the seq bucket when any sequence outgrows it
-//!   4. run one decode step through the sparsity controller's entry
+//!   4. ask the sparsity controller for this step's plan (entry tag +
+//!      router-produced `head_idx`/`mlp_idx` tensors) and run one decode
+//!      step through it
 //!   5. sample next tokens per active slot -> `Token` events
 //!
 //! `step()` returns the [`GenerationEvent`]s produced this iteration: for
@@ -28,7 +30,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{KvCache, ModelConfig, StepOutput, StepProfile, Tensor};
+use crate::runtime::{KvCache, ModelConfig, StepOutput, StepProfile, StepRouting, Tensor};
 use crate::tokenizer::{token_byte_len, PAD};
 
 use super::kv;
@@ -44,8 +46,18 @@ pub trait StepEngine {
     fn seq_buckets(&self) -> &[usize];
     fn prefill_len(&self) -> usize;
     fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput>;
-    fn decode(&self, tag: &str, tokens: &[i32], lengths: &[i32], kv: KvCache)
-        -> Result<StepOutput>;
+    /// One decode step. `routing` carries the sparsity controller's
+    /// per-step head/MLP index tensors for index-taking entries; engines
+    /// whose entries route in-graph (and the dense/dejavu paths) receive
+    /// `None` and must ignore it.
+    fn decode(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        kv: KvCache,
+        routing: Option<&StepRouting>,
+    ) -> Result<StepOutput>;
     /// Cumulative transfer/compute breakdown since the last reset (engines
     /// without instrumentation report zeros).
     fn profile_snapshot(&self) -> StepProfile {
@@ -70,9 +82,15 @@ impl StepEngine for crate::runtime::Engine {
     fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
         crate::runtime::Engine::prefill(self, tokens, lengths)
     }
-    fn decode(&self, tag: &str, tokens: &[i32], lengths: &[i32], kv: KvCache)
-        -> Result<StepOutput> {
-        crate::runtime::Engine::decode(self, tag, tokens, lengths, kv)
+    fn decode(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        kv: KvCache,
+        routing: Option<&StepRouting>,
+    ) -> Result<StepOutput> {
+        crate::runtime::Engine::decode(self, tag, tokens, lengths, kv, routing)
     }
     fn profile_snapshot(&self) -> StepProfile {
         self.exec.profile_snapshot()
@@ -159,6 +177,11 @@ impl<E: StepEngine> Scheduler<E> {
 
     pub fn engine(&self) -> &E {
         &self.engine
+    }
+
+    /// The per-step sparsity controller (routing telemetry lives here).
+    pub fn sparsity(&self) -> &SparsityController {
+        &self.ctl
     }
 
     /// Combined step breakdown: engine transfers/compute + the
@@ -640,18 +663,28 @@ impl<E: StepEngine> Scheduler<E> {
         let b = self.capacity();
         let mut tokens = vec![PAD; b];
         let mut lengths = vec![1i32; b];
+        let mut active = vec![false; b];
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
                 if s.finished.is_none() {
                     tokens[i] = s.last_token();
                     lengths[i] = s.len as i32;
+                    active[i] = true;
                 }
             }
         }
         let gkv = self.group_kv.take().context("decode without group kv")?;
-        let tag = self.ctl.decode_tag();
+        // per-step routing: the controller picks the entry and computes
+        // the head/MLP index tensors for this batch's hidden state (the
+        // mask keeps padding slots out of selection and telemetry)
+        let plan = self.ctl.plan(&tokens, &lengths, Some(&active))?;
+        if let Some(r) = &plan.routing {
+            self.metrics.surgery.router_ns += r.router_ns;
+        }
         let t0 = Instant::now();
-        let out = self.engine.decode(&tag, &tokens, &lengths, gkv)?;
+        let out =
+            self.engine
+                .decode(&plan.tag, &tokens, &lengths, gkv, plan.routing.as_ref())?;
         let dt = t0.elapsed();
         self.group_kv = Some(out.kv);
 

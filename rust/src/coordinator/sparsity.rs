@@ -1,20 +1,47 @@
-//! Sparsity controller: which decode-entry variant the scheduler executes.
+//! Sparsity controller: the per-step routing decision the scheduler
+//! executes.
 //!
-//! The policy object maps (model, operator intent) -> entry mode tag.
-//! `polar` uses SHA head/group sparsity at the model's critical density
-//! (Table 1) plus calibrated dynamic MLP top-k for ReLU models; `dejavu`
-//! is the MLP-only baseline (§5.2); `dense` disables sparsity.
+//! `Mode` maps a mode string to the family of compiled decode entries
+//! (`polar` = SHA head/group sparsity at the model's critical density,
+//! Table 1, plus calibrated dynamic MLP top-k for ReLU models; `dejavu` =
+//! the MLP-only baseline §5.2; `dense` disables sparsity).
+//!
+//! The controller is consulted **every decode step**: [`SparsityController::plan`]
+//! runs the artifact's routers ([`RouterBank`]) on the step's inputs and
+//! returns the entry tag plus the `head_idx`/`mlp_idx` tensors the
+//! index-taking `polar` entries consume, while accumulating per-layer
+//! union-density telemetry, head-selection histograms and router-overhead
+//! time. When the artifact ships no router weights, a `polar` controller
+//! degrades gracefully: it logs one warning, counts the steps in
+//! `fallback_steps`, and serves the `dense` entries instead of faulting.
+//! Density itself is fixed per serving session (the paper fixes top-k per
+//! layer too; adaptive per-step density is its future-work §6).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Manifest;
+use crate::runtime::{Manifest, RouterBank, RoutingPolicy, StepRouting};
+use crate::substrate::json::Json;
 
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy)]
 pub enum Mode {
     Dense,
     DejaVu,
     Polar { density: f64 },
 }
+
+/// Mode equality compares via the entry tag, so the `f64`-carrying
+/// variant gets a sane story: densities that round to the same compiled
+/// entry (3 decimals, e.g. `0.5` vs `0.5000004`) are the same mode.
+impl PartialEq for Mode {
+    fn eq(&self, other: &Mode) -> bool {
+        self.tag() == other.tag()
+    }
+}
+
+impl Eq for Mode {}
 
 impl Mode {
     pub fn parse(s: &str, critical: f64) -> Result<Mode> {
@@ -27,6 +54,12 @@ impl Mode {
                     let density: f64 = d
                         .parse()
                         .map_err(|_| anyhow::anyhow!("bad density in {other:?}"))?;
+                    if !density.is_finite() || density <= 0.0 || density > 1.0 {
+                        bail!(
+                            "density {density} out of range in {other:?} \
+                             (need 0 < d <= 1)"
+                        );
+                    }
                     Ok(Mode::Polar { density })
                 } else {
                     bail!("unknown mode {other:?} (dense|dejavu|polar|polar@<d>)")
@@ -44,36 +77,290 @@ impl Mode {
     }
 }
 
-/// Controller consulted each scheduling step. Density is fixed per serving
-/// session in this release (the paper fixes top-k per layer too; adaptive
-/// per-step density is its future-work §6).
+/// One step's plan: which decode entry to run and, for routed modes, the
+/// index tensors to feed it.
+#[derive(Debug)]
+pub struct StepPlan {
+    pub tag: String,
+    pub routing: Option<StepRouting>,
+}
+
+/// Telemetry accumulated across `plan` calls; surfaced in server `stats`
+/// and `bench sparsity-scaling`.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingStats {
+    pub steps: u64,
+    pub routed_steps: u64,
+    /// Steps served by the dense fallback because router weights were
+    /// missing from the artifact.
+    pub fallback_steps: u64,
+    pub router_ns: u64,
+    pub n_layers: usize,
+    pub n_groups: usize,
+    /// Per-layer sums of per-step batch-union head density (mean = sum /
+    /// routed_steps).
+    pub head_union_sum: Vec<f64>,
+    pub mlp_union_sum: Vec<f64>,
+    /// Head-selection histogram, [n_layers * n_groups] row-major.
+    pub head_counts: Vec<u64>,
+    /// Per-request head work density (batch-invariant, = head_k / G).
+    pub head_density: f64,
+}
+
+impl RoutingStats {
+    fn absorb(&mut self, r: &StepRouting) {
+        self.routed_steps += 1;
+        self.router_ns += r.router_ns;
+        self.n_groups = r.n_groups;
+        self.head_density = r.head_density();
+        if self.head_union_sum.len() != r.head_union.len() {
+            self.n_layers = r.head_union.len();
+            self.head_union_sum = vec![0.0; r.head_union.len()];
+            self.head_counts = vec![0; r.head_counts.len()];
+        }
+        for (s, u) in self.head_union_sum.iter_mut().zip(&r.head_union) {
+            *s += u;
+        }
+        if self.mlp_union_sum.len() != r.mlp_union.len() {
+            self.mlp_union_sum = vec![0.0; r.mlp_union.len()];
+        }
+        for (s, u) in self.mlp_union_sum.iter_mut().zip(&r.mlp_union) {
+            *s += u;
+        }
+        for (c, n) in self.head_counts.iter_mut().zip(&r.head_counts) {
+            *c += n;
+        }
+    }
+
+    /// Per-layer mean batch-union head density over the routed steps.
+    pub fn head_union_mean(&self) -> Vec<f64> {
+        let n = self.routed_steps.max(1) as f64;
+        self.head_union_sum.iter().map(|s| s / n).collect()
+    }
+
+    pub fn mlp_union_mean(&self) -> Vec<f64> {
+        let n = self.routed_steps.max(1) as f64;
+        self.mlp_union_sum.iter().map(|s| s / n).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let per_layer = |v: &[f64]| Json::arr(v.iter().map(|&x| x.into()));
+        let hist = Json::arr((0..self.n_layers).map(|l| {
+            Json::arr(
+                self.head_counts[l * self.n_groups..(l + 1) * self.n_groups]
+                    .iter()
+                    .map(|&c| (c as usize).into()),
+            )
+        }));
+        Json::obj(vec![
+            ("steps", (self.steps as usize).into()),
+            ("routed_steps", (self.routed_steps as usize).into()),
+            ("fallback_steps", (self.fallback_steps as usize).into()),
+            ("router_overhead_ms", (self.router_ns as f64 * 1e-6).into()),
+            (
+                "router_ns_per_step",
+                (self.router_ns as f64 / self.routed_steps.max(1) as f64).into(),
+            ),
+            ("head_density_per_request", self.head_density.into()),
+            ("head_union_density", per_layer(&self.head_union_mean())),
+            ("mlp_union_density", per_layer(&self.mlp_union_mean())),
+            ("head_selection_hist", hist),
+        ])
+    }
+}
+
+/// Consulted each scheduling step; owns the router bank and the routing
+/// telemetry.
+/// A lazily-initialized shared router bank: pre-set for mock/tests,
+/// engine-shared (and built on first routed use) for real artifacts.
+type BankCell = Arc<OnceLock<Option<RouterBank>>>;
+
+fn preset_bank(bank: Option<RouterBank>) -> BankCell {
+    let cell = OnceLock::new();
+    let _ = cell.set(bank);
+    Arc::new(cell)
+}
+
 #[derive(Debug, Clone)]
 pub struct SparsityController {
     mode: Mode,
+    routers: BankCell,
+    /// Default policy (mock engine / tests, and any batch bucket without
+    /// an override).
+    policy: RoutingPolicy,
+    /// Per-batch-bucket overrides read off the manifest's index-taking
+    /// entries: the mlp_idx capacity Km is calibrated per bucket (the
+    /// union the entry must gather grows with batch), so each bucket's
+    /// steps must be planned with that bucket's own policy or the index
+    /// tensor shapes will not match the compiled entry.
+    policies_by_batch: BTreeMap<usize, RoutingPolicy>,
+    /// Polar was requested but the artifact has no router weights AND the
+    /// compiled entries demand indices: serve dense instead of faulting.
+    fallback: bool,
+    warned: bool,
+    pub stats: RoutingStats,
 }
 
 impl SparsityController {
+    /// Controller without runtime routing: legacy in-graph entries and
+    /// the mock engine. Never falls back — the compiled entries of
+    /// `mode` are assumed self-contained.
     pub fn new(mode: Mode) -> Self {
-        SparsityController { mode }
+        SparsityController {
+            mode,
+            routers: preset_bank(None),
+            policy: RoutingPolicy::default(),
+            policies_by_batch: BTreeMap::new(),
+            fallback: false,
+            warned: false,
+            stats: RoutingStats::default(),
+        }
+    }
+
+    /// Controller with an explicit router bank + policy (mock engine,
+    /// benches, tests). Passing `None` for a `Polar` mode means "the
+    /// artifact should have routers but does not": the controller falls
+    /// back to dense with a warning + metric instead of faulting.
+    pub fn with_routers(
+        mode: Mode,
+        bank: Option<RouterBank>,
+        policy: RoutingPolicy,
+    ) -> Self {
+        let fallback = bank.is_none() && matches!(mode, Mode::Polar { .. });
+        SparsityController {
+            mode,
+            routers: preset_bank(bank),
+            policy,
+            policies_by_batch: BTreeMap::new(),
+            fallback,
+            warned: false,
+            stats: RoutingStats::default(),
+        }
+    }
+
+    /// Controller for a real artifact: share the engine-loaded router
+    /// bank and read one policy per batch bucket off the manifest's
+    /// index-taking entries (Km is calibrated per bucket). Legacy
+    /// manifests (no index inputs anywhere) get a non-routing controller;
+    /// index-taking manifests without router weights get the dense
+    /// fallback.
+    pub fn for_engine(mode: Mode, engine: &crate::runtime::Engine) -> Self {
+        let m = engine.exec.manifest();
+        let prefix = format!("decode_{}_", mode.tag());
+        let mut by_batch: BTreeMap<usize, RoutingPolicy> = BTreeMap::new();
+        for e in m
+            .entries
+            .values()
+            .filter(|e| e.kind == "decode" && e.name.starts_with(&prefix))
+        {
+            if let Some(p) = RoutingPolicy::from_entry(e) {
+                by_batch.entry(e.batch()).or_insert(p);
+            }
+        }
+        if by_batch.is_empty() {
+            return SparsityController::new(mode); // legacy in-graph entries
+        }
+        // per-request MLP top-k comes from the smallest bucket's
+        // calibration (closest to a single request's activation set);
+        // each bucket keeps its own union capacity Km
+        let base_req = by_batch.values().next().unwrap().mlp_req_k.clone();
+        for p in by_batch.values_mut() {
+            if p.mlp_cap > 0 && base_req.len() == p.mlp_req_k.len() {
+                p.mlp_req_k =
+                    base_req.iter().map(|&k| k.clamp(1, p.mlp_cap)).collect();
+            }
+        }
+        let policy = by_batch.values().next().unwrap().clone();
+        // polar forces the (lazy) bank build now so fallback is decided
+        // up front; dense/dejavu never touch it (&& short-circuits)
+        let fallback =
+            matches!(mode, Mode::Polar { .. }) && engine.router_bank().is_none();
+        SparsityController {
+            mode,
+            routers: engine.router_cell(),
+            policy,
+            policies_by_batch: by_batch,
+            fallback,
+            warned: false,
+            stats: RoutingStats::default(),
+        }
     }
 
     pub fn mode(&self) -> Mode {
         self.mode
     }
 
+    /// True when polar was requested but the controller is serving the
+    /// dense fallback (router weights missing).
+    pub fn is_fallback(&self) -> bool {
+        self.fallback
+    }
+
     pub fn decode_tag(&self) -> String {
-        self.mode.tag()
+        if self.fallback {
+            "dense".to_string()
+        } else {
+            self.mode.tag()
+        }
+    }
+
+    /// The per-step decision: entry tag + router indices for the current
+    /// batch (`tokens`/`lengths` per slot, as passed to `decode`).
+    /// `active` marks the slots carrying live requests — padding slots
+    /// are excluded from selection, capacity and telemetry (`None` =
+    /// every slot live). The policy is resolved per batch bucket, since
+    /// each bucket's compiled entry declares its own index widths.
+    pub fn plan(
+        &mut self,
+        tokens: &[i32],
+        lengths: &[i32],
+        active: Option<&[bool]>,
+    ) -> Result<StepPlan> {
+        self.stats.steps += 1;
+        if self.fallback {
+            if !self.warned {
+                self.warned = true;
+                eprintln!(
+                    "warning: mode {:?} requested but the artifact has no router \
+                     weights; serving dense entries (see stats.sparsity.fallback_steps)",
+                    self.mode
+                );
+            }
+            self.stats.fallback_steps += 1;
+            return Ok(StepPlan { tag: "dense".to_string(), routing: None });
+        }
+        let routed = matches!(self.mode, Mode::Polar { .. });
+        let bank = self.routers.get().and_then(|b| b.as_ref());
+        let routing = match (routed, bank) {
+            (true, Some(bank)) => {
+                let policy = self
+                    .policies_by_batch
+                    .get(&tokens.len())
+                    .unwrap_or(&self.policy);
+                let r = bank.route_step(tokens, lengths, active, policy)?;
+                self.stats.absorb(&r);
+                Some(r)
+            }
+            _ => None,
+        };
+        Ok(StepPlan { tag: self.mode.tag(), routing })
     }
 
     /// Check the manifest actually has the chosen variant at every
-    /// (batch, seq) bucket so the scheduler never faults mid-flight.
+    /// (batch, seq) bucket — plus the `dense` entries the controller
+    /// falls back to — so the scheduler never faults mid-flight.
     pub fn validate(&self, m: &Manifest) -> Result<()> {
-        let tag = self.decode_tag();
-        for &b in &m.batch_buckets {
-            for &n in &m.seq_buckets {
-                let name = m.decode_entry_name(&tag, b, n);
-                if m.entries.get(&name).is_none() {
-                    bail!("manifest missing {name} (mode {:?})", self.mode);
+        let mut tags = vec![self.decode_tag()];
+        if tags[0] != "dense" {
+            tags.push("dense".to_string()); // graceful-degradation target
+        }
+        for tag in &tags {
+            for &b in &m.batch_buckets {
+                for &n in &m.seq_buckets {
+                    let name = m.decode_entry_name(tag, b, n);
+                    if m.entries.get(&name).is_none() {
+                        bail!("manifest missing {name} (mode {:?})", self.mode);
+                    }
                 }
             }
         }
@@ -84,6 +371,7 @@ impl SparsityController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::RouterBank;
 
     #[test]
     fn parse_modes() {
@@ -101,8 +389,147 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_out_of_range_density() {
+        for bad in ["polar@0", "polar@-0.5", "polar@1.5", "polar@nan", "polar@inf"] {
+            let e = Mode::parse(bad, 0.5);
+            assert!(e.is_err(), "{bad} parsed");
+            let msg = format!("{:#}", e.unwrap_err());
+            assert!(
+                msg.contains("out of range") || msg.contains("bad density"),
+                "{bad}: {msg}"
+            );
+        }
+        let e = Mode::parse("polar@2", 0.5).unwrap_err();
+        assert!(format!("{e:#}").contains("need 0 < d <= 1"), "{e:#}");
+        // the boundary itself is valid
+        assert_eq!(
+            Mode::parse("polar@1.0", 0.5).unwrap(),
+            Mode::Polar { density: 1.0 }
+        );
+    }
+
+    #[test]
+    fn mode_equality_compares_via_tag() {
+        // densities rounding to the same compiled entry are equal...
+        assert_eq!(
+            Mode::Polar { density: 0.5 },
+            Mode::Polar { density: 0.5000004 }
+        );
+        // ...distinct entries are not, and neither are other modes
+        assert_ne!(Mode::Polar { density: 0.5 }, Mode::Polar { density: 0.625 });
+        assert_ne!(Mode::Polar { density: 1.0 }, Mode::Dense);
+        assert_ne!(Mode::Dense, Mode::DejaVu);
+    }
+
+    #[test]
     fn tags() {
         assert_eq!(Mode::Dense.tag(), "dense");
         assert_eq!(Mode::Polar { density: 0.5 }.tag(), "polar_d0500");
+    }
+
+    fn bank() -> RouterBank {
+        // d=2, L=1, G=2: token 1 -> group 0, token 2 -> group 1
+        RouterBank::new(
+            1,
+            2,
+            2,
+            4,
+            1,
+            vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0],
+            vec![],
+            vec![1.0, 0.0, 0.0, 1.0],
+            vec![0.0, 0.0],
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_routes_polar_and_accumulates_stats() {
+        let policy = RoutingPolicy { head_k: 1, ..Default::default() };
+        let mut ctl = SparsityController::with_routers(
+            Mode::Polar { density: 0.5 },
+            Some(bank()),
+            policy,
+        );
+        assert!(!ctl.is_fallback());
+        let p = ctl.plan(&[1, 2], &[3, 3], None).unwrap();
+        assert_eq!(p.tag, "polar_d0500");
+        let r = p.routing.expect("routing");
+        assert_eq!(r.head_idx.as_i32().unwrap(), &[0, 1]);
+        ctl.plan(&[1, 1], &[4, 4], None).unwrap();
+        assert_eq!(ctl.stats.routed_steps, 2);
+        // step 1 union = 2/2, step 2 union = 1/2 -> mean 0.75
+        assert!((ctl.stats.head_union_mean()[0] - 0.75).abs() < 1e-12);
+        assert_eq!(ctl.stats.head_counts, vec![3, 1]);
+        let j = ctl.stats.to_json();
+        assert_eq!(j.get("routed_steps").as_usize(), Some(2));
+        assert_eq!(j.get("fallback_steps").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn dense_mode_plans_without_routing() {
+        let mut ctl = SparsityController::new(Mode::Dense);
+        let p = ctl.plan(&[1], &[2], None).unwrap();
+        assert_eq!(p.tag, "dense");
+        assert!(p.routing.is_none());
+        assert_eq!(ctl.stats.routed_steps, 0);
+    }
+
+    #[test]
+    fn missing_routers_fall_back_to_dense_with_metric() {
+        let mut ctl = SparsityController::with_routers(
+            Mode::Polar { density: 0.5 },
+            None,
+            RoutingPolicy { head_k: 1, ..Default::default() },
+        );
+        assert!(ctl.is_fallback());
+        assert_eq!(ctl.decode_tag(), "dense");
+        for _ in 0..3 {
+            let p = ctl.plan(&[1], &[2], None).unwrap();
+            assert_eq!(p.tag, "dense");
+            assert!(p.routing.is_none());
+        }
+        assert_eq!(ctl.stats.fallback_steps, 3);
+        assert_eq!(
+            ctl.stats.to_json().get("fallback_steps").as_usize(),
+            Some(3)
+        );
+    }
+
+    #[test]
+    fn legacy_controller_never_falls_back() {
+        // `new` models mock/legacy artifacts whose entries are
+        // self-contained: polar keeps its tag even without a bank
+        let mut ctl = SparsityController::new(Mode::Polar { density: 0.5 });
+        assert!(!ctl.is_fallback());
+        let p = ctl.plan(&[1], &[2], None).unwrap();
+        assert_eq!(p.tag, "polar_d0500");
+        assert!(p.routing.is_none());
+    }
+
+    #[test]
+    fn validate_requires_dense_fallback_entries() {
+        // manifest with polar entries but NO dense ones must fail
+        let dir = std::env::temp_dir().join("ps_sparsity_validate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "model": "m", "analogue": "x",
+          "config": {"d_model": 8, "n_layers": 2, "n_heads": 2, "n_kv_heads": 2,
+                     "d_ff": 16, "d_head": 4, "vocab": 10, "max_seq": 32,
+                     "mlp": "relu", "pos": "learned", "critical_density": 0.5},
+          "params": [],
+          "buckets": {"batch": [1], "seq": [16], "prefill": 16},
+          "entries": [{"name": "decode_polar_d0500_b1_n16", "kind": "decode",
+            "file": "hlo/x.hlo.txt", "data": [], "outputs": [],
+            "meta": {"batch": 1, "seq_bucket": 16, "mode": "polar", "density": 0.5}}]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let ctl = SparsityController::new(Mode::Polar { density: 0.5 });
+        let e = ctl.validate(&m).unwrap_err();
+        assert!(format!("{e:#}").contains("decode_dense_b1_n16"), "{e:#}");
+        // dense mode on the same manifest also fails (no dense entries)
+        assert!(SparsityController::new(Mode::Dense).validate(&m).is_err());
     }
 }

@@ -25,9 +25,11 @@ commands:
   serve      start the TCP JSON-lines server (protocol v2, PROTOCOL.md)
   client     send a request to a running server (--stream, --cancel-after, --stats)
   eval       zero-shot task-suite accuracy at a sparsity mode
-  bench      regenerate a paper figure/table (fig1a..fig14, table1, table2, all)
-             or `bench decode-breakdown [--smoke]` for the per-step decode
-             cost breakdown (BENCH_decode.json)
+  bench      regenerate a paper figure/table (fig1a..fig14, table1, table2, all),
+             `bench decode-breakdown [--smoke]` for the per-step decode
+             cost breakdown (BENCH_decode.json), or
+             `bench sparsity-scaling [--smoke]` for batch-union density
+             scaling: head flat vs MLP toward dense (BENCH_sparsity.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -47,6 +49,9 @@ fn main() {
         "eval" => cmd_eval(rest),
         "bench" if rest.first().map(|s| s.as_str()) == Some("decode-breakdown") => {
             bench::decode_breakdown::run(&rest[1..])
+        }
+        "bench" if rest.first().map(|s| s.as_str()) == Some("sparsity-scaling") => {
+            bench::sparsity_scaling::run(&rest[1..])
         }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {
@@ -141,7 +146,7 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
         .switch("stream", "print per-token events as they are emitted");
     let p = parse_or_usage(args, rest);
     let (engine, mode) = load_engine(&p)?;
-    let ctl = SparsityController::new(mode);
+    let ctl = SparsityController::for_engine(mode, &engine);
     ctl.validate(engine.exec.manifest())?;
     let tok = Tokenizer::new();
     let mut sched = Scheduler::new(engine, ctl, SchedulerConfig::default());
@@ -187,6 +192,9 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
         }
     }
     println!("\nmetrics: {}", sched.metrics.to_json());
+    if sched.sparsity().stats.routed_steps > 0 || sched.sparsity().is_fallback() {
+        println!("sparsity: {}", sched.sparsity().stats.to_json());
+    }
     Ok(())
 }
 

@@ -10,11 +10,12 @@
 //! the legacy literal-per-step path, kept as the A/B baseline for
 //! `bench decode-breakdown`.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
 use super::executor::{DeviceInput, Executor};
+use super::router::{RouterBank, RoutingPolicy, StepRouting};
 use super::tensor::Tensor;
 
 /// Where a batch group's KV cache currently lives.
@@ -80,12 +81,38 @@ pub struct Engine {
     pub exec: Arc<Executor>,
     /// A/B switch: true = legacy host-literal KV path (env POLAR_KV_HOST).
     kv_host_path: bool,
+    /// Router weights from the artifact (None when it ships no routers),
+    /// built **lazily** on first routed use — dense/dejavu serving never
+    /// pays the host-side weight copies (tok_emb alone duplicates the
+    /// embedding table). Shared with the sparsity controller, which
+    /// normally computes each step's routing; the engine runs the
+    /// routers itself only for direct `decode` callers (eval, benches)
+    /// hitting an index-taking entry.
+    routers: Arc<OnceLock<Option<RouterBank>>>,
 }
 
 impl Engine {
     pub fn new(exec: Arc<Executor>) -> Engine {
         let kv_host_path = std::env::var("POLAR_KV_HOST").is_ok();
-        Engine { exec, kv_host_path }
+        Engine { exec, kv_host_path, routers: Arc::new(OnceLock::new()) }
+    }
+
+    /// The artifact's router bank, built on first call (None when the
+    /// artifact ships no — or malformed — router weights).
+    pub fn router_bank(&self) -> &Option<RouterBank> {
+        self.routers.get_or_init(|| match RouterBank::from_executor(&self.exec) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("warning: router weights unusable, routing disabled: {e:#}");
+                None
+            }
+        })
+    }
+
+    /// The shared lazily-initialized bank cell (the sparsity controller
+    /// holds a clone so engine and controller build the bank only once).
+    pub fn router_cell(&self) -> Arc<OnceLock<Option<RouterBank>>> {
+        self.routers.clone()
     }
 
     /// Force the legacy host-KV path (the `bench decode-breakdown`
@@ -153,12 +180,21 @@ impl Engine {
 
     /// One decode step through the entry `decode_{tag}_b{B}_n{N}`.
     /// tokens/lengths: per-slot [B]; lengths already include the new token.
+    ///
+    /// Index-taking entries (the `polar` grid: data inputs `head_idx`
+    /// [L,B,Kh] and, for ReLU models, `mlp_idx` [L,Km]) consume the
+    /// `routing` decision the sparsity controller computed for this step.
+    /// When a direct caller (eval, benches) passes `None` for such an
+    /// entry, the engine runs the artifact's routers itself so the legacy
+    /// call sites keep working; entries without index inputs ignore
+    /// `routing` entirely.
     pub fn decode(
         &self,
         tag: &str,
         tokens: &[i32],
         lengths: &[i32],
         kv: KvCache,
+        routing: Option<&StepRouting>,
     ) -> Result<StepOutput> {
         let b = kv.batch;
         let n = kv.n;
@@ -171,13 +207,82 @@ impl Engine {
             }
         }
         let name = self.exec.manifest().decode_entry_name(tag, b, n);
+        let spec = self.exec.manifest().entry(&name)?;
+        let computed;
+        let routing = match (routing, RoutingPolicy::from_entry(spec)) {
+            (None, Some(policy)) => {
+                let bank = self.router_bank().as_ref().with_context(|| {
+                    format!(
+                        "{name} takes router indices but the artifact has no \
+                         router weights (run compile.routers, or serve with \
+                         --mode dense)"
+                    )
+                })?;
+                computed = bank.route_step(tokens, lengths, None, &policy)?;
+                self.exec.profile_mut().router_ns += computed.router_ns;
+                Some(&computed)
+            }
+            (r, _) => r,
+        };
         let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
         let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+
+        // assemble the data inputs in the entry's declared order
+        enum In {
+            Lit(xla::Literal),
+            Kv,
+        }
+        let mut ins: Vec<In> = Vec::with_capacity(spec.data.len());
+        let mut kv_inputs = 0usize;
+        for d in &spec.data {
+            match d.name.as_str() {
+                "tokens" => ins.push(In::Lit(toks.clone())),
+                "lengths" => ins.push(In::Lit(lens.clone())),
+                "kv" => {
+                    kv_inputs += 1;
+                    ins.push(In::Kv);
+                }
+                "head_idx" | "mlp_idx" => {
+                    let r = routing.with_context(|| {
+                        format!("{name}: entry takes {} but no routing was computed", d.name)
+                    })?;
+                    let t = if d.name == "head_idx" {
+                        Some(&r.head_idx)
+                    } else {
+                        r.mlp_idx.as_ref()
+                    };
+                    let t = t.with_context(|| {
+                        format!("{name}: routing decision carries no {}", d.name)
+                    })?;
+                    if t.shape() != d.shape.as_slice() {
+                        bail!(
+                            "{name}: {} shape {:?} != entry's {:?}",
+                            d.name,
+                            t.shape(),
+                            d.shape
+                        );
+                    }
+                    ins.push(In::Lit(t.to_literal()?));
+                }
+                other => bail!("{name}: unsupported decode data input {other:?}"),
+            }
+        }
+        if kv_inputs != 1 {
+            bail!("{name}: expected exactly one kv input, found {kv_inputs}");
+        }
+
         let out = if self.kv_host_path {
             // A/B baseline: full output tuple (logits + KV) fetched to the
             // host every step, KV re-uploaded next step.
-            let kv_lit = kv.into_literal(&self.exec)?;
-            let outs = self.exec.run_raw(&name, &[toks, lens, kv_lit])?;
+            let mut kv_lit = Some(kv.into_literal(&self.exec)?);
+            let data: Vec<xla::Literal> = ins
+                .into_iter()
+                .map(|i| match i {
+                    In::Lit(l) => l,
+                    In::Kv => kv_lit.take().expect("single kv input"),
+                })
+                .collect();
+            let outs = self.exec.run_raw(&name, &data)?;
             let logits = Tensor::from_literal(&outs[0])?;
             let kv = KvCache {
                 store: KvStore::Lit(outs.into_iter().nth(1).unwrap()),
@@ -187,10 +292,15 @@ impl Engine {
             StepOutput { logits, kv }
         } else {
             // hot path: KV stays device-resident; only logits come home
-            let outs = self.exec.run_bufs(
-                &name,
-                vec![DeviceInput::Host(toks), DeviceInput::Host(lens), kv.into_input()],
-            )?;
+            let mut kv_in = Some(kv.into_input());
+            let inputs: Vec<DeviceInput> = ins
+                .into_iter()
+                .map(|i| match i {
+                    In::Lit(l) => DeviceInput::Host(l),
+                    In::Kv => kv_in.take().expect("single kv input"),
+                })
+                .collect();
+            let outs = self.exec.run_bufs(&name, inputs)?;
             let mut it = outs.into_iter();
             let logits_buf = it.next().context("decode logits")?;
             let kv_buf = it.next().context("decode kv")?;

@@ -130,6 +130,14 @@ impl Executor {
         &self.manifest.config
     }
 
+    /// Host copy of a loaded weight literal, by parameter name. The
+    /// router bank reads `tok_emb`/`ar_*`/`mr_*` through this instead of
+    /// re-opening the npz.
+    pub fn weight(&self, name: &str) -> Option<&xla::Literal> {
+        let i = self.manifest.params.iter().position(|p| p.name == name)?;
+        self.weights.get(i)
+    }
+
     /// Cumulative transfer/compute profile since the last reset.
     pub fn profile_snapshot(&self) -> StepProfile {
         *self.profile.lock().unwrap()

@@ -7,10 +7,12 @@ pub mod engine;
 pub mod executor;
 pub mod manifest;
 pub mod profile;
+pub mod router;
 pub mod tensor;
 
 pub use engine::{Engine, KvCache, KvStore, StepOutput};
 pub use executor::{DeviceInput, Executor};
 pub use manifest::{EntrySpec, Manifest, ModelConfig, TensorSpec};
 pub use profile::StepProfile;
+pub use router::{RouterBank, RoutingPolicy, StepRouting};
 pub use tensor::{Dtype, Tensor};

@@ -19,6 +19,9 @@ pub struct StepProfile {
     pub d2h_ns: u64,
     /// Host-side KV surgery (slot copies, bucket promotion, regroup).
     pub host_surgery_ns: u64,
+    /// Host-side router execution (per-step head/MLP top-k + union) —
+    /// the overhead the runtime pays to produce `head_idx`/`mlp_idx`.
+    pub router_ns: u64,
     /// Decode steps the counters cover (for per-step averages).
     pub decode_steps: u64,
 }
@@ -31,6 +34,7 @@ impl StepProfile {
         self.compute_ns += o.compute_ns;
         self.d2h_ns += o.d2h_ns;
         self.host_surgery_ns += o.host_surgery_ns;
+        self.router_ns += o.router_ns;
         self.decode_steps += o.decode_steps;
     }
 
@@ -65,6 +69,7 @@ impl StepProfile {
             ("compute_ms", (self.compute_ns as f64 * 1e-6).into()),
             ("d2h_ms", (self.d2h_ns as f64 * 1e-6).into()),
             ("host_surgery_ms", (self.host_surgery_ns as f64 * 1e-6).into()),
+            ("router_ms", (self.router_ns as f64 * 1e-6).into()),
         ])
     }
 }
@@ -76,13 +81,21 @@ mod tests {
     #[test]
     fn merge_and_per_step() {
         let mut a = StepProfile { h2d_bytes: 10, d2h_bytes: 30, decode_steps: 2, ..Default::default() };
-        let b = StepProfile { h2d_bytes: 10, compute_ns: 500, decode_steps: 2, ..Default::default() };
+        let b = StepProfile {
+            h2d_bytes: 10,
+            compute_ns: 500,
+            router_ns: 3_000_000,
+            decode_steps: 2,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.host_copy_bytes(), 50);
         assert_eq!(a.decode_steps, 4);
+        assert_eq!(a.router_ns, 3_000_000);
         let j = a.to_json();
         assert_eq!(j.get("h2d_bytes_per_step").as_f64(), Some(5.0));
         assert_eq!(j.get("host_copy_bytes_per_step").as_f64(), Some(12.5));
+        assert_eq!(j.get("router_ms").as_f64(), Some(3.0));
     }
 
     #[test]

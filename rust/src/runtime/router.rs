@@ -1,0 +1,746 @@
+//! Runtime head/neuron routing: the per-step *contextual* half of
+//! contextual sparsity (paper §4.1/§4.2), executed by the serving runtime
+//! instead of inside the compiled graph.
+//!
+//! A [`RouterBank`] holds the trained router weights straight out of the
+//! artifact npz (they are ordinary model params, so the executor has
+//! already loaded them): per-layer single-layer attention head/group
+//! routers `ar_w`/`ar_b` and, for ReLU models, two-layer bottleneck MLP
+//! routers `mr_*`. Every decode step [`RouterBank::route_step`]:
+//!
+//!   1. embeds the step's input tokens (the hidden state available
+//!      *outside* the graph — see the approximation note below),
+//!   2. runs each layer's routers on it,
+//!   3. takes per-request top-k head groups (the SHA kernel consumes
+//!      per-request indices, so head compute scales with `B * k` and the
+//!      per-request density is batch-invariant),
+//!   4. takes the **batch union** of per-request top-k MLP neurons (the
+//!      selective GEMM gathers one row set for the whole batch, so MLP
+//!      union density grows with B — Deja Vu's failure mode at batch),
+//!
+//! and returns the `head_idx` [L,B,Kh] / `mlp_idx` [L,Km] index tensors
+//! the parameterized `polar` decode entries consume, plus per-layer union
+//! densities and the router-overhead nanoseconds for telemetry.
+//!
+//! Approximation note: the routers are trained on each layer's *input
+//! hidden state* (Appendix C), which only exists mid-graph. Routing from
+//! the runtime applies them to the step's embedding instead — the same
+//! signal for every layer. This is what makes the indices available
+//! before the graph launches (and lets the scheduler record union
+//! telemetry); the legacy in-graph entries remain the fidelity reference.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::executor::Executor;
+use super::manifest::EntrySpec;
+use super::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// selection primitives
+// ---------------------------------------------------------------------------
+
+/// Indices of the `k` largest values of `row`, in descending value order.
+/// Ties break toward the lower index (numpy's stable `argsort(-x)`);
+/// `k >= row.len()` returns every index, `k == 0` none.
+pub fn top_k_indices(row: &[f32], k: usize) -> Vec<i32> {
+    let k = k.min(row.len());
+    let mut order: Vec<usize> = (0..row.len()).collect();
+    order.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+    order.truncate(k);
+    order.into_iter().map(|i| i as i32).collect()
+}
+
+/// Sorted (ascending) union of per-request selections. `rows` holds each
+/// request's selected indices; out-of-range entries are ignored.
+pub fn batch_union(rows: &[Vec<i32>], n: usize) -> Vec<i32> {
+    let mut seen = vec![false; n];
+    for row in rows {
+        for &i in row {
+            if (i as usize) < n {
+                seen[i as usize] = true;
+            }
+        }
+    }
+    (0..n).filter(|&i| seen[i]).map(|i| i as i32).collect()
+}
+
+/// Query-head ids covered by a selected KV group (GQA mapping): group `g`
+/// owns query heads `[g*q_per_group, (g+1)*q_per_group)`. With MHA
+/// (`q_per_group == 1`) this is the identity.
+pub fn group_query_heads(groups: &[i32], q_per_group: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(groups.len() * q_per_group);
+    for &g in groups {
+        for q in 0..q_per_group {
+            out.push(g * q_per_group as i32 + q as i32);
+        }
+    }
+    out
+}
+
+/// Mean top-k recall of router logits against binary labels, both flat
+/// `[rows, n]` row-major — the metric routers.py reports per layer:
+/// `E[|topk(pred) ∩ active| / |active|]`.
+pub fn recall_at_k(logits: &[f32], labels: &[f32], n: usize, k: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    assert!(n > 0 && logits.len() % n == 0);
+    let rows = logits.len() / n;
+    let mut total = 0.0;
+    for r in 0..rows {
+        let lr = &logits[r * n..(r + 1) * n];
+        let yr = &labels[r * n..(r + 1) * n];
+        let hit = top_k_indices(lr, k)
+            .into_iter()
+            .filter(|&i| yr[i as usize] > 0.0)
+            .count();
+        let active = yr.iter().filter(|&&y| y > 0.0).count().max(1);
+        total += hit as f64 / active as f64;
+    }
+    if rows == 0 {
+        0.0
+    } else {
+        total / rows as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// policy + per-step decision
+// ---------------------------------------------------------------------------
+
+/// How much to select each step. Derived from the manifest entry for real
+/// artifacts ([`RoutingPolicy::from_entry`]); constructed directly for the
+/// mock engine and tests.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoutingPolicy {
+    /// Head groups kept per request per layer (the entry's Kh).
+    pub head_k: usize,
+    /// Per-request MLP top-k per layer; empty disables MLP routing.
+    pub mlp_req_k: Vec<usize>,
+    /// Width of the `mlp_idx` tensor (the union capacity Km).
+    pub mlp_cap: usize,
+}
+
+impl RoutingPolicy {
+    /// Read the policy off an index-taking decode entry: `head_k` from the
+    /// `head_idx` input shape [L,B,Kh], `mlp_cap` from `mlp_idx` [L,Km],
+    /// per-request MLP k from the entry's calibrated `mlp_topk` meta.
+    /// Returns None when the entry takes no index inputs (legacy in-graph
+    /// routing).
+    pub fn from_entry(spec: &EntrySpec) -> Option<RoutingPolicy> {
+        let head = spec.data.iter().find(|d| d.name == "head_idx")?;
+        let head_k = *head.shape.last().unwrap_or(&0);
+        let n_layers = *head.shape.first().unwrap_or(&0);
+        let (mlp_cap, mlp_req_k) = match spec.data.iter().find(|d| d.name == "mlp_idx") {
+            Some(m) => {
+                let cap = *m.shape.last().unwrap_or(&0);
+                let req: Vec<usize> = match spec.meta.get("mlp_topk").as_arr() {
+                    Some(a) if a.len() == n_layers => a
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(cap).clamp(1, cap))
+                        .collect(),
+                    _ => vec![cap; n_layers],
+                };
+                (cap, req)
+            }
+            None => (0, Vec::new()),
+        };
+        Some(RoutingPolicy { head_k, mlp_req_k, mlp_cap })
+    }
+}
+
+/// One step's routing decision: the index tensors the decode entry
+/// consumes plus the telemetry the controller aggregates.
+#[derive(Debug, Clone)]
+pub struct StepRouting {
+    /// i32 [n_layers, batch, head_k] — per-request selected head groups
+    /// (layer 0's rows are present but ignored: layer 0 stays dense §3.2).
+    pub head_idx: Tensor,
+    /// i32 [n_layers, mlp_cap] — batch-union selected MLP neurons, fitted
+    /// to the entry's capacity (see `route_step`). None for non-ReLU
+    /// models or when the policy disables MLP routing.
+    pub mlp_idx: Option<Tensor>,
+    pub head_k: usize,
+    pub n_groups: usize,
+    /// Per-layer |union of selected groups across the batch| / n_groups.
+    pub head_union: Vec<f64>,
+    /// Per-layer |union of per-request top-k neurons| / d_ff, recorded
+    /// *before* fitting to the capacity Km.
+    pub mlp_union: Vec<f64>,
+    /// Selection counts, [n_layers * n_groups] row-major — feeds the
+    /// head-selection histogram in server stats.
+    pub head_counts: Vec<u64>,
+    pub router_ns: u64,
+}
+
+impl StepRouting {
+    /// Per-request head work density (batch-invariant by construction:
+    /// the SHA kernel runs exactly `head_k` of `n_groups` groups per
+    /// request regardless of batch size).
+    pub fn head_density(&self) -> f64 {
+        self.head_k as f64 / self.n_groups.max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router bank
+// ---------------------------------------------------------------------------
+
+/// Two-layer bottleneck MLP router weights (ReLU models only).
+#[derive(Debug, Clone)]
+pub struct MlpRouterWeights {
+    pub hidden: usize,
+    w1: Vec<f32>, // [L, d, rh]
+    b1: Vec<f32>, // [L, rh]
+    w2: Vec<f32>, // [L, rh, d_ff]
+    b2: Vec<f32>, // [L, d_ff]
+}
+
+/// Trained router weights + the embedding needed to produce their input,
+/// all host-resident (routing is a few tiny GEMVs per step).
+#[derive(Debug, Clone)]
+pub struct RouterBank {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_groups: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub q_per_group: usize,
+    tok_emb: Vec<f32>, // [V, d]
+    pos_emb: Vec<f32>, // [S, d]; empty for rope models
+    attn_w: Vec<f32>,  // [L, d, G]
+    attn_b: Vec<f32>,  // [L, G]
+    mlp: Option<MlpRouterWeights>,
+}
+
+impl RouterBank {
+    /// Build from raw row-major weight vectors (used by the mock engine,
+    /// the bench harness and tests). Lengths are validated against dims.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n_layers: usize,
+        d_model: usize,
+        n_groups: usize,
+        d_ff: usize,
+        q_per_group: usize,
+        tok_emb: Vec<f32>,
+        pos_emb: Vec<f32>,
+        attn_w: Vec<f32>,
+        attn_b: Vec<f32>,
+        mlp: Option<MlpRouterWeights>,
+    ) -> Result<RouterBank> {
+        if d_model == 0 || tok_emb.len() % d_model != 0 {
+            bail!("router bank: tok_emb len {} not a multiple of d_model {d_model}",
+                  tok_emb.len());
+        }
+        if !pos_emb.is_empty() && pos_emb.len() % d_model != 0 {
+            bail!("router bank: pos_emb len {} not a multiple of d_model {d_model}",
+                  pos_emb.len());
+        }
+        if attn_w.len() != n_layers * d_model * n_groups
+            || attn_b.len() != n_layers * n_groups
+        {
+            bail!(
+                "router bank: attn router shapes {}/{} != [{n_layers},{d_model},{n_groups}]",
+                attn_w.len(), attn_b.len()
+            );
+        }
+        if let Some(m) = &mlp {
+            let rh = m.hidden;
+            if m.w1.len() != n_layers * d_model * rh
+                || m.b1.len() != n_layers * rh
+                || m.w2.len() != n_layers * rh * d_ff
+                || m.b2.len() != n_layers * d_ff
+            {
+                bail!("router bank: mlp router shapes inconsistent with [L={n_layers},d={d_model},rh={rh},dff={d_ff}]");
+            }
+        }
+        Ok(RouterBank {
+            n_layers,
+            d_model,
+            n_groups,
+            d_ff,
+            vocab: tok_emb.len() / d_model,
+            q_per_group,
+            tok_emb,
+            pos_emb,
+            attn_w,
+            attn_b,
+            mlp,
+        })
+    }
+
+    pub fn mlp_router(
+        hidden: usize,
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        w2: Vec<f32>,
+        b2: Vec<f32>,
+    ) -> MlpRouterWeights {
+        MlpRouterWeights { hidden, w1, b1, w2, b2 }
+    }
+
+    /// Load the routers out of an executor's already-loaded weight set.
+    /// `Ok(None)` when the artifact carries no attention-router weights
+    /// (`ar_w`/`ar_b` absent from the npz) — the graceful-degradation
+    /// path; `Err` on present-but-malformed weights.
+    pub fn from_executor(exec: &Executor) -> Result<Option<RouterBank>> {
+        let cfg = exec.config();
+        let vecf = |name: &str| -> Result<Option<Vec<f32>>> {
+            match exec.weight(name) {
+                None => Ok(None),
+                Some(l) => Ok(Some(
+                    l.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("weight {name}: {e}"))?,
+                )),
+            }
+        };
+        let (Some(attn_w), Some(attn_b)) = (vecf("ar_w")?, vecf("ar_b")?) else {
+            return Ok(None);
+        };
+        let tok_emb = vecf("tok_emb")?.context("tok_emb missing from weights")?;
+        let pos_emb = if cfg.pos == "learned" {
+            vecf("pos_emb")?.unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        let mlp = match (vecf("mr_w1")?, vecf("mr_b1")?, vecf("mr_w2")?, vecf("mr_b2")?) {
+            (Some(w1), Some(b1), Some(w2), Some(b2)) => {
+                let rh = b1.len() / cfg.n_layers.max(1);
+                Some(MlpRouterWeights { hidden: rh, w1, b1, w2, b2 })
+            }
+            _ => None,
+        };
+        RouterBank::new(
+            cfg.n_layers,
+            cfg.d_model,
+            cfg.n_groups(),
+            cfg.d_ff,
+            cfg.q_per_group(),
+            tok_emb,
+            pos_emb,
+            attn_w,
+            attn_b,
+            mlp,
+        )
+        .map(Some)
+    }
+
+    pub fn has_mlp(&self) -> bool {
+        self.mlp.is_some()
+    }
+
+    /// Embed the step's tokens: `tok_emb[t] (+ pos_emb[len-1])` — the
+    /// hidden state the runtime can produce without running the graph.
+    pub fn embed(&self, tokens: &[i32], lengths: &[i32]) -> Vec<f32> {
+        let d = self.d_model;
+        let mut h = vec![0f32; tokens.len() * d];
+        let n_pos = self.pos_emb.len() / d.max(1);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = (t.max(0) as usize).min(self.vocab.saturating_sub(1));
+            h[i * d..(i + 1) * d].copy_from_slice(&self.tok_emb[t * d..(t + 1) * d]);
+            if n_pos > 0 {
+                let pos = (lengths.get(i).copied().unwrap_or(1).max(1) as usize - 1)
+                    .min(n_pos - 1);
+                let row = &self.pos_emb[pos * d..(pos + 1) * d];
+                for (x, p) in h[i * d..(i + 1) * d].iter_mut().zip(row) {
+                    *x += p;
+                }
+            }
+        }
+        h
+    }
+
+    /// Layer `l` attention-router logits for hidden `h` [b, d] -> [b, G].
+    pub fn attn_logits(&self, l: usize, h: &[f32], b: usize) -> Vec<f32> {
+        let (d, g) = (self.d_model, self.n_groups);
+        let w = &self.attn_w[l * d * g..(l + 1) * d * g];
+        let bias = &self.attn_b[l * g..(l + 1) * g];
+        let mut out = vec![0f32; b * g];
+        for i in 0..b {
+            let hi = &h[i * d..(i + 1) * d];
+            let row = &mut out[i * g..(i + 1) * g];
+            row.copy_from_slice(bias);
+            for (j, &x) in hi.iter().enumerate() {
+                if x != 0.0 {
+                    let wr = &w[j * g..(j + 1) * g];
+                    for (o, &wv) in row.iter_mut().zip(wr) {
+                        *o += x * wv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Layer `l` MLP-router logits [b, d_ff] (ReLU bottleneck FFN).
+    pub fn mlp_logits(&self, l: usize, h: &[f32], b: usize) -> Option<Vec<f32>> {
+        let m = self.mlp.as_ref()?;
+        let (d, rh, dff) = (self.d_model, m.hidden, self.d_ff);
+        let w1 = &m.w1[l * d * rh..(l + 1) * d * rh];
+        let b1 = &m.b1[l * rh..(l + 1) * rh];
+        let w2 = &m.w2[l * rh * dff..(l + 1) * rh * dff];
+        let b2 = &m.b2[l * dff..(l + 1) * dff];
+        let mut out = vec![0f32; b * dff];
+        let mut z = vec![0f32; rh];
+        for i in 0..b {
+            let hi = &h[i * d..(i + 1) * d];
+            z.copy_from_slice(b1);
+            for (j, &x) in hi.iter().enumerate() {
+                if x != 0.0 {
+                    let wr = &w1[j * rh..(j + 1) * rh];
+                    for (zv, &wv) in z.iter_mut().zip(wr) {
+                        *zv += x * wv;
+                    }
+                }
+            }
+            let row = &mut out[i * dff..(i + 1) * dff];
+            row.copy_from_slice(b2);
+            for (j, &zv) in z.iter().enumerate() {
+                let zv = zv.max(0.0); // relu
+                if zv != 0.0 {
+                    let wr = &w2[j * dff..(j + 1) * dff];
+                    for (o, &wv) in row.iter_mut().zip(wr) {
+                        *o += zv * wv;
+                    }
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// One decode step's routing decision for the batch described by
+    /// `tokens`/`lengths` (per-slot, like the decode entry's inputs).
+    ///
+    /// `active` masks the slots that carry live requests: the scheduler's
+    /// batch is padded to the bucket, and the padding slots must neither
+    /// count toward union telemetry nor compete for MLP capacity. Masked
+    /// slots still get (valid) placeholder head indices `0..k`, because
+    /// the static-shape entry attends every row regardless. `None` means
+    /// every slot is live (direct eval/bench callers).
+    ///
+    /// The MLP union is fitted to the entry capacity Km: neurons are
+    /// ranked (in-union first, then by batch-max router logit over live
+    /// slots, then by index) and the top Km taken — a superset of the
+    /// union when it fits, the best-scoring subset when it overflows.
+    /// Padding never repeats a neuron, so the selective GEMM cannot
+    /// double-count rows.
+    pub fn route_step(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        active: Option<&[bool]>,
+        policy: &RoutingPolicy,
+    ) -> Result<StepRouting> {
+        let t0 = Instant::now();
+        let b = tokens.len();
+        if b == 0 || lengths.len() != b {
+            bail!("route_step: tokens/lengths batch mismatch ({b}/{})", lengths.len());
+        }
+        if let Some(a) = active {
+            if a.len() != b {
+                bail!("route_step: active mask len {} != batch {b}", a.len());
+            }
+        }
+        let live = |i: usize| active.map_or(true, |a| a[i]);
+        let (ll, g) = (self.n_layers, self.n_groups);
+        let head_k = policy.head_k.clamp(1, g);
+        let h = self.embed(tokens, lengths);
+
+        let mut head_data = Vec::with_capacity(ll * b * head_k);
+        let mut head_union = Vec::with_capacity(ll);
+        let mut head_counts = vec![0u64; ll * g];
+        for l in 0..ll {
+            let logits = self.attn_logits(l, &h, b);
+            let mut rows = Vec::new();
+            for i in 0..b {
+                if !live(i) {
+                    head_data.extend((0..head_k).map(|x| x as i32));
+                    continue;
+                }
+                let sel = top_k_indices(&logits[i * g..(i + 1) * g], head_k);
+                for &gi in &sel {
+                    head_counts[l * g + gi as usize] += 1;
+                }
+                head_data.extend(sel.iter().copied());
+                rows.push(sel);
+            }
+            head_union.push(batch_union(&rows, g).len() as f64 / g as f64);
+        }
+        let head_idx = Tensor::i32(head_data, vec![ll, b, head_k])?;
+
+        let route_mlp = self.mlp.is_some()
+            && policy.mlp_cap > 0
+            && policy.mlp_req_k.len() == ll;
+        let (mlp_idx, mlp_union) = if route_mlp {
+            let cap = policy.mlp_cap.min(self.d_ff);
+            let dff = self.d_ff;
+            let mut data = Vec::with_capacity(ll * cap);
+            let mut unions = Vec::with_capacity(ll);
+            for l in 0..ll {
+                let logits = self.mlp_logits(l, &h, b).unwrap();
+                let req_k = policy.mlp_req_k[l].clamp(1, dff);
+                let mut in_union = vec![false; dff];
+                let mut max_logit = vec![f32::NEG_INFINITY; dff];
+                for i in 0..b {
+                    if !live(i) {
+                        continue;
+                    }
+                    let row = &logits[i * dff..(i + 1) * dff];
+                    for &j in &top_k_indices(row, req_k) {
+                        in_union[j as usize] = true;
+                    }
+                    for (m, &v) in max_logit.iter_mut().zip(row) {
+                        *m = m.max(v);
+                    }
+                }
+                let union_n = in_union.iter().filter(|x| **x).count();
+                unions.push(union_n as f64 / dff as f64);
+                // full sort of all d_ff candidates; at this zoo's widths
+                // (d_ff <= 768) that is microseconds and shows up honestly
+                // in router_ns — a select_nth fast path only pays off at
+                // real-model widths
+                let mut order: Vec<usize> = (0..dff).collect();
+                order.sort_by(|&a, &c| {
+                    in_union[c]
+                        .cmp(&in_union[a])
+                        .then(max_logit[c].total_cmp(&max_logit[a]))
+                        .then(a.cmp(&c))
+                });
+                data.extend(order[..cap].iter().map(|&j| j as i32));
+            }
+            (Some(Tensor::i32(data, vec![ll, cap])?), unions)
+        } else {
+            (None, Vec::new())
+        };
+
+        Ok(StepRouting {
+            head_idx,
+            mlp_idx,
+            head_k,
+            n_groups: g,
+            head_union,
+            mlp_union,
+            head_counts,
+            router_ns: t0.elapsed().as_nanos() as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_by_value_then_index() {
+        assert_eq!(top_k_indices(&[0.1, 0.9, 0.5], 2), vec![1, 2]);
+        // exact ties break toward the lower index (stable argsort(-x))
+        assert_eq!(top_k_indices(&[0.5, 0.5, 0.5, 0.9], 3), vec![3, 0, 1]);
+        assert_eq!(top_k_indices(&[1.0, 2.0], 0), Vec::<i32>::new());
+        // k >= n returns every index, still value-ordered
+        assert_eq!(top_k_indices(&[1.0, 3.0, 2.0], 8), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn union_is_sorted_and_deduped() {
+        let rows = vec![vec![3, 1], vec![1, 0], vec![3, 3]];
+        assert_eq!(batch_union(&rows, 4), vec![0, 1, 3]);
+        assert_eq!(batch_union(&[], 4), Vec::<i32>::new());
+        // out-of-range indices are ignored, not a panic
+        assert_eq!(batch_union(&[vec![9, 0]], 2), vec![0]);
+    }
+
+    #[test]
+    fn gqa_group_mapping_expands_to_query_heads() {
+        // MHA: identity
+        assert_eq!(group_query_heads(&[2, 0], 1), vec![2, 0]);
+        // GQA with 4 query heads per KV group
+        assert_eq!(group_query_heads(&[1], 4), vec![4, 5, 6, 7]);
+        assert_eq!(group_query_heads(&[0, 2], 2), vec![0, 1, 4, 5]);
+    }
+
+    #[test]
+    fn recall_at_k_matches_hand_count() {
+        // row 0: top-2 = {1,3}, active = {1,2} -> 1/2
+        // row 1: top-2 = {0,1}, active = {0,1} -> 2/2
+        let logits = [0.0, 0.9, 0.1, 0.8, 0.9, 0.8, 0.0, 0.1];
+        let labels = [0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 0.0];
+        let r = recall_at_k(&logits, &labels, 4, 2);
+        assert!((r - 0.75).abs() < 1e-12, "{r}");
+    }
+
+    fn tiny_bank() -> RouterBank {
+        // d=2, L=2, G=3: attention logits = bias only for token 0 (whose
+        // embedding is all-zero), token-dependent for the rest.
+        let tok_emb = vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0]; // V=3
+        let attn_w = vec![
+            // layer 0: dim0 -> group0, dim1 -> group2
+            5.0, 0.0, 0.0, 0.0, 0.0, 5.0,
+            // layer 1: dim0 -> group1, dim1 -> group1
+            0.0, 5.0, 0.0, 0.0, 5.0, 0.0,
+        ];
+        let attn_b = vec![0.0, 0.1, 0.2, 0.2, 0.1, 0.0];
+        RouterBank::new(2, 2, 3, 4, 2, tok_emb, vec![], attn_w, attn_b, None).unwrap()
+    }
+
+    #[test]
+    fn route_step_selects_per_request_and_unions_per_layer() {
+        let bank = tiny_bank();
+        let policy = RoutingPolicy { head_k: 1, ..Default::default() };
+        let r = bank
+            .route_step(&[1, 2], &[4, 4], None, &policy)
+            .unwrap();
+        assert_eq!(r.head_idx.shape(), &[2, 2, 1]);
+        let idx = r.head_idx.as_i32().unwrap();
+        // layer 0: token 1 -> group 0, token 2 -> group 2 (union 2/3)
+        assert_eq!(&idx[..2], &[0, 2]);
+        // layer 1: both tokens -> group 1 (union 1/3)
+        assert_eq!(&idx[2..], &[1, 1]);
+        assert!((r.head_union[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.head_union[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((r.head_density() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.head_counts, vec![1, 0, 1, 0, 2, 0]);
+        assert!(r.mlp_idx.is_none());
+    }
+
+    #[test]
+    fn masked_slots_get_placeholders_and_skip_telemetry() {
+        let bank = tiny_bank();
+        let policy = RoutingPolicy { head_k: 1, ..Default::default() };
+        let r = bank
+            .route_step(&[1, 2], &[4, 4], Some(&[true, false]), &policy)
+            .unwrap();
+        let idx = r.head_idx.as_i32().unwrap();
+        // live token 1 -> group 0; masked slot -> placeholder 0..k
+        assert_eq!(&idx[..2], &[0, 0]);
+        // only the live slot counts toward union + histogram
+        assert!((r.head_union[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(&r.head_counts[..3], &[1, 0, 0]);
+        // mask length must match the batch
+        assert!(bank
+            .route_step(&[1, 2], &[4, 4], Some(&[true]), &policy)
+            .is_err());
+    }
+
+    #[test]
+    fn masked_slots_do_not_inflate_mlp_union() {
+        let bank = mlp_bank();
+        let policy = RoutingPolicy { head_k: 1, mlp_req_k: vec![2, 2], mlp_cap: 4 };
+        let both = bank.route_step(&[1, 2], &[4, 4], None, &policy).unwrap();
+        assert_eq!(both.mlp_union, vec![1.0, 1.0]);
+        let one = bank
+            .route_step(&[1, 2], &[4, 4], Some(&[true, false]), &policy)
+            .unwrap();
+        // the masked slot's neurons must not join the union...
+        assert_eq!(one.mlp_union, vec![0.5, 0.5]);
+        // ...nor outrank live neurons in the capacity-fitted index set
+        let row = &one.mlp_idx.as_ref().unwrap().as_i32().unwrap()[..4];
+        assert!(row.contains(&0) && row.contains(&1), "{row:?}");
+    }
+
+    #[test]
+    fn route_step_head_k_extremes() {
+        let bank = tiny_bank();
+        // k = n_groups: every group selected, union density exactly 1
+        let all = RoutingPolicy { head_k: 3, ..Default::default() };
+        let r = bank.route_step(&[1, 2], &[4, 4], None, &all).unwrap();
+        assert_eq!(r.head_idx.shape(), &[2, 2, 3]);
+        assert_eq!(r.head_union, vec![1.0, 1.0]);
+        // k = 0 clamps to 1 (an empty head set cannot attend at all)
+        let zero = RoutingPolicy { head_k: 0, ..Default::default() };
+        let r = bank.route_step(&[1, 2], &[4, 4], None, &zero).unwrap();
+        assert_eq!(r.head_k, 1);
+    }
+
+    fn mlp_bank() -> RouterBank {
+        // d=2, rh=2 identity bottleneck, d_ff=4: token 1 scores neurons
+        // {0,1}, token 2 scores neurons {2,3}.
+        let tok_emb = vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+        let attn_w = vec![0.0; 2 * 2 * 1];
+        let attn_b = vec![0.0; 2];
+        let w1 = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0]; // [L=2,d=2,rh=2]
+        let b1 = vec![0.0; 4];
+        let w2 = vec![
+            // layer 0: hidden0 -> neurons {0,1}, hidden1 -> neurons {2,3}
+            4.0, 3.0, 0.0, 0.0, 0.0, 0.0, 4.0, 3.0,
+            // layer 1: same
+            4.0, 3.0, 0.0, 0.0, 0.0, 0.0, 4.0, 3.0,
+        ];
+        let b2 = vec![0.0; 8];
+        RouterBank::new(
+            2, 2, 1, 4, 1, tok_emb, vec![], attn_w, attn_b,
+            Some(RouterBank::mlp_router(2, w1, b1, w2, b2)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn mlp_union_grows_with_distinct_requests() {
+        let bank = mlp_bank();
+        let policy = RoutingPolicy { head_k: 1, mlp_req_k: vec![2, 2], mlp_cap: 4 };
+        let one = bank.route_step(&[1], &[4], None, &policy).unwrap();
+        assert_eq!(one.mlp_union, vec![0.5, 0.5]);
+        let two = bank.route_step(&[1, 2], &[4, 4], None, &policy).unwrap();
+        assert_eq!(two.mlp_union, vec![1.0, 1.0]);
+        // identical requests do not inflate the union
+        let same = bank.route_step(&[1, 1], &[4, 4], None, &policy).unwrap();
+        assert_eq!(same.mlp_union, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn mlp_idx_fits_capacity_without_duplicates() {
+        let bank = mlp_bank();
+        // union is 4 neurons but the capacity is 3: keep the 3 best by
+        // batch-max logit (4.0-weight neurons 0 and 2 first, then one 3.0)
+        let policy = RoutingPolicy { head_k: 1, mlp_req_k: vec![2, 2], mlp_cap: 3 };
+        let r = bank.route_step(&[1, 2], &[4, 4], None, &policy).unwrap();
+        let t = r.mlp_idx.as_ref().unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        for l in 0..2 {
+            let row = &t.as_i32().unwrap()[l * 3..(l + 1) * 3];
+            let mut sorted = row.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "duplicate neuron in {row:?}");
+            assert!(row.contains(&0) && row.contains(&2), "{row:?}");
+        }
+        // true (pre-fit) union density is still reported
+        assert_eq!(r.mlp_union, vec![1.0, 1.0]);
+        // capacity above the union pads with distinct next-best neurons
+        let wide = RoutingPolicy { head_k: 1, mlp_req_k: vec![1, 1], mlp_cap: 4 };
+        let r = bank.route_step(&[1], &[4], None, &wide).unwrap();
+        let row = r.mlp_idx.as_ref().unwrap().as_i32().unwrap()[..4].to_vec();
+        let mut sorted = row.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3], "{row:?}");
+    }
+
+    #[test]
+    fn policy_from_entry_reads_index_shapes() {
+        use crate::substrate::json::Json;
+        let spec = EntrySpec {
+            name: "decode_polar_d0500_b2_n64".into(),
+            kind: "decode".into(),
+            file: "x".into(),
+            data: vec![
+                crate::runtime::TensorSpec {
+                    name: "tokens".into(), shape: vec![2], dtype: crate::runtime::Dtype::I32 },
+                crate::runtime::TensorSpec {
+                    name: "head_idx".into(), shape: vec![4, 2, 3],
+                    dtype: crate::runtime::Dtype::I32 },
+                crate::runtime::TensorSpec {
+                    name: "mlp_idx".into(), shape: vec![4, 48],
+                    dtype: crate::runtime::Dtype::I32 },
+            ],
+            outputs: vec![],
+            meta: Json::parse(r#"{"mlp_topk": [16, 24, 24, 16]}"#).unwrap(),
+        };
+        let p = RoutingPolicy::from_entry(&spec).unwrap();
+        assert_eq!(p.head_k, 3);
+        assert_eq!(p.mlp_cap, 48);
+        assert_eq!(p.mlp_req_k, vec![16, 24, 24, 16]);
+        // entries without index inputs are legacy (in-graph routing)
+        let legacy = EntrySpec { data: vec![], ..spec };
+        assert!(RoutingPolicy::from_entry(&legacy).is_none());
+    }
+}

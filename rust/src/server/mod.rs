@@ -101,7 +101,7 @@ pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
     serve_with(&addr, on_ready, move || {
         let exec = Arc::new(Executor::load(&model_dir)?);
         let engine = Engine::new(exec);
-        let ctl = SparsityController::new(mode);
+        let ctl = SparsityController::for_engine(mode, &engine);
         ctl.validate(engine.exec.manifest())?;
         Ok(Scheduler::new(
             engine,
@@ -168,6 +168,7 @@ where
                         let mut stats = sched.metrics.to_json_with_profile(&sched.profile());
                         stats.set("pending", sched.pending_len().into());
                         stats.set("active", sched.active_len().into());
+                        stats.set("sparsity", sched.sparsity().stats.to_json());
                         let _ = sink.send(Json::obj(vec![
                             ("ok", true.into()),
                             ("stats", stats),

@@ -51,7 +51,7 @@ fn prefill_then_decode_shapes_and_finiteness() {
     assert!(logits.iter().all(|x| x.is_finite()));
 
     let step = e
-        .decode("dense", &[65], &[(ids.len() + 1) as i32], out.kv)
+        .decode("dense", &[65], &[(ids.len() + 1) as i32], out.kv, None)
         .unwrap();
     assert!(step.logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
 }
@@ -69,7 +69,7 @@ fn dense_and_polar_agree_at_full_density() {
     let lens = [6i32];
     let toks = [70i32];
     let a = e
-        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, 128).unwrap())
+        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, 128).unwrap(), None)
         .unwrap();
     let b = e
         .decode(
@@ -77,6 +77,7 @@ fn dense_and_polar_agree_at_full_density() {
             &toks,
             &lens,
             KvCache::from_tensor(&kvt, 1, 128).unwrap(),
+            None,
         )
         .unwrap();
     let (av, bv) = (a.logits.as_f32().unwrap(), b.logits.as_f32().unwrap());
@@ -93,7 +94,7 @@ fn dense_and_polar_agree_at_full_density() {
     let cfgo = eo.exec.config().clone();
     let kvo = Tensor::zeros_f32(cfgo.kv_shape(1, 128));
     let o = eo
-        .decode("polar_d1000", &toks, &lens, KvCache::from_tensor(&kvo, 1, 128).unwrap())
+        .decode("polar_d1000", &toks, &lens, KvCache::from_tensor(&kvo, 1, 128).unwrap(), None)
         .unwrap();
     assert!(o.logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
 }
@@ -133,7 +134,7 @@ fn sparse_modes_change_latency_not_sanity() {
     let kvt = Tensor::zeros_f32(cfg.kv_shape(4, 64));
     for tag in ["dense", "dejavu", "polar_d0500"] {
         let kv = KvCache::from_tensor(&kvt, 4, 64).unwrap();
-        let out = e.decode(tag, &[65, 66, 67, 68], &[5, 6, 7, 8], kv).unwrap();
+        let out = e.decode(tag, &[65, 66, 67, 68], &[5, 6, 7, 8], kv, None).unwrap();
         let v = out.logits.as_f32().unwrap();
         assert_eq!(v.len(), 4 * cfg.vocab, "{tag}");
         assert!(v.iter().all(|x| x.is_finite()), "{tag}");
@@ -158,7 +159,7 @@ fn pp2_matches_single_stage_decode() {
     let toks = [80i32];
     let lens = [9i32];
     let single = e
-        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, n).unwrap())
+        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, n).unwrap(), None)
         .unwrap();
     let (k0, k1) = split_layers(&kvt, cfg.n_layers / 2).unwrap();
     let (logits, _, _) = e
@@ -185,7 +186,7 @@ fn tp2_matches_single_decode() {
     let toks = [81i32];
     let lens = [9i32];
     let single = e
-        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, n).unwrap())
+        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, n).unwrap(), None)
         .unwrap();
     let shards = split_groups(&kvt, 2).unwrap();
     let kv: Vec<Vec<xla::Literal>> = shards
@@ -214,11 +215,11 @@ fn kv_bucket_promotion_preserves_decode_results() {
     let toks = [90i32];
     let lens = [30i32];
     let small = e
-        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, 64).unwrap())
+        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, 64).unwrap(), None)
         .unwrap();
     let big_t = pad_n(&kvt, 128).unwrap();
     let big = e
-        .decode("dense", &toks, &lens, KvCache::from_tensor(&big_t, 1, 128).unwrap())
+        .decode("dense", &toks, &lens, KvCache::from_tensor(&big_t, 1, 128).unwrap(), None)
         .unwrap();
     let (a, b) = (small.logits.as_f32().unwrap(), big.logits.as_f32().unwrap());
     let max_abs = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);

@@ -1,0 +1,71 @@
+//! Cross-language router contract: the runtime router must rank heads
+//! exactly like `python/compile/routers.py` does. The committed fixture
+//! (`tests/fixtures/router_fixture.{npz,json}`, regenerate with
+//! `python -m compile.routers --fixture ../rust/tests/fixtures`) carries
+//! tiny attention-router weights, inputs and ground-truth labels plus the
+//! python-side recall numbers in the `router_metrics.json` shape; the
+//! rust side recomputes the recalls from the same npz.
+
+use std::collections::HashMap;
+
+use polar_sparsity::runtime::router::{recall_at_k, RouterBank};
+use polar_sparsity::substrate::json::Json;
+use xla::FromRawBytes;
+
+fn fixture_path(name: &str) -> String {
+    format!("{}/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn rust_router_recall_matches_python_metrics() {
+    let named = xla::Literal::read_npz(fixture_path("router_fixture.npz"), &())
+        .expect("reading fixture npz");
+    let map: HashMap<String, xla::Literal> = named.into_iter().collect();
+    let dims = |n: &str| -> Vec<usize> {
+        map[n]
+            .array_shape()
+            .unwrap()
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect()
+    };
+    let (l, d, g) = {
+        let s = dims("ar_w");
+        (s[0], s[1], s[2])
+    };
+    assert_eq!(dims("ar_b"), vec![l, g]);
+    let n = dims("h")[1];
+    assert_eq!(dims("h"), vec![l, n, d]);
+    assert_eq!(dims("labels"), vec![l, n, g]);
+
+    let ar_w = map["ar_w"].to_vec::<f32>().unwrap();
+    let ar_b = map["ar_b"].to_vec::<f32>().unwrap();
+    let h = map["h"].to_vec::<f32>().unwrap();
+    let labels = map["labels"].to_vec::<f32>().unwrap();
+    // embedding unused here: the fixture supplies router inputs directly
+    let bank =
+        RouterBank::new(l, d, g, g, 1, vec![0.0; d], vec![], ar_w, ar_b, None)
+            .expect("fixture bank");
+
+    let metrics = Json::parse(
+        &std::fs::read_to_string(fixture_path("router_fixture.json")).unwrap(),
+    )
+    .expect("fixture json");
+    let k = metrics.get("k").as_usize().expect("fixture k");
+    let attn = metrics.get("attn").as_arr().expect("fixture attn metrics");
+    assert_eq!(attn.len(), l);
+    for (li, m) in attn.iter().enumerate() {
+        assert_eq!(m.get("layer").as_usize(), Some(li));
+        let want = m.get("recall_at_half").as_f64().expect("recall");
+        let logits = bank.attn_logits(li, &h[li * n * d..(li + 1) * n * d], n);
+        let got = recall_at_k(&logits, &labels[li * n * g..(li + 1) * n * g], g, k);
+        assert!(
+            (got - want).abs() < 1e-3,
+            "layer {li}: rust recall {got} vs python {want}"
+        );
+        // the fixture is meaningful only if the router is imperfect but
+        // far better than chance (k/G = 0.5 here)
+        assert!(want > 0.6 && want < 1.0, "degenerate fixture recall {want}");
+    }
+}
