@@ -20,6 +20,7 @@ fn main() -> Result<()> {
                 addr: "127.0.0.1:0".to_string(),
                 mode: Mode::Polar { density: 0.5 },
                 max_batch: 8,
+                prefill_chunk_tokens: 0,
             },
             move |addr| {
                 let _ = addr_tx.send(addr);

@@ -9,7 +9,9 @@ always: data inputs (entry-specific, in order) followed by the full weight
 set sorted by name — one calling convention for the whole runtime.
 
 Entries per model (static shapes = the CUDA-graph analogue, DESIGN.md):
-  prefill_b{B}                       prompt pass at S=64
+  prefill_b{B}_s{S}                  chunked prompt pass: appends one chunk
+                                     (up to PREFILL_LEN tokens/slot) into a
+                                     [*,S] cache at a per-slot offset
   decode_{tag}_b{B}_n{N}             tag in dense | dejavu | polar_dXXXX |
                                      teal_dXXXX | cats_dXXXX
   micro_* (opt-small)                Fig 1a / Fig 3 / Fig 10 module benches
@@ -83,21 +85,28 @@ def core_entries(cfg, out_dir):
     batches = [1] if small else BATCH_BUCKETS
     seqs = [128] if small else SEQ_BUCKETS
 
+    # chunked prefill: one entry per (batch, seq) bucket. Each call appends
+    # up to PREFILL_LEN prompt tokens per slot into the group cache at a
+    # per-slot position offset, so a long prompt streams chunk by chunk
+    # while co-resident requests keep decoding between chunks.
     for B in batches:
-        entries.append(Entry(
-            name=f"prefill_b{B}", kind="prefill",
-            fn=(lambda cfg_: lambda toks, lens, params: model.prefill(
-                cfg_, params, toks, lens, PREFILL_LEN))(cfg),
-            data=[
-                {"name": "tokens", "shape": [B, PREFILL_LEN], "dtype": "i32"},
-                {"name": "lengths", "shape": [B], "dtype": "i32"},
-            ],
-            outputs=[
-                {"name": "logits", "shape": [B, V], "dtype": "f32"},
-                {"name": "kv", "shape": dshape(cfg, B, PREFILL_LEN), "dtype": "f32"},
-            ],
-            meta={"batch": B, "seq_bucket": PREFILL_LEN},
-        ))
+        for S in seqs:
+            entries.append(Entry(
+                name=f"prefill_b{B}_s{S}", kind="prefill",
+                fn=(lambda cfg_: lambda toks, lens, off, kv, params:
+                    model.prefill_chunk(cfg_, params, toks, lens, off, kv))(cfg),
+                data=[
+                    {"name": "tokens", "shape": [B, PREFILL_LEN], "dtype": "i32"},
+                    {"name": "lengths", "shape": [B], "dtype": "i32"},
+                    {"name": "offset", "shape": [B], "dtype": "i32"},
+                    {"name": "kv", "shape": dshape(cfg, B, S), "dtype": "f32"},
+                ],
+                outputs=[
+                    {"name": "logits", "shape": [B, V], "dtype": "f32"},
+                    {"name": "kv", "shape": dshape(cfg, B, S), "dtype": "f32"},
+                ],
+                meta={"batch": B, "seq_bucket": S, "chunk": PREFILL_LEN},
+            ))
 
     def decode_entry(B, N, mode, density, mlp_topk, tag):
         # polar entries are *index-taking*: the runtime routing subsystem
@@ -449,8 +458,10 @@ def build_model(name: str, out_root: str, sets: list):
             {"name": n, "shape": list(weights[n].shape),
              "dtype": str(weights[n].dtype)} for n in param_names
         ],
+        # "prefill_chunk" is the chunk token width of the prefill_b{B}_s{S}
+        # matrix; "prefill" is kept as a legacy alias for older runtimes.
         "buckets": {"batch": BATCH_BUCKETS, "seq": SEQ_BUCKETS,
-                    "prefill": PREFILL_LEN},
+                    "prefill": PREFILL_LEN, "prefill_chunk": PREFILL_LEN},
         "entries": [],
     }
     t_total = time.time()

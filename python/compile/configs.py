@@ -20,7 +20,11 @@ VOCAB = 259
 # Static-shape buckets (must match rust/src/coordinator/batcher.rs).
 BATCH_BUCKETS = [1, 2, 4, 8, 16]
 SEQ_BUCKETS = [64, 128, 256]
-PREFILL_LEN = 64  # prompt bucket; prompts longer than this are truncated
+# Chunked-prefill token width: each prefill_b{B}_s{S} entry appends one
+# chunk of up to this many prompt tokens at a per-slot position offset.
+# Long prompts stream through successive chunks (no truncation); prompts
+# longer than the largest seq bucket are rejected by the serving protocol.
+PREFILL_LEN = 64
 
 # Attention-density sweep used by the accuracy benches (Fig 2a / Fig 4).
 DENSITY_SWEEP = [0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0]

@@ -276,6 +276,74 @@ def prefill(cfg: ModelConfig, params, tokens, lengths, n_bucket: int):
     return last, jnp.stack([k, v], axis=1)
 
 
+def prefill_chunk(cfg: ModelConfig, params, tokens, lengths, offset, kv):
+    """One chunked-prefill step: append each slot's next prompt chunk into
+    the group KV cache at a per-slot position offset.
+
+    tokens [B,C] (chunk, padded), lengths [B] (valid tokens in THIS chunk;
+    0 marks an inactive slot whose cache row is left untouched), offset [B]
+    (absolute position where the chunk starts), kv [L,2,B,G,S,dh] with the
+    positions [0, offset) already filled by earlier chunks.
+
+    Cache writes are masked per position — ``where(offset <= j < offset+len)``
+    — never a blind dynamic slice, so inactive slots and the region past a
+    short final chunk cannot clobber live KV of co-resident requests. Chunk
+    queries attend causally to the whole cache (prior chunks + the
+    intra-chunk prefix), which makes successive chunks bit-compatible with
+    one monolithic :func:`prefill` over the same prompt.
+
+    Returns (logits [B,V] at each slot's position offset+len-1 — the
+    first-token logits when this is the prompt's final chunk — and the
+    updated cache [L,2,B,G,S,dh]).
+    """
+    B, C = tokens.shape
+    S = kv.shape[4]
+    G, qpg, dh = cfg.n_groups, cfg.q_per_group, cfg.d_head
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    pos = offset[:, None] + jnp.arange(C)[None, :]          # [B,C] absolute
+    x = _embed(cfg, params, tokens, jnp.clip(pos, 0, cfg.max_seq - 1))
+    j = jnp.arange(S)[None, :]                              # [1,S]
+    write = (j >= offset[:, None]) & (j < (offset + lengths)[:, None])  # [B,S]
+    src = jnp.clip(j - offset[:, None], 0, C - 1)           # [B,S] chunk idx
+
+    def scatter_chunk(new, cache_l):
+        """new [B,C,G,dh] -> masked into cache_l [B,G,S,dh]."""
+        nt = new.transpose(0, 2, 1, 3)                      # [B,G,C,dh]
+        idx = jnp.broadcast_to(src[:, None, :, None], (B, G, S, dh))
+        gat = jnp.take_along_axis(nt, idx, axis=2)          # [B,G,S,dh]
+        return jnp.where(write[:, None, :, None], gat, cache_l)
+
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        h = layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = (h @ params["wq"][l] + params["bq"][l]).reshape(B, C, cfg.n_heads, dh)
+        k_new = (h @ params["wk"][l] + params["bk"][l]).reshape(B, C, G, dh)
+        v_new = (h @ params["wv"][l] + params["bv"][l]).reshape(B, C, G, dh)
+        if cfg.pos == "rope":
+            q = rope(q, pos, dh)
+            k_new = rope(k_new, pos, dh)
+        k_l = scatter_chunk(k_new, kv[l, 0])                # [B,G,S,dh]
+        v_l = scatter_chunk(v_new, kv[l, 1])
+        # chunk queries vs the full cache: key j is visible to the query at
+        # absolute position p iff j <= p (all such keys are real prompt
+        # positions — prior chunks or the just-written intra-chunk prefix)
+        qg = q.reshape(B, C, G, qpg, dh)
+        s = jnp.einsum("bigqd,bgjd->bgqij", qg, k_l) * scale  # [B,G,qpg,C,S]
+        mask = j[:, None, :] <= pos[:, :, None]             # [B,C,S]
+        s = jnp.where(mask[:, None, None, :, :], s, kref.NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgqij,bgjd->bigqd", p, v_l).reshape(B, C, -1)
+        x = x + o @ params["wo"][l] + params["bo"][l]
+        h2 = layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        x = x + mlp_dense(cfg, params, l, h2)
+        ks.append(k_l)
+        vs.append(v_l)
+    kv_new = jnp.stack([jnp.stack(ks), jnp.stack(vs)], axis=1)
+    last_idx = jnp.clip(lengths - 1, 0, C - 1)              # [B]
+    x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0, :]
+    return final_logits(cfg, params, x_last), kv_new
+
+
 # ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------

@@ -100,7 +100,8 @@ def test_decode_entry_coverage_opt_tiny():
     man = json.load(open(os.path.join(ART, "opt-tiny", "manifest.json")))
     names = {e["name"] for e in man["entries"]}
     for b in man["buckets"]["batch"]:
-        assert f"prefill_b{b}" in names
         for n in man["buckets"]["seq"]:
+            assert f"prefill_b{b}_s{n}" in names, (b, n)
             for tag in ("dense", "dejavu", "polar_d0500"):
                 assert f"decode_{tag}_b{b}_n{n}" in names, (tag, b, n)
+    assert man["buckets"]["prefill_chunk"] > 0

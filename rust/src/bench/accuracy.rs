@@ -10,9 +10,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::kv::pad_n;
 use crate::coordinator::Mode;
-use crate::runtime::{Engine, KvCache, Manifest, Tensor};
+use crate::runtime::{Engine, Manifest, Tensor};
 use crate::tokenizer::Tokenizer;
 use crate::workload::tasks::{load_suite, score, SuiteScore, TaskItem};
 
@@ -30,21 +29,22 @@ pub fn generate_one(
     prompt_ids: &[i32],
     max_new: usize,
 ) -> Result<Vec<i32>> {
-    let m = engine.exec.manifest();
-    let s_len = m.prefill_len;
     if prompt_ids.is_empty() {
         bail!("empty prompt");
     }
-    let plen = prompt_ids.len().min(s_len);
-    let mut toks = vec![crate::tokenizer::PAD; s_len];
-    toks[..plen].copy_from_slice(&prompt_ids[..plen]);
+    // chunked prefill streams the whole prompt straight into the eval
+    // bucket (no monolithic 64-token cap, no pad-to-bucket copy); an
+    // over-long prompt is an error, never a silent truncation
+    let plen = prompt_ids.len();
+    if plen >= EVAL_N {
+        bail!("prompt of {plen} tokens does not fit the eval bucket {EVAL_N}");
+    }
     let out = engine.prefill(
-        &Tensor::i32(toks, vec![1, s_len])?,
+        &Tensor::i32(prompt_ids.to_vec(), vec![1, plen])?,
         &Tensor::i32(vec![plen as i32], vec![1])?,
+        EVAL_N,
     )?;
-    // promote prefill KV (n=prefill bucket) to the eval bucket
-    let kvt = out.kv.to_tensor()?;
-    let mut kv = KvCache::from_tensor(&pad_n(&kvt, EVAL_N)?, 1, EVAL_N)?;
+    let mut kv = out.kv;
     let mut logits = out.logits;
     let mut ids = Vec::with_capacity(max_new);
     let mut len = plen;

@@ -6,6 +6,7 @@ pub mod accuracy;
 pub mod decode_breakdown;
 pub mod figures;
 pub mod harness;
+pub mod prefill_interference;
 pub mod serving;
 pub mod sparsity_scaling;
 pub mod throughput;

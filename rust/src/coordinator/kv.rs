@@ -96,6 +96,56 @@ pub fn write_slot(kv: &mut Tensor, slot_kv: &Tensor, b: usize) -> Result<()> {
     copy_slot(kv, b, slot_kv, 0)
 }
 
+/// Append a chunk's KV into one slot of a batch cache at a position
+/// offset: positions `[offset, offset + c_len)` of slot `b` are
+/// overwritten from the first `c_len` positions of `chunk` (a
+/// single-slot cache `[L,2,1,G,C,dh]`); everything else — other slots,
+/// the slot's own prefix and tail — is untouched. The host-side mirror
+/// of the chunked-prefill entries' on-device masked writes, used for
+/// composition surgery and by the mock engine.
+pub fn append_chunk(
+    dst: &mut Tensor,
+    b: usize,
+    chunk: &Tensor,
+    offset: usize,
+    c_len: usize,
+) -> Result<()> {
+    let (l, two, bsz, g, n, dh) = dims6(dst)?;
+    let (l2, _, one, g2, c, dh2) = dims6(chunk)?;
+    if l2 != l || g2 != g || dh2 != dh {
+        bail!(
+            "append_chunk: chunk {:?} incompatible with dst {:?}",
+            chunk.shape(),
+            dst.shape()
+        );
+    }
+    if one != 1 {
+        bail!("append_chunk: chunk is not a single-slot cache");
+    }
+    if c_len > c {
+        bail!("append_chunk: c_len {c_len} > chunk positions {c}");
+    }
+    if offset + c_len > n {
+        bail!("append_chunk: offset {offset} + len {c_len} > bucket {n}");
+    }
+    if b >= bsz {
+        bail!("append_chunk: slot {b} out of range (B={bsz})");
+    }
+    let s = chunk.as_f32()?;
+    let d = dst.as_f32_mut()?;
+    for li in 0..l {
+        for ch in 0..two {
+            for gi in 0..g {
+                let sbase = ((((li * two + ch) * 1) * g) + gi) * c * dh;
+                let dbase = (((((li * two + ch) * bsz + b) * g) + gi) * n + offset) * dh;
+                d[dbase..dbase + c_len * dh]
+                    .copy_from_slice(&s[sbase..sbase + c_len * dh]);
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Zero a slot (freed sequence) so stale KV never leaks into attention.
 pub fn clear_slot(kv: &mut Tensor, b: usize) -> Result<()> {
     let (l, two, bsz, g, n, dh) = dims6(kv)?;
@@ -501,6 +551,69 @@ mod tests {
                         got.as_f32().unwrap().iter().all(|&x| x == 0.0),
                         "untouched slot {t} non-zero"
                     );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Chunk-append must touch exactly `[offset, offset+len)` of the
+    /// target slot: other slots, the slot's prefix and its tail survive
+    /// bit-exactly, and successive chunks reassemble a full sequence.
+    #[test]
+    fn prop_append_chunk_touches_only_the_window() {
+        check("kv-append-chunk", 30, |g| {
+            let (l, gg, dh) = (g.usize_in(1, 3), g.usize_in(1, 3), g.usize_in(1, 4));
+            let b = g.usize_in(1, 4);
+            let n = g.usize_in(2, 10);
+            let c = g.usize_in(1, n + 1);
+            let slot = g.usize_in(0, b);
+            let offset = g.usize_in(0, n - c + 2).min(n - c);
+            let c_len = g.usize_in(0, c + 1);
+            if offset + c_len > n {
+                return Ok(());
+            }
+            let delems: usize = shape(l, b, gg, n, dh).iter().product();
+            let before =
+                Tensor::f32(g.vec_f32(delems, -1.0, 1.0), shape(l, b, gg, n, dh)).unwrap();
+            let celems: usize = shape(l, 1, gg, c, dh).iter().product();
+            let chunk =
+                Tensor::f32(g.vec_f32(celems, 2.0, 3.0), shape(l, 1, gg, c, dh)).unwrap();
+            let mut dst = before.clone();
+            append_chunk(&mut dst, slot, &chunk, offset, c_len)
+                .map_err(|e| e.to_string())?;
+            for bi in 0..b {
+                let got = extract_slot(&dst, bi).unwrap();
+                let was = extract_slot(&before, bi).unwrap();
+                if bi != slot {
+                    prop_assert!(got == was, "foreign slot {bi} touched");
+                    continue;
+                }
+                let (gv, wv) = (got.as_f32().unwrap(), was.as_f32().unwrap());
+                let cv = chunk.as_f32().unwrap();
+                for li in 0..l {
+                    for ch in 0..2 {
+                        for gi in 0..gg {
+                            for p in 0..n {
+                                let di = ((((li * 2 + ch) * 1) * gg + gi) * n + p) * dh;
+                                let inside = p >= offset && p < offset + c_len;
+                                for x in 0..dh {
+                                    let want = if inside {
+                                        let si = ((((li * 2 + ch) * 1) * gg + gi) * c
+                                            + (p - offset))
+                                            * dh;
+                                        cv[si + x]
+                                    } else {
+                                        wv[di + x]
+                                    };
+                                    prop_assert!(
+                                        gv[di + x] == want,
+                                        "pos {p} dim {x} wrong (inside={inside})"
+                                    );
+                                }
+                            }
+                        }
+                    }
                 }
             }
             Ok(())

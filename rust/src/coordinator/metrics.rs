@@ -10,8 +10,17 @@ use crate::substrate::stats::Samples;
 pub struct EngineMetrics {
     /// Wall time of each decode step (all slots).
     pub step_latency: Samples,
-    /// Wall time of each prefill call.
-    pub prefill_latency: Samples,
+    /// Per-chunk prefill compute: wall time of each chunked-prefill
+    /// engine call (the old whole-prompt `prefill_latency` split into its
+    /// chunk pieces).
+    pub prefill_chunk_latency: Samples,
+    /// Queue wait per request: enqueue -> its first prefill chunk starts.
+    pub prefill_queue_wait: Samples,
+    /// First chunk start -> last chunk done per request (the prompt's
+    /// streaming span across interleaved steps).
+    pub prefill_chunk_span: Samples,
+    /// Last chunk done -> first token emitted (sampling overhead).
+    pub prefill_emit_gap: Samples,
     /// Inter-token latency samples, measured between consecutive real
     /// token emissions per slot (pushed by the scheduler's event loop).
     pub itl: Samples,
@@ -21,6 +30,15 @@ pub struct EngineMetrics {
     /// End-to-end per request.
     pub e2e: Samples,
     pub decode_steps: u64,
+    /// Scheduler iterations (chunked prefill and decode share a step).
+    pub sched_steps: u64,
+    /// Chunked-prefill engine calls / prompt tokens they consumed.
+    pub prefill_chunks: u64,
+    pub prefill_tokens: u64,
+    /// Steps that ran at least one prefill chunk, and the subset that
+    /// also ran a decode batch (the interleaving the chunked path buys).
+    pub prefill_steps: u64,
+    pub interleaved_steps: u64,
     pub generated_tokens: u64,
     /// Requests that reached a natural terminal (stop / length / cache
     /// limit / stop sequence). Cancellations and deadline expiries are
@@ -28,8 +46,12 @@ pub struct EngineMetrics {
     pub completed_requests: u64,
     pub cancelled_requests: u64,
     pub deadline_expired: u64,
-    /// Composition changes that touched the group cache (prefill splices
-    /// and batch re-buckets).
+    /// Prompts rejected as longer than the largest seq bucket
+    /// (`prompt_too_long` — the old path silently truncated these).
+    pub rejected_prompts: u64,
+    /// Composition changes that rebuilt the group cache on the host
+    /// (batch re-buckets — chunked prefill writes on-device and no
+    /// longer splices at admission).
     pub kv_rebuilds: u64,
     /// Batch-bucket changes specifically (each one a full-group copy —
     /// the quantity the shrink hysteresis bounds).
@@ -80,6 +102,7 @@ impl EngineMetrics {
             ("completed_requests", (self.completed_requests as usize).into()),
             ("cancelled_requests", (self.cancelled_requests as usize).into()),
             ("deadline_expired", (self.deadline_expired as usize).into()),
+            ("rejected_prompts", (self.rejected_prompts as usize).into()),
             ("decode_tok_per_s", self.decode_throughput().into()),
             ("total_tok_per_s", self.total_throughput().into()),
             ("step_ms_p50", (self.step_latency.p50() * 1e3).into()),
@@ -106,6 +129,51 @@ impl EngineMetrics {
         j.set("step_profile", profile.to_json());
         j
     }
+
+    /// The server's `stats.prefill` object: chunked-prefill counters, the
+    /// interleave ratio (prefill steps that also decoded), the per-chunk
+    /// compute / queue-wait latency series and the TTFT breakdown
+    /// (queued -> first chunk -> last chunk -> first token).
+    /// `queued_prompt_tokens` is the live gauge the scheduler computes.
+    pub fn prefill_json(&self, queued_prompt_tokens: usize) -> Json {
+        let interleave = if self.prefill_steps == 0 {
+            0.0
+        } else {
+            self.interleaved_steps as f64 / self.prefill_steps as f64
+        };
+        let chunks_per_step = if self.sched_steps == 0 {
+            0.0
+        } else {
+            self.prefill_chunks as f64 / self.sched_steps as f64
+        };
+        Json::obj(vec![
+            ("chunks", (self.prefill_chunks as usize).into()),
+            ("tokens", (self.prefill_tokens as usize).into()),
+            ("chunks_per_step", chunks_per_step.into()),
+            ("interleave_ratio", interleave.into()),
+            ("queued_prompt_tokens", queued_prompt_tokens.into()),
+            ("chunk_ms_p50", (self.prefill_chunk_latency.p50() * 1e3).into()),
+            ("chunk_ms_p99", (self.prefill_chunk_latency.p99() * 1e3).into()),
+            ("queue_wait_ms_p50", (self.prefill_queue_wait.p50() * 1e3).into()),
+            (
+                "ttft_breakdown",
+                Json::obj(vec![
+                    (
+                        "queued_to_first_chunk_ms_p50",
+                        (self.prefill_queue_wait.p50() * 1e3).into(),
+                    ),
+                    (
+                        "first_to_last_chunk_ms_p50",
+                        (self.prefill_chunk_span.p50() * 1e3).into(),
+                    ),
+                    (
+                        "last_chunk_to_first_token_ms_p50",
+                        (self.prefill_emit_gap.p50() * 1e3).into(),
+                    ),
+                ]),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +187,30 @@ mod tests {
         m.record_step(Duration::from_millis(10), 4);
         assert_eq!(m.generated_tokens, 8);
         assert!((m.decode_throughput() - 400.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn prefill_json_reports_breakdown_and_ratios() {
+        let mut m = EngineMetrics::default();
+        m.sched_steps = 10;
+        m.prefill_chunks = 5;
+        m.prefill_tokens = 70;
+        m.prefill_steps = 4;
+        m.interleaved_steps = 3;
+        m.prefill_queue_wait.push(0.002);
+        m.prefill_chunk_span.push(0.008);
+        m.prefill_emit_gap.push(0.0001);
+        m.prefill_chunk_latency.push(0.001);
+        let j = m.prefill_json(123);
+        assert_eq!(j.get("chunks").as_usize(), Some(5));
+        assert_eq!(j.get("tokens").as_usize(), Some(70));
+        assert_eq!(j.get("queued_prompt_tokens").as_usize(), Some(123));
+        assert_eq!(j.get("chunks_per_step").as_f64(), Some(0.5));
+        assert_eq!(j.get("interleave_ratio").as_f64(), Some(0.75));
+        let b = j.get("ttft_breakdown");
+        assert_eq!(b.get("queued_to_first_chunk_ms_p50").as_f64(), Some(2.0));
+        assert_eq!(b.get("first_to_last_chunk_ms_p50").as_f64(), Some(8.0));
+        assert!(b.get("last_chunk_to_first_token_ms_p50").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -4,8 +4,17 @@
 //!
 //! The "LM": for a prompt whose last id is `c`, it emits `c+1`, `c+2`, …
 //! until the id leaves byte range, then the `'\n'` stop token. It
-//! verifies scheduling and protocol behaviour, not numerics. KV carries a
-//! per-slot fingerprint in position 0 so tests can detect slot aliasing.
+//! verifies scheduling and protocol behaviour, not numerics. Chunked
+//! prefill **honors per-slot offsets**: each chunk call writes a
+//! fingerprint (the token id) at `[l=0, k, slot, g=0, position, d=0]`
+//! through [`super::kv::append_chunk`], so tests can read the cache back and
+//! prove that a long prompt streamed through many chunks landed
+//! un-truncated, in order, without clobbering co-resident slots. Decode
+//! mirrors the real entries' cache update too: every step writes a `-1`
+//! sentinel at each slot's `lengths-1` position — for a prefilling slot
+//! that lands on the next chunk position (which the chunk's masked
+//! write must overwrite), so the fingerprint tests fail if the
+//! chunk-after-decode overwrite ordering ever regresses.
 //!
 //! The mock also mirrors the engine's two KV paths for `bench
 //! decode-breakdown --smoke`: in the default *resident* mode a host KV is
@@ -99,9 +108,16 @@ pub struct MockEngine {
     cfg: ModelConfig,
     batch_buckets: Vec<usize>,
     seq_buckets: Vec<usize>,
+    /// Chunked-prefill token width (mirrors `Manifest::prefill_chunk`).
+    chunk_len: usize,
     /// Artificial per-decode-step delay, so tests can race cancellation
     /// against generation deterministically.
     step_delay: Duration,
+    /// Artificial delay per prefill-chunk call: under the monolithic
+    /// budget a long prompt pays all its chunk delays inside one step
+    /// (stalling every decoder), under the chunked budget one per step —
+    /// the contrast `bench prefill-interference` measures.
+    chunk_delay: Duration,
     /// A/B: model the legacy host-KV path (full cache both ways per step).
     host_kv_path: bool,
     client: xla::PjRtClient,
@@ -136,7 +152,9 @@ impl MockEngine {
             },
             batch_buckets: vec![1, 2, 4, 8],
             seq_buckets: vec![16, 32, 64],
+            chunk_len: 16,
             step_delay: Duration::ZERO,
+            chunk_delay: Duration::ZERO,
             host_kv_path: false,
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
@@ -187,10 +205,45 @@ impl MockEngine {
         self
     }
 
+    /// Sleep this long inside every prefill-chunk call.
+    pub fn with_chunk_delay(mut self, d: Duration) -> Self {
+        self.chunk_delay = d;
+        self
+    }
+
+    /// Replace the seq-bucket ladder (ascending; the largest bucket
+    /// becomes `max_seq`, i.e. the longest admissible prompt). Lets the
+    /// interference bench admit a 1024-token prompt through the mock.
+    pub fn with_seq_buckets(mut self, buckets: Vec<usize>) -> Self {
+        assert!(!buckets.is_empty() && buckets.windows(2).all(|w| w[0] < w[1]));
+        self.cfg.max_seq = *buckets.last().unwrap();
+        self.seq_buckets = buckets;
+        self
+    }
+
     /// Model the legacy host-KV decode path (the A/B baseline).
     pub fn with_host_kv_path(mut self, host: bool) -> Self {
         self.host_kv_path = host;
         self
+    }
+
+    /// Read the prompt fingerprints of one slot out of a cache snapshot:
+    /// the token value written at each position by the chunked-prefill
+    /// path (0.0 = never written). Tests use this to prove long prompts
+    /// land un-truncated and in order.
+    pub fn slot_fingerprints(&self, kv: &Tensor, slot: usize) -> Result<Vec<f32>> {
+        let s = kv.shape();
+        if s.len() != 6 {
+            bail!("expected [L,2,B,G,N,dh], got {s:?}");
+        }
+        let (b, g, n, dh) = (s[2], s[3], s[4], s[5]);
+        if slot >= b {
+            bail!("slot {slot} out of range (B={b})");
+        }
+        let data = kv.as_f32()?;
+        // fingerprints live at [l=0, k=0, slot, g=0, pos, d=0]
+        let base = (slot * g) * n * dh;
+        Ok((0..n).map(|p| data[base + p * dh]).collect())
     }
 
     fn logits_for(&self, token: i32) -> Vec<f32> {
@@ -212,8 +265,8 @@ impl StepEngine for MockEngine {
     fn seq_buckets(&self) -> &[usize] {
         &self.seq_buckets
     }
-    fn prefill_len(&self) -> usize {
-        16
+    fn prefill_chunk_len(&self) -> usize {
+        self.chunk_len
     }
     fn profile_snapshot(&self) -> StepProfile {
         *self.profile.lock().unwrap()
@@ -221,25 +274,84 @@ impl StepEngine for MockEngine {
     fn reset_profile(&self) {
         *self.profile.lock().unwrap() = StepProfile::default();
     }
-    fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
-        let b = tokens.shape()[0];
-        let s = tokens.shape()[1];
-        let toks = tokens.as_i32()?;
-        let lens = lengths.as_i32()?;
+    fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        kv: KvCache,
+    ) -> Result<StepOutput> {
+        let t0 = Instant::now();
+        let b = kv.batch;
+        let n = kv.n;
+        let c = self.chunk_len;
+        if tokens.len() != b * c || lengths.len() != b || offset.len() != b {
+            bail!(
+                "mock prefill_chunk: tokens {} / lengths {} / offset {} vs batch {b} chunk {c}",
+                tokens.len(),
+                lengths.len(),
+                offset.len()
+            );
+        }
+        if lengths.iter().any(|&l| l > 0) && !self.chunk_delay.is_zero() {
+            std::thread::sleep(self.chunk_delay);
+        }
+        // honor the offsets: fingerprint each written position with its
+        // token id through the same surgery primitive the host path uses,
+        // leaving inactive slots and untouched positions bit-identical
+        let mut t = kv.to_tensor()?;
         let mut logits = Vec::with_capacity(b * self.cfg.vocab);
         for i in 0..b {
-            let last = toks[i * s + (lens[i] as usize - 1).min(s - 1)];
-            logits.extend(self.logits_for(last));
+            let len = lengths[i] as usize;
+            if len == 0 {
+                logits.extend(vec![0.0f32; self.cfg.vocab]);
+                continue;
+            }
+            let off = offset[i] as usize;
+            if len > c || off + len > n {
+                bail!("mock prefill_chunk: slot {i} window {off}+{len} vs chunk {c} bucket {n}");
+            }
+            let mut chunk_kv = Tensor::zeros_f32(self.cfg.kv_shape(1, len));
+            {
+                let d = chunk_kv.as_f32_mut()?;
+                let dh = self.cfg.d_head;
+                for p in 0..len {
+                    // flat index of [l=0, k=0, b=0, g=0, pos=p, d=0]
+                    d[p * dh] = tokens[i * c + p] as f32;
+                }
+            }
+            super::kv::append_chunk(&mut t, i, &chunk_kv, off, len)?;
+            logits.extend(self.logits_for(tokens[i * c + len - 1]));
         }
-        let mut kvt = Tensor::zeros_f32(self.cfg.kv_shape(b, 16));
-        // fingerprint: first element per slot = first prompt token
-        for i in 0..b {
-            let block = self.cfg.n_kv_heads * 16 * self.cfg.d_head;
-            kvt.as_f32_mut()?[i * block] = toks[i * s] as f32;
+        // transfer accounting, mirroring the real engine's two paths
+        let kv_bytes = (self.cfg.kv_elems(b, n) * 4) as u64;
+        let payload = (tokens.len() * 4 + lengths.len() * 4 + offset.len() * 4) as u64;
+        let logits_bytes = (b * self.cfg.vocab * 4) as u64;
+        let was_resident = kv.is_resident();
+        let kv_out = if self.host_kv_path {
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += payload + kv_bytes;
+            p.d2h_bytes += logits_bytes + kv_bytes;
+            KvCache::from_tensor(&t, b, n)?
+        } else {
+            // resident path: the chunk write happens on-device; the cache
+            // is uploaded only when it arrived as a host literal (fresh
+            // group or post-surgery) and then stays put
+            let lit = t.to_literal()?;
+            let buf = self.client.buffer_from_host_literal(None, &lit)?;
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += payload + if was_resident { 0 } else { kv_bytes };
+            p.d2h_bytes += logits_bytes;
+            KvCache { store: KvStore::Buf(buf), batch: b, n }
+        };
+        {
+            let mut p = self.profile.lock().unwrap();
+            p.prefill_ns += t0.elapsed().as_nanos() as u64;
+            p.prefill_chunks += 1;
         }
         Ok(StepOutput {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
-            kv: KvCache::from_tensor(&kvt, b, 16)?,
+            kv: kv_out,
         })
     }
     fn decode(
@@ -274,8 +386,34 @@ impl StepEngine for MockEngine {
             }
             logits.extend(row);
         }
+        // mirror the real decode entries' cache update: every slot gets
+        // this step's K/V written at position lengths-1. For running
+        // slots that is the new token's position; for a *prefilling*
+        // slot the scheduler aims it at the next chunk position, whose
+        // masked write must overwrite it — the sentinel makes the
+        // fingerprint tests fail if that overwrite ordering ever breaks.
+        let (batch, n) = (kv.batch, kv.n);
+        if let Some(&max) = lengths.iter().max() {
+            if max as usize > n {
+                bail!("mock decode: length {max} exceeds kv bucket {n}");
+            }
+        }
+        let was_resident = kv.is_resident();
+        let mut t = kv.to_tensor()?;
+        {
+            let d = t.as_f32_mut()?;
+            let g = self.cfg.n_kv_heads;
+            let dh = self.cfg.d_head;
+            for (i, &len) in lengths.iter().enumerate() {
+                let pos = (len.max(1) as usize) - 1;
+                // flat index of [l=0, k=0, slot=i, g=0, pos, d=0]
+                d[((i * g) * n + pos) * dh] = -1.0;
+            }
+        }
         // transfer accounting, mirroring the real engine's two paths
-        let kv_bytes = (self.cfg.kv_elems(kv.batch, kv.n) * 4) as u64;
+        // (analytic: counters reflect what the real paths would move,
+        // not the host-side copies this mock makes)
+        let kv_bytes = (self.cfg.kv_elems(batch, n) * 4) as u64;
         let io_bytes = (tokens.len() * 4 + lengths.len() * 4) as u64;
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
         let kv_out = if self.host_kv_path {
@@ -284,18 +422,13 @@ impl StepEngine for MockEngine {
             p.h2d_bytes += io_bytes + kv_bytes;
             p.d2h_bytes += logits_bytes + kv_bytes;
             p.decode_steps += 1;
-            kv
+            KvCache::from_tensor(&t, batch, n)?
         } else {
             // resident path: the cache is uploaded once (when it arrives
             // as a host literal after surgery) and then stays put
-            let (batch, n) = (kv.batch, kv.n);
-            let (store, uploaded) = match kv.store {
-                KvStore::Buf(buf) => (KvStore::Buf(buf), 0),
-                KvStore::Lit(lit) => (
-                    KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?),
-                    kv_bytes,
-                ),
-            };
+            let uploaded = if was_resident { 0 } else { kv_bytes };
+            let lit = t.to_literal()?;
+            let store = KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?);
             let mut p = self.profile.lock().unwrap();
             p.h2d_bytes += io_bytes + uploaded;
             p.d2h_bytes += logits_bytes;

@@ -1,14 +1,16 @@
 //! L3 coordinator: the paper's serving-system contribution.
 //!
-//! Modules: continuous batching scheduler over static-shape executables
-//! (event-driven: `Scheduler::step()` emits per-token
-//! [`GenerationEvent`]s), KV-slot surgery, sparsity controller (dense /
-//! DejaVu / Polar), sampler, metrics, and a deterministic mock engine for
-//! tests and offline protocol work.
+//! Modules: continuous batching scheduler with chunked prefill over
+//! static-shape executables (event-driven: `Scheduler::step()` emits
+//! per-token [`GenerationEvent`]s), the token-budget prefill planner,
+//! KV-slot surgery, sparsity controller (dense / DejaVu / Polar),
+//! sampler, metrics, and a deterministic mock engine for tests and
+//! offline protocol work.
 
 pub mod kv;
 pub mod metrics;
 pub mod mock;
+pub mod planner;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
@@ -85,8 +87,12 @@ mod scheduler_tests {
             assert_eq!(c.output_ids.len(), 3 + c.id as usize);
         }
         assert_eq!(s.metrics.completed_requests, 6);
-        // batch bucket grew past 4
-        assert!(s.metrics.kv_rebuilds >= 1);
+        // every prompt streamed through the chunked-prefill path; the
+        // fresh group needed no host splice at all (admission writes
+        // land on-device now, re-buckets are the only rebuild source)
+        assert!(s.metrics.prefill_chunks >= 1);
+        assert_eq!(s.metrics.prefill_tokens, 12);
+        assert_eq!(s.metrics.kv_rebuilds, 0);
     }
 
     #[test]
@@ -296,6 +302,7 @@ mod scheduler_tests {
             max_batch: 8,
             compact: true,
             shrink_patience: 6,
+            ..Default::default()
         });
         for i in 0..4 {
             s.enqueue(req(i, 100 + i as i32, 30));
@@ -333,6 +340,7 @@ mod scheduler_tests {
                 max_batch: 8,
                 compact: true,
                 shrink_patience: patience,
+                ..Default::default()
             });
             for i in 0..4 {
                 s.enqueue(req(i, 100 + i as i32, 30));
@@ -452,10 +460,20 @@ mod scheduler_tests {
     fn surgery_metrics_account_composition_changes() {
         let mut s = sched();
         for i in 0..3 {
+            s.enqueue(req(i, 100 + i as i32, 8));
+        }
+        s.step().unwrap();
+        // admission itself splices nothing any more: chunks write into
+        // the resident cache on-device
+        assert_eq!(s.metrics.slot_copies, 0);
+        assert_eq!(s.metrics.kv_rebuilds, 0);
+        // growing the batch bucket mid-flight is still a (slot-
+        // incremental) host rebuild: the 3 live slots are copied
+        for i in 3..6 {
             s.enqueue(req(i, 100 + i as i32, 4));
         }
         s.run_to_completion().unwrap();
-        // 3 newcomers spliced slot-incrementally
+        assert!(s.metrics.regroups >= 1);
         assert!(s.metrics.slot_copies >= 3);
         assert!(s.metrics.kv_pool_allocs >= 1);
         assert!(s.metrics.host_surgery_s >= 0.0);
@@ -464,6 +482,220 @@ mod scheduler_tests {
         // mock resident path: per-step d2h is logits-only, h2d is
         // tokens/lengths (+ one cache upload after each composition change)
         assert!(p.d2h_bytes > 0 && p.h2d_bytes > 0);
+        // prefill sub-timings surfaced through the merged profile
+        assert!(p.prefill_chunks >= 2);
+    }
+
+    /// A prompt far past the old monolithic bucket (64) streams through
+    /// successive chunks un-truncated: the mock fingerprints every cache
+    /// position it writes, so the whole 1024-token prompt must be present
+    /// in order, and the first generated token must continue the *true*
+    /// last prompt token (truncation would continue an earlier one).
+    #[test]
+    fn long_prompt_streams_untruncated_through_chunks() {
+        let eng = MockEngine::new()
+            .with_seq_buckets(vec![16, 32, 64, 128, 256, 512, 1024, 1152]);
+        let mut s = Scheduler::new(
+            eng,
+            SparsityController::new(Mode::Dense),
+            SchedulerConfig { max_batch: 8, ..Default::default() },
+        );
+        let prompt: Vec<i32> = (0..1024).map(|i| (i % 200) + 20).collect();
+        let last = *prompt.last().unwrap();
+        s.enqueue(Request::builder(prompt.clone()).id(1).max_new_tokens(4).build());
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].prompt_len, 1024);
+        assert_eq!(
+            done[0].output_ids,
+            vec![last + 1, last + 2, last + 3, last + 4]
+        );
+        // 1024 tokens / 16-token chunks, one chunk per step by default
+        assert_eq!(s.metrics.prefill_chunks, 64);
+        assert_eq!(s.metrics.prefill_tokens, 1024);
+        assert!(s.n_bucket() >= 1025 || s.capacity() == 0);
+    }
+
+    /// While a long prompt is being admitted, an already-running decoder
+    /// keeps emitting exactly one token per step — chunked prefill and
+    /// the decode batch share each step (no head-of-line blocking).
+    #[test]
+    fn prefill_chunks_interleave_with_decode() {
+        let mut s = sched();
+        s.enqueue(req(1, 100, 40));
+        s.step().unwrap(); // decoder admitted + first tokens
+        // long prompt: 40 tokens = 2 full chunks + one 8-token chunk
+        let prompt: Vec<i32> = (0..40).map(|i| 30 + (i % 100)) .collect();
+        let plast = *prompt.last().unwrap();
+        s.enqueue(Request::builder(prompt).id(2).max_new_tokens(3).build());
+        let mut decoder_tokens_during_prefill = 0;
+        let mut prefilled_at_step = None;
+        for step in 0..3 {
+            let events = s.step().unwrap();
+            for ev in &events {
+                match ev {
+                    GenerationEvent::Token { request: 1, .. } => {
+                        decoder_tokens_during_prefill += 1;
+                    }
+                    GenerationEvent::Prefilled { request: 2 } => {
+                        prefilled_at_step = Some(step);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // one decoder token per step, even while request 2 prefilled
+        assert_eq!(decoder_tokens_during_prefill, 3);
+        assert_eq!(prefilled_at_step, Some(2), "3 chunks -> prefilled on 3rd step");
+        assert!(s.metrics.interleaved_steps >= 3);
+        let done = s.run_to_completion().unwrap();
+        let c2 = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.output_ids, vec![plast + 1, plast + 2, plast + 3]);
+    }
+
+    /// The mock honors offsets end-to-end: after interleaved admission,
+    /// the cache carries both slots' prompts at their own positions —
+    /// chunk writes never clobber a co-resident slot.
+    #[test]
+    fn chunk_writes_preserve_coresident_slots() {
+        let mut s = sched();
+        s.enqueue(req(1, 100, 20));
+        s.step().unwrap();
+        let prompt: Vec<i32> = (40..40 + 36).collect(); // 3 chunks
+        s.enqueue(Request::builder(prompt.clone()).id(2).max_new_tokens(2).build());
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        let kv = s.kv_snapshot().unwrap().expect("group cache");
+        // slot 1 = the long prompt, positions 0..36 in admission order
+        let fp1 = s.engine().slot_fingerprints(&kv, 1).unwrap();
+        for (p, &t) in prompt.iter().enumerate() {
+            assert_eq!(fp1[p], t as f32, "position {p} clobbered or misplaced");
+        }
+        // slot 0 = the decoder's prompt [100, 100], still intact
+        let fp0 = s.engine().slot_fingerprints(&kv, 0).unwrap();
+        assert_eq!(&fp0[..2], &[100.0, 100.0]);
+        s.run_to_completion().unwrap();
+    }
+
+    /// The planner with the default budget must generate exactly the
+    /// same tokens as the monolithic schedule (budget = MAX, the
+    /// pre-refactor behaviour) for short prompts.
+    #[test]
+    fn chunked_schedule_matches_monolithic_tokens() {
+        let run = |budget: usize| {
+            let mut s = sched_with(SchedulerConfig {
+                max_batch: 8,
+                prefill_chunk_tokens: budget,
+                ..Default::default()
+            });
+            for i in 0..5 {
+                let prompt: Vec<i32> = (0..(2 + 7 * i as i32)).map(|k| 60 + k).collect();
+                s.enqueue(
+                    Request::builder(prompt)
+                        .id(i)
+                        .max_new_tokens(3 + i as usize)
+                        .build(),
+                );
+            }
+            let mut done = s.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            done.iter().map(|c| c.output_ids.clone()).collect::<Vec<_>>()
+        };
+        let chunked = run(0); // default: one chunk bucket per step
+        let monolithic = run(usize::MAX);
+        assert_eq!(chunked, monolithic);
+        // and both match the mock's +1-chain ground truth
+        for (i, out) in chunked.iter().enumerate() {
+            let last = 60 + (2 + 7 * i as i32) - 1;
+            let want: Vec<i32> = (1..=(3 + i as i32)).map(|k| last + k).collect();
+            assert_eq!(out, &want, "request {i}");
+        }
+    }
+
+    /// A sub-chunk budget splits chunks: 32-token prompt at 8 tokens per
+    /// step takes 4 steps of 8-token windows (offsets need no alignment).
+    #[test]
+    fn sub_chunk_budget_throttles_prefill() {
+        let mut s = sched_with(SchedulerConfig {
+            max_batch: 8,
+            prefill_chunk_tokens: 8,
+            ..Default::default()
+        });
+        let prompt: Vec<i32> = (100..132).collect();
+        s.enqueue(Request::builder(prompt).id(1).max_new_tokens(2).build());
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].output_ids, vec![132, 133]);
+        assert_eq!(s.metrics.prefill_chunks, 4);
+        assert_eq!(s.metrics.prefill_tokens, 32);
+    }
+
+    /// Over-long prompts are rejected with `prompt_too_long` instead of
+    /// the old silent truncation; a prompt that exactly fills the
+    /// largest bucket is accepted and yields its first token before
+    /// finishing CacheLimit.
+    #[test]
+    fn prompt_too_long_rejected_exact_fill_accepted() {
+        let mut s = sched();
+        assert_eq!(s.max_prompt_len(), 64);
+        s.enqueue(Request::builder(vec![50; 65]).id(1).max_new_tokens(4).build());
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::PromptTooLong);
+        assert!(done[0].output_ids.is_empty());
+        assert_eq!(s.metrics.rejected_prompts, 1);
+        assert_eq!(s.metrics.prefill_chunks, 0, "rejected prompt must not prefill");
+
+        // exactly filling the largest bucket is legal
+        let mut s = sched();
+        s.enqueue(Request::builder(vec![70; 64]).id(2).max_new_tokens(8).build());
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::CacheLimit);
+        assert_eq!(done[0].output_ids, vec![71]);
+        assert_eq!(done[0].prompt_len, 64);
+        assert_eq!(s.metrics.rejected_prompts, 0);
+    }
+
+    /// An empty prompt can never complete a chunk; it must finish with
+    /// zero tokens instead of parking a Prefilling slot forever.
+    #[test]
+    fn empty_prompt_finishes_without_tokens() {
+        let mut s = sched();
+        s.enqueue(Request::builder(vec![]).id(1).max_new_tokens(5).build());
+        s.enqueue(req(2, 10, 2)); // a real request behind it still runs
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let c1 = done.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c1.finish, FinishReason::Length);
+        assert!(c1.output_ids.is_empty());
+        let c2 = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.output_ids, vec![11, 12]);
+        assert!(s.is_idle());
+    }
+
+    /// Cancelling a request mid-prefill frees its slot before the prompt
+    /// ever finishes streaming.
+    #[test]
+    fn cancel_during_prefill_frees_slot() {
+        let mut s = sched();
+        let prompt: Vec<i32> = (0..48).map(|k| 60 + k).collect(); // 3 chunks
+        s.enqueue(Request::builder(prompt).id(1).max_new_tokens(5).build());
+        s.step().unwrap(); // 1 of 3 chunks done
+        assert_eq!(s.active_len(), 1);
+        assert!(s.cancel(1));
+        assert_eq!(s.active_len(), 0);
+        let events = s.step().unwrap();
+        let c = events
+            .into_iter()
+            .find_map(|e| match e {
+                GenerationEvent::Cancelled(c) => Some(c),
+                _ => None,
+            })
+            .expect("cancelled event");
+        assert!(c.output_ids.is_empty(), "no token was ever emitted");
+        assert!(s.metrics.prefill_chunks < 3);
+        while !s.is_idle() {
+            s.step().unwrap();
+        }
     }
 
     #[test]

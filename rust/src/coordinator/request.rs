@@ -127,6 +127,10 @@ pub enum FinishReason {
     Cancelled,
     /// The request's relative deadline expired before it finished.
     Deadline,
+    /// The prompt exceeds the largest seq bucket; rejected instead of
+    /// silently truncated (the server surfaces this as the
+    /// `prompt_too_long` protocol error before a slot is burned).
+    PromptTooLong,
 }
 
 impl FinishReason {
@@ -139,6 +143,7 @@ impl FinishReason {
             FinishReason::StopSequence => "stop_sequence",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Deadline => "deadline",
+            FinishReason::PromptTooLong => "prompt_too_long",
         }
     }
 }
@@ -259,5 +264,6 @@ mod tests {
         assert_eq!(FinishReason::StopSequence.as_str(), "stop_sequence");
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
         assert_eq!(FinishReason::Deadline.as_str(), "deadline");
+        assert_eq!(FinishReason::PromptTooLong.as_str(), "prompt_too_long");
     }
 }

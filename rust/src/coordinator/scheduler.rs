@@ -1,29 +1,40 @@
-//! Iteration-level scheduler: continuous batching over static-shape
-//! executables (the CUDA-graph-style constraint, DESIGN.md).
+//! Iteration-level scheduler: continuous batching with chunked prefill
+//! over static-shape executables (the CUDA-graph-style constraint,
+//! DESIGN.md).
 //!
 //! Responsibilities per step:
 //!   1. expire deadlines, reap finished slots -> terminal events
-//!   2. admit pending requests by priority: pick the batch bucket,
-//!      batch-prefill the newcomers, splice their KV into the group cache
-//!   3. promote the seq bucket when any sequence outgrows it
-//!   4. ask the sparsity controller for this step's plan (entry tag +
+//!   2. admit pending requests by priority: reject over-long prompts,
+//!      pick the batch bucket, assign newcomers to slots in the
+//!      `Prefilling` state (no prompt compute yet)
+//!   3. spend the step's prefill token budget ([`planner`]) on the oldest
+//!      admitted-but-unprefilled prompts: each chunk call appends into
+//!      the resident group cache at a per-slot position offset, and the
+//!      final chunk's logits yield the request's first token
+//!   4. promote the seq bucket when any sequence outgrows it
+//!   5. ask the sparsity controller for this step's plan (entry tag +
 //!      router-produced `head_idx`/`mlp_idx` tensors) and run one decode
-//!      step through it
-//!   5. sample next tokens per active slot -> `Token` events
+//!      step for the running slots — *in the same step as the prefill
+//!      chunks*, so a long prompt's admission never stalls running
+//!      decoders for more than one chunk (no prefill head-of-line
+//!      blocking)
+//!   6. sample next tokens per active slot -> `Token` events
 //!
 //! `step()` returns the [`GenerationEvent`]s produced this iteration: for
 //! every request the stream is `Queued` -> `Prefilled` -> `Token`+ ->
 //! `Finished`/`Cancelled`. TTFT and inter-token latency are recorded at
 //! the moment each token is emitted, not reconstructed at completion.
 //!
-//! The group KV cache stays resident on the engine between steps;
-//! host-side surgery happens only on composition changes (admission /
-//! re-bucketing) and is slot-incremental through a pooled buffer
-//! ([`kv::KvPool`]). Batch-bucket *growth* is immediate (a bigger batch
-//! cannot run in the current bucket), but *shrinking* waits
-//! `shrink_patience` consecutive eligible steps so an admit/finish
-//! oscillation around a bucket boundary cannot trigger a full-cache
-//! rebuild every step.
+//! The group KV cache stays resident on the engine between steps —
+//! prefill chunks write into it on-device (masked per-position writes, so
+//! co-resident slots are never clobbered), which removes the host-side
+//! KV splice the monolithic prefill path paid on every admission.
+//! Host-side surgery happens only on composition changes (re-bucketing)
+//! and is slot-incremental through a pooled buffer ([`kv::KvPool`]).
+//! Batch-bucket *growth* is immediate (a bigger batch cannot run in the
+//! current bucket), but *shrinking* waits `shrink_patience` consecutive
+//! eligible steps so an admit/finish oscillation around a bucket boundary
+//! cannot trigger a full-cache rebuild every step.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -31,10 +42,12 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::runtime::{KvCache, ModelConfig, StepOutput, StepProfile, StepRouting, Tensor};
+use crate::substrate::json::Json;
 use crate::tokenizer::{token_byte_len, PAD};
 
 use super::kv;
 use super::metrics::EngineMetrics;
+use super::planner::{self, PrefillJob};
 use super::request::{Completion, FinishReason, GenerationEvent, Request};
 use super::sampler::Sampler;
 use super::sparsity::SparsityController;
@@ -44,8 +57,21 @@ pub trait StepEngine {
     fn config(&self) -> &ModelConfig;
     fn batch_buckets(&self) -> &[usize];
     fn seq_buckets(&self) -> &[usize];
-    fn prefill_len(&self) -> usize;
-    fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput>;
+    /// Token width of one chunked-prefill call.
+    fn prefill_chunk_len(&self) -> usize;
+    /// Append one prompt chunk per slot into the group cache at per-slot
+    /// position offsets. `tokens`: [B*C] row-major (C = chunk width),
+    /// `lengths`: valid tokens per slot in this chunk (0 = inactive slot,
+    /// cache row untouched), `offset`: absolute start positions. Returns
+    /// each slot's logits at its chunk's last position (the first-token
+    /// logits when the chunk completes a prompt) plus the updated cache.
+    fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        kv: KvCache,
+    ) -> Result<StepOutput>;
     /// One decode step. `routing` carries the sparsity controller's
     /// per-step head/MLP index tensors for index-taking entries; engines
     /// whose entries route in-graph (and the dense/dejavu paths) receive
@@ -76,11 +102,17 @@ impl StepEngine for crate::runtime::Engine {
     fn seq_buckets(&self) -> &[usize] {
         &self.exec.manifest().seq_buckets
     }
-    fn prefill_len(&self) -> usize {
-        self.exec.manifest().prefill_len
+    fn prefill_chunk_len(&self) -> usize {
+        crate::runtime::Engine::prefill_chunk_len(self)
     }
-    fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
-        crate::runtime::Engine::prefill(self, tokens, lengths)
+    fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        kv: KvCache,
+    ) -> Result<StepOutput> {
+        crate::runtime::Engine::prefill_chunk(self, tokens, lengths, offset, kv)
     }
     fn decode(
         &self,
@@ -100,14 +132,30 @@ impl StepEngine for crate::runtime::Engine {
     }
 }
 
+/// Where a slot is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotPhase {
+    /// Admitted; prompt positions `[0, next_pos)` are in the group cache,
+    /// the rest stream in chunk by chunk under the step token budget.
+    Prefilling { next_pos: usize },
+    /// Prompt fully prefilled and first token emitted; decoding.
+    Running,
+}
+
 struct Slot {
     req: Request,
     sampler: Sampler,
-    /// prompt_len + generated tokens (== attention length of the next step)
+    phase: SlotPhase,
+    /// Admission order (monotonic): the planner serves older slots first.
+    seq: u64,
+    /// prompt_len + generated tokens (== attention length of the next
+    /// step); meaningful once `Running`.
     len: usize,
     generated: Vec<i32>,
     /// decoded-text byte length of `generated` (Token event text_offset)
     text_len: usize,
+    first_chunk_at: Option<Instant>,
+    last_chunk_at: Option<Instant>,
     first_token_at: Option<Instant>,
     /// last token emission (inter-token latency is measured between these)
     last_token_at: Instant,
@@ -131,11 +179,22 @@ pub struct SchedulerConfig {
     /// behaviour); higher values absorb admit/finish oscillation around a
     /// bucket boundary, each avoided re-bucket being a full-cache copy.
     pub shrink_patience: usize,
+    /// Prompt tokens one step may spend on prefill chunks (0 = one chunk
+    /// bucket, the default). Larger budgets admit prompts faster at the
+    /// cost of longer stalls for running decoders; `usize::MAX`
+    /// reproduces the old monolithic behaviour (whole prompt in one step)
+    /// and is the A/B baseline of `bench prefill-interference`.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_batch: 16, compact: true, shrink_patience: 8 }
+        SchedulerConfig {
+            max_batch: 16,
+            compact: true,
+            shrink_patience: 8,
+            prefill_chunk_tokens: 0,
+        }
     }
 }
 
@@ -151,6 +210,8 @@ pub struct Scheduler<E: StepEngine> {
     pool: kv::KvPool,
     /// Consecutive steps a shrink has been possible (bucket hysteresis).
     shrink_streak: usize,
+    /// Monotonic admission counter (planner seniority).
+    admit_seq: u64,
     /// Events produced since the last `step()` return (enqueue/cancel also
     /// buffer here so lifecycle events are never lost between steps).
     events: Vec<GenerationEvent>,
@@ -170,6 +231,7 @@ impl<E: StepEngine> Scheduler<E> {
             n_bucket: n0,
             pool: kv::KvPool::new(),
             shrink_streak: 0,
+            admit_seq: 0,
             events: Vec::new(),
             metrics: EngineMetrics::default(),
         }
@@ -192,6 +254,14 @@ impl<E: StepEngine> Scheduler<E> {
         p
     }
 
+    /// Longest admissible prompt: the largest seq bucket. A prompt of
+    /// exactly this length is accepted (its first token comes out of the
+    /// prefill logits, then it finishes `CacheLimit`); anything longer is
+    /// rejected with `prompt_too_long` instead of being truncated.
+    pub fn max_prompt_len(&self) -> usize {
+        self.engine.seq_buckets().last().copied().unwrap_or(0)
+    }
+
     pub fn enqueue(&mut self, req: Request) {
         self.events.push(GenerationEvent::Queued { request: req.id });
         self.pending.push_back(req);
@@ -201,8 +271,43 @@ impl<E: StepEngine> Scheduler<E> {
         self.pending.len()
     }
 
+    /// Live requests holding a slot (prefilling or decoding).
     pub fn active_len(&self) -> usize {
         self.slots.iter().flatten().filter(|s| s.finished.is_none()).count()
+    }
+
+    /// Slots currently in the decode batch (running, unfinished).
+    fn decoding_len(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| s.finished.is_none() && s.phase == SlotPhase::Running)
+            .count()
+    }
+
+    /// Prompt tokens not yet prefilled: queued requests plus the
+    /// unprocessed remainder of prefilling slots (stats gauge).
+    pub fn queued_prompt_tokens(&self) -> usize {
+        let pending: usize = self.pending.iter().map(|r| r.prompt_ids.len()).sum();
+        let inflight: usize = self
+            .slots
+            .iter()
+            .flatten()
+            .filter(|s| s.finished.is_none())
+            .map(|s| match s.phase {
+                SlotPhase::Prefilling { next_pos } => {
+                    s.req.prompt_ids.len().saturating_sub(next_pos)
+                }
+                SlotPhase::Running => 0,
+            })
+            .sum();
+        pending + inflight
+    }
+
+    /// The server's `stats.prefill` object: chunk counts, interleave
+    /// ratio, queue-wait / chunk latency series and the TTFT breakdown.
+    pub fn prefill_stats(&self) -> Json {
+        self.metrics.prefill_json(self.queued_prompt_tokens())
     }
 
     pub fn is_idle(&self) -> bool {
@@ -219,6 +324,12 @@ impl<E: StepEngine> Scheduler<E> {
 
     pub fn n_bucket(&self) -> usize {
         self.n_bucket
+    }
+
+    /// Host snapshot of the group KV cache (tests/diagnostics only — on
+    /// the hot path the cache stays resident on the engine).
+    pub fn kv_snapshot(&self) -> Result<Option<Tensor>> {
+        self.group_kv.as_ref().map(|g| g.to_tensor()).transpose()
     }
 
     /// Cancel a pending or in-flight request. The slot (and its KV) is
@@ -269,14 +380,27 @@ impl<E: StepEngine> Scheduler<E> {
     /// (including any buffered by `enqueue`/`cancel` since the last step).
     pub fn step(&mut self) -> Result<Vec<GenerationEvent>> {
         let t_start = Instant::now();
+        self.metrics.sched_steps += 1;
         self.expire_deadlines();
         self.reap_finished();
         self.admit()?;
 
-        if self.active_len() > 0 {
+        // prefill chunks and the decode batch share the step: a long
+        // prompt streams in budget-sized pieces while running slots keep
+        // emitting tokens between its chunks
+        let did_prefill = self.run_prefill_chunks()?;
+        let mut did_decode = false;
+        if self.decoding_len() > 0 {
             self.maybe_promote_seq_bucket()?;
             self.decode_once()?;
             self.reap_finished();
+            did_decode = true;
+        }
+        if did_prefill {
+            self.metrics.prefill_steps += 1;
+            if did_decode {
+                self.metrics.interleaved_steps += 1;
+            }
         }
         if self.pending.is_empty() {
             self.maybe_compact()?;
@@ -340,6 +464,9 @@ impl<E: StepEngine> Scheduler<E> {
                 if finish == FinishReason::Deadline {
                     self.metrics.deadline_expired += 1;
                 }
+                if finish == FinishReason::PromptTooLong {
+                    self.metrics.rejected_prompts += 1;
+                }
                 self.events.push(GenerationEvent::Finished(c));
             }
         }
@@ -400,9 +527,46 @@ impl<E: StepEngine> Scheduler<E> {
             .collect()
     }
 
+    fn occupied_len(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Admission: reject over-long prompts, grow the batch bucket for
+    /// demand, and hand free slots to the highest-priority pending
+    /// requests as `Prefilling` slots. No prompt compute happens here —
+    /// the step's chunk budget does that work incrementally.
     fn admit(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
+        }
+        // structured rejection instead of the old silent truncation: a
+        // prompt that cannot fit the largest seq bucket never occupies a
+        // slot (the server surfaces the same condition as a protocol
+        // error before enqueue; this is the backstop for direct callers)
+        let limit = self.max_prompt_len();
+        if self
+            .pending
+            .iter()
+            .any(|r| r.prompt_ids.len() > limit || r.prompt_ids.is_empty())
+        {
+            let mut keep = VecDeque::with_capacity(self.pending.len());
+            while let Some(r) = self.pending.pop_front() {
+                if r.prompt_ids.len() > limit {
+                    self.finish_unstarted(r, FinishReason::PromptTooLong);
+                } else if r.prompt_ids.is_empty() {
+                    // nothing to condition a first token on: finish with
+                    // zero tokens instead of parking a slot that no chunk
+                    // could ever complete (the server rejects promptless
+                    // requests earlier; this is the direct-caller backstop)
+                    self.finish_unstarted(r, FinishReason::Length);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            self.pending = keep;
+            if self.pending.is_empty() {
+                return Ok(());
+            }
         }
         // highest priority first; stable sort keeps FIFO among equals
         // (skipped in the common all-equal case)
@@ -416,7 +580,7 @@ impl<E: StepEngine> Scheduler<E> {
                 .make_contiguous()
                 .sort_by_key(|r| std::cmp::Reverse(r.priority));
         }
-        let want = self.active_len() + self.pending.len();
+        let want = self.occupied_len() + self.pending.len();
         let target = self.batch_bucket_for(want);
         // growth is mandatory (the bigger batch cannot run otherwise);
         // shrinking is maybe_compact's job, behind hysteresis
@@ -435,106 +599,171 @@ impl<E: StepEngine> Scheduler<E> {
         let newcomers: Vec<Request> = (0..n_new)
             .map(|_| self.pending.pop_front().unwrap())
             .collect();
-        self.prefill_into(&newcomers, &free[..n_new])?;
-        Ok(())
-    }
 
-    /// Batch-prefill newcomers and splice their KV into the group cache.
-    fn prefill_into(&mut self, reqs: &[Request], slots: &[usize]) -> Result<()> {
-        let s_len = self.engine.prefill_len();
-        let pb = self.batch_bucket_for(reqs.len());
-        let mut toks = vec![PAD; pb * s_len];
-        let mut lens = vec![1i32; pb];
-        for (i, r) in reqs.iter().enumerate() {
-            let p = &r.prompt_ids[..r.prompt_ids.len().min(s_len)];
-            toks[i * s_len..i * s_len + p.len()].copy_from_slice(p);
-            lens[i] = p.len() as i32;
-        }
-        let t0 = Instant::now();
-        let out = self.engine.prefill(
-            &Tensor::i32(toks, vec![pb, s_len])?,
-            &Tensor::i32(lens.clone(), vec![pb])?,
-        )?;
-        self.metrics.prefill_latency.push_duration(t0.elapsed());
-
-        // the prefill logits give every newcomer its first token now
-        let logits = out.logits.as_f32()?;
-        let vocab = self.engine.config().vocab;
-
-        // group cache must exist and cover max(len)+1 positions
-        let max_need = reqs
+        // the group cache must exist and cover the longest admitted
+        // prompt (+1 for the first generated token; an exactly-filling
+        // prompt caps at the bucket and finishes CacheLimit after its
+        // first token)
+        let max_total = self.max_prompt_len();
+        let need = newcomers
             .iter()
-            .map(|r| r.prompt_ids.len().min(s_len) + 1)
+            .map(|r| (r.prompt_ids.len() + 1).min(max_total))
             .max()
             .unwrap();
         if self.group_kv.is_none() {
-            // fresh group: pick the bucket now; the zeroed cache is
-            // acquired directly as the splice target below (no interim
-            // literal roundtrip of an all-zeros tensor)
-            self.n_bucket = self.seq_bucket_for(max_need.max(self.n_bucket))?;
-        } else if max_need > self.n_bucket {
-            let n = self.seq_bucket_for(max_need)?;
+            self.n_bucket = self.seq_bucket_for(need.max(self.n_bucket))?;
+            let t_surgery = Instant::now();
+            let cfg = self.engine.config().clone();
+            let zeroed = self.pool.acquire(cfg.kv_shape(self.capacity(), self.n_bucket));
+            self.group_kv =
+                Some(KvCache::from_tensor(&zeroed, self.capacity(), self.n_bucket)?);
+            self.pool.release(zeroed);
+            self.note_surgery(t_surgery);
+        } else if need > self.n_bucket {
+            let n = self.seq_bucket_for(need)?;
             self.promote_seq_bucket(n)?;
         }
 
-        // slot-incremental splice: each newcomer's prefill KV is copied
-        // straight into its group slot, no per-slot intermediate
-        let t_surgery = Instant::now();
-        let mut gt = match self.group_kv.take() {
-            Some(gkv) => {
-                self.note_materialize(&gkv);
-                gkv.to_tensor()?
-            }
-            None => {
-                let cfg = self.engine.config().clone();
-                self.pool.acquire(cfg.kv_shape(self.capacity(), self.n_bucket))
-            }
-        };
-        let prefill_kv = out.kv.to_tensor()?;
-        for (i, r) in reqs.iter().enumerate() {
-            let slot_idx = slots[i];
-            kv::copy_slot(&mut gt, slot_idx, &prefill_kv, i)?;
-            self.metrics.slot_copies += 1;
-            let prompt_len = r.prompt_ids.len().min(s_len);
-            let row = &logits[i * vocab..(i + 1) * vocab];
-            let mut sampler = Sampler::new(r.params, r.id);
-            let first = sampler.sample(row);
-            let now = Instant::now();
-            // TTFT measured at first-token emission, not back-computed
-            self.metrics
-                .ttft
-                .push(now.duration_since(r.enqueued_at).as_secs_f64());
-            self.events.push(GenerationEvent::Prefilled { request: r.id });
-            self.events.push(GenerationEvent::Token {
-                request: r.id,
-                id: first,
-                index: 0,
-                text_offset: 0,
-            });
-            let mut slot = Slot {
-                req: r.clone(),
+        let now = Instant::now();
+        for (r, &slot_idx) in newcomers.into_iter().zip(free.iter()) {
+            self.admit_seq += 1;
+            let sampler = Sampler::new(r.params, r.id);
+            self.slots[slot_idx] = Some(Slot {
                 sampler,
-                len: prompt_len + 1,
-                generated: vec![first],
-                text_len: token_byte_len(first),
-                first_token_at: Some(now),
+                phase: SlotPhase::Prefilling { next_pos: 0 },
+                seq: self.admit_seq,
+                len: 0,
+                generated: Vec::new(),
+                text_len: 0,
+                first_chunk_at: None,
+                last_chunk_at: None,
+                first_token_at: None,
                 last_token_at: now,
                 finished: None,
-            };
-            if first == r.params.stop_token {
-                slot.finished = Some(FinishReason::Stop);
-            } else if hits_stop_sequence(&slot.generated, &r.stop_sequences) {
-                slot.finished = Some(FinishReason::StopSequence);
-            } else if r.params.max_new_tokens <= 1 {
-                slot.finished = Some(FinishReason::Length);
-            }
-            self.slots[slot_idx] = Some(slot);
+                req: r,
+            });
         }
-        self.metrics.kv_rebuilds += 1;
-        self.group_kv = Some(KvCache::from_tensor(&gt, self.capacity(), self.n_bucket)?);
-        self.pool.release(gt);
-        self.note_surgery(t_surgery);
         Ok(())
+    }
+
+    /// Spend this step's token budget on prefill chunks (planner order:
+    /// oldest admitted first). Slots whose final chunk lands here sample
+    /// their first token from the chunk logits and switch to `Running`.
+    /// Returns whether any chunk ran.
+    fn run_prefill_chunks(&mut self) -> Result<bool> {
+        let chunk = self.engine.prefill_chunk_len().max(1);
+        let budget = if self.cfg.prefill_chunk_tokens == 0 {
+            chunk
+        } else {
+            self.cfg.prefill_chunk_tokens
+        };
+        let jobs: Vec<PrefillJob> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                let s = slot.as_ref()?;
+                if s.finished.is_some() {
+                    return None;
+                }
+                match s.phase {
+                    SlotPhase::Prefilling { next_pos } => Some(PrefillJob {
+                        slot: i,
+                        next_pos,
+                        prompt_len: s.req.prompt_ids.len(),
+                        seq: s.seq,
+                    }),
+                    SlotPhase::Running => None,
+                }
+            })
+            .collect();
+        if jobs.is_empty() {
+            return Ok(false);
+        }
+        let calls = planner::plan_step(&jobs, budget, chunk);
+        if calls.is_empty() {
+            return Ok(false);
+        }
+        let b = self.capacity();
+        let vocab = self.engine.config().vocab;
+        let max_total = self.max_prompt_len();
+        for call in calls {
+            let mut toks = vec![PAD; b * chunk];
+            let mut lens = vec![0i32; b];
+            let mut offs = vec![0i32; b];
+            for a in &call {
+                let s = self.slots[a.slot].as_ref().unwrap();
+                toks[a.slot * chunk..a.slot * chunk + a.len]
+                    .copy_from_slice(&s.req.prompt_ids[a.offset..a.offset + a.len]);
+                lens[a.slot] = a.len as i32;
+                offs[a.slot] = a.offset as i32;
+            }
+            let gkv = self.group_kv.take().context("prefill without group kv")?;
+            let t0 = Instant::now();
+            let out = self.engine.prefill_chunk(&toks, &lens, &offs, gkv)?;
+            self.group_kv = Some(out.kv);
+            self.metrics.prefill_chunk_latency.push_duration(t0.elapsed());
+            self.metrics.prefill_chunks += 1;
+            self.metrics.prefill_tokens += call.iter().map(|a| a.len as u64).sum::<u64>();
+            let logits = out.logits.as_f32()?;
+            for a in &call {
+                let s = self.slots[a.slot].as_mut().unwrap();
+                let now = Instant::now();
+                if s.first_chunk_at.is_none() {
+                    s.first_chunk_at = Some(t0);
+                    self.metrics
+                        .prefill_queue_wait
+                        .push(t0.duration_since(s.req.enqueued_at).as_secs_f64());
+                }
+                s.last_chunk_at = Some(now);
+                let done = a.offset + a.len;
+                if done < s.req.prompt_ids.len() {
+                    s.phase = SlotPhase::Prefilling { next_pos: done };
+                    continue;
+                }
+                // prompt complete: this chunk's logits row carries the
+                // first-token distribution
+                let row = &logits[a.slot * vocab..(a.slot + 1) * vocab];
+                let first = s.sampler.sample(row);
+                // TTFT measured at first-token emission, not back-computed
+                self.metrics
+                    .ttft
+                    .push(now.duration_since(s.req.enqueued_at).as_secs_f64());
+                if let (Some(fc), Some(lc)) = (s.first_chunk_at, s.last_chunk_at) {
+                    self.metrics
+                        .prefill_chunk_span
+                        .push(lc.duration_since(fc).as_secs_f64());
+                    self.metrics
+                        .prefill_emit_gap
+                        .push(now.duration_since(lc).as_secs_f64());
+                }
+                self.events.push(GenerationEvent::Prefilled { request: s.req.id });
+                self.events.push(GenerationEvent::Token {
+                    request: s.req.id,
+                    id: first,
+                    index: 0,
+                    text_offset: 0,
+                });
+                s.phase = SlotPhase::Running;
+                s.len = s.req.prompt_ids.len() + 1;
+                s.generated.push(first);
+                s.text_len = token_byte_len(first);
+                s.first_token_at = Some(now);
+                s.last_token_at = now;
+                if first == s.req.params.stop_token {
+                    s.finished = Some(FinishReason::Stop);
+                } else if hits_stop_sequence(&s.generated, &s.req.stop_sequences) {
+                    s.finished = Some(FinishReason::StopSequence);
+                } else if s.req.params.max_new_tokens <= 1 {
+                    s.finished = Some(FinishReason::Length);
+                } else if s.len > max_total {
+                    // prompt filled the largest bucket exactly: the first
+                    // token is all the cache can hold
+                    s.finished = Some(FinishReason::CacheLimit);
+                }
+            }
+        }
+        Ok(true)
     }
 
     /// Rebuild the group at a new batch bucket, keeping live slots.
@@ -566,9 +795,8 @@ impl<E: StepEngine> Scheduler<E> {
             self.metrics.kv_rebuilds += 1;
             self.metrics.regroups += 1;
         }
-        // no prior group: stays None — prefill_into acquires the zeroed
-        // cache directly as its splice target (no literal roundtrip of an
-        // all-zeros tensor)
+        // no prior group: stays None — admit() acquires the zeroed cache
+        // directly (prefill chunks then write into it on-device)
         self.slots = new_slots;
         self.shrink_streak = 0;
         self.note_surgery(t_surgery);
@@ -581,7 +809,7 @@ impl<E: StepEngine> Scheduler<E> {
         }
         // count *occupied* slots (finished-but-unreaped ones still hold a
         // completion that a later step must surface — never drop them)
-        let occupied = self.slots.iter().filter(|s| s.is_some()).count();
+        let occupied = self.occupied_len();
         if occupied == 0 {
             // drop the group entirely when drained
             self.slots.clear();
@@ -604,11 +832,19 @@ impl<E: StepEngine> Scheduler<E> {
     }
 
     fn required_n(&self) -> usize {
+        let max_total = self.max_prompt_len().max(1);
         self.slots
             .iter()
             .flatten()
             .filter(|s| s.finished.is_none())
-            .map(|s| s.len)
+            .map(|s| match s.phase {
+                SlotPhase::Running => s.len,
+                // a prefilling slot will need its whole prompt (+1 for
+                // the first token, capped at the largest bucket)
+                SlotPhase::Prefilling { .. } => {
+                    (s.req.prompt_ids.len() + 1).min(max_total)
+                }
+            })
             .max()
             .unwrap_or(1)
     }
@@ -666,17 +902,31 @@ impl<E: StepEngine> Scheduler<E> {
         let mut active = vec![false; b];
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
-                if s.finished.is_none() {
-                    tokens[i] = s.last_token();
-                    lengths[i] = s.len as i32;
-                    active[i] = true;
+                if s.finished.is_some() {
+                    continue;
+                }
+                match s.phase {
+                    SlotPhase::Running => {
+                        tokens[i] = s.last_token();
+                        lengths[i] = s.len as i32;
+                        active[i] = true;
+                    }
+                    SlotPhase::Prefilling { next_pos } => {
+                        // a decode entry writes this step's K/V at
+                        // lengths-1 for every slot; aim the write at the
+                        // slot's next chunk position, which the next
+                        // chunk's masked write overwrites — the real
+                        // prefix [0, next_pos) stays untouched
+                        lengths[i] = (next_pos + 1) as i32;
+                    }
                 }
             }
         }
         let gkv = self.group_kv.take().context("decode without group kv")?;
         // per-step routing: the controller picks the entry and computes
         // the head/MLP index tensors for this batch's hidden state (the
-        // mask keeps padding slots out of selection and telemetry)
+        // mask keeps padding and prefilling slots out of selection and
+        // telemetry)
         let plan = self.ctl.plan(&tokens, &lengths, Some(&active))?;
         if let Some(r) = &plan.routing {
             self.metrics.surgery.router_ns += r.router_ns;
@@ -690,11 +940,11 @@ impl<E: StepEngine> Scheduler<E> {
 
         let logits = out.logits.as_f32()?;
         let vocab = self.engine.config().vocab;
-        let max_total = *self.engine.seq_buckets().last().unwrap();
+        let max_total = self.max_prompt_len();
         let mut active = 0;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
-            if s.finished.is_some() {
+            if s.finished.is_some() || s.phase != SlotPhase::Running {
                 continue;
             }
             active += 1;

@@ -27,9 +27,12 @@ commands:
   eval       zero-shot task-suite accuracy at a sparsity mode
   bench      regenerate a paper figure/table (fig1a..fig14, table1, table2, all),
              `bench decode-breakdown [--smoke]` for the per-step decode
-             cost breakdown (BENCH_decode.json), or
+             cost breakdown (BENCH_decode.json),
              `bench sparsity-scaling [--smoke]` for batch-union density
-             scaling: head flat vs MLP toward dense (BENCH_sparsity.json)
+             scaling: head flat vs MLP toward dense (BENCH_sparsity.json), or
+             `bench prefill-interference [--smoke]` for chunked-vs-monolithic
+             prefill: decoder p99 ITL under long-prompt arrival and TTFT by
+             prompt length (BENCH_prefill.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -52,6 +55,9 @@ fn main() {
         }
         "bench" if rest.first().map(|s| s.as_str()) == Some("sparsity-scaling") => {
             bench::sparsity_scaling::run(&rest[1..])
+        }
+        "bench" if rest.first().map(|s| s.as_str()) == Some("prefill-interference") => {
+            bench::prefill_interference::run(&rest[1..])
         }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {
@@ -111,8 +117,8 @@ fn cmd_info(rest: &[String]) -> Result<()> {
     );
     println!("critical attention density: {}", c.critical_density);
     println!(
-        "buckets    : batch {:?} seq {:?} prefill {}",
-        m.batch_buckets, m.seq_buckets, m.prefill_len
+        "buckets    : batch {:?} seq {:?} prefill chunk {}",
+        m.batch_buckets, m.seq_buckets, m.prefill_chunk
     );
     println!("entries    : {}", m.entries.len());
     let mut kinds: std::collections::BTreeMap<&str, usize> = Default::default();
@@ -201,7 +207,12 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = common(Args::new("serve", "TCP JSON-lines server"))
         .flag("addr", "127.0.0.1:7878", "bind address")
-        .flag("max-batch", "16", "max batch bucket");
+        .flag("max-batch", "16", "max batch bucket")
+        .flag(
+            "prefill-chunk-tokens",
+            "0",
+            "prompt tokens per step spent on prefill chunks (0 = one chunk bucket)",
+        );
     let p = parse_or_usage(args, rest);
     let dir = model_dir(&p);
     let manifest = polar_sparsity::runtime::Manifest::load(&dir)?;
@@ -213,6 +224,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             addr: p.get("addr").to_string(),
             mode,
             max_batch: p.get_usize("max-batch").map_err(anyhow::Error::msg)?,
+            prefill_chunk_tokens: p
+                .get_usize("prefill-chunk-tokens")
+                .map_err(anyhow::Error::msg)?,
         },
         |addr| println!("listening on {addr}"),
     )

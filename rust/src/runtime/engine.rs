@@ -20,8 +20,9 @@ use super::tensor::Tensor;
 
 /// Where a batch group's KV cache currently lives.
 pub enum KvStore {
-    /// Host literal — produced by prefill and by coordinator surgery; the
-    /// engine uploads it on the next decode step.
+    /// Host literal — produced by coordinator surgery (fresh groups,
+    /// re-buckets) and by the legacy host-KV A/B path; the engine uploads
+    /// it on the next prefill-chunk or decode call.
     Lit(xla::Literal),
     /// Device-resident buffer — flows output -> input across decode steps
     /// without crossing the host boundary.
@@ -140,13 +141,9 @@ impl Engine {
             .batch_buckets
             .iter()
             .flat_map(|&b| {
-                let mut v: Vec<String> = m
-                    .seq_buckets
-                    .iter()
-                    .map(|&s| m.decode_entry_name(tag, b, s))
-                    .collect();
-                v.push(m.prefill_entry_name(b));
-                v
+                m.seq_buckets.iter().flat_map(move |&s| {
+                    [m.decode_entry_name(tag, b, s), m.prefill_entry_name(b, s)]
+                })
             })
             .collect();
         for name in names {
@@ -158,24 +155,174 @@ impl Engine {
         Ok(n)
     }
 
-    /// Dense prompt pass at the prefill bucket. tokens: [B, S_prefill]
-    /// (padded), lengths: [B]. Returns last-position logits + KV (n =
-    /// prefill bucket). The KV comes back as a host literal: the
-    /// coordinator splices it into the group cache before decoding.
-    pub fn prefill(&self, tokens: &Tensor, lengths: &Tensor) -> Result<StepOutput> {
-        let b = tokens.shape()[0];
-        let name = self.exec.manifest().prefill_entry_name(b);
-        let outs = self
-            .exec
-            .run_raw(&name, &[tokens.to_literal()?, lengths.to_literal()?])?;
-        let logits = Tensor::from_literal(&outs[0])?;
-        let n = self.exec.manifest().prefill_len;
-        let kv = KvCache {
-            store: KvStore::Lit(outs.into_iter().nth(1).unwrap()),
-            batch: b,
-            n,
+    /// Token width of one chunked-prefill call.
+    pub fn prefill_chunk_len(&self) -> usize {
+        self.exec.manifest().prefill_chunk
+    }
+
+    /// One chunked-prefill call through `prefill_b{B}_s{N}`: append each
+    /// slot's next prompt chunk into the group cache at a per-slot
+    /// position offset. `tokens`: [B*C] row-major (C = chunk width,
+    /// padded), `lengths`: valid tokens per slot in THIS chunk (0 =
+    /// inactive slot, cache row untouched), `offset`: absolute start
+    /// position per slot. The cache keeps the decode path's residency
+    /// discipline: on the hot path it stays a device buffer across chunk
+    /// calls and into the decode step that follows; only the logits come
+    /// home.
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        kv: KvCache,
+    ) -> Result<StepOutput> {
+        let b = kv.batch;
+        let n = kv.n;
+        let c = self.prefill_chunk_len();
+        if tokens.len() != b * c || lengths.len() != b || offset.len() != b {
+            bail!(
+                "prefill_chunk: tokens {} / lengths {} / offset {} vs batch {b} chunk {c}",
+                tokens.len(),
+                lengths.len(),
+                offset.len()
+            );
+        }
+        for i in 0..b {
+            let end = offset[i] as usize + lengths[i] as usize;
+            if end > n {
+                bail!("prefill_chunk: slot {i} writes to {end} > kv bucket {n}");
+            }
+        }
+        let name = self.exec.manifest().prefill_entry_name(b, n);
+        let spec = self.exec.manifest().entry(&name)?;
+        let t0 = std::time::Instant::now();
+        let toks = Tensor::i32(tokens.to_vec(), vec![b, c])?.to_literal()?;
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let offs = Tensor::i32(offset.to_vec(), vec![b])?.to_literal()?;
+
+        // assemble the data inputs in the entry's declared order
+        enum In {
+            Lit(xla::Literal),
+            Kv,
+        }
+        let mut ins: Vec<In> = Vec::with_capacity(spec.data.len());
+        let mut kv_inputs = 0usize;
+        for d in &spec.data {
+            match d.name.as_str() {
+                "tokens" => ins.push(In::Lit(toks.clone())),
+                "lengths" => ins.push(In::Lit(lens.clone())),
+                "offset" => ins.push(In::Lit(offs.clone())),
+                "kv" => {
+                    kv_inputs += 1;
+                    ins.push(In::Kv);
+                }
+                other => bail!("{name}: unsupported prefill data input {other:?}"),
+            }
+        }
+        if kv_inputs != 1 {
+            bail!("{name}: expected exactly one kv input, found {kv_inputs}");
+        }
+
+        let out = if self.kv_host_path {
+            let mut kv_lit = Some(kv.into_literal(&self.exec)?);
+            let data: Vec<xla::Literal> = ins
+                .into_iter()
+                .map(|i| match i {
+                    In::Lit(l) => l,
+                    In::Kv => kv_lit.take().expect("single kv input"),
+                })
+                .collect();
+            let outs = self.exec.run_raw(&name, &data)?;
+            let logits = Tensor::from_literal(&outs[0])?;
+            let kv = KvCache {
+                store: KvStore::Lit(outs.into_iter().nth(1).unwrap()),
+                batch: b,
+                n,
+            };
+            StepOutput { logits, kv }
+        } else {
+            let mut kv_in = Some(kv.into_input());
+            let inputs: Vec<DeviceInput> = ins
+                .into_iter()
+                .map(|i| match i {
+                    In::Lit(l) => DeviceInput::Host(l),
+                    In::Kv => kv_in.take().expect("single kv input"),
+                })
+                .collect();
+            let outs = self.exec.run_bufs(&name, inputs)?;
+            let mut it = outs.into_iter();
+            let logits_buf = it.next().context("prefill logits")?;
+            let kv_buf = it.next().context("prefill kv")?;
+            let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
+            StepOutput {
+                logits,
+                kv: KvCache { store: KvStore::Buf(kv_buf), batch: b, n },
+            }
         };
-        Ok(StepOutput { logits, kv })
+        let mut p = self.exec.profile_mut();
+        p.prefill_ns += t0.elapsed().as_nanos() as u64;
+        p.prefill_chunks += 1;
+        Ok(out)
+    }
+
+    /// Monolithic-compat prompt pass: stream `tokens` [B, S] (padded, any
+    /// S) through successive chunk calls into a fresh zeroed cache at
+    /// `n_bucket`. Returns each slot's final-position logits + the filled
+    /// cache. Used by the eval/bench paths that want a whole prompt
+    /// prefilled in one call; the serving scheduler drives
+    /// [`Engine::prefill_chunk`] incrementally instead.
+    pub fn prefill(
+        &self,
+        tokens: &Tensor,
+        lengths: &Tensor,
+        n_bucket: usize,
+    ) -> Result<StepOutput> {
+        let (b, s) = (tokens.shape()[0], tokens.shape()[1]);
+        let c = self.prefill_chunk_len();
+        let toks = tokens.as_i32()?.to_vec();
+        let lens = lengths.as_i32()?.to_vec();
+        let max_len = lens.iter().copied().max().unwrap_or(0).max(1) as usize;
+        if max_len > s || max_len > n_bucket {
+            bail!("prefill: length {max_len} exceeds tokens {s} or bucket {n_bucket}");
+        }
+        let cfg = self.exec.config();
+        let mut kv = KvCache::from_tensor(
+            &Tensor::zeros_f32(cfg.kv_shape(b, n_bucket)),
+            b,
+            n_bucket,
+        )?;
+        let vocab = cfg.vocab;
+        let mut final_logits = vec![0f32; b * vocab];
+        let mut off = 0usize;
+        while off < max_len {
+            let mut chunk = vec![crate::tokenizer::PAD; b * c];
+            let mut clen = vec![0i32; b];
+            let mut coff = vec![0i32; b];
+            for i in 0..b {
+                let l = lens[i] as usize;
+                let take = l.saturating_sub(off).min(c);
+                for k in 0..take {
+                    chunk[i * c + k] = toks[i * s + off + k];
+                }
+                clen[i] = take as i32;
+                coff[i] = off.min(l) as i32;
+            }
+            let out = self.prefill_chunk(&chunk, &clen, &coff, kv)?;
+            let rows = out.logits.as_f32()?;
+            for i in 0..b {
+                let l = lens[i] as usize;
+                if l > off && l <= off + c {
+                    final_logits[i * vocab..(i + 1) * vocab]
+                        .copy_from_slice(&rows[i * vocab..(i + 1) * vocab]);
+                }
+            }
+            kv = out.kv;
+            off += c;
+        }
+        Ok(StepOutput {
+            logits: Tensor::f32(final_logits, vec![b, vocab])?,
+            kv,
+        })
     }
 
     /// One decode step through the entry `decode_{tag}_b{B}_n{N}`.

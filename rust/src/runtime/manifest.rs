@@ -103,7 +103,9 @@ pub struct Manifest {
     pub params: Vec<TensorSpec>,
     pub batch_buckets: Vec<usize>,
     pub seq_buckets: Vec<usize>,
-    pub prefill_len: usize,
+    /// Chunked-prefill token width: each `prefill_b{B}_s{S}` call appends
+    /// up to this many prompt tokens per slot at a position offset.
+    pub prefill_chunk: usize,
     pub entries: BTreeMap<String, EntrySpec>,
 }
 
@@ -181,7 +183,13 @@ impl Manifest {
             params,
             batch_buckets: to_usize_vec(buckets.get("batch")),
             seq_buckets: to_usize_vec(buckets.get("seq")),
-            prefill_len: buckets.get("prefill").as_usize().unwrap_or(64),
+            // "prefill" is the legacy name for the same width (the old
+            // monolithic prompt bucket), kept as a parse fallback
+            prefill_chunk: buckets
+                .get("prefill_chunk")
+                .as_usize()
+                .or_else(|| buckets.get("prefill").as_usize())
+                .unwrap_or(64),
             entries,
         })
     }
@@ -200,8 +208,11 @@ impl Manifest {
         format!("decode_{tag}_b{batch}_n{n}")
     }
 
-    pub fn prefill_entry_name(&self, batch: usize) -> String {
-        format!("prefill_b{batch}")
+    /// Chunked-prefill entry for a (batch, seq) bucket pair: appends one
+    /// chunk (up to [`Manifest::prefill_chunk`] tokens per slot) into a
+    /// `[.., n, ..]` cache at a per-slot position offset.
+    pub fn prefill_entry_name(&self, batch: usize, n: usize) -> String {
+        format!("prefill_b{batch}_s{n}")
     }
 
     /// Smallest batch bucket >= need (error if need exceeds the largest).
@@ -259,7 +270,7 @@ mod tests {
                      "d_ff": 16, "d_head": 4, "vocab": 10, "max_seq": 32,
                      "mlp": "relu", "pos": "learned", "critical_density": 0.5},
           "params": [{"name": "w", "shape": [2, 8], "dtype": "float32"}],
-          "buckets": {"batch": [1, 2, 4], "seq": [16, 32], "prefill": 16},
+          "buckets": {"batch": [1, 2, 4], "seq": [16, 32], "prefill_chunk": 16},
           "entries": [{"name": "decode_dense_b1_n16", "kind": "decode",
             "file": "hlo/decode_dense_b1_n16.hlo.txt",
             "data": [{"name": "tokens", "shape": [1], "dtype": "i32"}],
@@ -269,6 +280,8 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), manifest).unwrap();
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.config.kv_shape(1, 16), vec![2, 2, 1, 2, 16, 4]);
+        assert_eq!(m.prefill_chunk, 16);
+        assert_eq!(m.prefill_entry_name(2, 32), "prefill_b2_s32");
         assert_eq!(m.batch_bucket(3).unwrap(), 4);
         assert!(m.batch_bucket(5).is_err());
         assert_eq!(m.seq_bucket(17).unwrap(), 32);

@@ -22,6 +22,12 @@ pub struct StepProfile {
     /// Host-side router execution (per-step head/MLP top-k + union) —
     /// the overhead the runtime pays to produce `head_idx`/`mlp_idx`.
     pub router_ns: u64,
+    /// Wall time spent inside chunked-prefill calls (the prefill share of
+    /// a serving step; `compute_ns` et al. cover all entry executions, so
+    /// decode-side cost is the remainder).
+    pub prefill_ns: u64,
+    /// Chunked-prefill calls the counters cover.
+    pub prefill_chunks: u64,
     /// Decode steps the counters cover (for per-step averages).
     pub decode_steps: u64,
 }
@@ -35,6 +41,8 @@ impl StepProfile {
         self.d2h_ns += o.d2h_ns;
         self.host_surgery_ns += o.host_surgery_ns;
         self.router_ns += o.router_ns;
+        self.prefill_ns += o.prefill_ns;
+        self.prefill_chunks += o.prefill_chunks;
         self.decode_steps += o.decode_steps;
     }
 
@@ -70,6 +78,8 @@ impl StepProfile {
             ("d2h_ms", (self.d2h_ns as f64 * 1e-6).into()),
             ("host_surgery_ms", (self.host_surgery_ns as f64 * 1e-6).into()),
             ("router_ms", (self.router_ns as f64 * 1e-6).into()),
+            ("prefill_ms", (self.prefill_ns as f64 * 1e-6).into()),
+            ("prefill_chunks", (self.prefill_chunks as usize).into()),
         ])
     }
 }
@@ -85,6 +95,8 @@ mod tests {
             h2d_bytes: 10,
             compute_ns: 500,
             router_ns: 3_000_000,
+            prefill_ns: 4_000_000,
+            prefill_chunks: 3,
             decode_steps: 2,
             ..Default::default()
         };
@@ -92,10 +104,13 @@ mod tests {
         assert_eq!(a.host_copy_bytes(), 50);
         assert_eq!(a.decode_steps, 4);
         assert_eq!(a.router_ns, 3_000_000);
+        assert_eq!(a.prefill_chunks, 3);
         let j = a.to_json();
         assert_eq!(j.get("h2d_bytes_per_step").as_f64(), Some(5.0));
         assert_eq!(j.get("host_copy_bytes_per_step").as_f64(), Some(12.5));
         assert_eq!(j.get("router_ms").as_f64(), Some(3.0));
+        assert_eq!(j.get("prefill_ms").as_f64(), Some(4.0));
+        assert_eq!(j.get("prefill_chunks").as_usize(), Some(3));
     }
 
     #[test]

@@ -27,7 +27,9 @@
 //!
 //! Malformed lines and promptless generation requests are rejected with a
 //! structured {"error": ..., "id": ...} line and never reach the
-//! scheduler.
+//! scheduler; prompts longer than the largest seq bucket are rejected
+//! with {"error": "prompt_too_long", "limit": ..., "prompt_len": ...}
+//! instead of being truncated.
 //!
 //! Architecture: the acceptor spawns a reader thread per connection; a
 //! dedicated writer thread per connection serialises all reply lines
@@ -62,6 +64,9 @@ pub struct ServerConfig {
     pub addr: String,
     pub mode: Mode,
     pub max_batch: usize,
+    /// Prompt tokens one scheduler step may spend on prefill chunks
+    /// (0 = one chunk bucket; see `SchedulerConfig::prefill_chunk_tokens`).
+    pub prefill_chunk_tokens: usize,
 }
 
 /// Typed message from a connection thread to the engine thread.
@@ -97,7 +102,7 @@ struct ReqSink {
 /// command arrives. `on_ready` receives the bound address (useful with
 /// port 0).
 pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
-    let ServerConfig { model_dir, addr, mode, max_batch } = cfg;
+    let ServerConfig { model_dir, addr, mode, max_batch, prefill_chunk_tokens } = cfg;
     serve_with(&addr, on_ready, move || {
         let exec = Arc::new(Executor::load(&model_dir)?);
         let engine = Engine::new(exec);
@@ -106,7 +111,12 @@ pub fn serve(cfg: ServerConfig, on_ready: impl FnOnce(String)) -> Result<()> {
         Ok(Scheduler::new(
             engine,
             ctl,
-            SchedulerConfig { max_batch, compact: true, ..Default::default() },
+            SchedulerConfig {
+                max_batch,
+                compact: true,
+                prefill_chunk_tokens,
+                ..Default::default()
+            },
         ))
     })
 }
@@ -148,8 +158,25 @@ where
             for inb in q2.lock().unwrap().drain(..) {
                 match inb {
                     Inbound::Submit { request, sink, stream, alive } => {
-                        sinks.insert(request.id, ReqSink { tx: sink, stream, alive });
-                        sched.enqueue(request);
+                        // prompts past the largest seq bucket are a
+                        // structured rejection, not the old silent
+                        // truncation — and they never burn a batch slot
+                        let limit = sched.max_prompt_len();
+                        if request.prompt_ids.len() > limit {
+                            // counted here because the request never
+                            // reaches the scheduler's own backstop
+                            sched.metrics.rejected_prompts += 1;
+                            let mut err = error_json(
+                                "prompt_too_long",
+                                (request.id as usize).into(),
+                            );
+                            err.set("limit", limit.into());
+                            err.set("prompt_len", request.prompt_ids.len().into());
+                            let _ = sink.send(err);
+                        } else {
+                            sinks.insert(request.id, ReqSink { tx: sink, stream, alive });
+                            sched.enqueue(request);
+                        }
                     }
                     Inbound::Cancel { id, sink } => {
                         let found = sched.cancel(id);
@@ -169,6 +196,7 @@ where
                         stats.set("pending", sched.pending_len().into());
                         stats.set("active", sched.active_len().into());
                         stats.set("sparsity", sched.sparsity().stats.to_json());
+                        stats.set("prefill", sched.prefill_stats());
                         let _ = sink.send(Json::obj(vec![
                             ("ok", true.into()),
                             ("stats", stats),

@@ -37,13 +37,12 @@ fn prefill_then_decode_shapes_and_finiteness() {
     let Some(e) = engine("opt-tiny") else { return };
     let tok = Tokenizer::new();
     let ids = tok.encode_prompt("copy:ab=");
-    let s = e.exec.manifest().prefill_len;
-    let mut toks = vec![polar_sparsity::tokenizer::PAD; s];
-    toks[..ids.len()].copy_from_slice(&ids);
+    let n = e.exec.manifest().seq_buckets[0];
     let out = e
         .prefill(
-            &Tensor::i32(toks, vec![1, s]).unwrap(),
+            &Tensor::i32(ids.clone(), vec![1, ids.len()]).unwrap(),
             &Tensor::i32(vec![ids.len() as i32], vec![1]).unwrap(),
+            n,
         )
         .unwrap();
     let logits = out.logits.as_f32().unwrap();
@@ -54,6 +53,40 @@ fn prefill_then_decode_shapes_and_finiteness() {
         .decode("dense", &[65], &[(ids.len() + 1) as i32], out.kv, None)
         .unwrap();
     assert!(step.logits.as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn chunked_prefill_offsets_match_single_chunk() {
+    // streaming a prompt as two chunks (6 tokens at offset 0, then 4 at
+    // offset 6) must produce the same final logits as one chunk of 10
+    let Some(e) = engine("opt-tiny") else { return };
+    let cfg = e.exec.config().clone();
+    let c = e.prefill_chunk_len();
+    let n = e.exec.manifest().seq_buckets[0];
+    let prompt: Vec<i32> = (0..10).map(|k| 65 + k).collect();
+    let pad = |ids: &[i32]| {
+        let mut t = vec![polar_sparsity::tokenizer::PAD; c];
+        t[..ids.len()].copy_from_slice(ids);
+        t
+    };
+    let fresh = || {
+        KvCache::from_tensor(&Tensor::zeros_f32(cfg.kv_shape(1, n)), 1, n).unwrap()
+    };
+    let single = e
+        .prefill_chunk(&pad(&prompt), &[10], &[0], fresh())
+        .unwrap();
+    let step1 = e
+        .prefill_chunk(&pad(&prompt[..6]), &[6], &[0], fresh())
+        .unwrap();
+    let step2 = e
+        .prefill_chunk(&pad(&prompt[6..]), &[4], &[6], step1.kv)
+        .unwrap();
+    let (a, b) = (
+        single.logits.as_f32().unwrap(),
+        step2.logits.as_f32().unwrap(),
+    );
+    let max_abs = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_abs < 1e-3, "chunked prefill diverges: {max_abs}");
 }
 
 #[test]

@@ -234,6 +234,50 @@ fn dropped_stream_cancels_and_connection_stays_usable() {
 }
 
 #[test]
+fn overlong_prompt_rejected_exact_fill_accepted() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let mut c = Client::connect(&addr).unwrap();
+    // mock's largest seq bucket is 64; encode_prompt adds [BOS, '\n'],
+    // so 63 chars -> 65 prompt ids -> structured rejection with the limit
+    let too_long = "A".repeat(63);
+    let resp = c.request(&too_long, 4).unwrap();
+    assert_eq!(resp.get("error").as_str(), Some("prompt_too_long"));
+    assert_eq!(resp.get("limit").as_usize(), Some(64));
+    assert_eq!(resp.get("prompt_len").as_usize(), Some(65));
+    // 62 chars -> exactly 64 ids: accepted, first token emitted out of
+    // the final prefill chunk, then the cache is full
+    let exact = "A".repeat(62);
+    let resp = c.request(&exact, 4).unwrap();
+    assert!(resp.get("error").is_null(), "exact fill rejected: {resp}");
+    assert_eq!(resp.get("finish").as_str(), Some("cache_limit"));
+    assert_eq!(resp.get("text").as_str(), Some("B"));
+    // the rejection never burned a slot, but it IS counted
+    let s = c.stats().unwrap();
+    assert_eq!(s.get("stats").get("completed_requests").as_usize(), Some(1));
+    assert_eq!(s.get("stats").get("rejected_prompts").as_usize(), Some(1));
+    shut_down(&addr, h);
+}
+
+#[test]
+fn stats_expose_prefill_object() {
+    let (addr, h) = spawn_server(Duration::ZERO);
+    let mut c = Client::connect(&addr).unwrap();
+    // a 40-char prompt (42 ids) spans 3 chunks of the mock's 16
+    let resp = c.request(&"A".repeat(40), 2).unwrap();
+    assert!(resp.get("error").is_null(), "{resp}");
+    let s = c.stats().unwrap();
+    let p = s.get("stats").get("prefill");
+    assert!(p.get("chunks").as_usize().unwrap() >= 3, "{p}");
+    assert!(p.get("tokens").as_usize().unwrap() >= 42);
+    assert_eq!(p.get("queued_prompt_tokens").as_usize(), Some(0));
+    let b = p.get("ttft_breakdown");
+    assert!(b.get("queued_to_first_chunk_ms_p50").as_f64().is_some());
+    assert!(b.get("first_to_last_chunk_ms_p50").as_f64().is_some());
+    assert!(b.get("last_chunk_to_first_token_ms_p50").as_f64().is_some());
+    shut_down(&addr, h);
+}
+
+#[test]
 fn cancel_unknown_id_acks_with_error() {
     let (addr, h) = spawn_server(Duration::ZERO);
     let mut c = Client::connect(&addr).unwrap();
