@@ -12,8 +12,13 @@ Entries per model (static shapes = the CUDA-graph analogue, DESIGN.md):
   prefill_b{B}_s{S}                  chunked prompt pass: appends one chunk
                                      (up to PREFILL_LEN tokens/slot) into a
                                      [*,S] cache at a per-slot offset
+  prefill_b{B}_s{S}_paged            same, addressed through a per-slot
+                                     block table into the shared KV pool
   decode_{tag}_b{B}_n{N}             tag in dense | dejavu | polar_dXXXX |
                                      teal_dXXXX | cats_dXXXX
+  decode_{tag}_b{B}_n{N}_paged       block-pool twin of the serving decode
+                                     tags (tokens, lengths, block_table,
+                                     kv-pool[, head_idx[, mlp_idx]])
   micro_* (opt-small)                Fig 1a / Fig 3 / Fig 10 module benches
   pp2_stage{0,1}_{tag}_b{B}_n{N}     pipeline-parallel stages (Fig 11)
   tp{S}_{embed,attn,mlp,final}_*     Megatron-style TP shards (Fig 12)
@@ -35,8 +40,8 @@ from jax._src.lib import xla_client as xc
 
 from . import model
 from .configs import (
-    BATCH_BUCKETS, CONFIGS, DEFAULT_RECALL, DENSITY_SWEEP, PREFILL_LEN,
-    SEQ_BUCKETS, get_config, heads_for_density,
+    BATCH_BUCKETS, CONFIGS, DEFAULT_RECALL, DENSITY_SWEEP, KV_BLOCK,
+    PREFILL_LEN, SEQ_BUCKETS, get_config, heads_for_density, kv_pool_blocks,
 )
 from .kernels import ref as kref
 from .kernels import sel_gemm, sha_decode
@@ -57,6 +62,19 @@ class Entry:
 
 def dshape(cfg, B, N):
     return [cfg.n_layers, 2, B, cfg.n_kv_heads, N, cfg.d_head]
+
+
+def pool_shape(cfg, P):
+    """Paged KV pool [L,2,P,G,KV_BLOCK,dh] — one shape per model, shared
+    by every paged entry (block tables address it per call)."""
+    return list(model.kv_pool_shape(cfg, P, KV_BLOCK))
+
+
+def serving_buckets(cfg):
+    """(batch, seq) bucket lists the serving entries cover. The
+    accuracy-only model compiles a single bucket pair."""
+    small = cfg.name == "llama-relu"
+    return ([1] if small else BATCH_BUCKETS), ([128] if small else SEQ_BUCKETS)
 
 
 def dtag(density):
@@ -81,14 +99,16 @@ def core_entries(cfg, out_dir):
     """prefill + decode matrix."""
     V, L, G, dh = cfg.vocab, cfg.n_layers, cfg.n_kv_heads, cfg.d_head
     entries = []
-    small = cfg.name == "llama-relu"  # accuracy-only model
-    batches = [1] if small else BATCH_BUCKETS
-    seqs = [128] if small else SEQ_BUCKETS
+    batches, seqs = serving_buckets(cfg)
+    P = kv_pool_blocks(batches, seqs)
 
     # chunked prefill: one entry per (batch, seq) bucket. Each call appends
     # up to PREFILL_LEN prompt tokens per slot into the group cache at a
     # per-slot position offset, so a long prompt streams chunk by chunk
-    # while co-resident requests keep decoding between chunks.
+    # while co-resident requests keep decoding between chunks. The paged
+    # variant addresses the shared block pool through a per-slot block
+    # table instead of owning a contiguous [*, S] cache — same compute,
+    # block-granular memory (prefix blocks shared across requests).
     for B in batches:
         for S in seqs:
             entries.append(Entry(
@@ -107,8 +127,28 @@ def core_entries(cfg, out_dir):
                 ],
                 meta={"batch": B, "seq_bucket": S, "chunk": PREFILL_LEN},
             ))
+            entries.append(Entry(
+                name=f"prefill_b{B}_s{S}_paged", kind="prefill_paged",
+                fn=(lambda cfg_: lambda toks, lens, off, table, kv, params:
+                    model.prefill_chunk_paged(
+                        cfg_, params, toks, lens, off, table, kv))(cfg),
+                data=[
+                    {"name": "tokens", "shape": [B, PREFILL_LEN], "dtype": "i32"},
+                    {"name": "lengths", "shape": [B], "dtype": "i32"},
+                    {"name": "offset", "shape": [B], "dtype": "i32"},
+                    {"name": "block_table", "shape": [B, S // KV_BLOCK],
+                     "dtype": "i32"},
+                    {"name": "kv", "shape": pool_shape(cfg, P), "dtype": "f32"},
+                ],
+                outputs=[
+                    {"name": "logits", "shape": [B, V], "dtype": "f32"},
+                    {"name": "kv", "shape": pool_shape(cfg, P), "dtype": "f32"},
+                ],
+                meta={"batch": B, "seq_bucket": S, "chunk": PREFILL_LEN,
+                      "kv_block": KV_BLOCK, "kv_pool_blocks": P},
+            ))
 
-    def decode_entry(B, N, mode, density, mlp_topk, tag):
+    def decode_entry(B, N, mode, density, mlp_topk, tag, paged=False):
         # polar entries are *index-taking*: the runtime routing subsystem
         # (rust/src/runtime/router.rs) computes per-request top-k head
         # groups and the batch-union MLP neuron set each step and feeds
@@ -120,56 +160,81 @@ def core_entries(cfg, out_dir):
         routed = mode == "polar"
         Kh = heads_for_density(cfg, density) if routed else 0
         Km = int(max(mlp_topk)) if (routed and cfg.mlp_sparsity and mlp_topk) else 0
+        kvshape = pool_shape(cfg, P) if paged else dshape(cfg, B, N)
         data = [
             {"name": "tokens", "shape": [B], "dtype": "i32"},
             {"name": "lengths", "shape": [B], "dtype": "i32"},
-            {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
         ]
+        if paged:
+            data.append({"name": "block_table", "shape": [B, N // KV_BLOCK],
+                         "dtype": "i32"})
+        data.append({"name": "kv", "shape": kvshape, "dtype": "f32"})
         if routed:
             data.append({"name": "head_idx", "shape": [L, B, Kh], "dtype": "i32"})
             if Km:
                 data.append({"name": "mlp_idx", "shape": [L, Km], "dtype": "i32"})
-        if routed and Km:
-            fn = (lambda cfg_, m, d, tk:
-                  lambda toks, lens, kv, head_idx, mlp_idx, params:
-                  model.decode_step(cfg_, params, toks, lens, kv, mode=m,
-                                    density=d, mlp_topk=tk,
-                                    head_idx=head_idx, mlp_idx=mlp_idx)
-                  )(cfg, mode, density, mlp_topk)
-        elif routed:
-            fn = (lambda cfg_, m, d, tk:
-                  lambda toks, lens, kv, head_idx, params:
-                  model.decode_step(cfg_, params, toks, lens, kv, mode=m,
-                                    density=d, mlp_topk=tk, head_idx=head_idx)
-                  )(cfg, mode, density, mlp_topk)
-        else:
-            fn = (lambda cfg_, m, d, tk: lambda toks, lens, kv, params:
-                  model.decode_step(cfg_, params, toks, lens, kv, mode=m,
-                                    density=d, mlp_topk=tk))(cfg, mode, density, mlp_topk)
+
+        def mk_fn(cfg_, m, d, tk):
+            kw = dict(mode=m, density=d, mlp_topk=tk)
+            if paged:
+                if routed and Km:
+                    return lambda toks, lens, table, kv, hi, mi, params: \
+                        model.decode_step_paged(cfg_, params, toks, lens, kv,
+                                                table, head_idx=hi, mlp_idx=mi,
+                                                **kw)
+                if routed:
+                    return lambda toks, lens, table, kv, hi, params: \
+                        model.decode_step_paged(cfg_, params, toks, lens, kv,
+                                                table, head_idx=hi, **kw)
+                return lambda toks, lens, table, kv, params: \
+                    model.decode_step_paged(cfg_, params, toks, lens, kv,
+                                            table, **kw)
+            if routed and Km:
+                return lambda toks, lens, kv, hi, mi, params: \
+                    model.decode_step(cfg_, params, toks, lens, kv,
+                                      head_idx=hi, mlp_idx=mi, **kw)
+            if routed:
+                return lambda toks, lens, kv, hi, params: \
+                    model.decode_step(cfg_, params, toks, lens, kv,
+                                      head_idx=hi, **kw)
+            return lambda toks, lens, kv, params: \
+                model.decode_step(cfg_, params, toks, lens, kv, **kw)
+
+        meta = {"batch": B, "seq_bucket": N, "mode": mode,
+                "density": density, "mlp_topk": list(mlp_topk),
+                "routed": routed, "head_k": Kh, "mlp_idx_k": Km}
+        if paged:
+            meta.update({"kv_block": KV_BLOCK, "kv_pool_blocks": P})
         return Entry(
-            name=f"decode_{tag}_b{B}_n{N}", kind="decode", fn=fn,
+            name=f"decode_{tag}_b{B}_n{N}" + ("_paged" if paged else ""),
+            kind="decode_paged" if paged else "decode",
+            fn=mk_fn(cfg, mode, density, mlp_topk),
             data=data,
             outputs=[
                 {"name": "logits", "shape": [B, V], "dtype": "f32"},
-                {"name": "kv", "shape": dshape(cfg, B, N), "dtype": "f32"},
+                {"name": "kv", "shape": kvshape, "dtype": "f32"},
             ],
-            meta={"batch": B, "seq_bucket": N, "mode": mode,
-                  "density": density, "mlp_topk": list(mlp_topk),
-                  "routed": routed, "head_k": Kh, "mlp_idx_k": Km},
+            meta=meta,
         )
 
     for B in batches:
         topk = load_topk(out_dir, cfg, B)
         for N in seqs:
-            entries.append(decode_entry(B, N, "dense", 1.0, (), "dense"))
-            entries.append(decode_entry(
-                B, N, "polar", cfg.critical_density, topk,
-                f"polar_{dtag(cfg.critical_density)}"))
-            if cfg.mlp_sparsity:
-                entries.append(decode_entry(B, N, "dejavu", 1.0, topk, "dejavu"))
+            # each serving tag lands twice: the contiguous entry (A/B
+            # baseline, eval and the pp/tp drivers) and its block-pool
+            # twin the scheduler serves from
+            for paged in (False, True):
+                entries.append(decode_entry(B, N, "dense", 1.0, (), "dense",
+                                            paged=paged))
+                entries.append(decode_entry(
+                    B, N, "polar", cfg.critical_density, topk,
+                    f"polar_{dtag(cfg.critical_density)}", paged=paged))
+                if cfg.mlp_sparsity:
+                    entries.append(decode_entry(B, N, "dejavu", 1.0, topk,
+                                                "dejavu", paged=paged))
 
     # accuracy sweep at B=1, N=128
-    if not small:
+    if cfg.name != "llama-relu":
         topk1 = load_topk(out_dir, cfg, 1)
         for d in DENSITY_SWEEP:
             if abs(d - cfg.critical_density) < 1e-9:
@@ -460,8 +525,12 @@ def build_model(name: str, out_root: str, sets: list):
         ],
         # "prefill_chunk" is the chunk token width of the prefill_b{B}_s{S}
         # matrix; "prefill" is kept as a legacy alias for older runtimes.
+        # "kv_block"/"kv_pool_blocks" pin the paged entries' pool geometry
+        # ([L,2,kv_pool_blocks,G,kv_block,dh], block 0 reserved as null).
         "buckets": {"batch": BATCH_BUCKETS, "seq": SEQ_BUCKETS,
-                    "prefill": PREFILL_LEN, "prefill_chunk": PREFILL_LEN},
+                    "prefill": PREFILL_LEN, "prefill_chunk": PREFILL_LEN,
+                    "kv_block": KV_BLOCK,
+                    "kv_pool_blocks": kv_pool_blocks(*serving_buckets(cfg))},
         "entries": [],
     }
     t_total = time.time()

@@ -26,6 +26,24 @@ SEQ_BUCKETS = [64, 128, 256]
 # longer than the largest seq bucket are rejected by the serving protocol.
 PREFILL_LEN = 64
 
+# Paged KV cache geometry. The pool is ONE tensor
+# [L, 2, KV_POOL_BLOCKS, G, KV_BLOCK, dh] shared by every paged entry of
+# a model (its shape is entry-static, the CUDA-graph analogue of vLLM's
+# preallocated block pool); per-slot block tables [B, S // KV_BLOCK]
+# address it. Block 0 is reserved as the null block: padding slots point
+# every table entry at it, so their blind decode writes can never land in
+# a live request's block. 16 tokens is small enough that a shared system
+# prompt shards into many reusable full blocks, large enough that the
+# table stays a few dozen entries at the largest seq bucket.
+KV_BLOCK = 16
+
+
+def kv_pool_blocks(batch_buckets, seq_buckets, block: int = KV_BLOCK) -> int:
+    """Pool size covering the no-sharing worst case (every slot of the
+    largest batch bucket at the largest seq bucket) plus the null block.
+    Prefix sharing only ever *lowers* real occupancy below this bound."""
+    return 1 + max(batch_buckets) * max(seq_buckets) // block
+
 # Attention-density sweep used by the accuracy benches (Fig 2a / Fig 4).
 DENSITY_SWEEP = [0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0]
 

@@ -345,6 +345,75 @@ def prefill_chunk(cfg: ModelConfig, params, tokens, lengths, offset, kv):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (block-pool layout)
+#
+# The pool is one tensor [L, 2, P, G, bs, dh] (P physical blocks of bs
+# token positions each); a request's cache is the concatenation of the
+# blocks its table names, in order. Paged entries gather the table's
+# blocks into the dense [L, 2, B, G, N, dh] view, run the *same* decode /
+# prefill-chunk computation as the contiguous entries, and scatter the
+# result back through the table — pure data movement around an unchanged
+# core, so paged logits match the contiguous path bit for bit.
+#
+# Aliasing contract (enforced by the rust block manager, not here): a
+# block shared by several tables is never inside any caller's write
+# window — the scheduler copy-on-writes a block before the first
+# divergent write. Under that contract every duplicate scatter writes
+# bit-identical rows (gathered content of an unwritten shared block, or
+# the null block's don't-care rows), so the scatter order XLA picks for
+# duplicate indices cannot matter.
+# ---------------------------------------------------------------------------
+
+
+def kv_pool_shape(cfg: ModelConfig, num_blocks: int, block: int):
+    """Shape of the paged KV pool tensor."""
+    return (cfg.n_layers, 2, num_blocks, cfg.n_kv_heads, block, cfg.d_head)
+
+
+def gather_block_kv(kv_pool, block_table):
+    """kv_pool [L,2,P,G,bs,dh], block_table [B,NB] i32 -> dense
+    [L,2,B,G,NB*bs,dh] view of each request's logical cache."""
+    L, two, _, G, bs, dh = kv_pool.shape
+    B, NB = block_table.shape
+    flat = jnp.take(kv_pool, block_table.reshape(-1), axis=2)
+    g = flat.reshape(L, two, B, NB, G, bs, dh)
+    g = jnp.moveaxis(g, 3, 4)                    # [L,2,B,G,NB,bs,dh]
+    return g.reshape(L, two, B, G, NB * bs, dh)
+
+
+def scatter_block_kv(kv_pool, block_table, kv_dense):
+    """Inverse of :func:`gather_block_kv`: write the dense view back into
+    the pool through the table (see the aliasing contract above)."""
+    L, two, _, G, bs, dh = kv_pool.shape
+    B, NB = block_table.shape
+    d = kv_dense.reshape(L, two, B, G, NB, bs, dh)
+    d = jnp.moveaxis(d, 4, 3).reshape(L, two, B * NB, G, bs, dh)
+    return kv_pool.at[:, :, block_table.reshape(-1)].set(d)
+
+
+def decode_step_paged(cfg: ModelConfig, params, tokens, lengths, kv_pool,
+                      block_table, **kw):
+    """One decode step over the block pool: gather the tables' dense view,
+    run the unchanged :func:`decode_step`, scatter the update back.
+    Returns (logits [B,V], kv_pool')."""
+    kv = gather_block_kv(kv_pool, block_table)
+    logits, kv_new = decode_step(cfg, params, tokens, lengths, kv, **kw)
+    return logits, scatter_block_kv(kv_pool, block_table, kv_new)
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, tokens, lengths, offset,
+                        block_table, kv_pool):
+    """One chunked-prefill step over the block pool (same contract as
+    :func:`prefill_chunk`, addressed through `block_table` [B,NB]).
+    Chunk queries attend over the whole gathered cache, so a request
+    whose table shares prefix blocks with an earlier request attends to
+    the cached prefix without ever recomputing its chunks."""
+    kv = gather_block_kv(kv_pool, block_table)
+    logits, kv_new = prefill_chunk(cfg, params, tokens, lengths, offset, kv)
+    return logits, scatter_block_kv(kv_pool, block_table, kv_new)
+
+
+# ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------
 

@@ -102,6 +102,10 @@ def test_decode_entry_coverage_opt_tiny():
     for b in man["buckets"]["batch"]:
         for n in man["buckets"]["seq"]:
             assert f"prefill_b{b}_s{n}" in names, (b, n)
+            assert f"prefill_b{b}_s{n}_paged" in names, (b, n)
             for tag in ("dense", "dejavu", "polar_d0500"):
                 assert f"decode_{tag}_b{b}_n{n}" in names, (tag, b, n)
+                assert f"decode_{tag}_b{b}_n{n}_paged" in names, (tag, b, n)
     assert man["buckets"]["prefill_chunk"] > 0
+    assert man["buckets"]["kv_block"] > 0
+    assert man["buckets"]["kv_pool_blocks"] > 1

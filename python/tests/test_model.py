@@ -154,6 +154,199 @@ def test_aot_prefill_chunk_entry_matrix(tmp_path):
     assert f"prefill_b{BATCH_BUCKETS[0]}" not in entries  # monolithic gone
 
 
+def _pool_from_dense(kv_dense, bs, seed=0, extra_blocks=3):
+    """Pack a dense [L,2,B,G,N,dh] cache into a block pool + per-slot
+    tables with *scrambled* physical block ids (block 0 = reserved null),
+    so the tests prove real table indirection, not identity layout."""
+    L, two, B, G, N, dh = kv_dense.shape
+    NB = N // bs
+    P = 1 + B * NB + extra_blocks
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(np.arange(1, P))[: B * NB]
+    pool = np.zeros((L, two, P, G, bs, dh), np.float32)
+    table = np.zeros((B, NB), np.int32)
+    dense = np.asarray(kv_dense)
+    for b in range(B):
+        for j in range(NB):
+            blk = int(ids[b * NB + j])
+            table[b, j] = blk
+            pool[:, :, blk] = dense[:, :, b, :, j * bs:(j + 1) * bs]
+    return jnp.asarray(pool), jnp.asarray(table)
+
+
+def test_paged_decode_matches_contiguous_bitwise(setup):
+    """Block-table decode must equal the contiguous path BIT FOR BIT:
+    gather/scatter is pure data movement around the unchanged decode_step,
+    so logits and the gathered post-step cache are np.assert_array_equal
+    (not allclose) against the contiguous reference."""
+    cfg, params = setup
+    rng = np.random.default_rng(30)
+    B, S, N, bs = 2, 8, 32, 8
+    toks = rng.integers(0, 250, (B, S)).astype(np.int32)
+    lens0 = np.array([S, S - 2], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), N)
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    pool, table = _pool_from_dense(kv, bs)
+    pool0 = np.asarray(pool).copy()
+
+    want, want_kv = model.decode_step(cfg, params, new, lens, kv, mode="dense")
+    got, pool1 = model.decode_step_paged(cfg, params, new, lens, pool, table,
+                                         mode="dense")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_kv = model.gather_block_kv(pool1, table)
+    np.testing.assert_array_equal(np.asarray(got_kv), np.asarray(want_kv))
+    # physical blocks outside every table (incl. the null block) untouched
+    pool1n = np.asarray(pool1)
+    unused = sorted(set(range(pool0.shape[2])) - set(np.asarray(table).ravel()))
+    np.testing.assert_array_equal(pool1n[:, :, unused], pool0[:, :, unused])
+
+    # the index-taking convention composes with paging: external head_idx
+    # steers the paged entry exactly as it does the contiguous one
+    L, G = cfg.n_layers, cfg.n_groups
+    k = max(1, G // 2)
+    hi = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None, None, :],
+                          (L, B, k))
+    want_p, _ = model.decode_step(cfg, params, new, lens, kv, mode="polar",
+                                  density=0.5, head_idx=hi)
+    got_p, _ = model.decode_step_paged(cfg, params, new, lens, pool, table,
+                                       mode="polar", density=0.5, head_idx=hi)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+def test_paged_prefill_chunk_matches_contiguous_bitwise(setup):
+    """Chunked prefill through block tables reproduces the contiguous
+    chunked path bit for bit, chunk by chunk."""
+    cfg, params = setup
+    rng = np.random.default_rng(31)
+    B, P_len, C, N, bs = 2, 20, 8, 32, 8
+    toks = rng.integers(0, 250, (B, P_len)).astype(np.int32)
+    lens = np.array([P_len, P_len - 5], np.int32)
+
+    kv = jnp.zeros((cfg.n_layers, 2, B, cfg.n_kv_heads, N, cfg.d_head),
+                   jnp.float32)
+    pool, table = _pool_from_dense(kv, bs, seed=1)
+    off = 0
+    while off < P_len:
+        chunk = np.zeros((B, C), np.int32)
+        clen = np.zeros(B, np.int32)
+        for b in range(B):
+            n = int(np.clip(lens[b] - off, 0, C))
+            chunk[b, :n] = toks[b, off:off + n]
+            clen[b] = n
+        offs = jnp.asarray(np.minimum(off, lens).astype(np.int32))
+        want, kv = model.prefill_chunk(
+            cfg, params, jnp.asarray(chunk), jnp.asarray(clen), offs, kv)
+        got, pool = model.prefill_chunk_paged(
+            cfg, params, jnp.asarray(chunk), jnp.asarray(clen), offs, table,
+            pool)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        off += C
+    np.testing.assert_array_equal(
+        np.asarray(model.gather_block_kv(pool, table)), np.asarray(kv))
+
+
+def test_paged_prefix_sharing_reuses_blocks(setup):
+    """Cross-request prefix reuse: request B's table names request A's
+    physical prefix blocks, so B prefills ONLY its suffix chunk and still
+    produces logits bit-identical to prefilling its whole prompt — and
+    the shared blocks survive B's call bit-exactly (the scatter's
+    duplicate writes are identity on unwritten shared blocks)."""
+    cfg, params = setup
+    rng = np.random.default_rng(32)
+    bs, C, N = 8, 8, 32
+    prefix = rng.integers(0, 250, 16).astype(np.int32)      # 2 full blocks
+    suf_a = rng.integers(0, 250, 4).astype(np.int32)
+    suf_b = rng.integers(0, 250, 4).astype(np.int32)
+    P = 8
+    pool = jnp.zeros(model.kv_pool_shape(cfg, P, bs), jnp.float32)
+    table_a = jnp.asarray(np.array([[1, 2, 3, 0]], np.int32))
+    table_b = jnp.asarray(np.array([[1, 2, 4, 0]], np.int32))  # shares 1, 2
+
+    def chunked(tokens_1d, offsets, table, pool):
+        logits = None
+        for off in offsets:
+            n = min(C, len(tokens_1d) - off)
+            chunk = np.zeros((1, C), np.int32)
+            chunk[0, :n] = tokens_1d[off:off + n]
+            logits, pool = model.prefill_chunk_paged(
+                cfg, params, jnp.asarray(chunk),
+                jnp.asarray(np.array([n], np.int32)),
+                jnp.asarray(np.array([off], np.int32)), table, pool)
+        return logits, pool
+
+    # request A prefills the whole prompt (prefix writes blocks 1, 2)
+    prompt_a = np.concatenate([prefix, suf_a])
+    _, pool = chunked(prompt_a, [0, 8, 16], table_a, pool)
+    shared_before = np.asarray(pool)[:, :, [1, 2]].copy()
+
+    # request B: ONE suffix chunk at offset 16 — the prefix chunks are
+    # never recomputed, yet the logits match a full prefill of B's prompt
+    prompt_b = np.concatenate([prefix, suf_b])
+    got, pool = chunked(prompt_b, [16], table_b, pool)
+
+    kv_ref = jnp.zeros((cfg.n_layers, 2, 1, cfg.n_kv_heads, N, cfg.d_head),
+                       jnp.float32)
+    want = None
+    for off in (0, 8, 16):
+        n = min(C, len(prompt_b) - off)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = prompt_b[off:off + n]
+        want, kv_ref = model.prefill_chunk(
+            cfg, params, jnp.asarray(chunk),
+            jnp.asarray(np.array([n], np.int32)),
+            jnp.asarray(np.array([off], np.int32)), kv_ref)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # shared prefix blocks untouched by B's call
+    np.testing.assert_array_equal(np.asarray(pool)[:, :, [1, 2]], shared_before)
+    # B's private suffix block matches the reference cache's window
+    np.testing.assert_array_equal(
+        np.asarray(model.gather_block_kv(pool, table_b))[:, :, 0, :, 16:20],
+        np.asarray(kv_ref)[:, :, 0, :, 16:20])
+
+
+def test_aot_paged_entries_contract(tmp_path):
+    """Manifest contract of the paged matrix: every serving (batch, seq)
+    bucket gains a prefill twin taking [tokens, lengths, offset,
+    block_table, kv-pool] and decode twins taking [tokens, lengths,
+    block_table, kv-pool, (head_idx...)], all addressing ONE pool shape."""
+    from compile import aot
+    from compile.configs import (
+        BATCH_BUCKETS, KV_BLOCK, SEQ_BUCKETS, kv_pool_blocks,
+    )
+
+    cfg = get_config("llama-tiny")
+    entries = {e.name: e for e in aot.core_entries(cfg, str(tmp_path))}
+    P = kv_pool_blocks(BATCH_BUCKETS, SEQ_BUCKETS)
+    pshape = [cfg.n_layers, 2, P, cfg.n_kv_heads, KV_BLOCK, cfg.d_head]
+
+    pe = entries["prefill_b4_s128_paged"]
+    assert pe.kind == "prefill_paged"
+    assert [d["name"] for d in pe.data] == \
+        ["tokens", "lengths", "offset", "block_table", "kv"]
+    assert pe.data[3]["shape"] == [4, 128 // KV_BLOCK]
+    assert pe.data[3]["dtype"] == "i32"
+    assert pe.data[4]["shape"] == pshape
+    assert pe.outputs[1]["shape"] == pshape
+    assert pe.meta["kv_block"] == KV_BLOCK
+    assert pe.meta["kv_pool_blocks"] == P
+
+    de = entries["decode_dense_b4_n128_paged"]
+    assert de.kind == "decode_paged"
+    assert [d["name"] for d in de.data] == \
+        ["tokens", "lengths", "block_table", "kv"]
+    assert de.data[3]["shape"] == pshape
+
+    # the index-taking convention rides along unchanged
+    pp = entries["decode_polar_d0500_b4_n128_paged"]
+    assert [d["name"] for d in pp.data] == \
+        ["tokens", "lengths", "block_table", "kv", "head_idx"]
+
+    # contiguous twins stay (A/B baseline, eval, pp/tp drivers)
+    for name in ("decode_dense_b4_n128", "prefill_b4_s128"):
+        assert name in entries, name
+
+
 def test_polar_full_density_equals_dense(setup):
     cfg, params = setup
     rng = np.random.default_rng(2)

@@ -134,10 +134,6 @@ pub fn run(rest: &[String]) -> Result<()> {
         ("host_copy_bytes_reduction", reduction.into()),
     ]);
 
-    let out_path = p.get("out").to_string();
-    std::fs::write(&out_path, format!("{}\n", pretty(&report, 0)))
-        .with_context(|| format!("writing {out_path}"))?;
-
     println!("decode-breakdown ({engine_label}, b={b}, n={}, {steps} steps)", base.n);
     println!(
         "  host-copy bytes/step: {:.0} (host-KV baseline) -> {:.0} (resident) = {reduction}x reduction",
@@ -148,31 +144,8 @@ pub fn run(rest: &[String]) -> Result<()> {
         base.wall_s * 1e3 / steps.max(1) as f64,
         fast.wall_s * 1e3 / steps.max(1) as f64
     );
-    println!("[wrote {out_path}]");
+    super::harness::write_bench_json(p.get("out"), &report)?;
     Ok(())
-}
-
-/// Indented JSON for the committed artifact (key order matches the
-/// compact serializer: alphabetical). Shared with `bench
-/// sparsity-scaling`.
-pub(crate) fn pretty(v: &Json, indent: usize) -> String {
-    let pad = "  ".repeat(indent);
-    let pad_in = "  ".repeat(indent + 1);
-    match v {
-        Json::Obj(o) if !o.is_empty() => {
-            let fields: Vec<String> = o
-                .iter()
-                .map(|(k, x)| format!("{pad_in}{}: {}", Json::str(k.clone()), pretty(x, indent + 1)))
-                .collect();
-            format!("{{\n{}\n{pad}}}", fields.join(",\n"))
-        }
-        Json::Arr(a) if !a.is_empty() => {
-            let items: Vec<String> =
-                a.iter().map(|x| format!("{pad_in}{}", pretty(x, indent + 1))).collect();
-            format!("[\n{}\n{pad}]", items.join(",\n"))
-        }
-        other => other.to_string(),
-    }
 }
 
 #[cfg(test)]
@@ -198,15 +171,5 @@ mod tests {
         assert_eq!(per_step_host_copy(&rf), 9664.0);
         let reduction = per_step_host_copy(&rb) / per_step_host_copy(&rf);
         assert!(reduction >= 2.0, "got {reduction}x");
-    }
-
-    #[test]
-    fn pretty_json_roundtrips() {
-        let j = Json::obj(vec![
-            ("a", 1usize.into()),
-            ("b", Json::obj(vec![("c", 2.5.into())])),
-        ]);
-        let s = pretty(&j, 0);
-        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 }

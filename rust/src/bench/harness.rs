@@ -1,13 +1,50 @@
 //! Micro/E2E bench harness (criterion is not vendored; this provides the
-//! warmup + timed-iterations + stats loop the figures need) and the
-//! CSV/markdown report writer that regenerates the paper's tables.
+//! warmup + timed-iterations + stats loop the figures need), the
+//! CSV/markdown report writer that regenerates the paper's tables, and
+//! the shared BENCH_*.json emission path every perf bench uses.
 
 use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::substrate::json::Json;
 use crate::substrate::stats::Samples;
+
+/// Indented JSON for the committed `BENCH_*.json` artifacts (key order
+/// matches the compact serializer: alphabetical). Shared by every perf
+/// bench — formerly copy-pasted across `decode_breakdown` /
+/// `sparsity_scaling` / `prefill_interference`.
+pub fn pretty_json(v: &Json, indent: usize) -> String {
+    let pad = "  ".repeat(indent);
+    let pad_in = "  ".repeat(indent + 1);
+    match v {
+        Json::Obj(o) if !o.is_empty() => {
+            let fields: Vec<String> = o
+                .iter()
+                .map(|(k, x)| {
+                    format!("{pad_in}{}: {}", Json::str(k.clone()), pretty_json(x, indent + 1))
+                })
+                .collect();
+            format!("{{\n{}\n{pad}}}", fields.join(",\n"))
+        }
+        Json::Arr(a) if !a.is_empty() => {
+            let items: Vec<String> =
+                a.iter().map(|x| format!("{pad_in}{}", pretty_json(x, indent + 1))).collect();
+            format!("[\n{}\n{pad}]", items.join(",\n"))
+        }
+        other => other.to_string(),
+    }
+}
+
+/// Write one bench's JSON report (pretty, newline-terminated) and echo
+/// the destination.
+pub fn write_bench_json(path: &str, report: &Json) -> Result<()> {
+    std::fs::write(path, format!("{}\n", pretty_json(report, 0)))
+        .with_context(|| format!("writing {path}"))?;
+    println!("[wrote {path}]");
+    Ok(())
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct BenchOpts {
@@ -129,6 +166,16 @@ mod tests {
         .unwrap();
         assert_eq!(n, 7);
         assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn pretty_json_roundtrips() {
+        let j = Json::obj(vec![
+            ("a", 1usize.into()),
+            ("b", Json::obj(vec![("c", 2.5.into())])),
+        ]);
+        let s = pretty_json(&j, 0);
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

@@ -6,9 +6,12 @@ pub mod accuracy;
 pub mod decode_breakdown;
 pub mod figures;
 pub mod harness;
+pub mod kv_paging;
 pub mod prefill_interference;
 pub mod serving;
 pub mod sparsity_scaling;
 pub mod throughput;
 
-pub use harness::{fmt_ms, fmt_x, time_it, BenchOpts, Report};
+pub use harness::{
+    fmt_ms, fmt_x, pretty_json, time_it, write_bench_json, BenchOpts, Report,
+};

@@ -31,7 +31,7 @@ use crate::substrate::argparse::Args;
 use crate::substrate::json::Json;
 use crate::substrate::stats::Samples;
 
-use super::decode_breakdown::pretty;
+use super::harness::write_bench_json;
 
 const DECODERS: u64 = 2;
 const LONG_ID_BASE: u64 = 100;
@@ -276,10 +276,6 @@ pub fn run(rest: &[String]) -> Result<()> {
         ("untruncated", untruncated.into()),
     ]);
 
-    let out_path = p.get("out").to_string();
-    std::fs::write(&out_path, format!("{}\n", pretty(&report, 0)))
-        .with_context(|| format!("writing {out_path}"))?;
-
     println!("prefill-interference ({engine_label}, prompts {lens:?})");
     println!(
         "  decoder ITL p99 during admission: {:.2} ms (monolithic) -> {:.2} ms (chunked) = {improvement}x better",
@@ -294,7 +290,7 @@ pub fn run(rest: &[String]) -> Result<()> {
         );
     }
     println!("  longest prompt un-truncated: {untruncated}");
-    println!("[wrote {out_path}]");
+    write_bench_json(p.get("out"), &report)?;
     Ok(())
 }
 

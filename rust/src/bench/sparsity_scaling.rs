@@ -26,7 +26,7 @@ use crate::runtime::{Engine, Executor, RoutingPolicy};
 use crate::substrate::argparse::Args;
 use crate::substrate::json::Json;
 
-use super::decode_breakdown::pretty;
+use super::harness::write_bench_json;
 
 /// One batch point of the sweep.
 pub struct BatchPoint {
@@ -210,10 +210,6 @@ pub fn run(rest: &[String]) -> Result<()> {
         ("mlp_union_monotone", monotone.into()),
     ]);
 
-    let out_path = p.get("out").to_string();
-    std::fs::write(&out_path, format!("{}\n", pretty(&report, 0)))
-        .with_context(|| format!("writing {out_path}"))?;
-
     println!("sparsity-scaling ({engine_label}, {} batch points)", points.len());
     for pt in &points {
         println!(
@@ -229,7 +225,7 @@ pub fn run(rest: &[String]) -> Result<()> {
         "  head-union spread {:.1}% across batches; mlp union monotone: {monotone}",
         spread * 100.0
     );
-    println!("[wrote {out_path}]");
+    write_bench_json(p.get("out"), &report)?;
     Ok(())
 }
 

@@ -1,19 +1,27 @@
-//! KV-cache surgery on host tensors.
+//! KV-cache management.
 //!
-//! Layout everywhere: `[L, 2, B, G, N, dh]` (layer, k/v, slot, kv-head,
-//! position, head dim). The batch group's cache lives as a resident
-//! engine buffer on the hot path; these routines run only on composition
-//! changes (admission, completion, bucket promotion) and for the PP/TP
-//! splits. Composition changes are slot-incremental: [`copy_slot`] moves
-//! exactly one slot between caches with no intermediate allocation, and
-//! [`KvPool`] recycles the destination buffers so promote/regroup churn
-//! settles into a steady set of allocations.
-
-use std::collections::HashMap;
+//! Two layers live here:
+//!
+//! * [`paged`] — the serving substrate: a fixed-size **block pool** with
+//!   ref-counted physical blocks, per-request block tables, copy-on-write
+//!   on divergence and hash-keyed prefix caching. The scheduler allocates
+//!   every request's KV here; composition changes (admission, finish,
+//!   batch/seq bucket changes) move **no cache bytes at all** — only
+//!   table entries. This file's contiguous-surgery era (`regroup`,
+//!   `shrink_patience`, the pooled rebuild buffers) is retired.
+//! * Contiguous host-tensor surgery on the `[L, 2, B, G, N, dh]` layout
+//!   ([`copy_slot`], [`append_chunk`], [`pad_n`], the PP/TP splits) —
+//!   still used by the contiguous A/B engine path, the mock's
+//!   fingerprint bookkeeping, eval, and the pipeline/tensor-parallel
+//!   drivers.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::{ModelConfig, Tensor};
+
+pub mod paged;
+
+pub use paged::{chain_hash, BlockId, BlockPool, BlockStats, BlockTable, MakePrivate};
 
 /// Shape helper for one sequence's cache (B == 1).
 pub fn seq_kv_shape(cfg: &ModelConfig, n: usize) -> Vec<usize> {
@@ -264,70 +272,6 @@ pub fn split_groups(kv: &Tensor, n_shards: usize) -> Result<Vec<Vec<Tensor>>> {
     Ok(out)
 }
 
-// ---------------------------------------------------------------------------
-// buffer pool
-// ---------------------------------------------------------------------------
-
-/// Reusable zeroed f32 host buffers keyed by element count. Composition
-/// changes acquire their target cache here instead of allocating, so the
-/// promote/regroup path reuses a steady set of per-(batch,seq)-bucket
-/// buffers instead of reallocating the dominant tensor every change.
-#[derive(Debug, Default)]
-pub struct KvPool {
-    free: HashMap<usize, Vec<Vec<f32>>>,
-    pub reuses: u64,
-    pub allocs: u64,
-}
-
-impl KvPool {
-    /// Bound on retained buffers per size class (a group cycles through at
-    /// most a couple of shapes; anything more is churn worth dropping).
-    const MAX_PER_CLASS: usize = 4;
-
-    pub fn new() -> KvPool {
-        KvPool::default()
-    }
-
-    /// A zeroed tensor of `shape`, reusing a released buffer when one of
-    /// the right size exists.
-    pub fn acquire(&mut self, shape: Vec<usize>) -> Tensor {
-        let n: usize = shape.iter().product();
-        if let Some(mut data) = self.free.get_mut(&n).and_then(|v| v.pop()) {
-            data.fill(0.0);
-            self.reuses += 1;
-            Tensor::f32(data, shape).expect("pooled buffer length")
-        } else {
-            self.allocs += 1;
-            Tensor::zeros_f32(shape)
-        }
-    }
-
-    /// Like [`KvPool::acquire`] but WITHOUT zeroing reused storage: for
-    /// callers that overwrite every element (e.g. [`pad_n_into`], which
-    /// writes all rows and zero-fills the tail itself). Using this for a
-    /// partially-written destination would leak stale KV between slots.
-    pub fn acquire_overwritten(&mut self, shape: Vec<usize>) -> Tensor {
-        let n: usize = shape.iter().product();
-        if let Some(data) = self.free.get_mut(&n).and_then(|v| v.pop()) {
-            self.reuses += 1;
-            Tensor::f32(data, shape).expect("pooled buffer length")
-        } else {
-            self.allocs += 1;
-            Tensor::zeros_f32(shape)
-        }
-    }
-
-    /// Return a tensor's storage to the pool (f32 only; others dropped).
-    pub fn release(&mut self, t: Tensor) {
-        if let Tensor::F32 { data, .. } = t {
-            let class = self.free.entry(data.len()).or_default();
-            if class.len() < Self::MAX_PER_CLASS {
-                class.push(data);
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -427,21 +371,6 @@ mod tests {
             extract_slot(&dst, 1).unwrap(),
             extract_slot(&before, 1).unwrap()
         );
-    }
-
-    #[test]
-    fn pool_reuses_and_zeroes() {
-        let mut pool = KvPool::new();
-        let mut t = pool.acquire(vec![2, 2, 1, 2, 4, 4]);
-        assert_eq!(pool.allocs, 1);
-        t.as_f32_mut().unwrap()[0] = 7.0;
-        pool.release(t);
-        let t2 = pool.acquire(vec![2, 2, 1, 2, 4, 4]);
-        assert_eq!(pool.reuses, 1);
-        assert!(t2.as_f32().unwrap().iter().all(|&x| x == 0.0), "stale data");
-        // different size class: fresh allocation
-        let _t3 = pool.acquire(vec![2, 2, 2, 2, 4, 4]);
-        assert_eq!(pool.allocs, 2);
     }
 
     #[test]

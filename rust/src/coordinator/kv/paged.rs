@@ -1,0 +1,765 @@
+//! Paged KV block manager: the allocator behind the serving scheduler.
+//!
+//! Physical KV memory is ONE pool tensor `[L, 2, P, G, bs, dh]` that
+//! lives on the engine for the whole process (shape fixed at compile
+//! time — the CUDA-graph analogue of vLLM's preallocated block pool).
+//! This module manages the *metadata*: which of the `P` blocks each
+//! request's logical cache maps to.
+//!
+//! * **Ref-counted blocks + free list.** A block may back several
+//!   requests at once (shared prompt prefix, forked sequences); it
+//!   returns to the allocator when the last reference drops. Block 0 is
+//!   reserved as the *null block*: padding slots aim every table entry
+//!   at it, so their blind per-step writes can never land in a live
+//!   request's memory.
+//! * **Hash-keyed prefix cache.** A *full* block whose content is
+//!   determined by a token prefix is published under the chain hash of
+//!   that prefix ([`chain_hash`]). A later request whose prompt starts
+//!   with the same tokens re-uses the physical block (ref-count bump, no
+//!   prefill compute) — across co-resident requests AND across time:
+//!   freed published blocks are retained in a cached-free list and only
+//!   evicted (oldest first) under pool pressure. Generated tokens
+//!   publish too, so a multi-turn follow-up whose prompt embeds the
+//!   previous turn's output also hits.
+//! * **Copy-on-write.** Writing into a block another table still
+//!   references would corrupt the neighbour; [`BlockPool::make_private`]
+//!   detects sharing and hands the caller a `(src, dst)` pair to copy on
+//!   the engine before the write proceeds. Publication is only ever
+//!   content-truthful: blocks publish strictly after their last position
+//!   is written, and shared blocks are never written (the single benign
+//!   exception — re-computing the final token of a fully-cached prompt —
+//!   rewrites bit-identical content).
+//!
+//! The pool never moves KV bytes itself; it returns block ids and COW
+//! pairs, and the scheduler drives the engine's block-granular copies.
+//! Invariants (no double free, no aliasing across non-sharing requests,
+//! reclaim-to-empty) are enforced by the property tests below.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+/// Index into the physical pool (`0` = the reserved null block).
+pub type BlockId = u32;
+
+/// FNV-1a chain hash over token ids: the key of a full block is the
+/// hash of its own `block_size` tokens chained onto its predecessor's
+/// key, so equal keys imply equal token *prefixes*, not just equal
+/// block content — position sensitivity for free.
+pub fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in parent.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// One request's logical-to-physical mapping. Block `i` backs token
+/// positions `[i * bs, (i + 1) * bs)`.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    /// Blocks `[0, published)` have been offered to the prefix cache
+    /// (published, or skipped on hash collision with an earlier twin).
+    published: usize,
+    /// Chain-hash state covering the first `published` blocks.
+    chain: u64,
+    /// Set when the table COW-diverged INSIDE its hashed prefix: the
+    /// chain state no longer describes this table's actual stream, so
+    /// publishing further blocks would index them under a lying prefix.
+    /// Frozen tables simply stop publishing (correct, just less cached).
+    publish_frozen: bool,
+}
+
+impl BlockTable {
+    /// Tokens the table can hold before another block is needed.
+    pub fn capacity(&self, block_size: usize) -> usize {
+        self.blocks.len() * block_size
+    }
+
+    /// Physical block backing logical position `pos`.
+    pub fn block_of(&self, pos: usize, block_size: usize) -> Option<BlockId> {
+        self.blocks.get(pos / block_size).copied()
+    }
+
+    /// Flatten into an i32 row of `width` entries, padding with the null
+    /// block — the per-slot row of the engines' `block_table` input.
+    pub fn row(&self, width: usize) -> Vec<i32> {
+        let mut r: Vec<i32> = self.blocks.iter().map(|&b| b as i32).collect();
+        r.resize(width, 0);
+        r
+    }
+}
+
+/// Outcome of a [`BlockPool::make_private`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MakePrivate {
+    /// Sole owner already — write straight in.
+    Private,
+    /// Shared: the table now maps `dst`; the caller must copy block
+    /// `src` -> `dst` on the engine before any write.
+    Cow { src: BlockId, dst: BlockId },
+    /// No block left to copy into.
+    Exhausted,
+}
+
+/// Allocator telemetry — the replacement for the retired contiguous-era
+/// `kv_rebuilds`/`regroups`/`slot_copies` counters (`stats.kv`).
+#[derive(Debug, Default, Clone)]
+pub struct BlockStats {
+    /// Full-block prefix-cache lookups during prompt allocation.
+    pub prefix_queries: u64,
+    /// Lookups that re-used a cached physical block.
+    pub prefix_hits: u64,
+    /// Prompt tokens those hits made skippable (hits * block size).
+    pub prefix_tokens_reused: u64,
+    /// Copy-on-write block copies (divergent write into a shared block).
+    pub cow_copies: u64,
+    /// Published blocks evicted from the cached-free list under pressure.
+    pub evictions: u64,
+    /// Fresh block grants (prompt allocation + decode growth + COW).
+    pub block_allocs: u64,
+    /// High-water mark of referenced blocks.
+    pub peak_in_use: usize,
+}
+
+pub struct BlockPool {
+    block: usize,
+    n_blocks: usize,
+    ref_count: Vec<u32>,
+    /// The published hash a block is indexed under (only the `by_hash`
+    /// winner carries it; collision losers stay unpublished).
+    hash_of: Vec<Option<u64>>,
+    by_hash: HashMap<u64, BlockId>,
+    /// Unpublished free blocks (LIFO).
+    free: Vec<BlockId>,
+    /// Ref-count-0 blocks still serving the prefix cache; evicted oldest
+    /// first when `free` runs dry.
+    cached_free: VecDeque<BlockId>,
+    in_use: usize,
+    pub stats: BlockStats,
+}
+
+impl BlockPool {
+    /// `n_blocks` physical blocks of `block` token positions each; block
+    /// 0 is reserved as the null block and never granted.
+    pub fn new(n_blocks: usize, block: usize) -> Result<BlockPool> {
+        if n_blocks < 2 || block == 0 {
+            bail!("kv pool needs >= 2 blocks (got {n_blocks}) and a nonzero block size");
+        }
+        Ok(BlockPool {
+            block,
+            n_blocks,
+            // null block pinned with a permanent self-reference
+            ref_count: std::iter::once(1u32)
+                .chain(std::iter::repeat(0).take(n_blocks - 1))
+                .collect(),
+            hash_of: vec![None; n_blocks],
+            by_hash: HashMap::new(),
+            free: (1..n_blocks as BlockId).rev().collect(),
+            cached_free: VecDeque::new(),
+            in_use: 0,
+            stats: BlockStats::default(),
+        })
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Blocks currently referenced by at least one table (null excluded).
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Ref-count-0 blocks retained for the prefix cache.
+    pub fn cached_blocks(&self) -> usize {
+        self.cached_free.len()
+    }
+
+    /// Never-published / evicted free blocks (the raw free list —
+    /// disjoint from [`BlockPool::cached_blocks`]).
+    pub fn free_list_len(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks immediately grantable (free list + evictable cached).
+    pub fn available(&self) -> usize {
+        self.free.len() + self.cached_free.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.in_use as f64 / (self.n_blocks - 1).max(1) as f64
+    }
+
+    fn note_retained(&mut self) {
+        self.in_use += 1;
+        self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use);
+    }
+
+    /// Bump an existing block's ref count (prefix hit / fork), reviving
+    /// it from the cached-free list when necessary.
+    fn retain(&mut self, b: BlockId) {
+        if self.ref_count[b as usize] == 0 {
+            self.cached_free.retain(|&x| x != b);
+            self.note_retained();
+        }
+        self.ref_count[b as usize] += 1;
+    }
+
+    /// Grant a fresh (content-don't-care) block, evicting from the
+    /// prefix cache if the free list is dry. `None` = truly exhausted.
+    fn take_fresh(&mut self) -> Option<BlockId> {
+        let b = match self.free.pop() {
+            Some(b) => b,
+            None => {
+                let b = self.cached_free.pop_front()?;
+                if let Some(h) = self.hash_of[b as usize].take() {
+                    if self.by_hash.get(&h) == Some(&b) {
+                        self.by_hash.remove(&h);
+                    }
+                }
+                self.stats.evictions += 1;
+                b
+            }
+        };
+        debug_assert_eq!(self.ref_count[b as usize], 0);
+        self.ref_count[b as usize] = 1;
+        self.stats.block_allocs += 1;
+        self.note_retained();
+        Some(b)
+    }
+
+    /// Allocate a table covering `prompt`, re-using cached prefix blocks
+    /// where the chain hash matches. Returns `None` (with nothing leaked)
+    /// when the pool cannot cover the prompt; otherwise the table plus
+    /// the number of prompt tokens whose KV is already physically present
+    /// (a multiple of the block size — the prefill chunks to skip).
+    pub fn alloc_prompt(&mut self, prompt: &[i32]) -> Result<Option<(BlockTable, usize)>> {
+        let bs = self.block;
+        let mut table = BlockTable::default();
+        let full = prompt.len() / bs;
+        let mut chain = 0u64;
+        for i in 0..full {
+            self.stats.prefix_queries += 1;
+            let h = chain_hash(chain, &prompt[i * bs..(i + 1) * bs]);
+            match self.by_hash.get(&h).copied() {
+                Some(b) => {
+                    self.retain(b);
+                    table.blocks.push(b);
+                    chain = h;
+                    self.stats.prefix_hits += 1;
+                    self.stats.prefix_tokens_reused += bs as u64;
+                }
+                None => break,
+            }
+        }
+        table.published = table.blocks.len();
+        table.chain = chain;
+        let cached = table.published * bs;
+        let need = prompt.len().div_ceil(bs);
+        while table.blocks.len() < need {
+            match self.take_fresh() {
+                Some(b) => table.blocks.push(b),
+                None => {
+                    // roll back: nothing may leak on a failed admission
+                    self.free_table(table);
+                    return Ok(None);
+                }
+            }
+        }
+        Ok(Some((table, cached)))
+    }
+
+    /// Grow a table by one block (decode past the current capacity).
+    /// `false` = pool exhausted (caller decides the policy).
+    pub fn append_block(&mut self, table: &mut BlockTable) -> bool {
+        match self.take_fresh() {
+            Some(b) => {
+                table.blocks.push(b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Ensure the block backing `table.blocks[idx]` is exclusively owned
+    /// before a divergent write. On sharing, allocates a replacement and
+    /// remaps the table; the caller must perform the returned engine copy.
+    pub fn make_private(&mut self, table: &mut BlockTable, idx: usize) -> Result<MakePrivate> {
+        let Some(&src) = table.blocks.get(idx) else {
+            bail!("make_private: block index {idx} out of table ({})", table.blocks.len());
+        };
+        if self.ref_count[src as usize] <= 1 {
+            return Ok(MakePrivate::Private);
+        }
+        let Some(dst) = self.take_fresh() else {
+            return Ok(MakePrivate::Exhausted);
+        };
+        self.ref_count[src as usize] -= 1;
+        table.blocks[idx] = dst;
+        if idx < table.published {
+            // divergence inside the hashed prefix: the chain no longer
+            // matches this table's stream — never publish from it again
+            table.publish_frozen = true;
+        }
+        self.stats.cow_copies += 1;
+        Ok(MakePrivate::Cow { src, dst })
+    }
+
+    /// Share every block of `table` with a new table (beam/n-best forks).
+    /// The fork inherits the publish chain (valid while the streams still
+    /// agree); the moment either table COW-diverges inside the hashed
+    /// prefix, [`BlockPool::make_private`] freezes that table's
+    /// publishing so no block is ever indexed under a lying prefix.
+    pub fn fork(&mut self, table: &BlockTable) -> BlockTable {
+        for &b in &table.blocks {
+            self.retain(b);
+        }
+        BlockTable {
+            blocks: table.blocks.clone(),
+            published: table.published,
+            chain: table.chain,
+            publish_frozen: table.publish_frozen,
+        }
+    }
+
+    /// Publish any newly-completed full blocks of `table` into the prefix
+    /// cache. `tokens` is the request's full known token stream (prompt +
+    /// generated); only blocks whose every position is written — i.e.
+    /// `tokens.len() / block_size` blocks — are eligible. On a hash
+    /// collision with an already-published twin the twin wins and this
+    /// block simply stays out of the index.
+    pub fn publish_full_blocks(&mut self, table: &mut BlockTable, tokens: &[i32]) {
+        if table.publish_frozen {
+            return;
+        }
+        let bs = self.block;
+        let full = (tokens.len() / bs).min(table.blocks.len());
+        while table.published < full {
+            let i = table.published;
+            let h = chain_hash(table.chain, &tokens[i * bs..(i + 1) * bs]);
+            let b = table.blocks[i];
+            if !self.by_hash.contains_key(&h) && self.hash_of[b as usize].is_none() {
+                self.by_hash.insert(h, b);
+                self.hash_of[b as usize] = Some(h);
+            }
+            table.chain = h;
+            table.published += 1;
+        }
+    }
+
+    /// Drop every reference the table holds. Published blocks whose last
+    /// reference drops are RETAINED in the cached-free list (the prefix
+    /// cache outliving the request is the multi-turn win); unpublished
+    /// ones return to the free list.
+    pub fn free_table(&mut self, table: BlockTable) {
+        for b in table.blocks {
+            let rc = &mut self.ref_count[b as usize];
+            assert!(*rc > 0, "double free of kv block {b}");
+            *rc -= 1;
+            if *rc == 0 {
+                self.in_use -= 1;
+                if self.hash_of[b as usize].is_some() {
+                    self.cached_free.push_back(b);
+                } else {
+                    self.free.push(b);
+                }
+            }
+        }
+    }
+
+    /// Test/diagnostic invariant sweep: every block is in exactly one
+    /// state, ref counts equal live references, the hash index is sound.
+    #[cfg(test)]
+    fn check_invariants(&self, live: &[&BlockTable]) -> Result<(), String> {
+        let mut refs = vec![0u32; self.n_blocks];
+        for t in live {
+            for &b in &t.blocks {
+                refs[b as usize] += 1;
+            }
+        }
+        for b in 1..self.n_blocks {
+            if refs[b] != self.ref_count[b] {
+                return Err(format!(
+                    "block {b}: {} table refs but ref_count {}",
+                    refs[b], self.ref_count[b]
+                ));
+            }
+            let in_free = self.free.contains(&(b as BlockId));
+            let in_cached = self.cached_free.contains(&(b as BlockId));
+            let held = self.ref_count[b] > 0;
+            if (held as u8 + in_free as u8 + in_cached as u8) != 1 {
+                return Err(format!(
+                    "block {b} state corrupt: held={held} free={in_free} cached={in_cached}"
+                ));
+            }
+        }
+        if self.in_use != (1..self.n_blocks).filter(|&b| self.ref_count[b] > 0).count() {
+            return Err(format!("in_use gauge {} out of sync", self.in_use));
+        }
+        for (&h, &b) in &self.by_hash {
+            if self.hash_of[b as usize] != Some(h) {
+                return Err(format!("hash index maps {h:#x} to block {b} without back-link"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::substrate::prop::check;
+
+    fn toks(seed: i32, n: usize) -> Vec<i32> {
+        (0..n as i32).map(|i| seed * 1000 + i).collect()
+    }
+
+    #[test]
+    fn alloc_covers_prompt_and_reclaims_to_empty() {
+        let mut p = BlockPool::new(9, 4).unwrap();
+        let (t, cached) = p.alloc_prompt(&toks(1, 10)).unwrap().unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(t.blocks.len(), 3); // ceil(10/4)
+        assert_eq!(p.blocks_in_use(), 3);
+        assert!(t.blocks.iter().all(|&b| b != 0), "null block granted");
+        p.free_table(t);
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.available(), 8);
+    }
+
+    #[test]
+    fn prefix_hits_share_published_blocks_live_and_after_free() {
+        let mut p = BlockPool::new(17, 4).unwrap();
+        let prompt_a: Vec<i32> = toks(7, 12); // 3 full blocks
+        let (mut ta, cached) = p.alloc_prompt(&prompt_a).unwrap().unwrap();
+        assert_eq!(cached, 0);
+        p.publish_full_blocks(&mut ta, &prompt_a);
+
+        // co-resident: same 8-token prefix, different tail
+        let mut prompt_b = prompt_a[..8].to_vec();
+        prompt_b.extend(toks(9, 4));
+        let (tb, cached_b) = p.alloc_prompt(&prompt_b).unwrap().unwrap();
+        assert_eq!(cached_b, 8, "two full prefix blocks should hit");
+        assert_eq!(&tb.blocks[..2], &ta.blocks[..2], "must share physical blocks");
+        assert_ne!(tb.blocks[2], ta.blocks[2], "divergent tail must not alias");
+        assert_eq!(p.stats.prefix_hits, 2);
+
+        // across time: A finishes; its first two blocks stay held by B,
+        // its third drops to ref 0 and is RETAINED in the prefix cache
+        let a_blocks = ta.blocks.clone();
+        p.free_table(ta);
+        assert_eq!(p.cached_blocks(), 1);
+        let (tc, cached_c) = p.alloc_prompt(&prompt_a).unwrap().unwrap();
+        assert_eq!(cached_c, 12, "full prompt cached after A's lifetime");
+        assert_eq!(tc.blocks, a_blocks);
+        p.free_table(tb);
+        p.free_table(tc);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn cow_on_shared_block_write() {
+        let mut p = BlockPool::new(9, 4).unwrap();
+        let prompt = toks(3, 8);
+        let (mut ta, _) = p.alloc_prompt(&prompt).unwrap().unwrap();
+        p.publish_full_blocks(&mut ta, &prompt);
+        let (mut tb, cached) = p.alloc_prompt(&prompt).unwrap().unwrap();
+        assert_eq!(cached, 8);
+        assert_eq!(ta.blocks, tb.blocks);
+        // B must not write into the shared final block without a copy
+        match p.make_private(&mut tb, 1).unwrap() {
+            MakePrivate::Cow { src, dst } => {
+                assert_eq!(src, ta.blocks[1]);
+                assert_eq!(tb.blocks[1], dst);
+                assert_ne!(dst, src);
+            }
+            other => panic!("expected Cow, got {other:?}"),
+        }
+        // now exclusive: a second call is a no-op
+        assert_eq!(p.make_private(&mut tb, 1).unwrap(), MakePrivate::Private);
+        assert_eq!(p.stats.cow_copies, 1);
+        p.free_table(ta);
+        p.free_table(tb);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn exhaustion_is_clean_and_eviction_recycles_cache() {
+        let mut p = BlockPool::new(5, 4).unwrap(); // 4 usable blocks
+        let (mut ta, _) = p.alloc_prompt(&toks(1, 8)).unwrap().unwrap(); // 2 blocks
+        p.publish_full_blocks(&mut ta, &toks(1, 8));
+        let (tb, _) = p.alloc_prompt(&toks(2, 8)).unwrap().unwrap(); // 2 more
+        // pool full: a third distinct prompt cannot be covered, and the
+        // failed allocation leaks nothing
+        assert!(p.alloc_prompt(&toks(3, 8)).unwrap().is_none());
+        assert_eq!(p.blocks_in_use(), 4);
+        // free A -> its published blocks become cached-free, and a new
+        // distinct prompt EVICTS them (oldest first) rather than failing
+        p.free_table(ta);
+        assert_eq!(p.cached_blocks(), 2);
+        let (tc, cached) = p.alloc_prompt(&toks(4, 8)).unwrap().unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(p.stats.evictions, 2);
+        // the evicted hashes are gone: prompt 1 no longer hits
+        p.free_table(tc);
+        let (td, cached) = p.alloc_prompt(&toks(1, 8)).unwrap().unwrap();
+        assert_eq!(cached, 0, "evicted prefix must not hit");
+        p.free_table(tb);
+        p.free_table(td);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn generated_tokens_publish_for_multi_turn_reuse() {
+        let mut p = BlockPool::new(9, 4).unwrap();
+        let prompt = toks(5, 4); // exactly one block
+        let (mut t, _) = p.alloc_prompt(&prompt).unwrap().unwrap();
+        p.publish_full_blocks(&mut t, &prompt);
+        // generation fills a second block
+        assert!(p.append_block(&mut t));
+        let mut stream = prompt.clone();
+        stream.extend([900, 901, 902, 903]);
+        p.publish_full_blocks(&mut t, &stream);
+        p.free_table(t);
+        // a follow-up turn embedding prompt + generation hits both blocks
+        let mut follow = stream.clone();
+        follow.extend(toks(6, 3));
+        let (tf, cached) = p.alloc_prompt(&follow).unwrap().unwrap();
+        assert_eq!(cached, 8, "prompt AND generated blocks should be cached");
+        p.free_table(tf);
+    }
+
+    #[test]
+    fn fork_shares_everything_and_cow_isolates() {
+        let mut p = BlockPool::new(9, 4).unwrap();
+        let (t, _) = p.alloc_prompt(&toks(8, 6)).unwrap().unwrap();
+        let mut f = p.fork(&t);
+        assert_eq!(f.blocks, t.blocks);
+        assert_eq!(p.blocks_in_use(), 2);
+        // the fork diverges at the partial tail block
+        match p.make_private(&mut f, 1).unwrap() {
+            MakePrivate::Cow { dst, .. } => assert_ne!(dst, t.blocks[1]),
+            other => panic!("expected Cow, got {other:?}"),
+        }
+        p.check_invariants(&[&t, &f]).unwrap();
+        p.free_table(t);
+        p.free_table(f);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    /// A fork that COW-diverges INSIDE its hashed prefix must never
+    /// publish again: its chain state describes the parent's tokens, so
+    /// publishing a later block would index it under a lying prefix and
+    /// a future prompt would be served wrong KV.
+    #[test]
+    fn cow_inside_published_prefix_freezes_publishing() {
+        let mut p = BlockPool::new(17, 4).unwrap();
+        let prompt = toks(4, 8); // 2 full blocks
+        let (mut t, _) = p.alloc_prompt(&prompt).unwrap().unwrap();
+        p.publish_full_blocks(&mut t, &prompt);
+        let mut f = p.fork(&t);
+        // diverge inside the published prefix (block 1)
+        match p.make_private(&mut f, 1).unwrap() {
+            MakePrivate::Cow { .. } => {}
+            other => panic!("expected Cow, got {other:?}"),
+        }
+        // the fork extends with its own block; its stream diverged at
+        // block 1, so publishing block 2 under the parent's chain would
+        // be a lie — it must be silently skipped
+        assert!(p.append_block(&mut f));
+        let mut divergent = prompt.clone();
+        divergent.extend([700, 701, 702, 703]);
+        let cached_before = p.by_hash.len();
+        p.publish_full_blocks(&mut f, &divergent);
+        assert_eq!(p.by_hash.len(), cached_before, "frozen table published");
+        // a prompt matching the PARENT's stream + the fork's tail must
+        // NOT hit the fork's unpublished block
+        let (tq, cached) = p.alloc_prompt(&divergent).unwrap().unwrap();
+        assert_eq!(cached, 8, "only the true shared prefix may hit");
+        p.free_table(t);
+        p.free_table(f);
+        p.free_table(tq);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn table_row_pads_with_null() {
+        let mut p = BlockPool::new(9, 4).unwrap();
+        let (t, _) = p.alloc_prompt(&toks(2, 6)).unwrap().unwrap();
+        let row = t.row(4);
+        assert_eq!(row.len(), 4);
+        assert_eq!(&row[2..], &[0, 0]);
+        assert!(row[0] > 0 && row[1] > 0);
+        p.free_table(t);
+    }
+
+    #[test]
+    fn chain_hash_is_position_sensitive() {
+        let a = chain_hash(0, &[1, 2, 3, 4]);
+        let b = chain_hash(0, &[5, 6, 7, 8]);
+        assert_ne!(a, b);
+        // same second block under different first blocks -> different keys
+        assert_ne!(chain_hash(a, &[9, 9, 9, 9]), chain_hash(b, &[9, 9, 9, 9]));
+        // deterministic
+        assert_eq!(a, chain_hash(0, &[1, 2, 3, 4]));
+    }
+
+    /// The satellite property: random interleavings of
+    /// alloc/free/fork(COW)/prefix-share never double-free, never alias
+    /// blocks across non-sharing requests, and always reclaim to empty.
+    #[test]
+    fn prop_allocator_interleavings_hold_invariants() {
+        check("kv-paged-allocator", 40, |g| {
+            let bs = g.usize_in(1, 5);
+            let n_blocks = g.usize_in(6, 40);
+            let mut p = BlockPool::new(n_blocks, bs).map_err(|e| e.to_string())?;
+            // small prompt alphabet so prefix collisions actually happen
+            let mut live: Vec<(BlockTable, Vec<i32>)> = Vec::new();
+            let ops = g.usize_in(10, 60);
+            for _ in 0..ops {
+                match g.usize_in(0, 5) {
+                    // alloc a prompt (maybe sharing a prefix with history)
+                    0 | 1 => {
+                        let blocks = g.usize_in(1, 4);
+                        let seed = g.usize_in(0, 3) as i32;
+                        let mut prompt: Vec<i32> = Vec::new();
+                        for b in 0..blocks {
+                            // low-entropy block content keyed by (seed, b)
+                            prompt.extend((0..bs).map(|k| seed * 7 + b as i32 * 31 + k as i32));
+                        }
+                        if g.bool() {
+                            prompt.push(999); // partial tail
+                        }
+                        if let Some((mut t, cached)) =
+                            p.alloc_prompt(&prompt).map_err(|e| e.to_string())?
+                        {
+                            prop_assert!(
+                                cached % bs == 0 && cached <= prompt.len(),
+                                "cached {cached} not block-aligned under {}",
+                                prompt.len()
+                            );
+                            p.publish_full_blocks(&mut t, &prompt);
+                            live.push((t, prompt));
+                        }
+                    }
+                    // free a random live table
+                    2 => {
+                        if !live.is_empty() {
+                            let i = g.usize_in(0, live.len());
+                            let (t, _) = live.swap_remove(i);
+                            p.free_table(t);
+                        }
+                    }
+                    // fork one, then COW-diverge the fork's tail
+                    3 => {
+                        if !live.is_empty() {
+                            let i = g.usize_in(0, live.len());
+                            let (src_t, src_p) = (live[i].0.clone(), live[i].1.clone());
+                            let mut f = p.fork(&src_t);
+                            if !f.blocks.is_empty() {
+                                let idx = f.blocks.len() - 1;
+                                match p.make_private(&mut f, idx).map_err(|e| e.to_string())? {
+                                    MakePrivate::Cow { src, dst } => {
+                                        prop_assert!(src != dst, "cow to itself");
+                                        prop_assert!(
+                                            src_t.blocks[idx] == src && f.blocks[idx] == dst,
+                                            "cow remap wrong"
+                                        );
+                                    }
+                                    MakePrivate::Exhausted => {
+                                        // fork stays shared; still valid
+                                    }
+                                    MakePrivate::Private => {
+                                        // only legal if the source block
+                                        // was freed meanwhile — it wasn't
+                                        // (src_t is live), so this is a bug
+                                        return Err("shared block reported private".into());
+                                    }
+                                }
+                            }
+                            live.push((f, src_p));
+                        }
+                    }
+                    // grow a random table by a block
+                    _ => {
+                        if !live.is_empty() {
+                            let i = g.usize_in(0, live.len());
+                            let _ = p.append_block(&mut live[i].0);
+                        }
+                    }
+                }
+                let refs: Vec<&BlockTable> = live.iter().map(|(t, _)| t).collect();
+                p.check_invariants(&refs).map_err(|e| format!("after op: {e}"))?;
+                // no aliasing across non-sharing requests: any block shared
+                // by two tables must be a common PUBLISHED prefix block or
+                // a fork remnant — in both cases ref_count covers it; a
+                // block referenced twice with ref_count 1 is corruption
+                // (covered by check_invariants' exact ref accounting).
+            }
+            // drain: everything reclaims, nothing double-frees
+            for (t, _) in live.drain(..) {
+                p.free_table(t);
+            }
+            prop_assert!(p.blocks_in_use() == 0, "leaked {} blocks", p.blocks_in_use());
+            p.check_invariants(&[]).map_err(|e| format!("after drain: {e}"))?;
+            Ok(())
+        });
+    }
+
+    /// Prefix sharing must never hand out a block whose content the new
+    /// request's prompt does not match (hash chaining soundness at the
+    /// allocator level: equal chains <=> equal prefixes for these inputs).
+    #[test]
+    fn prop_prefix_hits_imply_equal_prefixes() {
+        check("kv-paged-prefix-soundness", 30, |g| {
+            let bs = g.usize_in(2, 5);
+            let mut p = BlockPool::new(64, bs).map_err(|e| e.to_string())?;
+            let mut history: Vec<(Vec<i32>, BlockTable)> = Vec::new();
+            for _ in 0..g.usize_in(3, 10) {
+                let nb = g.usize_in(1, 4);
+                let mut prompt = Vec::new();
+                for b in 0..nb {
+                    let variant = g.usize_in(0, 2) as i32;
+                    prompt.extend((0..bs).map(|k| variant * 100 + b as i32 * 10 + k as i32));
+                }
+                let Some((mut t, cached)) = p.alloc_prompt(&prompt).map_err(|e| e.to_string())?
+                else {
+                    continue;
+                };
+                // every cached block must map to a historical table whose
+                // prompt agrees on that whole prefix
+                for (hp, ht) in &history {
+                    for i in 0..cached / bs {
+                        if ht.blocks.get(i) == Some(&t.blocks[i]) {
+                            prop_assert!(
+                                hp.len() >= (i + 1) * bs
+                                    && hp[..(i + 1) * bs] == prompt[..(i + 1) * bs],
+                                "shared block {i} with mismatched prefix"
+                            );
+                        }
+                    }
+                }
+                p.publish_full_blocks(&mut t, &prompt);
+                history.push((prompt, t));
+            }
+            for (_, t) in history.drain(..) {
+                p.free_table(t);
+            }
+            prop_assert!(p.blocks_in_use() == 0, "leak");
+            Ok(())
+        });
+    }
+}

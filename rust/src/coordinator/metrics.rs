@@ -49,20 +49,17 @@ pub struct EngineMetrics {
     /// Prompts rejected as longer than the largest seq bucket
     /// (`prompt_too_long` — the old path silently truncated these).
     pub rejected_prompts: u64,
-    /// Composition changes that rebuilt the group cache on the host
-    /// (batch re-buckets — chunked prefill writes on-device and no
-    /// longer splices at admission).
-    pub kv_rebuilds: u64,
-    /// Batch-bucket changes specifically (each one a full-group copy —
-    /// the quantity the shrink hysteresis bounds).
-    pub regroups: u64,
-    /// Individual slots copied by incremental surgery.
-    pub slot_copies: u64,
+    /// Logical seq-bucket growth events. Under paged KV a "promotion" is
+    /// a table-width change (different entry next step) — zero cache
+    /// bytes move; the counter survives as telemetry of entry switches.
     pub bucket_promotions: u64,
-    /// Host-side KV surgery wall time (also in `surgery.host_surgery_ns`).
+    /// Prompt tokens served straight from the prefix cache instead of
+    /// being prefilled (summed over admissions; the per-request figure is
+    /// `Completion::cached_prompt_tokens`).
+    pub prefix_tokens_skipped: u64,
+    /// Host-side KV work wall time (pool creation + copy-on-write block
+    /// copies; also in `surgery.host_surgery_ns`).
     pub host_surgery_s: f64,
-    pub kv_pool_reuses: u64,
-    pub kv_pool_allocs: u64,
     /// Scheduler-side contribution to the step breakdown (surgery time +
     /// resident-cache materialization bytes); merged with the engine's
     /// profile by `Scheduler::profile()`.
@@ -110,13 +107,22 @@ impl EngineMetrics {
             ("itl_ms_mean", (self.itl.mean() * 1e3).into()),
             ("ttft_ms_p50", (self.ttft.p50() * 1e3).into()),
             ("e2e_ms_p50", (self.e2e.p50() * 1e3).into()),
-            ("kv_rebuilds", (self.kv_rebuilds as usize).into()),
-            ("regroups", (self.regroups as usize).into()),
-            ("slot_copies", (self.slot_copies as usize).into()),
+            // DEPRECATED (always 0): the paged KV pool never rebuilds a
+            // contiguous group cache, so the rebuild/surgery counters the
+            // contiguous era exposed are pinned at zero for one release
+            // to keep old dashboards parsing. Read `stats.kv` instead
+            // (PROTOCOL.md "KV memory").
+            ("kv_rebuilds", 0usize.into()),
+            ("regroups", 0usize.into()),
+            ("slot_copies", 0usize.into()),
+            ("kv_pool_reuses", 0usize.into()),
+            ("kv_pool_allocs", 0usize.into()),
             ("bucket_promotions", (self.bucket_promotions as usize).into()),
+            (
+                "prefix_tokens_skipped",
+                (self.prefix_tokens_skipped as usize).into(),
+            ),
             ("host_surgery_ms", (self.host_surgery_s * 1e3).into()),
-            ("kv_pool_reuses", (self.kv_pool_reuses as usize).into()),
-            ("kv_pool_allocs", (self.kv_pool_allocs as usize).into()),
         ])
     }
 
@@ -187,6 +193,22 @@ mod tests {
         m.record_step(Duration::from_millis(10), 4);
         assert_eq!(m.generated_tokens, 8);
         assert!((m.decode_throughput() - 400.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn deprecated_rebuild_keys_pin_at_zero() {
+        // the contiguous-era keys must keep emitting (0) for one release
+        // so clients don't break — PROTOCOL.md documents the deprecation
+        let mut m = EngineMetrics::default();
+        m.prefix_tokens_skipped = 256;
+        m.bucket_promotions = 2;
+        let j = m.to_json();
+        for key in ["kv_rebuilds", "regroups", "slot_copies", "kv_pool_reuses", "kv_pool_allocs"]
+        {
+            assert_eq!(j.get(key).as_usize(), Some(0), "{key}");
+        }
+        assert_eq!(j.get("prefix_tokens_skipped").as_usize(), Some(256));
+        assert_eq!(j.get("bucket_promotions").as_usize(), Some(2));
     }
 
     #[test]

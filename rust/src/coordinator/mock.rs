@@ -23,6 +23,15 @@
 //! accounting is analytic (computed from the shapes the real paths would
 //! move), so the breakdown is deterministic.
 //!
+//! **Paged KV**: the mock implements the full block-pool path the
+//! scheduler serves from (`prefill_chunk_paged` / `decode_paged` /
+//! `copy_blocks`), fingerprinting every written position at
+//! `[l=0, k=0, block, g=0, pos % bs, d=0]` — so paged tests can read the
+//! pool back through a request's block table ([`MockEngine::table_fingerprints`])
+//! and prove that paged scheduling produced exactly the contiguous
+//! path's token stream while writing exactly the physical blocks the
+//! allocator granted (never the null block, never a foreign request's).
+//!
 //! Routing: the mock *honors* router indices end-to-end. A step that
 //! arrives with a [`StepRouting`] has its `head_idx`/`mlp_idx` tensors
 //! shape- and range-checked against the mock geometry, counts toward
@@ -41,8 +50,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::runtime::{
-    KvCache, KvStore, ModelConfig, RouterBank, StepOutput, StepProfile, StepRouting,
-    Tensor,
+    copy_pool_blocks, BlockTables, KvCache, KvStore, ModelConfig, PagedKv,
+    PagedStepOutput, RouterBank, StepOutput, StepProfile, StepRouting, Tensor,
 };
 use crate::tokenizer::PAD;
 
@@ -225,6 +234,43 @@ impl MockEngine {
     pub fn with_host_kv_path(mut self, host: bool) -> Self {
         self.host_kv_path = host;
         self
+    }
+
+    /// Paged geometry the mock serves: block = the chunk width, pool
+    /// sized for the no-sharing worst case of the current bucket ladder
+    /// (+ the null block) — the same formula aot.py bakes into real
+    /// manifests.
+    fn paged_layout(&self) -> (usize, usize) {
+        let bs = self.chunk_len;
+        let max_b = *self.batch_buckets.last().unwrap();
+        let max_n = *self.seq_buckets.last().unwrap();
+        (bs, 1 + max_b * max_n / bs)
+    }
+
+    /// Read one request's per-position fingerprints out of a POOL
+    /// snapshot through its block-table row (0 entries = null block,
+    /// whose content is don't-care). The paged counterpart of
+    /// [`MockEngine::slot_fingerprints`]: tests walk a prompt's logical
+    /// positions and prove each one landed in the right physical block.
+    pub fn table_fingerprints(&self, pool: &Tensor, row: &[i32]) -> Result<Vec<f32>> {
+        let s = pool.shape();
+        if s.len() != 6 {
+            bail!("expected pool [L,2,P,G,bs,dh], got {s:?}");
+        }
+        let (p, g, bs, dh) = (s[2], s[3], s[4], s[5]);
+        let data = pool.as_f32()?;
+        let block_row = g * bs * dh;
+        let mut out = Vec::with_capacity(row.len() * bs);
+        for &blk in row {
+            if blk < 0 || blk as usize >= p {
+                bail!("table row names block {blk} outside pool ({p})");
+            }
+            for off in 0..bs {
+                // fingerprints live at [l=0, k=0, block, g=0, off, d=0]
+                out.push(data[blk as usize * block_row + off * dh]);
+            }
+        }
+        Ok(out)
     }
 
     /// Read the prompt fingerprints of one slot out of a cache snapshot:
@@ -440,5 +486,226 @@ impl StepEngine for MockEngine {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
             kv: kv_out,
         })
+    }
+
+    // -- paged KV (block pool + block tables) ------------------------------
+
+    fn kv_layout(&self) -> (usize, usize) {
+        self.paged_layout()
+    }
+
+    fn new_kv_pool(&self) -> Result<PagedKv> {
+        let (bs, p) = self.paged_layout();
+        PagedKv::from_tensor(
+            &Tensor::zeros_f32(self.cfg.kv_pool_shape(p, bs)),
+            p,
+            bs,
+        )
+    }
+
+    /// Paged chunked prefill: identical chunk semantics to the
+    /// contiguous path, with each written position routed through the
+    /// slot's block-table row. Fingerprints land at
+    /// `[l=0, k=0, block, g=0, pos % bs, d=0]`, so tests can prove a
+    /// prompt streamed into exactly the physical blocks its table names
+    /// — and never into block 0 or a foreign block.
+    fn prefill_chunk_paged(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+    ) -> Result<PagedStepOutput> {
+        let t0 = Instant::now();
+        let b = tables.batch;
+        let c = self.chunk_len;
+        let bs = kv.block;
+        let n = tables.n(bs);
+        let p_blocks = kv.pool_blocks;
+        if tokens.len() != b * c || lengths.len() != b || offset.len() != b {
+            bail!(
+                "mock prefill_chunk_paged: tokens {} / lengths {} / offset {} vs batch {b} chunk {c}",
+                tokens.len(),
+                lengths.len(),
+                offset.len()
+            );
+        }
+        if lengths.iter().any(|&l| l > 0) && !self.chunk_delay.is_zero() {
+            std::thread::sleep(self.chunk_delay);
+        }
+        let was_resident = kv.is_resident();
+        let mut t = kv.to_tensor()?;
+        let (g, dh) = (self.cfg.n_kv_heads, self.cfg.d_head);
+        let block_row = g * bs * dh;
+        let mut logits = Vec::with_capacity(b * self.cfg.vocab);
+        {
+            let d = t.as_f32_mut()?;
+            for i in 0..b {
+                let len = lengths[i] as usize;
+                if len == 0 {
+                    logits.extend(vec![0.0f32; self.cfg.vocab]);
+                    continue;
+                }
+                let off = offset[i] as usize;
+                if len > c || off + len > n {
+                    bail!(
+                        "mock prefill_chunk_paged: slot {i} window {off}+{len} vs chunk {c} bucket {n}"
+                    );
+                }
+                for k in 0..len {
+                    let pos = off + k;
+                    let blk = tables.flat[i * tables.width + pos / bs];
+                    // a prompt write aimed at the null block (or out of
+                    // pool) is a scheduler bug, never a don't-care
+                    if blk <= 0 || blk as usize >= p_blocks {
+                        bail!(
+                            "mock prefill_chunk_paged: slot {i} pos {pos} writes block {blk}"
+                        );
+                    }
+                    d[blk as usize * block_row + (pos % bs) * dh] =
+                        tokens[i * c + k] as f32;
+                }
+                logits.extend(self.logits_for(tokens[i * c + len - 1]));
+            }
+        }
+        // transfer accounting, mirroring the real engine's two paths:
+        // the POOL crosses once (first upload) and then stays resident —
+        // unlike the contiguous cache it never re-uploads on re-buckets
+        let pool_bytes = (t.len() * 4) as u64;
+        let payload = (tokens.len() * 4
+            + lengths.len() * 4
+            + offset.len() * 4
+            + tables.flat.len() * 4) as u64;
+        let logits_bytes = (b * self.cfg.vocab * 4) as u64;
+        let kv_out = if self.host_kv_path {
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += payload + pool_bytes;
+            p.d2h_bytes += logits_bytes + pool_bytes;
+            PagedKv::from_tensor(&t, p_blocks, bs)?
+        } else {
+            let lit = t.to_literal()?;
+            let buf = self.client.buffer_from_host_literal(None, &lit)?;
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += payload + if was_resident { 0 } else { pool_bytes };
+            p.d2h_bytes += logits_bytes;
+            PagedKv { store: KvStore::Buf(buf), pool_blocks: p_blocks, block: bs }
+        };
+        {
+            let mut p = self.profile.lock().unwrap();
+            p.prefill_ns += t0.elapsed().as_nanos() as u64;
+            p.prefill_chunks += 1;
+        }
+        Ok(PagedStepOutput {
+            logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
+            kv: kv_out,
+        })
+    }
+
+    /// Paged decode: the contiguous mock's +1-chain logits, router
+    /// validation and logits nudge, with the per-step `-1` sentinel write
+    /// routed through the block table. Inactive (padding) slots aim at
+    /// the null block by construction, so their blind writes are
+    /// provably harmless — the fingerprint tests would catch any stray.
+    fn decode_paged(
+        &self,
+        _tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+        routing: Option<&StepRouting>,
+    ) -> Result<PagedStepOutput> {
+        let t0 = Instant::now();
+        if !self.step_delay.is_zero() {
+            std::thread::sleep(self.step_delay);
+        }
+        let b = tokens.len();
+        if tables.batch != b || lengths.len() != b {
+            bail!("mock decode_paged: tables batch {} vs tokens {b}", tables.batch);
+        }
+        let bs = kv.block;
+        let n = tables.n(bs);
+        let p_blocks = kv.pool_blocks;
+        if let Some(&max) = lengths.iter().max() {
+            if max as usize > n {
+                bail!("mock decode_paged: length {max} exceeds logical bucket {n}");
+            }
+        }
+        let head_sums = match routing {
+            Some(r) => {
+                let sums = self.check_routing(r, b)?;
+                self.routed_steps.fetch_add(1, Ordering::Relaxed);
+                Some(sums)
+            }
+            None => None,
+        };
+        let mut logits = Vec::with_capacity(b * self.cfg.vocab);
+        for (i, &tk) in tokens.iter().enumerate() {
+            let mut row = self.logits_for(if tk == PAD { 0 } else { tk });
+            if let Some(sums) = &head_sums {
+                row[sums[i] as usize % self.cfg.vocab] += 0.5;
+            }
+            logits.extend(row);
+        }
+        let was_resident = kv.is_resident();
+        let mut t = kv.to_tensor()?;
+        {
+            let d = t.as_f32_mut()?;
+            let (g, dh) = (self.cfg.n_kv_heads, self.cfg.d_head);
+            let block_row = g * bs * dh;
+            for (i, &len) in lengths.iter().enumerate() {
+                let pos = (len.max(1) as usize) - 1;
+                let blk = tables.flat[i * tables.width + pos / bs];
+                if blk < 0 || blk as usize >= p_blocks {
+                    bail!("mock decode_paged: slot {i} pos {pos} names block {blk}");
+                }
+                d[blk as usize * block_row + (pos % bs) * dh] = -1.0;
+            }
+        }
+        let pool_bytes = (t.len() * 4) as u64;
+        let io_bytes =
+            (tokens.len() * 4 + lengths.len() * 4 + tables.flat.len() * 4) as u64;
+        let logits_bytes = (b * self.cfg.vocab * 4) as u64;
+        let kv_out = if self.host_kv_path {
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += io_bytes + pool_bytes;
+            p.d2h_bytes += logits_bytes + pool_bytes;
+            p.decode_steps += 1;
+            PagedKv::from_tensor(&t, p_blocks, bs)?
+        } else {
+            let uploaded = if was_resident { 0 } else { pool_bytes };
+            let lit = t.to_literal()?;
+            let store = KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?);
+            let mut p = self.profile.lock().unwrap();
+            p.h2d_bytes += io_bytes + uploaded;
+            p.d2h_bytes += logits_bytes;
+            p.decode_steps += 1;
+            PagedKv { store, pool_blocks: p_blocks, block: bs }
+        };
+        self.profile.lock().unwrap().compute_ns += t0.elapsed().as_nanos() as u64;
+        Ok(PagedStepOutput {
+            logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
+            kv: kv_out,
+        })
+    }
+
+    /// COW block copies on the materialized pool, fingerprints included —
+    /// so a forked/diverging request's copied block carries the original
+    /// prefix fingerprints, exactly like the real copy.
+    fn copy_blocks(&self, kv: PagedKv, pairs: &[(u32, u32)]) -> Result<PagedKv> {
+        if pairs.is_empty() {
+            return Ok(kv);
+        }
+        let (p_blocks, bs) = (kv.pool_blocks, kv.block);
+        let was_resident = kv.is_resident();
+        let mut t = kv.to_tensor()?;
+        copy_pool_blocks(&mut t, pairs)?;
+        if was_resident {
+            // materialize + lazy re-upload: the next entry call pays the
+            // h2d (its `was_resident == false` branch), we pay the d2h
+            self.profile.lock().unwrap().d2h_bytes += (t.len() * 4) as u64;
+        }
+        PagedKv::from_tensor(&t, p_blocks, bs)
     }
 }

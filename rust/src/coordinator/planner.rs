@@ -20,7 +20,10 @@
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrefillJob {
     pub slot: usize,
-    /// Next prompt position to process (tokens `[0, next_pos)` are done).
+    /// Next prompt position to process (tokens `[0, next_pos)` are done —
+    /// streamed by earlier chunks OR served from the paged KV prefix
+    /// cache, which admits slots with `next_pos` already deep into the
+    /// prompt; the planner only ever plans the remainder).
     pub next_pos: usize,
     pub prompt_len: usize,
     /// Admission order (monotonic): lower = older = served first.
@@ -150,5 +153,22 @@ mod tests {
     #[test]
     fn no_jobs_no_calls() {
         assert!(plan_step(&[], 16, 16).is_empty());
+    }
+
+    #[test]
+    fn prefix_cached_jobs_plan_only_the_remainder() {
+        // a slot admitted with 256 of 272 tokens already in the prefix
+        // cache plans one 16-token chunk at offset 256; a fully-cached
+        // prompt capped to its last token plans exactly that token
+        let jobs = [job(0, 256, 272, 0), job(1, 271, 272, 1)];
+        let calls = plan_step(&jobs, 64, 16);
+        assert_eq!(calls.len(), 1);
+        assert_eq!(
+            calls[0],
+            vec![
+                ChunkAssignment { slot: 0, offset: 256, len: 16 },
+                ChunkAssignment { slot: 1, offset: 271, len: 1 },
+            ]
+        );
     }
 }

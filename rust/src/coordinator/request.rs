@@ -155,6 +155,9 @@ pub struct Completion {
     pub output_ids: Vec<i32>,
     pub finish: FinishReason,
     pub prompt_len: usize,
+    /// Prompt tokens whose KV was served from the shared prefix cache —
+    /// their prefill chunks were never computed for this request.
+    pub cached_prompt_tokens: usize,
     /// queue-entry -> first token, measured when the token was emitted
     /// (equals `e2e_s` for requests that never produced a token)
     pub ttft_s: f64,
@@ -244,6 +247,7 @@ mod tests {
             output_ids: vec![1],
             finish: FinishReason::Stop,
             prompt_len: 2,
+            cached_prompt_tokens: 0,
             ttft_s: 0.0,
             e2e_s: 0.0,
             decode_steps: 1,

@@ -1,70 +1,115 @@
 //! Iteration-level scheduler: continuous batching with chunked prefill
 //! over static-shape executables (the CUDA-graph-style constraint,
-//! DESIGN.md).
+//! DESIGN.md), backed by a **paged KV cache**.
+//!
+//! KV memory is one engine-resident block pool (`[L,2,P,G,bs,dh]`,
+//! allocated once per process) plus a per-request block table managed by
+//! [`kv::BlockPool`]. Every composition change the contiguous era paid a
+//! full-cache rebuild for — admission, finish, batch-bucket growth and
+//! shrink, seq-bucket promotion — now moves **table entries, not cache
+//! bytes**: the re-bucket rebuilds, the slot-surgery copies, and the
+//! `shrink_patience` hysteresis that existed to suppress rebuild
+//! oscillation are all gone. Requests whose prompts share a prefix
+//! (system prompts, multi-turn chat) share physical blocks through the
+//! pool's hash-keyed prefix cache and skip the already-cached prefill
+//! chunks entirely; divergent writes into a shared block are preceded by
+//! an engine-side copy-on-write ([`StepEngine::copy_blocks`]).
 //!
 //! Responsibilities per step:
 //!   1. expire deadlines, reap finished slots -> terminal events
+//!      (freeing their KV blocks back to the pool immediately)
 //!   2. admit pending requests by priority: reject over-long prompts,
-//!      pick the batch bucket, assign newcomers to slots in the
-//!      `Prefilling` state (no prompt compute yet)
+//!      grow the slot vector for demand (free — no cache rebuild),
+//!      allocate each newcomer's block table (prefix-cache hits skip
+//!      whole blocks of prefill), COW the boundary block if the write
+//!      window touches shared memory
 //!   3. spend the step's prefill token budget ([`planner`]) on the oldest
-//!      admitted-but-unprefilled prompts: each chunk call appends into
-//!      the resident group cache at a per-slot position offset, and the
-//!      final chunk's logits yield the request's first token
-//!   4. promote the seq bucket when any sequence outgrows it
+//!      admitted-but-unprefilled prompts, starting AFTER any cached
+//!      prefix: each chunk call writes through the block tables into the
+//!      resident pool, and the final chunk's logits yield the request's
+//!      first token; freshly-completed full blocks publish into the
+//!      prefix cache
+//!   4. pick this step's *logical* seq bucket (widest running sequence
+//!      rounds up the bucket ladder — a table-width change, not a copy)
 //!   5. ask the sparsity controller for this step's plan (entry tag +
-//!      router-produced `head_idx`/`mlp_idx` tensors) and run one decode
-//!      step for the running slots — *in the same step as the prefill
-//!      chunks*, so a long prompt's admission never stalls running
-//!      decoders for more than one chunk (no prefill head-of-line
-//!      blocking)
-//!   6. sample next tokens per active slot -> `Token` events
+//!      router-produced `head_idx`/`mlp_idx` tensors) and run one paged
+//!      decode step for the running slots — *in the same step as the
+//!      prefill chunks*, so a long prompt's admission never stalls
+//!      running decoders for more than one chunk
+//!   6. sample next tokens per active slot -> `Token` events; blocks
+//!      filled by generation publish too (multi-turn reuse)
 //!
 //! `step()` returns the [`GenerationEvent`]s produced this iteration: for
 //! every request the stream is `Queued` -> `Prefilled` -> `Token`+ ->
 //! `Finished`/`Cancelled`. TTFT and inter-token latency are recorded at
 //! the moment each token is emitted, not reconstructed at completion.
-//!
-//! The group KV cache stays resident on the engine between steps —
-//! prefill chunks write into it on-device (masked per-position writes, so
-//! co-resident slots are never clobbered), which removes the host-side
-//! KV splice the monolithic prefill path paid on every admission.
-//! Host-side surgery happens only on composition changes (re-bucketing)
-//! and is slot-incremental through a pooled buffer ([`kv::KvPool`]).
-//! Batch-bucket *growth* is immediate (a bigger batch cannot run in the
-//! current bucket), but *shrinking* waits `shrink_patience` consecutive
-//! eligible steps so an admit/finish oscillation around a bucket boundary
-//! cannot trigger a full-cache rebuild every step.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{KvCache, ModelConfig, StepOutput, StepProfile, StepRouting, Tensor};
+use crate::runtime::{
+    BlockTables, KvCache, ModelConfig, PagedKv, PagedStepOutput, StepOutput, StepProfile,
+    StepRouting, Tensor,
+};
 use crate::substrate::json::Json;
 use crate::tokenizer::{token_byte_len, PAD};
 
-use super::kv;
+use super::kv::{self, BlockTable, MakePrivate};
 use super::metrics::EngineMetrics;
 use super::planner::{self, PrefillJob};
 use super::request::{Completion, FinishReason, GenerationEvent, Request};
 use super::sampler::Sampler;
 use super::sparsity::SparsityController;
 
-/// What the scheduler needs from an engine (the real PJRT engine or a mock).
+/// What the scheduler needs from an engine (the real PJRT engine or a
+/// mock). The serving hot path is the paged family; the contiguous
+/// `prefill_chunk`/`decode` pair remains the A/B baseline (`bench
+/// decode-breakdown`) and the direct-caller path (eval, figures).
 pub trait StepEngine {
     fn config(&self) -> &ModelConfig;
     fn batch_buckets(&self) -> &[usize];
     fn seq_buckets(&self) -> &[usize];
     /// Token width of one chunked-prefill call.
     fn prefill_chunk_len(&self) -> usize;
-    /// Append one prompt chunk per slot into the group cache at per-slot
-    /// position offsets. `tokens`: [B*C] row-major (C = chunk width),
-    /// `lengths`: valid tokens per slot in this chunk (0 = inactive slot,
-    /// cache row untouched), `offset`: absolute start positions. Returns
-    /// each slot's logits at its chunk's last position (the first-token
-    /// logits when the chunk completes a prompt) plus the updated cache.
+    /// Paged-KV geometry: (token positions per block, pool blocks incl.
+    /// the reserved null block 0).
+    fn kv_layout(&self) -> (usize, usize);
+    /// A fresh zeroed pool at the engine's geometry. The scheduler calls
+    /// this once and keeps the pool resident for the process lifetime.
+    fn new_kv_pool(&self) -> Result<PagedKv>;
+    /// Append one prompt chunk per slot into the pool through the given
+    /// block tables at per-slot position offsets. `tokens`: [B*C]
+    /// row-major (C = chunk width), `lengths`: valid tokens per slot in
+    /// this chunk (0 = inactive slot, no writes), `offset`: absolute
+    /// start positions. Returns each slot's logits at its chunk's last
+    /// position plus the updated pool.
+    fn prefill_chunk_paged(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+    ) -> Result<PagedStepOutput>;
+    /// One paged decode step. `routing` carries the sparsity
+    /// controller's per-step head/MLP index tensors for index-taking
+    /// entries; engines whose entries route in-graph receive `None` and
+    /// must ignore it.
+    fn decode_paged(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+        routing: Option<&StepRouting>,
+    ) -> Result<PagedStepOutput>;
+    /// Copy whole physical blocks (src -> dst) inside the pool — the
+    /// copy-on-write service behind divergent writes into shared blocks.
+    fn copy_blocks(&self, kv: PagedKv, pairs: &[(u32, u32)]) -> Result<PagedKv>;
+    /// Contiguous chunked prefill (A/B baseline + direct callers).
     fn prefill_chunk(
         &self,
         tokens: &[i32],
@@ -72,10 +117,7 @@ pub trait StepEngine {
         offset: &[i32],
         kv: KvCache,
     ) -> Result<StepOutput>;
-    /// One decode step. `routing` carries the sparsity controller's
-    /// per-step head/MLP index tensors for index-taking entries; engines
-    /// whose entries route in-graph (and the dense/dejavu paths) receive
-    /// `None` and must ignore it.
+    /// Contiguous decode step (A/B baseline + direct callers).
     fn decode(
         &self,
         tag: &str,
@@ -104,6 +146,36 @@ impl StepEngine for crate::runtime::Engine {
     }
     fn prefill_chunk_len(&self) -> usize {
         crate::runtime::Engine::prefill_chunk_len(self)
+    }
+    fn kv_layout(&self) -> (usize, usize) {
+        crate::runtime::Engine::kv_layout(self)
+    }
+    fn new_kv_pool(&self) -> Result<PagedKv> {
+        crate::runtime::Engine::new_kv_pool(self)
+    }
+    fn prefill_chunk_paged(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+    ) -> Result<PagedStepOutput> {
+        crate::runtime::Engine::prefill_chunk_paged(self, tokens, lengths, offset, tables, kv)
+    }
+    fn decode_paged(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+        routing: Option<&StepRouting>,
+    ) -> Result<PagedStepOutput> {
+        crate::runtime::Engine::decode_paged(self, tag, tokens, lengths, tables, kv, routing)
+    }
+    fn copy_blocks(&self, kv: PagedKv, pairs: &[(u32, u32)]) -> Result<PagedKv> {
+        crate::runtime::Engine::copy_kv_blocks(self, kv, pairs)
     }
     fn prefill_chunk(
         &self,
@@ -135,8 +207,9 @@ impl StepEngine for crate::runtime::Engine {
 /// Where a slot is in its lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SlotPhase {
-    /// Admitted; prompt positions `[0, next_pos)` are in the group cache,
-    /// the rest stream in chunk by chunk under the step token budget.
+    /// Admitted; prompt positions `[0, next_pos)` are in the cache
+    /// (cached prefix + streamed chunks), the rest stream in chunk by
+    /// chunk under the step token budget.
     Prefilling { next_pos: usize },
     /// Prompt fully prefilled and first token emitted; decoding.
     Running,
@@ -146,6 +219,11 @@ struct Slot {
     req: Request,
     sampler: Sampler,
     phase: SlotPhase,
+    /// This request's logical-to-physical block mapping.
+    table: BlockTable,
+    /// Prompt tokens served straight from the prefix cache (never
+    /// prefilled here).
+    cached_prompt: usize,
     /// Admission order (monotonic): the planner serves older slots first.
     seq: u64,
     /// prompt_len + generated tokens (== attention length of the next
@@ -166,25 +244,36 @@ impl Slot {
     fn last_token(&self) -> i32 {
         *self.generated.last().unwrap_or(&PAD)
     }
+
+    /// Token stream whose KV is (or is about to be) written: prompt +
+    /// everything generated. Used to hash generated blocks into the
+    /// prefix cache as they fill.
+    fn stream(&self) -> Vec<i32> {
+        let mut s = self.req.prompt_ids.clone();
+        s.extend_from_slice(&self.generated);
+        s
+    }
 }
 
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     /// Upper bound on the batch bucket (must be one of the buckets).
     pub max_batch: usize,
-    /// Shrink the group when occupancy falls below a smaller bucket.
+    /// Shrink the slot vector when occupancy falls below a smaller
+    /// bucket. Batch re-buckets are free under paged KV (tables travel
+    /// with their slots; zero cache bytes move), so shrinking is eager —
+    /// the contiguous era's `shrink_patience` hysteresis is retired.
     pub compact: bool,
-    /// Consecutive steps a smaller batch bucket must suffice before the
-    /// group actually shrinks. 1 = shrink eagerly (the pre-hysteresis
-    /// behaviour); higher values absorb admit/finish oscillation around a
-    /// bucket boundary, each avoided re-bucket being a full-cache copy.
-    pub shrink_patience: usize,
     /// Prompt tokens one step may spend on prefill chunks (0 = one chunk
     /// bucket, the default). Larger budgets admit prompts faster at the
     /// cost of longer stalls for running decoders; `usize::MAX`
     /// reproduces the old monolithic behaviour (whole prompt in one step)
     /// and is the A/B baseline of `bench prefill-interference`.
     pub prefill_chunk_tokens: usize,
+    /// Hash-keyed cross-request prefix caching. Off = every request
+    /// prefills its whole prompt (the no-sharing baseline `bench
+    /// kv-paging` measures against).
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -192,8 +281,8 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             max_batch: 16,
             compact: true,
-            shrink_patience: 8,
             prefill_chunk_tokens: 0,
+            prefix_cache: true,
         }
     }
 }
@@ -204,12 +293,13 @@ pub struct Scheduler<E: StepEngine> {
     cfg: SchedulerConfig,
     pending: VecDeque<Request>,
     slots: Vec<Option<Slot>>,
-    group_kv: Option<KvCache>,
-    n_bucket: usize,
-    /// Pooled host buffers for composition-change surgery.
-    pool: kv::KvPool,
-    /// Consecutive steps a shrink has been possible (bucket hysteresis).
-    shrink_streak: usize,
+    /// The engine-resident block pool (one tensor, process lifetime).
+    pool_kv: Option<PagedKv>,
+    /// Block allocator: ref counts, free list, prefix cache, COW.
+    blocks: kv::BlockPool,
+    /// Logical seq bucket the last step ran at (telemetry only — bucket
+    /// changes are table-width changes now, not copies).
+    logical_n: usize,
     /// Monotonic admission counter (planner seniority).
     admit_seq: u64,
     /// Events produced since the last `step()` return (enqueue/cancel also
@@ -220,17 +310,24 @@ pub struct Scheduler<E: StepEngine> {
 
 impl<E: StepEngine> Scheduler<E> {
     pub fn new(engine: E, ctl: SparsityController, cfg: SchedulerConfig) -> Self {
-        let n0 = engine.seq_buckets().first().copied().unwrap_or(64);
+        let (block, pool_blocks) = engine.kv_layout();
+        // logical buckets translate to table widths (n / block), so every
+        // seq bucket must be block-aligned — a manifest/mock invariant
+        assert!(
+            engine.seq_buckets().iter().all(|&n| n % block == 0),
+            "seq buckets {:?} not divisible by kv block {block}",
+            engine.seq_buckets()
+        );
+        let blocks = kv::BlockPool::new(pool_blocks, block).expect("kv pool geometry");
         Scheduler {
             engine,
             ctl,
             cfg,
             pending: VecDeque::new(),
             slots: Vec::new(),
-            group_kv: None,
-            n_bucket: n0,
-            pool: kv::KvPool::new(),
-            shrink_streak: 0,
+            pool_kv: None,
+            blocks,
+            logical_n: 0,
             admit_seq: 0,
             events: Vec::new(),
             metrics: EngineMetrics::default(),
@@ -310,6 +407,45 @@ impl<E: StepEngine> Scheduler<E> {
         self.metrics.prefill_json(self.queued_prompt_tokens())
     }
 
+    /// The server's `stats.kv` object: block-allocator gauges and
+    /// prefix-cache / COW counters (the replacement for the retired
+    /// rebuild metrics — see PROTOCOL.md).
+    pub fn kv_stats(&self) -> Json {
+        let s = &self.blocks.stats;
+        Json::obj(vec![
+            ("block_size", self.blocks.block_size().into()),
+            ("pool_blocks", self.blocks.total_blocks().into()),
+            ("blocks_in_use", self.blocks.blocks_in_use().into()),
+            ("blocks_cached", self.blocks.cached_blocks().into()),
+            // disjoint gauges: in_use + cached + free == pool - 1 (null)
+            ("blocks_free", self.blocks.free_list_len().into()),
+            // free + cached (cached blocks are evictable on demand)
+            ("blocks_available", self.blocks.available().into()),
+            ("blocks_peak", s.peak_in_use.into()),
+            ("utilization", self.blocks.utilization().into()),
+            ("prefix_queries", (s.prefix_queries as usize).into()),
+            ("prefix_hits", (s.prefix_hits as usize).into()),
+            ("prefix_tokens_reused", (s.prefix_tokens_reused as usize).into()),
+            (
+                "prefill_tokens_saved",
+                (self.metrics.prefix_tokens_skipped as usize).into(),
+            ),
+            ("cow_copies", (s.cow_copies as usize).into()),
+            ("evictions", (s.evictions as usize).into()),
+            ("block_allocs", (s.block_allocs as usize).into()),
+        ])
+    }
+
+    /// Allocator gauge used by tests and the disconnect path: blocks
+    /// grantable right now (free + evictable cached).
+    pub fn kv_free_blocks(&self) -> usize {
+        self.blocks.available()
+    }
+
+    pub fn kv_blocks_in_use(&self) -> usize {
+        self.blocks.blocks_in_use()
+    }
+
     pub fn is_idle(&self) -> bool {
         // finished-but-unreaped slots and buffered events still count as
         // work: they must be surfaced by a further step()
@@ -322,18 +458,29 @@ impl<E: StepEngine> Scheduler<E> {
         self.slots.len()
     }
 
+    /// The logical seq bucket the last step decoded at (0 before any).
     pub fn n_bucket(&self) -> usize {
-        self.n_bucket
+        self.logical_n
     }
 
-    /// Host snapshot of the group KV cache (tests/diagnostics only — on
-    /// the hot path the cache stays resident on the engine).
+    /// Host snapshot of the KV pool (tests/diagnostics only — on the hot
+    /// path the pool stays resident on the engine).
     pub fn kv_snapshot(&self) -> Result<Option<Tensor>> {
-        self.group_kv.as_ref().map(|g| g.to_tensor()).transpose()
+        self.pool_kv.as_ref().map(|g| g.to_tensor()).transpose()
     }
 
-    /// Cancel a pending or in-flight request. The slot (and its KV) is
-    /// freed immediately; the terminal `Cancelled` event (with any partial
+    /// The physical blocks backing a live request's cache, in logical
+    /// order (tests pair this with [`Scheduler::kv_snapshot`] and the
+    /// mock's `table_fingerprints`).
+    pub fn block_table_of(&self, id: u64) -> Option<Vec<i32>> {
+        self.slots.iter().flatten().find(|s| s.req.id == id).map(|s| {
+            s.table.blocks.iter().map(|&b| b as i32).collect()
+        })
+    }
+
+    /// Cancel a pending or in-flight request. The slot — and its KV
+    /// blocks — are freed immediately (shared-prefix ref counts
+    /// decremented); the terminal `Cancelled` event (with any partial
     /// output) is delivered by the next `step()`. Returns false when the
     /// id is unknown (never enqueued, or already finished — including
     /// finished-but-unreaped slots, whose natural `Finished` event is
@@ -348,7 +495,8 @@ impl<E: StepEngine> Scheduler<E> {
             s.as_ref().map_or(false, |s| s.req.id == id && s.finished.is_none())
         });
         if let Some(i) = found {
-            let s = self.slots[i].take().unwrap();
+            let mut s = self.slots[i].take().unwrap();
+            self.blocks.free_table(std::mem::take(&mut s.table));
             self.metrics.cancelled_requests += 1;
             let c = Self::completion_of(&mut self.metrics, s, FinishReason::Cancelled);
             self.events.push(GenerationEvent::Cancelled(c));
@@ -391,7 +539,6 @@ impl<E: StepEngine> Scheduler<E> {
         let did_prefill = self.run_prefill_chunks()?;
         let mut did_decode = false;
         if self.decoding_len() > 0 {
-            self.maybe_promote_seq_bucket()?;
             self.decode_once()?;
             self.reap_finished();
             did_decode = true;
@@ -403,7 +550,7 @@ impl<E: StepEngine> Scheduler<E> {
             }
         }
         if self.pending.is_empty() {
-            self.maybe_compact()?;
+            self.maybe_compact();
         }
         self.metrics.total_wall_s += t_start.elapsed().as_secs_f64();
         Ok(std::mem::take(&mut self.events))
@@ -436,6 +583,7 @@ impl<E: StepEngine> Scheduler<E> {
             output_ids: s.generated,
             finish,
             prompt_len: s.req.prompt_ids.len(),
+            cached_prompt_tokens: s.cached_prompt,
             ttft_s: ttft,
             e2e_s: e2e,
             decode_steps,
@@ -451,6 +599,7 @@ impl<E: StepEngine> Scheduler<E> {
             output_ids: Vec::new(),
             finish,
             prompt_len: r.prompt_ids.len(),
+            cached_prompt_tokens: 0,
             ttft_s: e2e,
             e2e_s: e2e,
             decode_steps: 0,
@@ -506,7 +655,11 @@ impl<E: StepEngine> Scheduler<E> {
         for i in 0..self.slots.len() {
             let fin = self.slots[i].as_ref().and_then(|s| s.finished);
             if let Some(reason) = fin {
-                let s = self.slots[i].take().unwrap();
+                let mut s = self.slots[i].take().unwrap();
+                // KV blocks return to the pool at the terminal event;
+                // published blocks stay in the prefix cache for future
+                // requests sharing the prefix
+                self.blocks.free_table(std::mem::take(&mut s.table));
                 if reason == FinishReason::Deadline {
                     self.metrics.deadline_expired += 1;
                 } else {
@@ -531,10 +684,13 @@ impl<E: StepEngine> Scheduler<E> {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Admission: reject over-long prompts, grow the batch bucket for
-    /// demand, and hand free slots to the highest-priority pending
-    /// requests as `Prefilling` slots. No prompt compute happens here —
-    /// the step's chunk budget does that work incrementally.
+    /// Admission: reject over-long prompts, grow the slot vector for
+    /// demand (free — tables make batch re-buckets copyless), and hand
+    /// free slots to the highest-priority pending requests as
+    /// `Prefilling` slots with freshly-allocated block tables. Prompt
+    /// prefixes already in the pool's hash cache skip their prefill
+    /// chunks entirely; the one block a skip-capped recompute writes
+    /// into is copy-on-written if shared.
     fn admit(&mut self) -> Result<()> {
         if self.pending.is_empty() {
             return Ok(());
@@ -582,55 +738,64 @@ impl<E: StepEngine> Scheduler<E> {
         }
         let want = self.occupied_len() + self.pending.len();
         let target = self.batch_bucket_for(want);
-        // growth is mandatory (the bigger batch cannot run otherwise);
-        // shrinking is maybe_compact's job, behind hysteresis
+        // growth is a Vec resize now — no cache rebuild, no hysteresis
         if target > self.capacity() {
-            self.regroup(target)?;
-        } else if target == self.capacity() {
-            // demand needed the current bucket this step: a shrink now
-            // would be undone immediately, so the streak restarts
-            self.shrink_streak = 0;
+            self.slots.resize_with(target, || None);
         }
         let free = self.free_slots();
-        let n_new = free.len().min(self.pending.len());
-        if n_new == 0 {
+        if free.is_empty() {
             return Ok(());
         }
-        let newcomers: Vec<Request> = (0..n_new)
-            .map(|_| self.pending.pop_front().unwrap())
-            .collect();
-
-        // the group cache must exist and cover the longest admitted
-        // prompt (+1 for the first generated token; an exactly-filling
-        // prompt caps at the bucket and finishes CacheLimit after its
-        // first token)
-        let max_total = self.max_prompt_len();
-        let need = newcomers
-            .iter()
-            .map(|r| (r.prompt_ids.len() + 1).min(max_total))
-            .max()
-            .unwrap();
-        if self.group_kv.is_none() {
-            self.n_bucket = self.seq_bucket_for(need.max(self.n_bucket))?;
-            let t_surgery = Instant::now();
-            let cfg = self.engine.config().clone();
-            let zeroed = self.pool.acquire(cfg.kv_shape(self.capacity(), self.n_bucket));
-            self.group_kv =
-                Some(KvCache::from_tensor(&zeroed, self.capacity(), self.n_bucket)?);
-            self.pool.release(zeroed);
-            self.note_surgery(t_surgery);
-        } else if need > self.n_bucket {
-            let n = self.seq_bucket_for(need)?;
-            self.promote_seq_bucket(n)?;
+        // the pool exists from the first admission for the whole process
+        // lifetime (its prefix cache outlives every request)
+        if self.pool_kv.is_none() {
+            let t0 = Instant::now();
+            self.pool_kv = Some(self.engine.new_kv_pool()?);
+            self.note_surgery(t0);
         }
 
         let now = Instant::now();
-        for (r, &slot_idx) in newcomers.into_iter().zip(free.iter()) {
+        let mut cow_pairs: Vec<(u32, u32)> = Vec::new();
+        for &slot_idx in &free {
+            let Some(r) = self.pending.pop_front() else { break };
+            let plen = r.prompt_ids.len();
+            // allocate the prompt's block table; prefix-cache hits hand
+            // back already-filled physical blocks
+            let Some((mut table, cached_raw)) = self.blocks.alloc_prompt(&r.prompt_ids)?
+            else {
+                // pool exhausted: defer this (and every later) admission —
+                // blocks free as running requests finish
+                self.pending.push_front(r);
+                break;
+            };
+            // a fully-cached prompt still needs its LAST position's
+            // logits to sample the first token: recompute exactly one
+            // token. That write may land in a shared cached block — the
+            // one genuine copy-on-write in the serving path (the rewrite
+            // is bit-identical, but the block must still be private in
+            // case generation then extends into it).
+            let cached = cached_raw.min(plen.saturating_sub(1));
+            if cached < cached_raw || (cached > 0 && cached % self.blocks.block_size() != 0)
+            {
+                let idx = cached / self.blocks.block_size();
+                match self.blocks.make_private(&mut table, idx)? {
+                    MakePrivate::Cow { src, dst } => cow_pairs.push((src, dst)),
+                    MakePrivate::Private => {}
+                    MakePrivate::Exhausted => {
+                        self.blocks.free_table(table);
+                        self.pending.push_front(r);
+                        break;
+                    }
+                }
+            }
+            self.metrics.prefix_tokens_skipped += cached as u64;
             self.admit_seq += 1;
             let sampler = Sampler::new(r.params, r.id);
             self.slots[slot_idx] = Some(Slot {
                 sampler,
-                phase: SlotPhase::Prefilling { next_pos: 0 },
+                phase: SlotPhase::Prefilling { next_pos: cached },
+                table,
+                cached_prompt: cached,
                 seq: self.admit_seq,
                 len: 0,
                 generated: Vec::new(),
@@ -643,13 +808,66 @@ impl<E: StepEngine> Scheduler<E> {
                 req: r,
             });
         }
+        if !cow_pairs.is_empty() {
+            let t0 = Instant::now();
+            let pool = self.pool_kv.take().context("cow without pool")?;
+            self.pool_kv = Some(self.engine.copy_blocks(pool, &cow_pairs)?);
+            self.note_surgery(t0);
+        }
         Ok(())
     }
 
+    /// This step's logical seq bucket: smallest bucket covering every
+    /// live sequence (prefilling slots count their whole prompt + first
+    /// token). Bucket changes are table-width changes — zero-copy — so
+    /// the bucket simply tracks demand each step; growth is counted as a
+    /// promotion for continuity with the old telemetry.
+    fn logical_bucket(&mut self) -> Result<usize> {
+        let n = self.seq_bucket_for(self.required_n())?;
+        if self.logical_n != 0 && n > self.logical_n {
+            self.metrics.bucket_promotions += 1;
+        }
+        self.logical_n = n;
+        Ok(n)
+    }
+
+    fn required_n(&self) -> usize {
+        let max_total = self.max_prompt_len().max(1);
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| s.finished.is_none())
+            .map(|s| match s.phase {
+                SlotPhase::Running => s.len,
+                // a prefilling slot will need its whole prompt (+1 for
+                // the first token, capped at the largest bucket)
+                SlotPhase::Prefilling { .. } => {
+                    (s.req.prompt_ids.len() + 1).min(max_total)
+                }
+            })
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Per-slot block-table rows at `width` entries (null-padded; empty
+    /// slots all-null).
+    fn tables_at(&self, width: usize) -> Result<BlockTables> {
+        let b = self.capacity();
+        let mut flat = Vec::with_capacity(b * width);
+        for slot in &self.slots {
+            match slot {
+                Some(s) => flat.extend(s.table.row(width)),
+                None => flat.extend(std::iter::repeat(0).take(width)),
+            }
+        }
+        BlockTables::new(flat, b, width)
+    }
+
     /// Spend this step's token budget on prefill chunks (planner order:
-    /// oldest admitted first). Slots whose final chunk lands here sample
-    /// their first token from the chunk logits and switch to `Running`.
-    /// Returns whether any chunk ran.
+    /// oldest admitted first), skipping each slot's cached prefix. Slots
+    /// whose final chunk lands here sample their first token from the
+    /// chunk logits and switch to `Running`. Returns whether any chunk
+    /// ran.
     fn run_prefill_chunks(&mut self) -> Result<bool> {
         let chunk = self.engine.prefill_chunk_len().max(1);
         let budget = if self.cfg.prefill_chunk_tokens == 0 {
@@ -687,6 +905,10 @@ impl<E: StepEngine> Scheduler<E> {
         let b = self.capacity();
         let vocab = self.engine.config().vocab;
         let max_total = self.max_prompt_len();
+        let bs = self.blocks.block_size();
+        let prefix_cache_on = self.cfg.prefix_cache;
+        let n = self.logical_bucket()?;
+        let tables = self.tables_at(n / bs)?;
         for call in calls {
             let mut toks = vec![PAD; b * chunk];
             let mut lens = vec![0i32; b];
@@ -698,10 +920,10 @@ impl<E: StepEngine> Scheduler<E> {
                 lens[a.slot] = a.len as i32;
                 offs[a.slot] = a.offset as i32;
             }
-            let gkv = self.group_kv.take().context("prefill without group kv")?;
+            let pool = self.pool_kv.take().context("prefill without kv pool")?;
             let t0 = Instant::now();
-            let out = self.engine.prefill_chunk(&toks, &lens, &offs, gkv)?;
-            self.group_kv = Some(out.kv);
+            let out = self.engine.prefill_chunk_paged(&toks, &lens, &offs, &tables, pool)?;
+            self.pool_kv = Some(out.kv);
             self.metrics.prefill_chunk_latency.push_duration(t0.elapsed());
             self.metrics.prefill_chunks += 1;
             self.metrics.prefill_tokens += call.iter().map(|a| a.len as u64).sum::<u64>();
@@ -717,6 +939,13 @@ impl<E: StepEngine> Scheduler<E> {
                 }
                 s.last_chunk_at = Some(now);
                 let done = a.offset + a.len;
+                // the chunk may have completed whole blocks: publish them
+                // into the prefix cache so the NEXT request sharing this
+                // prompt skips their compute
+                if prefix_cache_on {
+                    self.blocks
+                        .publish_full_blocks(&mut s.table, &s.req.prompt_ids[..done]);
+                }
                 if done < s.req.prompt_ids.len() {
                     s.phase = SlotPhase::Prefilling { next_pos: done };
                     continue;
@@ -766,124 +995,47 @@ impl<E: StepEngine> Scheduler<E> {
         Ok(true)
     }
 
-    /// Rebuild the group at a new batch bucket, keeping live slots.
-    /// Slot-incremental: only surviving slots are copied, into a pooled
-    /// destination buffer.
-    fn regroup(&mut self, new_capacity: usize) -> Result<()> {
-        let t_surgery = Instant::now();
-        let mut new_slots: Vec<Option<Slot>> = (0..new_capacity).map(|_| None).collect();
-        if let Some(gkv) = self.group_kv.take() {
-            let cfg = self.engine.config().clone();
-            let mut dst = self.pool.acquire(cfg.kv_shape(new_capacity, self.n_bucket));
-            self.note_materialize(&gkv);
-            let gt = gkv.to_tensor()?;
-            let mut j = 0;
-            for i in 0..self.slots.len() {
-                if let Some(s) = self.slots[i].take() {
-                    assert!(j < new_capacity, "regroup would drop live slots");
-                    kv::copy_slot(&mut dst, j, &gt, i)?;
-                    self.metrics.slot_copies += 1;
-                    new_slots[j] = Some(s);
-                    j += 1;
-                }
-            }
-            self.pool.release(gt);
-            self.group_kv = Some(KvCache::from_tensor(&dst, new_capacity, self.n_bucket)?);
-            self.pool.release(dst);
-            // only an actual full-group copy counts: initial bucket
-            // creation (no prior group) moves no KV bytes
-            self.metrics.kv_rebuilds += 1;
-            self.metrics.regroups += 1;
-        }
-        // no prior group: stays None — admit() acquires the zeroed cache
-        // directly (prefill chunks then write into it on-device)
-        self.slots = new_slots;
-        self.shrink_streak = 0;
-        self.note_surgery(t_surgery);
-        Ok(())
-    }
-
-    fn maybe_compact(&mut self) -> Result<()> {
+    /// Shrink the slot vector (and drop it entirely when drained). Both
+    /// are free under paged KV: live slots carry their tables with them,
+    /// and the pool — with its prefix cache — persists across drains.
+    fn maybe_compact(&mut self) {
         if !self.cfg.compact || self.capacity() == 0 {
-            return Ok(());
+            return;
         }
         // count *occupied* slots (finished-but-unreaped ones still hold a
         // completion that a later step must surface — never drop them)
         let occupied = self.occupied_len();
         if occupied == 0 {
-            // drop the group entirely when drained
             self.slots.clear();
-            self.group_kv = None;
-            self.shrink_streak = 0;
-            return Ok(());
+            return;
         }
         let smaller = self.batch_bucket_for(occupied);
         if smaller < self.capacity() {
-            // hysteresis: only shrink after the smaller bucket has been
-            // sufficient for `shrink_patience` consecutive steps
-            self.shrink_streak += 1;
-            if self.shrink_streak >= self.cfg.shrink_patience.max(1) {
-                self.regroup(smaller)?;
+            // stable-compact live slots to the front; zero KV bytes move
+            let mut live: Vec<Option<Slot>> =
+                self.slots.drain(..).filter(|s| s.is_some()).collect();
+            live.resize_with(smaller, || None);
+            self.slots = live;
+        }
+    }
+
+    /// Grow tables so every active slot's next write position is backed
+    /// by a block; slots the pool cannot serve finish `CacheLimit`.
+    fn ensure_block_capacity(&mut self) {
+        let bs = self.blocks.block_size();
+        for slot in self.slots.iter_mut() {
+            let Some(s) = slot else { continue };
+            if s.finished.is_some() || s.phase != SlotPhase::Running {
+                continue;
             }
-        } else {
-            self.shrink_streak = 0;
-        }
-        Ok(())
-    }
-
-    fn required_n(&self) -> usize {
-        let max_total = self.max_prompt_len().max(1);
-        self.slots
-            .iter()
-            .flatten()
-            .filter(|s| s.finished.is_none())
-            .map(|s| match s.phase {
-                SlotPhase::Running => s.len,
-                // a prefilling slot will need its whole prompt (+1 for
-                // the first token, capped at the largest bucket)
-                SlotPhase::Prefilling { .. } => {
-                    (s.req.prompt_ids.len() + 1).min(max_total)
+            while s.table.capacity(bs) < s.len {
+                if !self.blocks.append_block(&mut s.table) {
+                    // out of physical memory: end this request rather
+                    // than stall the whole batch
+                    s.finished = Some(FinishReason::CacheLimit);
+                    break;
                 }
-            })
-            .max()
-            .unwrap_or(1)
-    }
-
-    fn maybe_promote_seq_bucket(&mut self) -> Result<()> {
-        let need = self.required_n();
-        if need > self.n_bucket {
-            let n = self.seq_bucket_for(need)?;
-            self.promote_seq_bucket(n)?;
-        }
-        Ok(())
-    }
-
-    /// Grow the position bucket in place: one pooled destination, rows
-    /// copied once (no allocate-then-copy churn).
-    fn promote_seq_bucket(&mut self, n_new: usize) -> Result<()> {
-        let t_surgery = Instant::now();
-        let gkv = self.group_kv.take().context("promote without group")?;
-        self.note_materialize(&gkv);
-        let gt = gkv.to_tensor()?;
-        let cfg = self.engine.config().clone();
-        // pad_n_into overwrites every destination element, so the pooled
-        // buffer is taken without the redundant zero pass
-        let mut dst = self.pool.acquire_overwritten(cfg.kv_shape(self.capacity(), n_new));
-        kv::pad_n_into(&gt, &mut dst)?;
-        self.pool.release(gt);
-        self.group_kv = Some(KvCache::from_tensor(&dst, self.capacity(), n_new)?);
-        self.pool.release(dst);
-        self.n_bucket = n_new;
-        self.metrics.bucket_promotions += 1;
-        self.note_surgery(t_surgery);
-        Ok(())
-    }
-
-    /// Account the d2h cost of pulling a resident cache home for surgery.
-    fn note_materialize(&mut self, gkv: &KvCache) {
-        if gkv.is_resident() {
-            let cfg = self.engine.config();
-            self.metrics.surgery.d2h_bytes += (cfg.kv_elems(gkv.batch, gkv.n) * 4) as u64;
+            }
         }
     }
 
@@ -891,11 +1043,14 @@ impl<E: StepEngine> Scheduler<E> {
         let ns = t0.elapsed().as_nanos() as u64;
         self.metrics.surgery.host_surgery_ns += ns;
         self.metrics.host_surgery_s += ns as f64 * 1e-9;
-        self.metrics.kv_pool_reuses = self.pool.reuses;
-        self.metrics.kv_pool_allocs = self.pool.allocs;
     }
 
     fn decode_once(&mut self) -> Result<()> {
+        self.ensure_block_capacity();
+        self.reap_finished();
+        if self.decoding_len() == 0 {
+            return Ok(());
+        }
         let b = self.capacity();
         let mut tokens = vec![PAD; b];
         let mut lengths = vec![1i32; b];
@@ -914,15 +1069,19 @@ impl<E: StepEngine> Scheduler<E> {
                     SlotPhase::Prefilling { next_pos } => {
                         // a decode entry writes this step's K/V at
                         // lengths-1 for every slot; aim the write at the
-                        // slot's next chunk position, which the next
-                        // chunk's masked write overwrites — the real
-                        // prefix [0, next_pos) stays untouched
+                        // slot's next chunk position — inside its own
+                        // private blocks, the next chunk's write
+                        // overwrites it — the real prefix [0, next_pos)
+                        // stays untouched
                         lengths[i] = (next_pos + 1) as i32;
                     }
                 }
             }
         }
-        let gkv = self.group_kv.take().context("decode without group kv")?;
+        let bs = self.blocks.block_size();
+        let n = self.logical_bucket()?;
+        let tables = self.tables_at(n / bs)?;
+        let pool = self.pool_kv.take().context("decode without kv pool")?;
         // per-step routing: the controller picks the entry and computes
         // the head/MLP index tensors for this batch's hidden state (the
         // mask keeps padding and prefilling slots out of selection and
@@ -932,15 +1091,21 @@ impl<E: StepEngine> Scheduler<E> {
             self.metrics.surgery.router_ns += r.router_ns;
         }
         let t0 = Instant::now();
-        let out =
-            self.engine
-                .decode(&plan.tag, &tokens, &lengths, gkv, plan.routing.as_ref())?;
+        let out = self.engine.decode_paged(
+            &plan.tag,
+            &tokens,
+            &lengths,
+            &tables,
+            pool,
+            plan.routing.as_ref(),
+        )?;
         let dt = t0.elapsed();
-        self.group_kv = Some(out.kv);
+        self.pool_kv = Some(out.kv);
 
         let logits = out.logits.as_f32()?;
         let vocab = self.engine.config().vocab;
         let max_total = self.max_prompt_len();
+        let prefix_cache_on = self.cfg.prefix_cache;
         let mut active = 0;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
@@ -948,6 +1113,14 @@ impl<E: StepEngine> Scheduler<E> {
                 continue;
             }
             active += 1;
+            // this step wrote position s.len - 1 — if that filled a
+            // block, its content (prompt + generated ids) is final:
+            // publish it so multi-turn follow-ups embedding this turn's
+            // output hit the prefix cache
+            if prefix_cache_on && s.len % bs == 0 {
+                let stream = s.stream();
+                self.blocks.publish_full_blocks(&mut s.table, &stream[..s.len]);
+            }
             let row = &logits[i * vocab..(i + 1) * vocab];
             let next = s.sampler.sample(row);
             let now = Instant::now();

@@ -32,7 +32,10 @@ commands:
              scaling: head flat vs MLP toward dense (BENCH_sparsity.json), or
              `bench prefill-interference [--smoke]` for chunked-vs-monolithic
              prefill: decoder p99 ITL under long-prompt arrival and TTFT by
-             prompt length (BENCH_prefill.json)
+             prompt length (BENCH_prefill.json), or
+             `bench kv-paging [--smoke]` for the paged KV cache: prefill
+             tokens saved by cross-request prefix caching and re-bucket
+             bytes vs the contiguous baseline (BENCH_kv.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -58,6 +61,9 @@ fn main() {
         }
         "bench" if rest.first().map(|s| s.as_str()) == Some("prefill-interference") => {
             bench::prefill_interference::run(&rest[1..])
+        }
+        "bench" if rest.first().map(|s| s.as_str()) == Some("kv-paging") => {
+            bench::kv_paging::run(&rest[1..])
         }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {

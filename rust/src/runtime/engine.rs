@@ -77,6 +77,104 @@ pub struct StepOutput {
     pub kv: KvCache,
 }
 
+/// The paged KV pool: ONE `[L, 2, P, G, bs, dh]` tensor resident on the
+/// engine for the process lifetime, shared by every request. Per-call
+/// block tables address it, so batch/seq bucket changes and request
+/// admission/finish move **no cache bytes** — the property the
+/// contiguous per-bucket caches could not give us.
+pub struct PagedKv {
+    pub store: KvStore,
+    /// Physical blocks in the pool (incl. the reserved null block 0).
+    pub pool_blocks: usize,
+    /// Token positions per block.
+    pub block: usize,
+}
+
+impl PagedKv {
+    /// Materialize the pool on the host (block copies, diagnostics).
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        match &self.store {
+            KvStore::Lit(l) => Tensor::from_literal(l),
+            KvStore::Buf(b) => {
+                Tensor::from_literal(&b.to_literal_sync().context("fetch resident kv pool")?)
+            }
+        }
+    }
+
+    pub fn from_tensor(t: &Tensor, pool_blocks: usize, block: usize) -> Result<PagedKv> {
+        Ok(PagedKv { store: KvStore::Lit(t.to_literal()?), pool_blocks, block })
+    }
+
+    pub fn is_resident(&self) -> bool {
+        matches!(self.store, KvStore::Buf(_))
+    }
+
+    fn into_store(self) -> KvStore {
+        self.store
+    }
+}
+
+/// One step's per-slot block tables, row-major `[batch, width]` (width =
+/// logical seq bucket / block size). Rows of inactive slots are all null
+/// block, so their blind per-step writes land in don't-care memory.
+#[derive(Debug, Clone)]
+pub struct BlockTables {
+    pub flat: Vec<i32>,
+    pub batch: usize,
+    pub width: usize,
+}
+
+impl BlockTables {
+    pub fn new(flat: Vec<i32>, batch: usize, width: usize) -> Result<BlockTables> {
+        if flat.len() != batch * width {
+            bail!("block tables: {} entries vs {batch} x {width}", flat.len());
+        }
+        Ok(BlockTables { flat, batch, width })
+    }
+
+    /// Logical positions the tables cover (the entry's seq bucket).
+    pub fn n(&self, block: usize) -> usize {
+        self.width * block
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Tensor::i32(self.flat.clone(), vec![self.batch, self.width])?.to_literal()
+    }
+}
+
+pub struct PagedStepOutput {
+    pub logits: Tensor, // [B, V]
+    pub kv: PagedKv,
+}
+
+/// Copy whole physical blocks (`src` -> `dst` pairs) inside a pool
+/// tensor `[L,2,P,G,bs,dh]` — the host half of copy-on-write. Every
+/// (layer, k/v) plane copies one `G*bs*dh` row per pair.
+pub fn copy_pool_blocks(t: &mut Tensor, pairs: &[(u32, u32)]) -> Result<()> {
+    let s = t.shape().to_vec();
+    if s.len() != 6 || s[1] != 2 {
+        bail!("expected pool [L,2,P,G,bs,dh], got {s:?}");
+    }
+    let (l, two, p, row) = (s[0], s[1], s[2], s[3] * s[4] * s[5]);
+    let data = t.as_f32_mut()?;
+    for &(src, dst) in pairs {
+        let (src, dst) = (src as usize, dst as usize);
+        if src >= p || dst >= p {
+            bail!("copy_pool_blocks: {src} -> {dst} out of pool ({p} blocks)");
+        }
+        if src == dst {
+            continue;
+        }
+        for li in 0..l {
+            for c in 0..two {
+                let base = ((li * two + c) * p) * row;
+                data.copy_within(base + src * row..base + src * row + row, base + dst * row);
+            }
+        }
+    }
+    Ok(())
+}
+
 #[derive(Clone)]
 pub struct Engine {
     pub exec: Arc<Executor>,
@@ -459,6 +557,253 @@ impl Engine {
         };
         self.exec.profile_mut().decode_steps += 1;
         Ok(out)
+    }
+
+    // -- paged KV (block pool + block tables) -----------------------------
+
+    /// Paged-KV geometry from the manifest: (block size, pool blocks).
+    pub fn kv_layout(&self) -> (usize, usize) {
+        let m = self.exec.manifest();
+        (m.kv_block, m.kv_pool_blocks)
+    }
+
+    /// A fresh zeroed pool at the manifest geometry. Allocated once per
+    /// serving process; bucket changes never touch it again.
+    pub fn new_kv_pool(&self) -> Result<PagedKv> {
+        let (block, pool_blocks) = self.kv_layout();
+        let t = Tensor::zeros_f32(self.exec.config().kv_pool_shape(pool_blocks, block));
+        PagedKv::from_tensor(&t, pool_blocks, block)
+    }
+
+    /// Assemble one KV-carrying entry's data inputs in declared order
+    /// (named literals + the single `kv` store + routing index tensors),
+    /// run it on the configured path, and return (logits, kv-out). Shared
+    /// by the paged decode/prefill twins; the contract is identical to
+    /// the contiguous paths': host path fetches the full output tuple,
+    /// resident path leaves the KV on-device and fetches only logits.
+    fn run_kv_entry(
+        &self,
+        name: &str,
+        named: &[(&str, xla::Literal)],
+        kv_store: KvStore,
+        routing: Option<&StepRouting>,
+    ) -> Result<(Tensor, KvStore)> {
+        let spec = self.exec.manifest().entry(name)?;
+        enum In {
+            Lit(xla::Literal),
+            Kv,
+        }
+        let mut ins: Vec<In> = Vec::with_capacity(spec.data.len());
+        let mut kv_inputs = 0usize;
+        for d in &spec.data {
+            match d.name.as_str() {
+                "kv" => {
+                    kv_inputs += 1;
+                    ins.push(In::Kv);
+                }
+                "head_idx" | "mlp_idx" => {
+                    let r = routing.with_context(|| {
+                        format!("{name}: entry takes {} but no routing was computed", d.name)
+                    })?;
+                    let t = if d.name == "head_idx" {
+                        Some(&r.head_idx)
+                    } else {
+                        r.mlp_idx.as_ref()
+                    };
+                    let t = t.with_context(|| {
+                        format!("{name}: routing decision carries no {}", d.name)
+                    })?;
+                    if t.shape() != d.shape.as_slice() {
+                        bail!(
+                            "{name}: {} shape {:?} != entry's {:?}",
+                            d.name,
+                            t.shape(),
+                            d.shape
+                        );
+                    }
+                    ins.push(In::Lit(t.to_literal()?));
+                }
+                other => {
+                    let lit = named
+                        .iter()
+                        .find(|(n, _)| *n == other)
+                        .map(|(_, l)| l.clone())
+                        .with_context(|| format!("{name}: unsupported data input {other:?}"))?;
+                    ins.push(In::Lit(lit));
+                }
+            }
+        }
+        if kv_inputs != 1 {
+            bail!("{name}: expected exactly one kv input, found {kv_inputs}");
+        }
+        if self.kv_host_path {
+            let mut kv_lit = Some(match kv_store {
+                KvStore::Lit(l) => l,
+                KvStore::Buf(b) => self.exec.fetch_literal(&b)?,
+            });
+            let data: Vec<xla::Literal> = ins
+                .into_iter()
+                .map(|i| match i {
+                    In::Lit(l) => l,
+                    In::Kv => kv_lit.take().expect("single kv input"),
+                })
+                .collect();
+            let outs = self.exec.run_raw(name, &data)?;
+            let logits = Tensor::from_literal(&outs[0])?;
+            let kv = KvStore::Lit(outs.into_iter().nth(1).context("kv output")?);
+            Ok((logits, kv))
+        } else {
+            let mut kv_in = Some(match kv_store {
+                KvStore::Lit(l) => DeviceInput::Host(l),
+                KvStore::Buf(b) => DeviceInput::Buf(b),
+            });
+            let inputs: Vec<DeviceInput> = ins
+                .into_iter()
+                .map(|i| match i {
+                    In::Lit(l) => DeviceInput::Host(l),
+                    In::Kv => kv_in.take().expect("single kv input"),
+                })
+                .collect();
+            let outs = self.exec.run_bufs(name, inputs)?;
+            let mut it = outs.into_iter();
+            let logits_buf = it.next().context("logits output")?;
+            let kv_buf = it.next().context("kv output")?;
+            let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
+            Ok((logits, KvStore::Buf(kv_buf)))
+        }
+    }
+
+    /// Block-pool chunked prefill through `prefill_b{B}_s{N}_paged`:
+    /// the same per-slot chunk semantics as [`Engine::prefill_chunk`],
+    /// with each slot's cache addressed through its block-table row. The
+    /// logical bucket N is implied by the tables' width x block size.
+    pub fn prefill_chunk_paged(
+        &self,
+        tokens: &[i32],
+        lengths: &[i32],
+        offset: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+    ) -> Result<PagedStepOutput> {
+        let b = tables.batch;
+        let c = self.prefill_chunk_len();
+        let n = tables.n(kv.block);
+        if tokens.len() != b * c || lengths.len() != b || offset.len() != b {
+            bail!(
+                "prefill_chunk_paged: tokens {} / lengths {} / offset {} vs batch {b} chunk {c}",
+                tokens.len(),
+                lengths.len(),
+                offset.len()
+            );
+        }
+        for i in 0..b {
+            let end = offset[i] as usize + lengths[i] as usize;
+            if end > n {
+                bail!("prefill_chunk_paged: slot {i} writes to {end} > bucket {n}");
+            }
+        }
+        if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv.pool_blocks) {
+            bail!("prefill_chunk_paged: block id out of pool ({})", kv.pool_blocks);
+        }
+        let name = self.exec.manifest().paged_prefill_entry_name(b, n);
+        let t0 = std::time::Instant::now();
+        let toks = Tensor::i32(tokens.to_vec(), vec![b, c])?.to_literal()?;
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let offs = Tensor::i32(offset.to_vec(), vec![b])?.to_literal()?;
+        let tbl = tables.to_literal()?;
+        let (pool_blocks, block) = (kv.pool_blocks, kv.block);
+        let (logits, store) = self.run_kv_entry(
+            &name,
+            &[("tokens", toks), ("lengths", lens), ("offset", offs), ("block_table", tbl)],
+            kv.into_store(),
+            None,
+        )?;
+        let mut p = self.exec.profile_mut();
+        p.prefill_ns += t0.elapsed().as_nanos() as u64;
+        p.prefill_chunks += 1;
+        Ok(PagedStepOutput { logits, kv: PagedKv { store, pool_blocks, block } })
+    }
+
+    /// Block-pool decode through `decode_{tag}_b{B}_n{N}_paged` — the
+    /// serving hot path. Same index-taking routing convention as
+    /// [`Engine::decode`] (the engine runs the artifact routers itself
+    /// for direct callers hitting an index-taking entry).
+    pub fn decode_paged(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        tables: &BlockTables,
+        kv: PagedKv,
+        routing: Option<&StepRouting>,
+    ) -> Result<PagedStepOutput> {
+        let b = tables.batch;
+        let n = tables.n(kv.block);
+        if tokens.len() != b || lengths.len() != b {
+            bail!("decode_paged: tokens/lengths len != batch {b}");
+        }
+        if let Some(&max) = lengths.iter().max() {
+            if max as usize > n {
+                bail!("decode_paged: length {max} exceeds logical bucket {n}");
+            }
+        }
+        if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv.pool_blocks) {
+            bail!("decode_paged: block id out of pool ({})", kv.pool_blocks);
+        }
+        let name = self.exec.manifest().paged_decode_entry_name(tag, b, n);
+        let spec = self.exec.manifest().entry(&name)?;
+        let computed;
+        let routing = match (routing, RoutingPolicy::from_entry(spec)) {
+            (None, Some(policy)) => {
+                let bank = self.router_bank().as_ref().with_context(|| {
+                    format!(
+                        "{name} takes router indices but the artifact has no \
+                         router weights (run compile.routers, or serve with \
+                         --mode dense)"
+                    )
+                })?;
+                computed = bank.route_step(tokens, lengths, None, &policy)?;
+                self.exec.profile_mut().router_ns += computed.router_ns;
+                Some(&computed)
+            }
+            (r, _) => r,
+        };
+        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let tbl = tables.to_literal()?;
+        let (pool_blocks, block) = (kv.pool_blocks, kv.block);
+        let (logits, store) = self.run_kv_entry(
+            &name,
+            &[("tokens", toks), ("lengths", lens), ("block_table", tbl)],
+            kv.into_store(),
+            routing,
+        )?;
+        self.exec.profile_mut().decode_steps += 1;
+        Ok(PagedStepOutput { logits, kv: PagedKv { store, pool_blocks, block } })
+    }
+
+    /// Copy physical blocks inside the pool (copy-on-write service).
+    ///
+    /// Honest cost note: with no dedicated on-device copy entry yet,
+    /// a COW on a *resident* pool materializes the WHOLE pool to the
+    /// host (accounted d2h here) and the next entry call re-uploads it
+    /// (accounted h2d there) — far more transfer than the one block
+    /// logically copied. COW is bounded by admissions (never on the
+    /// per-token path), so this is a latency blip per shared-prompt
+    /// admission, not a steady-state cost; an AOT `copy_blocks` entry
+    /// that gathers/scatters on-device is the planned fix.
+    pub fn copy_kv_blocks(&self, kv: PagedKv, pairs: &[(u32, u32)]) -> Result<PagedKv> {
+        if pairs.is_empty() {
+            return Ok(kv);
+        }
+        let (pool_blocks, block) = (kv.pool_blocks, kv.block);
+        let mut t = match kv.store {
+            KvStore::Lit(l) => Tensor::from_literal(&l)?,
+            // account the full-pool fetch like any other d2h
+            KvStore::Buf(b) => Tensor::from_literal(&self.exec.fetch_literal(&b)?)?,
+        };
+        copy_pool_blocks(&mut t, pairs)?;
+        PagedKv::from_tensor(&t, pool_blocks, block)
     }
 
     // -- pipeline parallel (2 stages, Fig 11) -----------------------------

@@ -93,6 +93,19 @@ impl ModelConfig {
     pub fn kv_shape(&self, batch: usize, n: usize) -> Vec<usize> {
         vec![self.n_layers, 2, batch, self.n_kv_heads, n, self.d_head]
     }
+    /// Shape of the paged KV pool [L,2,P,G,bs,dh] (P physical blocks of
+    /// bs positions; block 0 is the reserved null block).
+    pub fn kv_pool_shape(&self, pool_blocks: usize, block: usize) -> Vec<usize> {
+        vec![self.n_layers, 2, pool_blocks, self.n_kv_heads, block, self.d_head]
+    }
+    /// Elements in one physical block's (layer, k/v) row [G,bs,dh].
+    pub fn kv_block_row_elems(&self, block: usize) -> usize {
+        self.n_kv_heads * block * self.d_head
+    }
+    /// Elements one physical block occupies across all layers and k/v.
+    pub fn kv_block_elems(&self, block: usize) -> usize {
+        self.n_layers * 2 * self.kv_block_row_elems(block)
+    }
 }
 
 #[derive(Debug)]
@@ -106,6 +119,11 @@ pub struct Manifest {
     /// Chunked-prefill token width: each `prefill_b{B}_s{S}` call appends
     /// up to this many prompt tokens per slot at a position offset.
     pub prefill_chunk: usize,
+    /// Paged-KV geometry of the `*_paged` entries: token positions per
+    /// physical block, and total pool blocks (incl. the reserved null
+    /// block 0). The pool tensor is [L,2,kv_pool_blocks,G,kv_block,dh].
+    pub kv_block: usize,
+    pub kv_pool_blocks: usize,
     pub entries: BTreeMap<String, EntrySpec>,
 }
 
@@ -176,13 +194,25 @@ impl Manifest {
             entries.insert(spec.name.clone(), spec);
         }
 
+        let batch_buckets = to_usize_vec(buckets.get("batch"));
+        let seq_buckets = to_usize_vec(buckets.get("seq"));
+        // legacy manifests (pre-paging) carry no pool geometry: derive the
+        // same defaults aot.py would emit, so the paged entry NAMES still
+        // resolve predictably (loading them simply fails with "no entry"
+        // until the artifact is rebuilt).
+        let kv_block = buckets.get("kv_block").as_usize().unwrap_or(16);
+        let kv_pool_blocks = buckets.get("kv_pool_blocks").as_usize().unwrap_or_else(|| {
+            let b = batch_buckets.last().copied().unwrap_or(1);
+            let s = seq_buckets.last().copied().unwrap_or(kv_block);
+            1 + b * s / kv_block.max(1)
+        });
         Ok(Manifest {
             dir: model_dir.to_path_buf(),
             model: j.get("model").as_str().unwrap_or("").to_string(),
             config,
             params,
-            batch_buckets: to_usize_vec(buckets.get("batch")),
-            seq_buckets: to_usize_vec(buckets.get("seq")),
+            batch_buckets,
+            seq_buckets,
             // "prefill" is the legacy name for the same width (the old
             // monolithic prompt bucket), kept as a parse fallback
             prefill_chunk: buckets
@@ -190,6 +220,8 @@ impl Manifest {
                 .as_usize()
                 .or_else(|| buckets.get("prefill").as_usize())
                 .unwrap_or(64),
+            kv_block,
+            kv_pool_blocks,
             entries,
         })
     }
@@ -213,6 +245,17 @@ impl Manifest {
     /// `[.., n, ..]` cache at a per-slot position offset.
     pub fn prefill_entry_name(&self, batch: usize, n: usize) -> String {
         format!("prefill_b{batch}_s{n}")
+    }
+
+    /// Block-pool twin of a decode entry: same compute, KV addressed
+    /// through a per-slot block table into the shared pool.
+    pub fn paged_decode_entry_name(&self, tag: &str, batch: usize, n: usize) -> String {
+        format!("decode_{tag}_b{batch}_n{n}_paged")
+    }
+
+    /// Block-pool twin of a chunked-prefill entry.
+    pub fn paged_prefill_entry_name(&self, batch: usize, n: usize) -> String {
+        format!("prefill_b{batch}_s{n}_paged")
     }
 
     /// Smallest batch bucket >= need (error if need exceeds the largest).
@@ -282,6 +325,14 @@ mod tests {
         assert_eq!(m.config.kv_shape(1, 16), vec![2, 2, 1, 2, 16, 4]);
         assert_eq!(m.prefill_chunk, 16);
         assert_eq!(m.prefill_entry_name(2, 32), "prefill_b2_s32");
+        assert_eq!(m.paged_prefill_entry_name(2, 32), "prefill_b2_s32_paged");
+        assert_eq!(m.paged_decode_entry_name("dense", 2, 32), "decode_dense_b2_n32_paged");
+        // legacy manifest (no kv_* buckets): defaults derived from the
+        // bucket ladder — block 16, pool 1 + 4 * 32 / 16
+        assert_eq!(m.kv_block, 16);
+        assert_eq!(m.kv_pool_blocks, 9);
+        assert_eq!(m.config.kv_pool_shape(9, 16), vec![2, 2, 9, 2, 16, 4]);
+        assert_eq!(m.config.kv_block_elems(16), 2 * 2 * 2 * 16 * 4);
         assert_eq!(m.batch_bucket(3).unwrap(), 4);
         assert!(m.batch_bucket(5).is_err());
         assert_eq!(m.seq_bucket(17).unwrap(), 32);

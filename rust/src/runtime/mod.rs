@@ -10,7 +10,10 @@ pub mod profile;
 pub mod router;
 pub mod tensor;
 
-pub use engine::{Engine, KvCache, KvStore, StepOutput};
+pub use engine::{
+    copy_pool_blocks, BlockTables, Engine, KvCache, KvStore, PagedKv, PagedStepOutput,
+    StepOutput,
+};
 pub use executor::{DeviceInput, Executor};
 pub use manifest::{EntrySpec, Manifest, ModelConfig, TensorSpec};
 pub use profile::StepProfile;

@@ -197,6 +197,7 @@ where
                         stats.set("active", sched.active_len().into());
                         stats.set("sparsity", sched.sparsity().stats.to_json());
                         stats.set("prefill", sched.prefill_stats());
+                        stats.set("kv", sched.kv_stats());
                         let _ = sink.send(Json::obj(vec![
                             ("ok", true.into()),
                             ("stats", stats),
@@ -341,6 +342,9 @@ fn summary_json(tok: &Tokenizer, c: &Completion, stream: bool) -> Json {
         ("finish", c.finish.as_str().into()),
         ("ttft_ms", (c.ttft_s * 1e3).into()),
         ("e2e_ms", (c.e2e_s * 1e3).into()),
+        // prompt tokens served from the shared KV prefix cache (their
+        // prefill compute was skipped entirely)
+        ("cached_prompt_tokens", c.cached_prompt_tokens.into()),
     ]);
     if stream {
         let event = if c.finish == FinishReason::Cancelled {

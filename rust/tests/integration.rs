@@ -13,7 +13,7 @@ use polar_sparsity::coordinator::kv::{pad_n, split_groups, split_layers};
 use polar_sparsity::coordinator::{
     Mode, Request, Scheduler, SchedulerConfig, SparsityController,
 };
-use polar_sparsity::runtime::{Engine, Executor, KvCache, Tensor};
+use polar_sparsity::runtime::{BlockTables, Engine, Executor, KvCache, PagedKv, Tensor};
 use polar_sparsity::tokenizer::Tokenizer;
 
 fn artifacts() -> Option<PathBuf> {
@@ -232,6 +232,71 @@ fn tp2_matches_single_decode() {
     let (a, b) = (single.logits.as_f32().unwrap(), logits.as_f32().unwrap());
     let max_abs = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
     assert!(max_abs < 1e-2, "tp2 diverges: {max_abs}");
+}
+
+#[test]
+fn paged_decode_matches_contiguous_entry() {
+    // pack a dense [L,2,1,G,64,dh] cache into pool blocks 1..=width and
+    // decode through the paged twin: logits must match the contiguous
+    // entry (same math; the gather/scatter is pure data movement).
+    let Some(e) = engine("opt-tiny") else { return };
+    if !e.exec.manifest().entries.contains_key("decode_dense_b1_n64_paged") {
+        eprintln!("[skip] artifacts predate paged entries; re-run `make artifacts`");
+        return;
+    }
+    let cfg = e.exec.config().clone();
+    let (bs, pool_blocks) = e.kv_layout();
+    let n = 64usize;
+    let width = n / bs;
+    let (l_n, g_n, dh) = (cfg.n_layers, cfg.n_kv_heads, cfg.d_head);
+    let mut data = vec![0f32; cfg.kv_elems(1, n)];
+    for (i, x) in data.iter_mut().enumerate() {
+        *x = ((i % 89) as f32 - 44.0) / 400.0;
+    }
+    let kvt = Tensor::f32(data, cfg.kv_shape(1, n)).unwrap();
+    let mut pool_t = Tensor::zeros_f32(cfg.kv_pool_shape(pool_blocks, bs));
+    {
+        let src = kvt.as_f32().unwrap().to_vec();
+        let dst = pool_t.as_f32_mut().unwrap();
+        for l in 0..l_n {
+            for c in 0..2 {
+                for g in 0..g_n {
+                    for j in 0..width {
+                        for off in 0..bs {
+                            let si = (((l * 2 + c) * g_n + g) * n + j * bs + off) * dh;
+                            let di = ((((l * 2 + c) * pool_blocks + 1 + j) * g_n + g) * bs
+                                + off)
+                                * dh;
+                            dst[di..di + dh].copy_from_slice(&src[si..si + dh]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let tables =
+        BlockTables::new((0..width).map(|j| (1 + j) as i32).collect(), 1, width).unwrap();
+    let toks = [90i32];
+    let lens = [30i32];
+    let contiguous = e
+        .decode("dense", &toks, &lens, KvCache::from_tensor(&kvt, 1, n).unwrap(), None)
+        .unwrap();
+    let paged = e
+        .decode_paged(
+            "dense",
+            &toks,
+            &lens,
+            &tables,
+            PagedKv::from_tensor(&pool_t, pool_blocks, bs).unwrap(),
+            None,
+        )
+        .unwrap();
+    let (a, b) = (
+        contiguous.logits.as_f32().unwrap(),
+        paged.logits.as_f32().unwrap(),
+    );
+    let max_abs = a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_abs < 1e-4, "paged decode diverges from contiguous: {max_abs}");
 }
 
 #[test]

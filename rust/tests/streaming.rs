@@ -278,6 +278,51 @@ fn stats_expose_prefill_object() {
 }
 
 #[test]
+fn cancel_mid_decode_releases_kv_blocks_to_baseline() {
+    // satellite: cancel (and client disconnect) must release a request's
+    // KV blocks immediately. Observe the pool through stats.kv: after a
+    // cancel lands mid-decode, blocks_in_use returns to 0 and the free
+    // count to its baseline (mock pool: 33 blocks, 32 grantable).
+    let (addr, h) = spawn_server(Duration::from_millis(5));
+    let mut c = Client::connect(&addr).unwrap();
+    let baseline = {
+        let s = c.stats().unwrap();
+        let kv = s.get("stats").get("kv");
+        assert_eq!(kv.get("pool_blocks").as_usize(), Some(33));
+        assert_eq!(kv.get("blocks_in_use").as_usize(), Some(0));
+        // grantable = free list + evictable cached (disjoint gauges)
+        kv.get("blocks_available").as_usize().unwrap()
+    };
+    let mut stream = c.stream("A", 1000).unwrap();
+    let mut tokens = 0;
+    while let Some(ev) = stream.next() {
+        let ev = ev.unwrap();
+        match ev.get("event").as_str() {
+            Some("token") => {
+                tokens += 1;
+                if tokens == 3 {
+                    stream.cancel().unwrap();
+                }
+            }
+            Some("cancelled") => break,
+            Some("finished") => panic!("request finished despite cancel"),
+            _ => {}
+        }
+    }
+    let s = c.stats().unwrap();
+    let kv = s.get("stats").get("kv");
+    assert_eq!(kv.get("blocks_in_use").as_usize(), Some(0), "blocks not released: {kv}");
+    assert_eq!(kv.get("blocks_available").as_usize(), Some(baseline));
+    // the disjoint gauges partition the pool (minus the null block)
+    let sum = kv.get("blocks_in_use").as_usize().unwrap()
+        + kv.get("blocks_cached").as_usize().unwrap()
+        + kv.get("blocks_free").as_usize().unwrap();
+    assert_eq!(sum, 32, "gauges must partition the pool: {kv}");
+    assert!(kv.get("block_allocs").as_usize().unwrap() >= 1);
+    shut_down(&addr, h);
+}
+
+#[test]
 fn cancel_unknown_id_acks_with_error() {
     let (addr, h) = spawn_server(Duration::ZERO);
     let mut c = Client::connect(&addr).unwrap();
