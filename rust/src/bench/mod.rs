@@ -7,6 +7,7 @@ pub mod decode_breakdown;
 pub mod figures;
 pub mod harness;
 pub mod kv_paging;
+pub mod overload;
 pub mod prefill_interference;
 pub mod serving;
 pub mod sparsity_scaling;

@@ -1,0 +1,361 @@
+//! `bench overload [--smoke]` — SLO-aware overload control A/B, emitted
+//! as `BENCH_overload.json`: the same four workload scenarios
+//! (`workload::scenarios`: bursty, heavy-tail, two-tenant, chat
+//! sessions) replayed under two policies over an undersized KV block
+//! pool:
+//!
+//! * **preempt_resume** (the default [`OverloadConfig`]): admission
+//!   gates on predicted block demand and defers what does not fit;
+//!   under pressure the lowest-rank running victim is preempted
+//!   (recompute-on-resume via the prefix cache, host-swap for long
+//!   victims) and re-queued.
+//! * **reject_only** (the baseline): same demand gate, but load that
+//!   does not fit is shed with `FinishReason::Rejected` instead of
+//!   queued — the classic admission-control-only server.
+//!
+//! The headline figure is **goodput** (deadline-met tokens per second):
+//! rejected work earns zero, so on the bursty trace preempt_resume must
+//! strictly beat reject_only — that inequality is the in-tree gate
+//! (`preemption_and_admission_beat_reject_only_on_bursty_goodput`).
+//!
+//! `--smoke` runs the deterministic mock engine (17-block pool, 2 ms
+//! step delay so arrivals actually overlap); counts are trace-exact,
+//! wall-clock figures are machine-dependent (zeroed in the committed
+//! artifact).
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::serving::replay;
+use crate::coordinator::mock::MockEngine;
+use crate::coordinator::{
+    FinishReason, Mode, OverloadConfig, Scheduler, SchedulerConfig, SparsityController,
+    StepEngine,
+};
+use crate::runtime::{Engine, Executor};
+use crate::substrate::argparse::Args;
+use crate::substrate::json::Json;
+use crate::workload::scenarios::{self, ScenarioConfig};
+use crate::workload::TimedRequest;
+
+use super::harness::write_bench_json;
+
+use std::time::Duration;
+
+/// Outcome of one (scenario, policy) replay.
+pub struct PolicyOut {
+    /// Requests that reached a natural finish (length / stop / cache
+    /// limit / stop sequence).
+    pub completed: usize,
+    pub rejected: usize,
+    pub deadline_missed: usize,
+    pub tokens_out: usize,
+    pub deadline_met_tokens: u64,
+    pub goodput_tok_per_s: f64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub swap_out_bytes: u64,
+    pub swap_in_bytes: u64,
+    pub admission_rejections: u64,
+    pub prefix_tokens_skipped: u64,
+    pub ttft_ms_p50: f64,
+    pub ttft_ms_p99: f64,
+    pub wall_s: f64,
+}
+
+/// Replay one scenario trace under one overload policy.
+pub fn run_policy<E: StepEngine>(
+    engine: E,
+    overload: OverloadConfig,
+    trace: Vec<TimedRequest>,
+) -> Result<PolicyOut> {
+    let n = trace.len();
+    let mut s = Scheduler::new(
+        engine,
+        SparsityController::new(Mode::Dense),
+        SchedulerConfig { max_batch: 8, overload, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    let run = replay(&mut s, trace)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    if run.completions.len() != n {
+        bail!("replay produced {} completions, expected {n}", run.completions.len());
+    }
+    let count = |f: fn(FinishReason) -> bool| {
+        run.completions.iter().filter(|c| f(c.finish)).count()
+    };
+    Ok(PolicyOut {
+        completed: count(|f| {
+            matches!(
+                f,
+                FinishReason::Length
+                    | FinishReason::Stop
+                    | FinishReason::StopSequence
+                    | FinishReason::CacheLimit
+            )
+        }),
+        rejected: count(|f| f == FinishReason::Rejected),
+        deadline_missed: count(|f| f == FinishReason::Deadline),
+        tokens_out: run.completions.iter().map(|c| c.output_ids.len()).sum(),
+        deadline_met_tokens: s.metrics.deadline_met_tokens,
+        goodput_tok_per_s: s.metrics.deadline_met_tokens as f64 / wall_s.max(1e-9),
+        preemptions: s.metrics.preemptions,
+        resumes: s.metrics.resumes,
+        swap_out_bytes: s.metrics.swap_out_bytes,
+        swap_in_bytes: s.metrics.swap_in_bytes,
+        admission_rejections: s.metrics.admission_rejections,
+        prefix_tokens_skipped: s.metrics.prefix_tokens_skipped,
+        ttft_ms_p50: run.ttft.p50() * 1e3,
+        ttft_ms_p99: run.ttft.p99() * 1e3,
+        wall_s,
+    })
+}
+
+fn policy_json(o: &PolicyOut) -> Json {
+    Json::obj(vec![
+        ("completed", o.completed.into()),
+        ("rejected", o.rejected.into()),
+        ("deadline_missed", o.deadline_missed.into()),
+        ("tokens_out", o.tokens_out.into()),
+        ("deadline_met_tokens", (o.deadline_met_tokens as usize).into()),
+        ("goodput_tok_per_s", o.goodput_tok_per_s.into()),
+        ("preemptions", (o.preemptions as usize).into()),
+        ("resumes", (o.resumes as usize).into()),
+        ("swap_out_bytes", (o.swap_out_bytes as usize).into()),
+        ("swap_in_bytes", (o.swap_in_bytes as usize).into()),
+        ("admission_rejections", (o.admission_rejections as usize).into()),
+        ("prefix_tokens_skipped", (o.prefix_tokens_skipped as usize).into()),
+        ("ttft_ms_p50", o.ttft_ms_p50.into()),
+        ("ttft_ms_p99", o.ttft_ms_p99.into()),
+        ("wall_ms", (o.wall_s * 1e3).into()),
+    ])
+}
+
+/// Smoke engine: a 17-block pool (16 usable) so every scenario
+/// overcommits it, seq buckets to 128 so batch-tenant requests are not
+/// capped at 64, and a 2 ms step delay so Poisson arrivals overlap
+/// in-flight work instead of draining one at a time.
+fn smoke_engine() -> MockEngine {
+    MockEngine::new()
+        .with_seq_buckets(vec![16, 32, 64, 128])
+        .with_pool_blocks(17)
+        .with_step_delay(Duration::from_millis(2))
+}
+
+/// The four smoke scenarios: (name, trace) pairs, one fixed seed each.
+pub fn smoke_scenarios() -> Vec<(&'static str, Vec<TimedRequest>)> {
+    vec![
+        ("bursty", scenarios::bursty(&bursty_cfg())),
+        (
+            "heavy_tail",
+            scenarios::heavy_tail(&ScenarioConfig { n_requests: 48, seed: 2, ..Default::default() }),
+        ),
+        (
+            "two_tenant",
+            scenarios::two_tenant(&ScenarioConfig {
+                n_requests: 32,
+                seed: 3,
+                deadline_ms: 10_000.0,
+                ..Default::default()
+            }),
+        ),
+        (
+            "chat_sessions",
+            scenarios::chat_sessions(&ScenarioConfig { n_requests: 32, seed: 4, ..Default::default() }),
+        ),
+    ]
+}
+
+/// Bursty trace for the goodput gate: 4 bursts of 12, loose 10 s
+/// deadlines so every natural finish counts toward goodput.
+pub fn bursty_cfg() -> ScenarioConfig {
+    ScenarioConfig { n_requests: 48, seed: 1, deadline_ms: 10_000.0, ..Default::default() }
+}
+
+pub fn run(rest: &[String]) -> Result<()> {
+    let args = Args::new(
+        "bench overload",
+        "SLO-aware overload control: preempt+admission vs reject-only goodput",
+    )
+    .flag("model", "opt-tiny", "model name under the artifacts dir")
+    .flag("artifacts", "artifacts", "artifacts root directory")
+    .flag("out", "BENCH_overload.json", "output JSON path")
+    .switch("smoke", "run on the deterministic mock engine (no artifacts)");
+    let p = match args.parse(rest) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let smoke = p.get_bool("smoke");
+
+    let mut scenario_rows: Vec<(&str, Json)> = Vec::new();
+    let mut gate_ratio = 0.0f64;
+    let (engine_label, block, pool_blocks) = if smoke {
+        let (block, pool_blocks) = smoke_engine().kv_layout();
+        ("mock".to_string(), block, pool_blocks)
+    } else {
+        let dir = std::path::PathBuf::from(p.get("artifacts")).join(p.get("model"));
+        let exec = std::sync::Arc::new(Executor::load(&dir).with_context(|| {
+            format!("loading {} — run `make artifacts` first", dir.display())
+        })?);
+        let engine = Engine::new(exec);
+        let (block, pool_blocks) = engine.kv_layout();
+        (p.get("model").to_string(), block, pool_blocks)
+    };
+
+    for (name, trace) in smoke_scenarios() {
+        let (a, b) = if smoke {
+            (
+                run_policy(smoke_engine(), OverloadConfig::default(), trace.clone())?,
+                run_policy(smoke_engine(), OverloadConfig::reject_only(), trace)?,
+            )
+        } else {
+            // real engine: same traces against the engine's own pool —
+            // pressure depends on the artifact's pool size, so the
+            // counts are informational rather than gated
+            let dir = std::path::PathBuf::from(p.get("artifacts")).join(p.get("model"));
+            let exec = std::sync::Arc::new(Executor::load(&dir)?);
+            let e1 = Engine::new(exec.clone());
+            let e2 = Engine::new(exec);
+            (
+                run_policy(e1, OverloadConfig::default(), trace.clone())?,
+                run_policy(e2, OverloadConfig::reject_only(), trace)?,
+            )
+        };
+        let ratio = if b.goodput_tok_per_s > 0.0 {
+            ((a.goodput_tok_per_s / b.goodput_tok_per_s) * 1e3).round() / 1e3
+        } else {
+            f64::INFINITY
+        };
+        if name == "bursty" {
+            gate_ratio = ratio;
+        }
+        println!(
+            "{name:<13} preempt_resume: {} done / {} tok ({:.0} tok/s, {} preempt, {} resume) \
+             | reject_only: {} done / {} rejected ({:.0} tok/s) | goodput x{ratio}",
+            a.completed,
+            a.deadline_met_tokens,
+            a.goodput_tok_per_s,
+            a.preemptions,
+            a.resumes,
+            b.completed,
+            b.rejected,
+            b.goodput_tok_per_s,
+        );
+        scenario_rows.push((
+            name,
+            Json::obj(vec![
+                ("requests", smoke_request_count(name).into()),
+                ("preempt_resume", policy_json(&a)),
+                ("reject_only", policy_json(&b)),
+                ("goodput_ratio", ratio.into()),
+            ]),
+        ));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", "overload".into()),
+        ("engine", engine_label.into()),
+        ("block_size", block.into()),
+        ("pool_blocks", pool_blocks.into()),
+        (
+            "policies",
+            Json::obj(vec![
+                ("preempt_resume", "admission gate + defer + rank-ordered preemption".into()),
+                ("reject_only", "admission gate sheds non-fitting load".into()),
+            ]),
+        ),
+        ("scenarios", Json::obj(scenario_rows)),
+        (
+            "gate",
+            Json::obj(vec![
+                ("bursty_goodput_preempt_over_reject", gate_ratio.into()),
+                ("pass", (gate_ratio > 1.0).into()),
+            ]),
+        ),
+    ]);
+    if gate_ratio <= 1.0 {
+        eprintln!("WARNING: preempt_resume did not beat reject_only on bursty goodput");
+    }
+    write_bench_json(p.get("out"), &report)?;
+    Ok(())
+}
+
+fn smoke_request_count(name: &str) -> usize {
+    match name {
+        "bursty" | "heavy_tail" => 48,
+        _ => 32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The acceptance gate: on the bursty trace (4 bursts of 12 over a
+    /// 16-usable-block pool), preemption+admission strictly beats
+    /// reject-only on goodput — the reject-only baseline sheds most of
+    /// each burst, and shed work earns zero deadline-met tokens.
+    #[test]
+    fn preemption_and_admission_beat_reject_only_on_bursty_goodput() {
+        let trace = scenarios::bursty(&bursty_cfg());
+        let a = run_policy(smoke_engine(), OverloadConfig::default(), trace.clone()).unwrap();
+        let b = run_policy(smoke_engine(), OverloadConfig::reject_only(), trace).unwrap();
+        // defer-instead-of-reject completes every request
+        assert_eq!(a.completed, 48, "preempt_resume must complete the full burst");
+        assert_eq!(a.rejected, 0);
+        assert!(b.rejected >= 8, "reject_only should shed most of each burst, shed {}", b.rejected);
+        assert_eq!(b.admission_rejections as usize, b.rejected);
+        // the gate: strictly more deadline-met tokens AND higher goodput
+        assert!(
+            a.deadline_met_tokens >= b.deadline_met_tokens * 3 / 2,
+            "expected a wide deadline-met-token margin: {} vs {}",
+            a.deadline_met_tokens,
+            b.deadline_met_tokens
+        );
+        assert!(
+            a.goodput_tok_per_s > b.goodput_tok_per_s,
+            "goodput gate failed: preempt_resume {:.1} tok/s <= reject_only {:.1} tok/s",
+            a.goodput_tok_per_s,
+            b.goodput_tok_per_s
+        );
+    }
+
+    /// Two-tenant mix: the interactive tenant's rank (priority 5, tight
+    /// slack) preempts batch-tenant victims, and every preempted victim
+    /// resumes and finishes — nothing is lost, nothing misses its SLO.
+    #[test]
+    fn two_tenant_smoke_exercises_preemption_and_resume() {
+        let trace = scenarios::two_tenant(&ScenarioConfig {
+            n_requests: 32,
+            seed: 3,
+            deadline_ms: 10_000.0,
+            ..Default::default()
+        });
+        let out = run_policy(smoke_engine(), OverloadConfig::default(), trace).unwrap();
+        assert_eq!(out.completed, 32, "all requests finish under preempt_resume");
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.deadline_missed, 0);
+        assert!(out.preemptions >= 1, "batch tenant never preempted");
+        assert_eq!(out.preemptions, out.resumes, "every victim resumed");
+    }
+
+    /// Chat sessions re-hit the prefix cache: later turns (and resumed
+    /// victims) skip already-published prefix blocks.
+    #[test]
+    fn chat_sessions_smoke_reuses_prefixes() {
+        let trace = scenarios::chat_sessions(&ScenarioConfig {
+            n_requests: 32,
+            seed: 4,
+            ..Default::default()
+        });
+        let out = run_policy(smoke_engine(), OverloadConfig::default(), trace).unwrap();
+        assert_eq!(out.completed, 32);
+        assert!(
+            out.prefix_tokens_skipped >= 32,
+            "session prefixes should re-hit the cache, skipped {}",
+            out.prefix_tokens_skipped
+        );
+    }
+}

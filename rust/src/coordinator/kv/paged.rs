@@ -143,6 +143,12 @@ pub struct BlockPool {
     /// first when `free` runs dry.
     cached_free: VecDeque<BlockId>,
     in_use: usize,
+    /// Inflight admission reservations by request id: blocks a running
+    /// request is predicted to still need (prompt remainder + decode
+    /// growth). Purely advisory — grants never consult it; the admission
+    /// controller gates new requests on [`BlockPool::available_unreserved`]
+    /// so already-admitted requests keep their room to grow.
+    reservations: HashMap<u64, usize>,
     pub stats: BlockStats,
 }
 
@@ -165,6 +171,7 @@ impl BlockPool {
             free: (1..n_blocks as BlockId).rev().collect(),
             cached_free: VecDeque::new(),
             in_use: 0,
+            reservations: HashMap::new(),
             stats: BlockStats::default(),
         })
     }
@@ -200,6 +207,32 @@ impl BlockPool {
 
     pub fn utilization(&self) -> f64 {
         self.in_use as f64 / (self.n_blocks - 1).max(1) as f64
+    }
+
+    /// Record (or update) request `id`'s outstanding block reservation;
+    /// 0 clears the entry.
+    pub fn set_reservation(&mut self, id: u64, blocks: usize) {
+        if blocks == 0 {
+            self.reservations.remove(&id);
+        } else {
+            self.reservations.insert(id, blocks);
+        }
+    }
+
+    /// Drop request `id`'s reservation (finish / cancel / preempt).
+    pub fn release_reservation(&mut self, id: u64) {
+        self.reservations.remove(&id);
+    }
+
+    /// Sum of all outstanding reservations.
+    pub fn reserved_total(&self) -> usize {
+        self.reservations.values().sum()
+    }
+
+    /// Blocks grantable to a NEW request once every admitted request's
+    /// reserved growth is honoured — the admission controller's gate.
+    pub fn available_unreserved(&self) -> usize {
+        self.available().saturating_sub(self.reserved_total())
     }
 
     fn note_retained(&mut self) {
@@ -604,6 +637,32 @@ mod tests {
         assert_eq!(&row[2..], &[0, 0]);
         assert!(row[0] > 0 && row[1] > 0);
         p.free_table(t);
+    }
+
+    #[test]
+    fn reservation_ledger_tracks_unreserved_headroom() {
+        let mut p = BlockPool::new(9, 4).unwrap(); // 8 usable
+        assert_eq!(p.available_unreserved(), 8);
+        p.set_reservation(1, 3);
+        p.set_reservation(2, 2);
+        assert_eq!(p.reserved_total(), 5);
+        assert_eq!(p.available_unreserved(), 3);
+        // shrinking as blocks materialize
+        p.set_reservation(1, 1);
+        assert_eq!(p.reserved_total(), 3);
+        // a real allocation reduces available(); reservations stack on top
+        let (t, _) = p.alloc_prompt(&toks(1, 8)).unwrap().unwrap(); // 2 blocks
+        assert_eq!(p.available(), 6);
+        assert_eq!(p.available_unreserved(), 3);
+        // reservations can exceed what's physically left: saturates to 0
+        p.set_reservation(3, 100);
+        assert_eq!(p.available_unreserved(), 0);
+        p.release_reservation(3);
+        p.set_reservation(2, 0); // 0 clears
+        p.release_reservation(1);
+        assert_eq!(p.reserved_total(), 0);
+        p.free_table(t);
+        assert_eq!(p.available_unreserved(), 8);
     }
 
     #[test]

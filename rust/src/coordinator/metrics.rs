@@ -49,6 +49,21 @@ pub struct EngineMetrics {
     /// Prompts rejected as longer than the largest seq bucket
     /// (`prompt_too_long` — the old path silently truncated these).
     pub rejected_prompts: u64,
+    /// Requests turned away by the admission controller under block-pool
+    /// pressure (`PressurePolicy::Reject`).
+    pub admission_rejections: u64,
+    /// Running requests preempted (KV blocks freed, re-queued) and the
+    /// subset that later resumed decoding.
+    pub preemptions: u64,
+    pub resumes: u64,
+    /// KV bytes moved to/from host memory by the preemption swap path.
+    pub swap_out_bytes: u64,
+    pub swap_in_bytes: u64,
+    /// Output tokens of requests that finished within their deadline
+    /// (requests without a deadline always count; deadline-expired,
+    /// cancelled, and rejected requests contribute nothing). The
+    /// numerator of `goodput()`.
+    pub deadline_met_tokens: u64,
     /// Logical seq-bucket growth events. Under paged KV a "promotion" is
     /// a table-width change (different entry next step) — zero cache
     /// bytes move; the counter survives as telemetry of entry switches.
@@ -92,6 +107,15 @@ impl EngineMetrics {
         self.generated_tokens as f64 / self.total_wall_s
     }
 
+    /// Goodput: deadline-met output tokens / second of total wall time —
+    /// the SLO-aware figure the overload bench gates on (ROADMAP item 4).
+    pub fn goodput(&self) -> f64 {
+        if self.total_wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.deadline_met_tokens as f64 / self.total_wall_s
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("decode_steps", (self.decode_steps as usize).into()),
@@ -107,22 +131,37 @@ impl EngineMetrics {
             ("itl_ms_mean", (self.itl.mean() * 1e3).into()),
             ("ttft_ms_p50", (self.ttft.p50() * 1e3).into()),
             ("e2e_ms_p50", (self.e2e.p50() * 1e3).into()),
-            // DEPRECATED (always 0): the paged KV pool never rebuilds a
-            // contiguous group cache, so the rebuild/surgery counters the
-            // contiguous era exposed are pinned at zero for one release
-            // to keep old dashboards parsing. Read `stats.kv` instead
-            // (PROTOCOL.md "KV memory").
-            ("kv_rebuilds", 0usize.into()),
-            ("regroups", 0usize.into()),
-            ("slot_copies", 0usize.into()),
-            ("kv_pool_reuses", 0usize.into()),
-            ("kv_pool_allocs", 0usize.into()),
+            // The contiguous-era rebuild/surgery counters (kv_rebuilds,
+            // regroups, slot_copies, kv_pool_reuses, kv_pool_allocs) were
+            // deprecated-at-zero for one release and are now gone — read
+            // `stats.kv` instead (PROTOCOL.md "KV memory").
             ("bucket_promotions", (self.bucket_promotions as usize).into()),
             (
                 "prefix_tokens_skipped",
                 (self.prefix_tokens_skipped as usize).into(),
             ),
             ("host_surgery_ms", (self.host_surgery_s * 1e3).into()),
+        ])
+    }
+
+    /// The overload-control counters (the core of the server's
+    /// `stats.overload` object; the scheduler adds live gauges on top).
+    pub fn overload_json(&self) -> Json {
+        Json::obj(vec![
+            ("preemptions", (self.preemptions as usize).into()),
+            ("resumes", (self.resumes as usize).into()),
+            ("swap_out_bytes", (self.swap_out_bytes as usize).into()),
+            ("swap_in_bytes", (self.swap_in_bytes as usize).into()),
+            (
+                "admission_rejections",
+                (self.admission_rejections as usize).into(),
+            ),
+            ("deadline_misses", (self.deadline_expired as usize).into()),
+            (
+                "deadline_met_tokens",
+                (self.deadline_met_tokens as usize).into(),
+            ),
+            ("goodput_tok_per_s", self.goodput().into()),
         ])
     }
 
@@ -196,19 +235,42 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_rebuild_keys_pin_at_zero() {
-        // the contiguous-era keys must keep emitting (0) for one release
-        // so clients don't break — PROTOCOL.md documents the deprecation
+    fn deprecated_rebuild_keys_are_gone() {
+        // the contiguous-era keys shipped as deprecated-at-zero for one
+        // release; they must no longer appear — PROTOCOL.md notes removal
         let mut m = EngineMetrics::default();
         m.prefix_tokens_skipped = 256;
         m.bucket_promotions = 2;
         let j = m.to_json();
         for key in ["kv_rebuilds", "regroups", "slot_copies", "kv_pool_reuses", "kv_pool_allocs"]
         {
-            assert_eq!(j.get(key).as_usize(), Some(0), "{key}");
+            assert_eq!(j.get(key).as_usize(), None, "{key} should be removed");
         }
         assert_eq!(j.get("prefix_tokens_skipped").as_usize(), Some(256));
         assert_eq!(j.get("bucket_promotions").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn overload_json_reports_goodput_and_counters() {
+        let mut m = EngineMetrics::default();
+        m.preemptions = 3;
+        m.resumes = 2;
+        m.swap_out_bytes = 4096;
+        m.swap_in_bytes = 2048;
+        m.admission_rejections = 5;
+        m.deadline_expired = 1;
+        m.deadline_met_tokens = 120;
+        m.total_wall_s = 2.0;
+        let j = m.overload_json();
+        assert_eq!(j.get("preemptions").as_usize(), Some(3));
+        assert_eq!(j.get("resumes").as_usize(), Some(2));
+        assert_eq!(j.get("swap_out_bytes").as_usize(), Some(4096));
+        assert_eq!(j.get("swap_in_bytes").as_usize(), Some(2048));
+        assert_eq!(j.get("admission_rejections").as_usize(), Some(5));
+        assert_eq!(j.get("deadline_misses").as_usize(), Some(1));
+        assert_eq!(j.get("deadline_met_tokens").as_usize(), Some(120));
+        assert_eq!(j.get("goodput_tok_per_s").as_f64(), Some(60.0));
+        assert!((m.goodput() - 60.0).abs() < 1e-9);
     }
 
     #[test]

@@ -129,6 +129,10 @@ pub struct MockEngine {
     chunk_delay: Duration,
     /// A/B: model the legacy host-KV path (full cache both ways per step).
     host_kv_path: bool,
+    /// Override the paged pool's block count (None = the no-sharing
+    /// worst case of the bucket ladder). Overload tests shrink this so
+    /// block pressure bites long before slot pressure.
+    pool_blocks: Option<usize>,
     client: xla::PjRtClient,
     profile: Mutex<StepProfile>,
     /// Decode steps that arrived with (validated) router indices.
@@ -165,6 +169,7 @@ impl MockEngine {
             step_delay: Duration::ZERO,
             chunk_delay: Duration::ZERO,
             host_kv_path: false,
+            pool_blocks: None,
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
             routed_steps: AtomicU64::new(0),
@@ -236,6 +241,16 @@ impl MockEngine {
         self
     }
 
+    /// Shrink (or grow) the paged pool to exactly `n` physical blocks
+    /// (incl. the null block). Overload tests use a pool much smaller
+    /// than the bucket ladder's worst case so admission/preemption
+    /// trigger on block pressure while batch slots are still free.
+    pub fn with_pool_blocks(mut self, n: usize) -> Self {
+        assert!(n >= 2, "pool needs the null block + at least one usable");
+        self.pool_blocks = Some(n);
+        self
+    }
+
     /// Paged geometry the mock serves: block = the chunk width, pool
     /// sized for the no-sharing worst case of the current bucket ladder
     /// (+ the null block) — the same formula aot.py bakes into real
@@ -244,7 +259,7 @@ impl MockEngine {
         let bs = self.chunk_len;
         let max_b = *self.batch_buckets.last().unwrap();
         let max_n = *self.seq_buckets.last().unwrap();
-        (bs, 1 + max_b * max_n / bs)
+        (bs, self.pool_blocks.unwrap_or(1 + max_b * max_n / bs))
     }
 
     /// Read one request's per-position fingerprints out of a POOL

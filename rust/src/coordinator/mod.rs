@@ -6,19 +6,23 @@
 //! the paged KV block manager ([`kv::BlockPool`]: ref-counted physical
 //! blocks, per-request block tables, copy-on-write, hash-keyed prefix
 //! caching) plus contiguous host-tensor surgery for the A/B and PP/TP
-//! paths, sparsity controller (dense / DejaVu / Polar), sampler,
+//! paths, the SLO-aware overload controller ([`overload`]: block-demand
+//! admission, preemption with recompute-or-swap resume, deadline-slack
+//! urgency), sparsity controller (dense / DejaVu / Polar), sampler,
 //! metrics, and a deterministic mock engine for tests and offline
 //! protocol work.
 
 pub mod kv;
 pub mod metrics;
 pub mod mock;
+pub mod overload;
 pub mod planner;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
 pub mod sparsity;
 
+pub use overload::{OverloadConfig, PressurePolicy};
 pub use request::{
     Completion, FinishReason, GenerationEvent, Request, RequestBuilder, SamplingParams,
 };
@@ -445,16 +449,19 @@ mod scheduler_tests {
         assert_eq!(stats.get("block_size").as_usize(), Some(16));
         assert_eq!(stats.get("pool_blocks").as_usize(), Some(33));
         assert!(stats.get("utilization").as_f64().unwrap() > 0.0);
-        // growing the batch bucket mid-flight copies NOTHING — the
-        // deprecated rebuild counters stay pinned at zero in the json
+        // growing the batch bucket mid-flight copies NOTHING
         for i in 3..6 {
             s.enqueue(req(i, 100 + i as i32, 4));
         }
         s.run_to_completion().unwrap();
         let j = s.metrics.to_json();
-        assert_eq!(j.get("kv_rebuilds").as_usize(), Some(0));
-        assert_eq!(j.get("regroups").as_usize(), Some(0));
-        assert_eq!(j.get("slot_copies").as_usize(), Some(0));
+        // the always-zero rebuild-era counters are gone from the stats
+        // payload entirely (PROTOCOL.md documents the removal)
+        assert_eq!(j.get("kv_rebuilds").as_usize(), None);
+        assert_eq!(j.get("regroups").as_usize(), None);
+        assert_eq!(j.get("slot_copies").as_usize(), None);
+        assert_eq!(j.get("kv_pool_reuses").as_usize(), None);
+        assert_eq!(j.get("kv_pool_allocs").as_usize(), None);
         // pool creation time is the only host "surgery" this run paid
         let p = s.profile();
         assert!(p.host_surgery_ns > 0, "pool creation time not recorded");
@@ -927,5 +934,321 @@ mod scheduler_tests {
             }
             Ok(())
         });
+    }
+
+    // ---- overload control: admission, preemption, resume ----
+
+    /// Scheduler over a deliberately small block pool so admission and
+    /// preemption actually trigger (default mock pools are sized to
+    /// never run out).
+    fn sched_pool(pool_blocks: usize, cfg: SchedulerConfig) -> Scheduler<MockEngine> {
+        Scheduler::new(
+            MockEngine::new().with_pool_blocks(pool_blocks),
+            SparsityController::new(Mode::Polar { density: 0.5 }),
+            cfg,
+        )
+    }
+
+    /// 33-token prompt (3 blocks), 24 new tokens -> predicted demand of
+    /// 4 blocks out of a 7-usable-block pool.
+    fn victim_req(id: u64) -> Request {
+        Request::builder((100..133).collect())
+            .id(id)
+            .max_new_tokens(24)
+            .build()
+    }
+
+    /// Acceptance: a running request preempted under pool pressure
+    /// resumes with a bit-identical token stream (indices continue,
+    /// no re-emission), its recomputed KV fingerprints match the
+    /// uninterrupted run, and the pool returns to its baseline free
+    /// count after the drain.
+    #[test]
+    fn preempted_request_resumes_bit_identical_and_pool_returns_to_baseline() {
+        // 8 blocks = 7 usable. Victim holds 3 + 1 reserved; the hot
+        // request needs 4 > 3 unreserved -> preemption.
+        let mut s = sched_pool(8, SchedulerConfig { max_batch: 8, ..Default::default() });
+        let baseline = s.kv_free_blocks();
+        let mut events: Vec<GenerationEvent> = Vec::new();
+        s.enqueue(victim_req(1));
+        // 3 prefill steps (the last one also decodes) + 3 decodes:
+        // generated=[133..=137], virtual length 37
+        for _ in 0..6 {
+            events.extend(s.step().unwrap());
+        }
+        // hot request: priority 5, 49-token prompt (4 blocks), 8 new
+        s.enqueue(
+            Request::builder((30..79).collect())
+                .id(2)
+                .max_new_tokens(8)
+                .priority(5)
+                .build(),
+        );
+        let step7 = s.step().unwrap();
+        assert!(
+            step7.iter().any(|e| matches!(e, GenerationEvent::Preempted { request: 1 })),
+            "expected a preemption event, got {step7:?}"
+        );
+        events.extend(step7);
+        assert_eq!(s.preempted_len(), 1);
+        assert_eq!(s.active_len(), 1, "hot request admitted into the freed blocks");
+        let mut checked = false;
+        let mut guard = 0;
+        while !s.is_idle() {
+            events.extend(s.step().unwrap());
+            if !checked && s.metrics.resumes == 1 {
+                // Resume recomputed positions 32..37 through the prefix
+                // cache (blocks 0..32 were published); the table must
+                // reconstruct the virtual prompt = prompt + generated[..4]
+                // exactly as the uninterrupted run would have.
+                let pool = s.kv_snapshot().unwrap().expect("kv pool");
+                let table = s.block_table_of(1).expect("victim table live again");
+                let fp = s.engine().table_fingerprints(&pool, &table).unwrap();
+                let mut want: Vec<f32> = (100..133).map(|t| t as f32).collect();
+                want.extend([133.0, 134.0, 135.0, 136.0]);
+                for (p, w) in want.iter().enumerate() {
+                    assert_eq!(fp[p], *w, "resumed KV wrong at position {p}");
+                }
+                checked = true;
+            }
+            guard += 1;
+            assert!(guard < 1000, "overload run did not converge");
+        }
+        assert!(checked, "victim never resumed");
+        // bit-identical stream: 24 tokens, contiguous indices, the +1
+        // chain uninterrupted across the preemption boundary
+        let victim_tokens: Vec<(usize, i32)> = events
+            .iter()
+            .filter_map(|e| match e {
+                GenerationEvent::Token { request: 1, index, id, .. } => Some((*index, *id)),
+                _ => None,
+            })
+            .collect();
+        let want: Vec<(usize, i32)> = (0..24).map(|k| (k, 133 + k as i32)).collect();
+        assert_eq!(victim_tokens, want);
+        let done: Vec<&Completion> = events
+            .iter()
+            .filter_map(|e| match e {
+                GenerationEvent::Finished(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, 2, "hot request finishes while the victim waits");
+        assert_eq!(done[0].output_ids, (79..=86).collect::<Vec<i32>>());
+        assert_eq!(done[1].id, 1);
+        assert_eq!(done[1].output_ids, (133..=156).collect::<Vec<i32>>());
+        assert_eq!(done[1].finish, FinishReason::Length);
+        assert_eq!(s.metrics.preemptions, 1);
+        assert_eq!(s.metrics.resumes, 1);
+        assert_eq!(s.metrics.admission_rejections, 0);
+        assert_eq!(s.metrics.swap_out_bytes, 0, "2 full blocks < swap_min_blocks: recompute path");
+        assert_eq!(s.metrics.deadline_met_tokens, 32);
+        // every block accounted for after the drain
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        assert_eq!(s.kv_free_blocks(), baseline);
+    }
+
+    /// Default policy with nothing to outrank: an arrival whose
+    /// predicted demand exceeds unreserved blocks waits in the queue
+    /// (no preemption between equal ranks, no rejection) and admits
+    /// once the first request drains.
+    #[test]
+    fn admission_defers_under_block_pressure() {
+        let mut s = sched_pool(8, SchedulerConfig { max_batch: 8, ..Default::default() });
+        s.enqueue(victim_req(1));
+        s.enqueue(
+            Request::builder((160..193).collect())
+                .id(2)
+                .max_new_tokens(24)
+                .build(),
+        );
+        s.step().unwrap();
+        assert_eq!(s.active_len(), 1, "second request deferred, not admitted");
+        assert_eq!(s.preempted_len(), 0);
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].output_ids, (133..=156).collect::<Vec<i32>>());
+        assert_eq!(done[1].id, 2);
+        assert_eq!(done[1].output_ids, (193..=216).collect::<Vec<i32>>());
+        assert_eq!(s.metrics.preemptions, 0);
+        assert_eq!(s.metrics.admission_rejections, 0);
+    }
+
+    /// Reject-only baseline: same pressure as the defer test, but the
+    /// policy sheds the request that does not fit instead of queueing
+    /// it. It finishes immediately with `FinishReason::Rejected` and an
+    /// empty output.
+    #[test]
+    fn reject_only_policy_sheds_load_at_admission() {
+        let mut s = sched_pool(
+            8,
+            SchedulerConfig {
+                max_batch: 8,
+                overload: OverloadConfig::reject_only(),
+                ..Default::default()
+            },
+        );
+        s.enqueue(victim_req(1));
+        s.enqueue(
+            Request::builder((160..193).collect())
+                .id(2)
+                .max_new_tokens(24)
+                .build(),
+        );
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, 2, "rejected immediately, before request 1 finishes");
+        assert_eq!(done[0].finish, FinishReason::Rejected);
+        assert!(done[0].output_ids.is_empty());
+        assert_eq!(done[1].id, 1);
+        assert_eq!(done[1].output_ids, (133..=156).collect::<Vec<i32>>());
+        assert_eq!(s.metrics.admission_rejections, 1);
+        assert_eq!(s.metrics.preemptions, 0);
+        // rejected work earns no goodput
+        assert_eq!(s.metrics.deadline_met_tokens, 24);
+    }
+
+    /// With the prefix cache off there is nothing to recompute from, so
+    /// preemption host-swaps the victim's full blocks out and the
+    /// resume path restores them byte-for-byte: fingerprints and the
+    /// token stream both match the uninterrupted run.
+    #[test]
+    fn swap_preemption_restores_kv_without_prefix_cache() {
+        let mut s = sched_pool(
+            8,
+            SchedulerConfig {
+                max_batch: 8,
+                prefix_cache: false,
+                overload: OverloadConfig { swap_min_blocks: 1, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let mut events: Vec<GenerationEvent> = Vec::new();
+        s.enqueue(victim_req(1));
+        for _ in 0..6 {
+            events.extend(s.step().unwrap());
+        }
+        s.enqueue(
+            Request::builder((30..79).collect())
+                .id(2)
+                .max_new_tokens(8)
+                .priority(5)
+                .build(),
+        );
+        events.extend(s.step().unwrap());
+        assert_eq!(s.metrics.preemptions, 1);
+        // virtual length 36 -> 2 full blocks swapped to host
+        assert!(s.metrics.swap_out_bytes > 0);
+        let mut checked = false;
+        let mut guard = 0;
+        while !s.is_idle() {
+            events.extend(s.step().unwrap());
+            if !checked && s.metrics.resumes == 1 {
+                assert_eq!(s.metrics.swap_in_bytes, s.metrics.swap_out_bytes);
+                let pool = s.kv_snapshot().unwrap().expect("kv pool");
+                let table = s.block_table_of(1).expect("victim table live again");
+                let fp = s.engine().table_fingerprints(&pool, &table).unwrap();
+                let mut want: Vec<f32> = (100..133).map(|t| t as f32).collect();
+                want.extend([133.0, 134.0, 135.0, 136.0]);
+                for (p, w) in want.iter().enumerate() {
+                    assert_eq!(fp[p], *w, "swap-restored KV wrong at position {p}");
+                }
+                checked = true;
+            }
+            guard += 1;
+            assert!(guard < 1000, "swap run did not converge");
+        }
+        assert!(checked, "victim never resumed");
+        let victim_tokens: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                GenerationEvent::Token { request: 1, id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(victim_tokens, (133..=156).collect::<Vec<i32>>());
+    }
+
+    /// A deadline keeps ticking while a request sits preempted: the
+    /// expiry sweep finishes it out of the preempted queue with its
+    /// partial output.
+    #[test]
+    fn deadline_expires_preempted_request() {
+        let mut s = sched_pool(8, SchedulerConfig { max_batch: 8, ..Default::default() });
+        let baseline = s.kv_free_blocks();
+        s.enqueue(
+            Request::builder((100..133).collect())
+                .id(1)
+                .max_new_tokens(24)
+                .deadline(Duration::from_millis(500))
+                .build(),
+        );
+        for _ in 0..6 {
+            s.step().unwrap();
+        }
+        s.enqueue(
+            Request::builder((30..79).collect())
+                .id(2)
+                .max_new_tokens(8)
+                .priority(5)
+                .build(),
+        );
+        s.step().unwrap();
+        assert_eq!(s.preempted_len(), 1);
+        std::thread::sleep(Duration::from_millis(600));
+        let done = s.run_to_completion().unwrap();
+        let victim = done.iter().find(|c| c.id == 1).expect("victim completion");
+        assert_eq!(victim.finish, FinishReason::Deadline);
+        // partial output survives preemption: 5 tokens before the cut
+        assert_eq!(victim.output_ids, vec![133, 134, 135, 136, 137]);
+        assert_eq!(s.metrics.deadline_expired, 1);
+        assert_eq!(s.metrics.resumes, 0);
+        assert_eq!(s.preempted_len(), 0);
+        assert_eq!(s.kv_blocks_in_use(), 0);
+        assert_eq!(s.kv_free_blocks(), baseline);
+    }
+
+    /// Satellite: a step whose budget is consumed entirely by prefill
+    /// runs with an empty decode batch — no Token events, no decode
+    /// accounting, and the request survives to decode next step.
+    #[test]
+    fn all_prefill_step_runs_with_empty_decode_batch() {
+        let mut s = sched();
+        let prompt: Vec<i32> = (40..40 + 48).collect(); // 3 chunks
+        s.enqueue(Request::builder(prompt).id(1).max_new_tokens(2).build());
+        let events = s.step().unwrap();
+        assert!(
+            !events.iter().any(|e| matches!(e, GenerationEvent::Token { .. })),
+            "pure-prefill step must emit no tokens"
+        );
+        assert_eq!(s.metrics.prefill_steps, 1);
+        assert_eq!(s.metrics.interleaved_steps, 0);
+        assert_eq!(s.active_len(), 1);
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].output_ids, vec![88, 89]);
+    }
+
+    /// Satellite: a decode-only step with zero queued prompts plans no
+    /// prefill work — exactly one token, no Prefilled event, chunk and
+    /// prefill-step counters frozen.
+    #[test]
+    fn decode_only_step_with_zero_queued_prompts() {
+        let mut s = sched();
+        s.enqueue(req(1, 50, 5));
+        s.step().unwrap(); // prefill + first token
+        assert_eq!(s.queued_prompt_tokens(), 0);
+        let (chunks, psteps) = (s.metrics.prefill_chunks, s.metrics.prefill_steps);
+        let events = s.step().unwrap();
+        let tokens = events
+            .iter()
+            .filter(|e| matches!(e, GenerationEvent::Token { .. }))
+            .count();
+        assert_eq!(tokens, 1);
+        assert!(!events.iter().any(|e| matches!(e, GenerationEvent::Prefilled { .. })));
+        assert_eq!(s.metrics.prefill_chunks, chunks);
+        assert_eq!(s.metrics.prefill_steps, psteps);
+        s.run_to_completion().unwrap();
     }
 }

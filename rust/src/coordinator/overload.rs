@@ -1,0 +1,274 @@
+//! SLO-aware overload control: admission by predicted KV block demand,
+//! victim selection for preemption under block-pool pressure, host swap
+//! of a victim's KV blocks, and the deadline-slack urgency heuristic the
+//! planner uses to bias the prefill/decode token split.
+//!
+//! The scheduler threads these pieces together: `predicted_blocks` +
+//! the block pool's reservation ledger gate admission, `Rank` decides
+//! who preempts whom, `HostSwap` + `read_block`/`write_block` carry a
+//! long victim's KV to host memory and back, and `deadline_slack_urgent`
+//! marks requests whose slack is shrinking so the planner favors them.
+
+use std::cmp::Ordering;
+
+/// What happens to a request whose predicted block demand exceeds the
+/// unreserved free pool (and preemption cannot make room).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PressurePolicy {
+    /// Leave it queued; retry next step when blocks free up.
+    Defer,
+    /// Fail it immediately with `FinishReason::Rejected`.
+    Reject,
+}
+
+/// Overload-control policy knobs, carried by `SchedulerConfig`.
+#[derive(Debug, Clone, Copy)]
+pub struct OverloadConfig {
+    /// Gate admission on predicted KV block demand vs the unreserved
+    /// free pool, instead of slot availability alone.
+    pub admission: bool,
+    pub on_pressure: PressurePolicy,
+    /// Preempt lowest-priority/latest-deadline running requests when a
+    /// strictly higher-ranked arrival cannot otherwise be admitted.
+    pub preemption: bool,
+    /// Victims holding at least this many complete KV blocks have them
+    /// swapped to host memory and restored on resume instead of being
+    /// recomputed (0 disables the swap path).
+    pub swap_min_blocks: usize,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> Self {
+        OverloadConfig {
+            admission: true,
+            on_pressure: PressurePolicy::Defer,
+            preemption: true,
+            swap_min_blocks: 4,
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// The reject-at-admission baseline: same block-demand gate, but no
+    /// preemption and pressure rejects instead of deferring. Used as the
+    /// control arm of the overload bench.
+    pub fn reject_only() -> Self {
+        OverloadConfig {
+            admission: true,
+            on_pressure: PressurePolicy::Reject,
+            preemption: false,
+            swap_min_blocks: 0,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        if !self.admission {
+            "off"
+        } else if self.preemption {
+            "preempt_resume"
+        } else if self.on_pressure == PressurePolicy::Reject {
+            "reject_only"
+        } else {
+            "defer_only"
+        }
+    }
+}
+
+/// KV blocks a request will need over its whole lifetime: prompt plus
+/// budgeted new tokens, clamped to the model's context window.
+pub fn predicted_blocks(
+    prompt_len: usize,
+    max_new: usize,
+    block: usize,
+    max_total: usize,
+) -> usize {
+    let tokens = (prompt_len + max_new).min(max_total).max(1);
+    tokens.div_ceil(block)
+}
+
+/// Scheduling rank, used both to order preemption victims and to decide
+/// whether an arrival is allowed to preempt at all.
+#[derive(Debug, Clone, Copy)]
+pub struct Rank {
+    pub priority: i32,
+    /// Seconds until the deadline at ranking time (None = no deadline).
+    pub slack: Option<f64>,
+}
+
+impl Rank {
+    /// True when `self` strictly outranks `other`: strictly higher
+    /// priority, or equal priority with a strictly earlier deadline (no
+    /// deadline counts as latest). Arrivals may only preempt victims
+    /// they strictly outrank, which rules out equal-rank ping-pong.
+    pub fn outranks(&self, other: &Rank) -> bool {
+        if self.priority != other.priority {
+            return self.priority > other.priority;
+        }
+        match (self.slack, other.slack) {
+            (Some(a), Some(b)) => a < b,
+            (Some(_), None) => true,
+            _ => false,
+        }
+    }
+}
+
+/// Victim order over `(rank, admission_seq)`: the first element under
+/// this ordering is preempted first — lowest priority, then latest
+/// deadline (no deadline = latest of all), then youngest admission.
+pub fn victim_cmp(a: &(Rank, u64), b: &(Rank, u64)) -> Ordering {
+    a.0.priority
+        .cmp(&b.0.priority)
+        .then_with(|| cmp_slack_latest_first(a.0.slack, b.0.slack))
+        .then_with(|| b.1.cmp(&a.1))
+}
+
+fn cmp_slack_latest_first(a: Option<f64>, b: Option<f64>) -> Ordering {
+    match (a, b) {
+        (None, None) => Ordering::Equal,
+        (None, Some(_)) => Ordering::Less,
+        (Some(_), None) => Ordering::Greater,
+        (Some(x), Some(y)) => y.partial_cmp(&x).unwrap_or(Ordering::Equal),
+    }
+}
+
+/// A running request is urgent when its remaining deadline slack no
+/// longer covers its remaining decode steps at the observed inter-token
+/// latency, with a 2x safety factor.
+pub fn deadline_slack_urgent(slack_s: f64, itl_s: f64, remaining_tokens: usize) -> bool {
+    slack_s < 2.0 * itl_s * remaining_tokens as f64
+}
+
+/// Host-resident copy of a preempted request's complete KV blocks, in
+/// table order. Restored into freshly allocated private blocks on
+/// resume so the tail recompute starts past them.
+#[derive(Debug, Clone, Default)]
+pub struct HostSwap {
+    pub blocks: Vec<Vec<f32>>,
+}
+
+impl HostSwap {
+    pub fn bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.len() * 4).sum()
+    }
+}
+
+/// Floats of pool block `blk` across all layers and K/V planes. The
+/// pool tensor is laid out `[L, 2, P, G, bs, dh]`; `block_row` is the
+/// per-plane block stride `G * bs * dh` and `pool_blocks` is `P`.
+pub fn read_block(
+    pool: &[f32],
+    layers: usize,
+    pool_blocks: usize,
+    block_row: usize,
+    blk: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(layers * 2 * block_row);
+    for l in 0..layers {
+        for c in 0..2 {
+            let base = ((l * 2 + c) * pool_blocks + blk) * block_row;
+            out.extend_from_slice(&pool[base..base + block_row]);
+        }
+    }
+    out
+}
+
+/// Inverse of `read_block`: write one block's saved floats back into
+/// the pool tensor at (possibly different) block index `blk`.
+pub fn write_block(
+    pool: &mut [f32],
+    layers: usize,
+    pool_blocks: usize,
+    block_row: usize,
+    blk: usize,
+    data: &[f32],
+) {
+    assert_eq!(data.len(), layers * 2 * block_row, "swap block size mismatch");
+    for l in 0..layers {
+        for c in 0..2 {
+            let base = ((l * 2 + c) * pool_blocks + blk) * block_row;
+            let src = (l * 2 + c) * block_row;
+            pool[base..base + block_row].copy_from_slice(&data[src..src + block_row]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicted_blocks_rounds_up_and_clamps_to_context() {
+        assert_eq!(predicted_blocks(16, 0, 16, 1024), 1);
+        assert_eq!(predicted_blocks(17, 0, 16, 1024), 2);
+        assert_eq!(predicted_blocks(10, 10, 16, 1024), 2);
+        // clamped: prompt+max_new past the window costs only window blocks
+        assert_eq!(predicted_blocks(60, 100, 16, 64), 4);
+        // degenerate empty request still needs one block
+        assert_eq!(predicted_blocks(0, 0, 16, 64), 1);
+    }
+
+    #[test]
+    fn outranks_requires_strictly_higher_rank() {
+        let hi = Rank { priority: 5, slack: None };
+        let lo = Rank { priority: 0, slack: Some(0.1) };
+        assert!(hi.outranks(&lo));
+        assert!(!lo.outranks(&hi));
+        // equal priority: earlier deadline wins, None loses to Some
+        let tight = Rank { priority: 0, slack: Some(0.1) };
+        let loose = Rank { priority: 0, slack: Some(5.0) };
+        let none = Rank { priority: 0, slack: None };
+        assert!(tight.outranks(&loose));
+        assert!(!loose.outranks(&tight));
+        assert!(tight.outranks(&none));
+        assert!(!none.outranks(&tight));
+        // equal rank never preempts (no ping-pong)
+        assert!(!tight.outranks(&tight));
+        assert!(!none.outranks(&none));
+    }
+
+    #[test]
+    fn victim_order_prefers_low_priority_late_deadline_young() {
+        let mut v = vec![
+            (Rank { priority: 5, slack: Some(0.5) }, 1u64),
+            (Rank { priority: 0, slack: Some(0.2) }, 2),
+            (Rank { priority: 0, slack: None }, 3),
+            (Rank { priority: 0, slack: Some(9.0) }, 4),
+            (Rank { priority: 0, slack: None }, 5),
+        ];
+        v.sort_by(victim_cmp);
+        let seqs: Vec<u64> = v.iter().map(|x| x.1).collect();
+        // no-deadline victims go first (youngest of them first), then the
+        // loosest deadline, then the tightest; high priority last
+        assert_eq!(seqs, vec![5, 3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn urgency_tracks_remaining_work() {
+        // 10 tokens left at 10ms/token needs 0.2s of slack under the 2x factor
+        assert!(deadline_slack_urgent(0.15, 0.01, 10));
+        assert!(!deadline_slack_urgent(0.25, 0.01, 10));
+        // nothing left to decode is never urgent
+        assert!(!deadline_slack_urgent(0.0, 0.01, 0));
+    }
+
+    #[test]
+    fn block_swap_roundtrips_through_a_host_copy() {
+        let (layers, pool_blocks, block_row) = (2usize, 4usize, 6usize);
+        let n = layers * 2 * pool_blocks * block_row;
+        let mut pool: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let saved = read_block(&pool, layers, pool_blocks, block_row, 2);
+        assert_eq!(saved.len(), layers * 2 * block_row);
+        let swap = HostSwap { blocks: vec![saved.clone()] };
+        assert_eq!(swap.bytes(), saved.len() * 4);
+        // restoring into a different block index lands the same floats
+        write_block(&mut pool, layers, pool_blocks, block_row, 3, &saved);
+        let back = read_block(&pool, layers, pool_blocks, block_row, 3);
+        assert_eq!(back, saved);
+        // other blocks untouched
+        let untouched = read_block(&pool, layers, pool_blocks, block_row, 1);
+        for (i, x) in untouched.iter().enumerate() {
+            let (lc, rem) = (i / block_row, i % block_row);
+            assert_eq!(*x, (lc * pool_blocks * block_row + block_row + rem) as f32);
+        }
+    }
+}

@@ -3,7 +3,8 @@
 //! Each scheduling step spends a configurable token budget
 //! ([`SchedulerConfig::prefill_chunk_tokens`](super::SchedulerConfig),
 //! default one chunk bucket) on the prompts of admitted-but-unprefilled
-//! slots, oldest first, while the decode batch for already-running slots
+//! slots — urgent-deadline first, then priority, then tightest slack,
+//! then oldest — while the decode batch for already-running slots
 //! executes in the same step — chunked prefill is what removes the
 //! prefill head-of-line blocking the monolithic path suffered.
 //!
@@ -17,7 +18,7 @@
 //! entries' masked per-position writes accept any window).
 
 /// One prefilling slot, as the planner sees it.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrefillJob {
     pub slot: usize,
     /// Next prompt position to process (tokens `[0, next_pos)` are done —
@@ -26,8 +27,19 @@ pub struct PrefillJob {
     /// prompt; the planner only ever plans the remainder).
     pub next_pos: usize,
     pub prompt_len: usize,
-    /// Admission order (monotonic): lower = older = served first.
+    /// Admission order (monotonic): lower = older; the final tie-break.
     pub seq: u64,
+    /// Request priority: higher values are planned first among
+    /// equally-urgent jobs, so a high-priority prompt never queues its
+    /// prefill behind a bulk one.
+    pub priority: i32,
+    /// Seconds until the request's deadline at planning time (None = no
+    /// deadline, ordered last among equal priority).
+    pub slack: Option<f64>,
+    /// Deadline slack no longer covers the remaining work
+    /// ([`overload::deadline_slack_urgent`](super::overload) as judged by
+    /// the scheduler) — urgent jobs outrank everything else.
+    pub urgent: bool,
 }
 
 impl PrefillJob {
@@ -45,9 +57,11 @@ pub struct ChunkAssignment {
 }
 
 /// Plan one step: the list of engine calls (each a set of per-slot chunk
-/// assignments) that spends up to `budget` prompt tokens on `jobs`,
-/// oldest (`seq`) first. `budget` and `chunk` are clamped to at least 1,
-/// so a step with pending prefill work always makes progress.
+/// assignments) that spends up to `budget` prompt tokens on `jobs`.
+/// Pick order is urgent-deadline first, then priority (descending), then
+/// tightest slack, then admission order (`seq`). `budget` and `chunk`
+/// are clamped to at least 1, so a step with pending prefill work always
+/// makes progress.
 pub fn plan_step(
     jobs: &[PrefillJob],
     budget: usize,
@@ -56,7 +70,13 @@ pub fn plan_step(
     let chunk = chunk.max(1);
     let mut budget = budget.max(1);
     let mut jobs: Vec<PrefillJob> = jobs.iter().copied().filter(|j| j.remaining() > 0).collect();
-    jobs.sort_by_key(|j| j.seq);
+    jobs.sort_by(|a, b| {
+        b.urgent
+            .cmp(&a.urgent)
+            .then_with(|| b.priority.cmp(&a.priority))
+            .then_with(|| cmp_slack_tightest_first(a.slack, b.slack))
+            .then_with(|| a.seq.cmp(&b.seq))
+    });
     let mut calls = Vec::new();
     loop {
         let mut call = Vec::new();
@@ -79,12 +99,30 @@ pub fn plan_step(
     }
 }
 
+fn cmp_slack_tightest_first(a: Option<f64>, b: Option<f64>) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a, b) {
+        (None, None) => Ordering::Equal,
+        (None, Some(_)) => Ordering::Greater,
+        (Some(_), None) => Ordering::Less,
+        (Some(x), Some(y)) => x.partial_cmp(&y).unwrap_or(Ordering::Equal),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn job(slot: usize, next: usize, prompt: usize, seq: u64) -> PrefillJob {
-        PrefillJob { slot, next_pos: next, prompt_len: prompt, seq }
+        PrefillJob {
+            slot,
+            next_pos: next,
+            prompt_len: prompt,
+            seq,
+            priority: 0,
+            slack: None,
+            urgent: false,
+        }
     }
 
     #[test]
@@ -170,5 +208,48 @@ mod tests {
                 ChunkAssignment { slot: 1, offset: 271, len: 1 },
             ]
         );
+    }
+
+    #[test]
+    fn priority_outranks_admission_order() {
+        // the bulk prompt arrived first (seq 0) but the interactive one
+        // (priority 5, seq 1) takes the step's only chunk
+        let bulk = job(0, 0, 64, 0);
+        let hot = PrefillJob { priority: 5, ..job(1, 0, 64, 1) };
+        let calls = plan_step(&[bulk, hot], 16, 16);
+        assert_eq!(calls.len(), 1);
+        assert_eq!(calls[0], vec![ChunkAssignment { slot: 1, offset: 0, len: 16 }]);
+        // equal priority falls back to FCFS by seq
+        let calls = plan_step(&[job(0, 0, 64, 0), job(1, 0, 64, 1)], 16, 16);
+        assert_eq!(calls[0][0].slot, 0);
+    }
+
+    #[test]
+    fn tighter_slack_wins_among_equal_priority() {
+        let loose = PrefillJob { slack: Some(4.0), ..job(0, 0, 64, 0) };
+        let tight = PrefillJob { slack: Some(0.5), ..job(1, 0, 64, 1) };
+        let none = job(2, 0, 64, 2);
+        let calls = plan_step(&[loose, tight, none], 16, 16);
+        assert_eq!(calls[0][0].slot, 1);
+        // no-deadline jobs order last among equal priority
+        let calls = plan_step(&[none, loose], 32, 16);
+        assert_eq!(calls[0][0].slot, 0 /* loose, slot 0 */);
+    }
+
+    #[test]
+    fn urgent_deadline_outranks_priority() {
+        let hot = PrefillJob { priority: 9, ..job(0, 0, 64, 0) };
+        let late = PrefillJob { urgent: true, slack: Some(0.05), ..job(1, 0, 64, 1) };
+        let calls = plan_step(&[hot, late], 16, 16);
+        assert_eq!(calls[0][0].slot, 1);
+    }
+
+    #[test]
+    fn budget_smaller_than_one_chunk_plans_a_partial_chunk() {
+        // a 5-token budget against a 16-token chunk bucket cuts the chunk
+        // short rather than stalling or overshooting
+        let jobs = [job(0, 0, 64, 0), job(1, 0, 64, 1)];
+        let calls = plan_step(&jobs, 5, 16);
+        assert_eq!(calls, vec![vec![ChunkAssignment { slot: 0, offset: 0, len: 5 }]]);
     }
 }

@@ -131,6 +131,10 @@ pub enum FinishReason {
     /// silently truncated (the server surfaces this as the
     /// `prompt_too_long` protocol error before a slot is burned).
     PromptTooLong,
+    /// Turned away by the admission controller under block-pool pressure
+    /// (`PressurePolicy::Reject`): predicted KV demand did not fit the
+    /// unreserved free pool and preemption could not make room.
+    Rejected,
 }
 
 impl FinishReason {
@@ -144,6 +148,7 @@ impl FinishReason {
             FinishReason::Cancelled => "cancelled",
             FinishReason::Deadline => "deadline",
             FinishReason::PromptTooLong => "prompt_too_long",
+            FinishReason::Rejected => "rejected",
         }
     }
 }
@@ -185,6 +190,10 @@ pub enum GenerationEvent {
         index: usize,
         text_offset: usize,
     },
+    /// Preempted under block-pool pressure: its KV blocks were freed and
+    /// it re-entered the queue. Not terminal — the request resumes later
+    /// and its token stream continues where it left off.
+    Preempted { request: u64 },
     /// Terminal: the request ran to a natural finish (or its deadline).
     Finished(Completion),
     /// Terminal: the request was cancelled; partial output inside.
@@ -196,6 +205,7 @@ impl GenerationEvent {
         match self {
             GenerationEvent::Queued { request }
             | GenerationEvent::Prefilled { request }
+            | GenerationEvent::Preempted { request }
             | GenerationEvent::Token { request, .. } => *request,
             GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => c.id,
         }
@@ -269,5 +279,14 @@ mod tests {
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
         assert_eq!(FinishReason::Deadline.as_str(), "deadline");
         assert_eq!(FinishReason::PromptTooLong.as_str(), "prompt_too_long");
+        assert_eq!(FinishReason::Rejected.as_str(), "rejected");
+    }
+
+    #[test]
+    fn preempted_event_is_not_terminal() {
+        let ev = GenerationEvent::Preempted { request: 4 };
+        assert_eq!(ev.request_id(), 4);
+        assert!(!ev.is_terminal());
+        assert!(ev.completion().is_none());
     }
 }

@@ -43,8 +43,20 @@
 //! every request the stream is `Queued` -> `Prefilled` -> `Token`+ ->
 //! `Finished`/`Cancelled`. TTFT and inter-token latency are recorded at
 //! the moment each token is emitted, not reconstructed at completion.
+//!
+//! **Overload control** ([`overload`](super::overload)): admission is
+//! gated on *predicted KV block demand* (prompt + budgeted new tokens vs
+//! the pool's unreserved headroom, tracked by a per-request reservation
+//! ledger), not slot availability. Under pressure a strictly
+//! higher-ranked arrival preempts the lowest-priority/latest-deadline
+//! running victim: the victim's blocks return to the pool, a `Preempted`
+//! event is emitted, and it re-queues for resume — recompute-on-resume
+//! through the prefix cache, with long victims' complete blocks swapped
+//! to host memory and restored instead. A resumed request's token stream
+//! is bit-identical to an uninterrupted run (the sampler object and all
+//! generated tokens survive preemption; only KV is rebuilt).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -58,6 +70,7 @@ use crate::tokenizer::{token_byte_len, PAD};
 
 use super::kv::{self, BlockTable, MakePrivate};
 use super::metrics::EngineMetrics;
+use super::overload::{self, HostSwap, OverloadConfig, PressurePolicy, Rank};
 use super::planner::{self, PrefillJob};
 use super::request::{Completion, FinishReason, GenerationEvent, Request};
 use super::sampler::Sampler;
@@ -213,6 +226,14 @@ enum SlotPhase {
     Prefilling { next_pos: usize },
     /// Prompt fully prefilled and first token emitted; decoding.
     Running,
+    /// Preempted under block pressure: KV blocks freed, waiting in the
+    /// preempted queue for re-admission (never present in `slots`).
+    Preempted,
+    /// Re-admitted after preemption: rebuilding KV over the *virtual
+    /// prompt* (prompt + all generated tokens but the last) via prefix
+    /// cache hits, swap restore, and recompute chunks; positions
+    /// `[0, next_pos)` are back. No tokens are sampled in this phase.
+    Resuming { next_pos: usize },
 }
 
 struct Slot {
@@ -253,6 +274,25 @@ impl Slot {
         s.extend_from_slice(&self.generated);
         s
     }
+
+    /// Length of the *virtual prompt* a resume rebuilds: every token
+    /// whose KV existed at preemption — the prompt plus all generated
+    /// tokens except the last, whose KV the next decode step writes
+    /// (exactly as it would have in an uninterrupted run).
+    fn virtual_len(&self) -> usize {
+        self.req.prompt_ids.len() + self.generated.len().saturating_sub(1)
+    }
+}
+
+/// Admission/preemption rank of a request at `now`.
+fn rank_of(r: &Request, now: Instant) -> Rank {
+    Rank { priority: r.priority, slack: slack_of(r, now) }
+}
+
+/// Seconds until the deadline (negative = past it; None = no deadline).
+fn slack_of(r: &Request, now: Instant) -> Option<f64> {
+    r.deadline
+        .map(|d| d.as_secs_f64() - now.duration_since(r.enqueued_at).as_secs_f64())
 }
 
 #[derive(Debug, Clone)]
@@ -274,6 +314,9 @@ pub struct SchedulerConfig {
     /// prefills its whole prompt (the no-sharing baseline `bench
     /// kv-paging` measures against).
     pub prefix_cache: bool,
+    /// Overload control: block-demand admission, pressure policy,
+    /// preemption, host swap (see [`overload`]).
+    pub overload: OverloadConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -283,6 +326,7 @@ impl Default for SchedulerConfig {
             compact: true,
             prefill_chunk_tokens: 0,
             prefix_cache: true,
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -302,6 +346,12 @@ pub struct Scheduler<E: StepEngine> {
     logical_n: usize,
     /// Monotonic admission counter (planner seniority).
     admit_seq: u64,
+    /// Preempted requests waiting to resume (blocks freed; slot state —
+    /// sampler, generated tokens — intact). Re-admitted before pending.
+    preempted: VecDeque<Slot>,
+    /// Host copies of long preemption victims' full KV blocks, restored
+    /// at resume instead of recomputed (keyed by request id).
+    swaps: HashMap<u64, HostSwap>,
     /// Events produced since the last `step()` return (enqueue/cancel also
     /// buffer here so lifecycle events are never lost between steps).
     events: Vec<GenerationEvent>,
@@ -329,6 +379,8 @@ impl<E: StepEngine> Scheduler<E> {
             blocks,
             logical_n: 0,
             admit_seq: 0,
+            preempted: VecDeque::new(),
+            swaps: HashMap::new(),
             events: Vec::new(),
             metrics: EngineMetrics::default(),
         }
@@ -395,10 +447,15 @@ impl<E: StepEngine> Scheduler<E> {
                 SlotPhase::Prefilling { next_pos } => {
                     s.req.prompt_ids.len().saturating_sub(next_pos)
                 }
-                SlotPhase::Running => 0,
+                SlotPhase::Resuming { next_pos } => {
+                    s.virtual_len().saturating_sub(next_pos)
+                }
+                SlotPhase::Running | SlotPhase::Preempted => 0,
             })
             .sum();
-        pending + inflight
+        let preempted: usize =
+            self.preempted.iter().map(|s| s.virtual_len()).sum();
+        pending + inflight + preempted
     }
 
     /// The server's `stats.prefill` object: chunk counts, interleave
@@ -450,8 +507,25 @@ impl<E: StepEngine> Scheduler<E> {
         // finished-but-unreaped slots and buffered events still count as
         // work: they must be surfaced by a further step()
         self.pending.is_empty()
+            && self.preempted.is_empty()
             && self.slots.iter().all(|s| s.is_none())
             && self.events.is_empty()
+    }
+
+    /// Preempted requests waiting to resume (stats gauge).
+    pub fn preempted_len(&self) -> usize {
+        self.preempted.len()
+    }
+
+    /// The server's `stats.overload` object: preemption/resume/swap
+    /// counters, admission rejections, deadline misses, goodput, and the
+    /// live reservation/queue gauges (PROTOCOL.md).
+    pub fn overload_stats(&self) -> Json {
+        let mut j = self.metrics.overload_json();
+        j.set("policy", self.cfg.overload.policy_name().into());
+        j.set("preempted_queued", self.preempted.len().into());
+        j.set("reserved_blocks", self.blocks.reserved_total().into());
+        j
     }
 
     pub fn capacity(&self) -> usize {
@@ -491,12 +565,23 @@ impl<E: StepEngine> Scheduler<E> {
             self.finish_unstarted(r, FinishReason::Cancelled);
             return true;
         }
+        // preempted requests hold no slot or blocks, only queue state
+        if let Some(pos) = self.preempted.iter().position(|s| s.req.id == id) {
+            let s = self.preempted.remove(pos).unwrap();
+            self.swaps.remove(&id);
+            self.metrics.cancelled_requests += 1;
+            let c = Self::completion_of(&mut self.metrics, s, FinishReason::Cancelled);
+            self.events.push(GenerationEvent::Cancelled(c));
+            return true;
+        }
         let found = self.slots.iter().position(|s| {
             s.as_ref().map_or(false, |s| s.req.id == id && s.finished.is_none())
         });
         if let Some(i) = found {
             let mut s = self.slots[i].take().unwrap();
             self.blocks.free_table(std::mem::take(&mut s.table));
+            self.blocks.release_reservation(id);
+            self.swaps.remove(&id);
             self.metrics.cancelled_requests += 1;
             let c = Self::completion_of(&mut self.metrics, s, FinishReason::Cancelled);
             self.events.push(GenerationEvent::Cancelled(c));
@@ -616,6 +701,9 @@ impl<E: StepEngine> Scheduler<E> {
                 if finish == FinishReason::PromptTooLong {
                     self.metrics.rejected_prompts += 1;
                 }
+                if finish == FinishReason::Rejected {
+                    self.metrics.admission_rejections += 1;
+                }
                 self.events.push(GenerationEvent::Finished(c));
             }
         }
@@ -634,6 +722,26 @@ impl<E: StepEngine> Scheduler<E> {
                     }
                 }
             }
+        }
+        // a preempted request's deadline keeps ticking while it waits
+        if self.preempted.iter().any(|s| s.req.deadline.is_some()) {
+            let mut keep = VecDeque::with_capacity(self.preempted.len());
+            while let Some(s) = self.preempted.pop_front() {
+                let expired = s
+                    .req
+                    .deadline
+                    .map_or(false, |d| now.duration_since(s.req.enqueued_at) >= d);
+                if expired {
+                    self.swaps.remove(&s.req.id);
+                    self.metrics.deadline_expired += 1;
+                    let c =
+                        Self::completion_of(&mut self.metrics, s, FinishReason::Deadline);
+                    self.events.push(GenerationEvent::Finished(c));
+                } else {
+                    keep.push_back(s);
+                }
+            }
+            self.preempted = keep;
         }
         // fast path: deadlines are rare, skip the queue rebuild entirely
         if self.pending.iter().all(|r| r.deadline.is_none()) {
@@ -660,10 +768,15 @@ impl<E: StepEngine> Scheduler<E> {
                 // published blocks stay in the prefix cache for future
                 // requests sharing the prefix
                 self.blocks.free_table(std::mem::take(&mut s.table));
+                self.blocks.release_reservation(s.req.id);
+                self.swaps.remove(&s.req.id);
                 if reason == FinishReason::Deadline {
                     self.metrics.deadline_expired += 1;
                 } else {
                     self.metrics.completed_requests += 1;
+                    // goodput: tokens delivered within the SLO (natural
+                    // finishes only; deadline misses contribute nothing)
+                    self.metrics.deadline_met_tokens += s.generated.len() as u64;
                 }
                 let c = Self::completion_of(&mut self.metrics, s, reason);
                 self.events.push(GenerationEvent::Finished(c));
@@ -692,7 +805,7 @@ impl<E: StepEngine> Scheduler<E> {
     /// chunks entirely; the one block a skip-capped recompute writes
     /// into is copy-on-written if shared.
     fn admit(&mut self) -> Result<()> {
-        if self.pending.is_empty() {
+        if self.pending.is_empty() && self.preempted.is_empty() {
             return Ok(());
         }
         // structured rejection instead of the old silent truncation: a
@@ -720,9 +833,6 @@ impl<E: StepEngine> Scheduler<E> {
                 }
             }
             self.pending = keep;
-            if self.pending.is_empty() {
-                return Ok(());
-            }
         }
         // highest priority first; stable sort keeps FIFO among equals
         // (skipped in the common all-equal case)
@@ -736,7 +846,10 @@ impl<E: StepEngine> Scheduler<E> {
                 .make_contiguous()
                 .sort_by_key(|r| std::cmp::Reverse(r.priority));
         }
-        let want = self.occupied_len() + self.pending.len();
+        let want = self.occupied_len() + self.preempted.len() + self.pending.len();
+        if want == 0 {
+            return Ok(());
+        }
         let target = self.batch_bucket_for(want);
         // growth is a Vec resize now — no cache rebuild, no hysteresis
         if target > self.capacity() {
@@ -754,11 +867,68 @@ impl<E: StepEngine> Scheduler<E> {
             self.note_surgery(t0);
         }
 
+        // resume preempted requests first — they hold queue seniority
+        // (and possibly a host swap); highest rank resumes first, and a
+        // resume never preempts
+        let mut fi = 0;
+        if !self.preempted.is_empty() {
+            self.preempted.make_contiguous().sort_by(|a, b| {
+                b.req.priority.cmp(&a.req.priority).then(a.seq.cmp(&b.seq))
+            });
+            while fi < free.len() && !self.preempted.is_empty() {
+                if !self.try_resume(free[fi])? {
+                    break;
+                }
+                fi += 1;
+            }
+        }
+
+        let ov = self.cfg.overload;
+        let usable = self.blocks.total_blocks().saturating_sub(1);
         let now = Instant::now();
         let mut cow_pairs: Vec<(u32, u32)> = Vec::new();
-        for &slot_idx in &free {
+        while fi < free.len() {
+            let slot_idx = free[fi];
             let Some(r) = self.pending.pop_front() else { break };
             let plen = r.prompt_ids.len();
+            // demand-gated admission: will the pool cover this request's
+            // whole lifetime (prompt + decode budget), net of the blocks
+            // already promised to admitted requests? Clamped to the pool
+            // size so a request larger than the machine still admits
+            // alone and ends `CacheLimit` exactly as before.
+            let demand = overload::predicted_blocks(
+                plen,
+                r.params.max_new_tokens,
+                self.blocks.block_size(),
+                limit.max(1),
+            )
+            .min(usable);
+            if ov.admission && demand > self.blocks.available_unreserved() {
+                // under pressure a strictly higher-ranked arrival evicts
+                // the lowest-ranked running victims until it fits
+                if ov.preemption {
+                    let rank = rank_of(&r, now);
+                    while demand > self.blocks.available_unreserved() {
+                        if !self.preempt_one(&rank, None) {
+                            break;
+                        }
+                    }
+                }
+                if demand > self.blocks.available_unreserved() {
+                    match ov.on_pressure {
+                        PressurePolicy::Reject => {
+                            // turn the request away now (load shedding);
+                            // the same slot goes to the next candidate
+                            self.finish_unstarted(r, FinishReason::Rejected);
+                            continue;
+                        }
+                        PressurePolicy::Defer => {
+                            self.pending.push_front(r);
+                            break;
+                        }
+                    }
+                }
+            }
             // allocate the prompt's block table; prefix-cache hits hand
             // back already-filled physical blocks
             let Some((mut table, cached_raw)) = self.blocks.alloc_prompt(&r.prompt_ids)?
@@ -790,6 +960,12 @@ impl<E: StepEngine> Scheduler<E> {
             }
             self.metrics.prefix_tokens_skipped += cached as u64;
             self.admit_seq += 1;
+            if ov.admission {
+                // reserve the unallocated remainder of the predicted
+                // demand; shrinks as decode blocks materialize
+                self.blocks
+                    .set_reservation(r.id, demand.saturating_sub(table.blocks.len()));
+            }
             let sampler = Sampler::new(r.params, r.id);
             self.slots[slot_idx] = Some(Slot {
                 sampler,
@@ -807,6 +983,7 @@ impl<E: StepEngine> Scheduler<E> {
                 finished: None,
                 req: r,
             });
+            fi += 1;
         }
         if !cow_pairs.is_empty() {
             let t0 = Instant::now();
@@ -844,9 +1021,33 @@ impl<E: StepEngine> Scheduler<E> {
                 SlotPhase::Prefilling { .. } => {
                     (s.req.prompt_ids.len() + 1).min(max_total)
                 }
+                // a resume rebuilds to its pre-preemption length
+                SlotPhase::Resuming { .. } => s.len.min(max_total),
+                SlotPhase::Preempted => 1,
             })
             .max()
             .unwrap_or(1)
+    }
+
+    /// (slack, urgent) of a slot at `now`: urgent when the deadline
+    /// slack no longer covers the remaining decode work at the measured
+    /// inter-token cadence.
+    fn urgency(&self, s: &Slot, now: Instant) -> (Option<f64>, bool) {
+        let slack = slack_of(&s.req, now);
+        let urgent = match slack {
+            Some(sl) => {
+                let itl = self.metrics.itl.mean();
+                let remaining = match s.phase {
+                    SlotPhase::Running => {
+                        s.req.params.max_new_tokens.saturating_sub(s.generated.len())
+                    }
+                    _ => s.req.params.max_new_tokens,
+                };
+                itl > 0.0 && overload::deadline_slack_urgent(sl, itl, remaining)
+            }
+            None => false,
+        };
+        (slack, urgent)
     }
 
     /// Per-slot block-table rows at `width` entries (null-padded; empty
@@ -875,6 +1076,17 @@ impl<E: StepEngine> Scheduler<E> {
         } else {
             self.cfg.prefill_chunk_tokens
         };
+        let now = Instant::now();
+        // deadline enforcement in the budget split: when a running
+        // decoder's slack no longer covers its remaining tokens at the
+        // measured cadence, cap this step's prefill spend at one chunk
+        // so the decode batch keeps its rhythm
+        let urgent_decode = self.slots.iter().flatten().any(|s| {
+            s.finished.is_none()
+                && s.phase == SlotPhase::Running
+                && self.urgency(s, now).1
+        });
+        let budget = if urgent_decode { budget.min(chunk) } else { budget };
         let jobs: Vec<PrefillJob> = self
             .slots
             .iter()
@@ -884,15 +1096,25 @@ impl<E: StepEngine> Scheduler<E> {
                 if s.finished.is_some() {
                     return None;
                 }
-                match s.phase {
-                    SlotPhase::Prefilling { next_pos } => Some(PrefillJob {
-                        slot: i,
-                        next_pos,
-                        prompt_len: s.req.prompt_ids.len(),
-                        seq: s.seq,
-                    }),
-                    SlotPhase::Running => None,
-                }
+                let (next_pos, prompt_len) = match s.phase {
+                    SlotPhase::Prefilling { next_pos } => {
+                        (next_pos, s.req.prompt_ids.len())
+                    }
+                    // a resume streams the *virtual prompt* (prompt +
+                    // generated tokens whose KV was dropped) back in
+                    SlotPhase::Resuming { next_pos } => (next_pos, s.virtual_len()),
+                    SlotPhase::Running | SlotPhase::Preempted => return None,
+                };
+                let (slack, urgent) = self.urgency(s, now);
+                Some(PrefillJob {
+                    slot: i,
+                    next_pos,
+                    prompt_len,
+                    seq: s.seq,
+                    priority: s.req.priority,
+                    slack,
+                    urgent,
+                })
             })
             .collect();
         if jobs.is_empty() {
@@ -915,8 +1137,14 @@ impl<E: StepEngine> Scheduler<E> {
             let mut offs = vec![0i32; b];
             for a in &call {
                 let s = self.slots[a.slot].as_ref().unwrap();
-                toks[a.slot * chunk..a.slot * chunk + a.len]
-                    .copy_from_slice(&s.req.prompt_ids[a.offset..a.offset + a.len]);
+                if matches!(s.phase, SlotPhase::Resuming { .. }) {
+                    let stream = s.stream();
+                    toks[a.slot * chunk..a.slot * chunk + a.len]
+                        .copy_from_slice(&stream[a.offset..a.offset + a.len]);
+                } else {
+                    toks[a.slot * chunk..a.slot * chunk + a.len]
+                        .copy_from_slice(&s.req.prompt_ids[a.offset..a.offset + a.len]);
+                }
                 lens[a.slot] = a.len as i32;
                 offs[a.slot] = a.offset as i32;
             }
@@ -939,15 +1167,42 @@ impl<E: StepEngine> Scheduler<E> {
                 }
                 s.last_chunk_at = Some(now);
                 let done = a.offset + a.len;
+                let resuming = matches!(s.phase, SlotPhase::Resuming { .. });
                 // the chunk may have completed whole blocks: publish them
                 // into the prefix cache so the NEXT request sharing this
                 // prompt skips their compute
                 if prefix_cache_on {
-                    self.blocks
-                        .publish_full_blocks(&mut s.table, &s.req.prompt_ids[..done]);
+                    let stream;
+                    let tokens: &[i32] = if resuming {
+                        stream = s.stream();
+                        &stream[..done]
+                    } else {
+                        &s.req.prompt_ids[..done]
+                    };
+                    self.blocks.publish_full_blocks(&mut s.table, tokens);
                 }
-                if done < s.req.prompt_ids.len() {
-                    s.phase = SlotPhase::Prefilling { next_pos: done };
+                let total = if resuming {
+                    s.virtual_len()
+                } else {
+                    s.req.prompt_ids.len()
+                };
+                if done < total {
+                    s.phase = if resuming {
+                        SlotPhase::Resuming { next_pos: done }
+                    } else {
+                        SlotPhase::Prefilling { next_pos: done }
+                    };
+                    continue;
+                }
+                if resuming {
+                    // virtual prompt rebuilt: rejoin the decode batch
+                    // exactly where preemption cut in. Nothing is sampled
+                    // here — the next token comes from the next decode
+                    // step, conditioned on the same KV an uninterrupted
+                    // run would carry, so the stream stays bit-identical.
+                    s.phase = SlotPhase::Running;
+                    s.last_token_at = now;
+                    self.metrics.resumes += 1;
                     continue;
                 }
                 // prompt complete: this chunk's logits row carries the
@@ -1020,23 +1275,240 @@ impl<E: StepEngine> Scheduler<E> {
     }
 
     /// Grow tables so every active slot's next write position is backed
-    /// by a block; slots the pool cannot serve finish `CacheLimit`.
+    /// by a block. When the pool cannot serve the append, a strictly
+    /// lower-ranked running victim is preempted to free blocks; with no
+    /// such victim the growing request finishes `CacheLimit` as before.
     fn ensure_block_capacity(&mut self) {
         let bs = self.blocks.block_size();
-        for slot in self.slots.iter_mut() {
-            let Some(s) = slot else { continue };
-            if s.finished.is_some() || s.phase != SlotPhase::Running {
+        for i in 0..self.slots.len() {
+            loop {
+                let grown = {
+                    let Some(s) = self.slots[i].as_mut() else { break };
+                    if s.finished.is_some() || s.phase != SlotPhase::Running {
+                        break;
+                    }
+                    if s.table.capacity(bs) >= s.len {
+                        break;
+                    }
+                    self.blocks.append_block(&mut s.table)
+                };
+                if grown {
+                    continue;
+                }
+                let (rank, id) = {
+                    let s = self.slots[i].as_ref().unwrap();
+                    (rank_of(&s.req, Instant::now()), s.req.id)
+                };
+                if self.cfg.overload.preemption && self.preempt_one(&rank, Some(id)) {
+                    continue;
+                }
+                // out of physical memory: end this request rather than
+                // stall the whole batch
+                self.slots[i].as_mut().unwrap().finished = Some(FinishReason::CacheLimit);
+                break;
+            }
+        }
+        if self.cfg.overload.admission {
+            self.refresh_reservations();
+        }
+    }
+
+    /// Re-derive every live slot's reservation as predicted demand minus
+    /// blocks already held (shrinking toward zero as KV materializes).
+    fn refresh_reservations(&mut self) {
+        let bs = self.blocks.block_size();
+        let limit = self.max_prompt_len().max(1);
+        let usable = self.blocks.total_blocks().saturating_sub(1);
+        for i in 0..self.slots.len() {
+            let Some(s) = self.slots[i].as_ref() else { continue };
+            if s.finished.is_some() {
                 continue;
             }
-            while s.table.capacity(bs) < s.len {
-                if !self.blocks.append_block(&mut s.table) {
-                    // out of physical memory: end this request rather
-                    // than stall the whole batch
-                    s.finished = Some(FinishReason::CacheLimit);
-                    break;
+            let demand = overload::predicted_blocks(
+                s.req.prompt_ids.len(),
+                s.req.params.max_new_tokens,
+                bs,
+                limit,
+            )
+            .min(usable);
+            let held = s.table.blocks.len();
+            let id = s.req.id;
+            self.blocks.set_reservation(id, demand.saturating_sub(held));
+        }
+    }
+
+    /// Preempt the lowest-ranked running victim, provided `cand`
+    /// strictly outranks it ([`Rank::outranks`] — equality never
+    /// preempts, which rules out ping-pong). Returns whether a victim
+    /// was evicted.
+    fn preempt_one(&mut self, cand: &Rank, exclude: Option<u64>) -> bool {
+        let now = Instant::now();
+        let mut victims: Vec<((Rank, u64), usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                let s = slot.as_ref()?;
+                if s.finished.is_some() || s.phase != SlotPhase::Running {
+                    return None;
+                }
+                if exclude == Some(s.req.id) {
+                    return None;
+                }
+                Some(((rank_of(&s.req, now), s.seq), i))
+            })
+            .collect();
+        victims.sort_by(|a, b| overload::victim_cmp(&a.0, &b.0));
+        let Some(&((vrank, _), idx)) = victims.first() else {
+            return false;
+        };
+        if !cand.outranks(&vrank) {
+            return false;
+        }
+        self.preempt_slot(idx);
+        true
+    }
+
+    /// Evict the slot at `idx`: free its KV blocks back to the pool
+    /// (long victims' complete blocks are copied to host first so the
+    /// resume can skip the recompute), emit `Preempted`, and park the
+    /// slot — sampler, generated tokens and all — in the resume queue.
+    fn preempt_slot(&mut self, idx: usize) {
+        let mut s = self.slots[idx].take().unwrap();
+        let min = self.cfg.overload.swap_min_blocks;
+        let full = s.virtual_len() / self.blocks.block_size();
+        if min > 0 && full >= min {
+            match self.swap_out(&s, full) {
+                Ok(swap) => {
+                    self.metrics.swap_out_bytes += swap.bytes() as u64;
+                    self.swaps.insert(s.req.id, swap);
+                }
+                // swap is an optimization: losing it only costs recompute
+                Err(_) => {}
+            }
+        }
+        self.blocks.free_table(std::mem::take(&mut s.table));
+        self.blocks.release_reservation(s.req.id);
+        s.phase = SlotPhase::Preempted;
+        self.metrics.preemptions += 1;
+        self.events.push(GenerationEvent::Preempted { request: s.req.id });
+        self.preempted.push_back(s);
+    }
+
+    /// Host copy of a victim's first `full` (complete) blocks.
+    fn swap_out(&mut self, s: &Slot, full: usize) -> Result<HostSwap> {
+        let pool = self.pool_kv.as_ref().context("swap-out without kv pool")?;
+        let t0 = Instant::now();
+        let t = pool.to_tensor()?;
+        let data = t.as_f32()?;
+        let cfg = self.engine.config();
+        let row = cfg.n_kv_heads * self.blocks.block_size() * cfg.d_head;
+        let pool_blocks = self.blocks.total_blocks();
+        let blocks = s.table.blocks[..full]
+            .iter()
+            .map(|&b| overload::read_block(data, cfg.n_layers, pool_blocks, row, b as usize))
+            .collect();
+        self.note_surgery(t0);
+        Ok(HostSwap { blocks })
+    }
+
+    /// Write a swap's saved blocks back into `table`'s freshly-allocated
+    /// private blocks, starting at block index `start` (earlier blocks
+    /// came back through the prefix cache). Returns the number of token
+    /// positions the restore covers.
+    fn swap_in(&mut self, swap: &HostSwap, table: &BlockTable, start: usize) -> Result<usize> {
+        let full = swap.blocks.len().min(table.blocks.len());
+        if start >= full {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let pool = self.pool_kv.take().context("swap-in without kv pool")?;
+        let mut t = pool.to_tensor()?;
+        let bs = self.blocks.block_size();
+        let pool_blocks = self.blocks.total_blocks();
+        let (layers, row) = {
+            let cfg = self.engine.config();
+            (cfg.n_layers, cfg.n_kv_heads * bs * cfg.d_head)
+        };
+        {
+            let data = t.as_f32_mut()?;
+            for bi in start..full {
+                overload::write_block(
+                    data,
+                    layers,
+                    pool_blocks,
+                    row,
+                    table.blocks[bi] as usize,
+                    &swap.blocks[bi],
+                );
+                self.metrics.swap_in_bytes += (swap.blocks[bi].len() * 4) as u64;
+            }
+        }
+        self.pool_kv = Some(PagedKv::from_tensor(&t, pool_blocks, bs)?);
+        self.note_surgery(t0);
+        Ok(full * bs)
+    }
+
+    /// Try to resume the highest-ranked preempted request into
+    /// `slot_idx`. Returns false — leaving the queue untouched — when
+    /// the pool cannot host it yet; a resume never preempts. The
+    /// rebuilt KV comes from three sources in preference order: prefix
+    /// cache hits, the host swap, recompute chunks.
+    fn try_resume(&mut self, slot_idx: usize) -> Result<bool> {
+        let ov = self.cfg.overload;
+        let bs = self.blocks.block_size();
+        let limit = self.max_prompt_len().max(1);
+        let usable = self.blocks.total_blocks().saturating_sub(1);
+        let (demand, virt) = {
+            let Some(s) = self.preempted.front() else { return Ok(false) };
+            let demand = overload::predicted_blocks(
+                s.req.prompt_ids.len(),
+                s.req.params.max_new_tokens,
+                bs,
+                limit,
+            )
+            .min(usable);
+            let mut virt = s.stream();
+            virt.truncate(s.virtual_len());
+            (demand, virt)
+        };
+        if ov.admission && demand > self.blocks.available_unreserved() {
+            return Ok(false);
+        }
+        // cached is a whole-block count and a resume samples nothing, so
+        // there is no last-token cap and no boundary COW: every
+        // recompute/restore write lands in the freshly-allocated tail
+        let Some((mut table, cached)) = self.blocks.alloc_prompt(&virt)? else {
+            return Ok(false);
+        };
+        let mut s = self.preempted.pop_front().unwrap();
+        let id = s.req.id;
+        let mut next_pos = cached;
+        if let Some(swap) = self.swaps.remove(&id) {
+            let restored = self.swap_in(&swap, &table, cached / bs)?;
+            if restored > next_pos {
+                next_pos = restored;
+                if self.cfg.prefix_cache {
+                    self.blocks.publish_full_blocks(&mut table, &virt[..next_pos]);
                 }
             }
         }
+        self.metrics.prefix_tokens_skipped += cached as u64;
+        s.table = table;
+        if next_pos >= virt.len() {
+            // everything came back without a single recompute chunk
+            s.phase = SlotPhase::Running;
+            s.last_token_at = Instant::now();
+            self.metrics.resumes += 1;
+        } else {
+            s.phase = SlotPhase::Resuming { next_pos };
+        }
+        if ov.admission {
+            let held = s.table.blocks.len();
+            self.blocks.set_reservation(id, demand.saturating_sub(held));
+        }
+        self.slots[slot_idx] = Some(s);
+        Ok(true)
     }
 
     fn note_surgery(&mut self, t0: Instant) {
@@ -1066,7 +1538,8 @@ impl<E: StepEngine> Scheduler<E> {
                         lengths[i] = s.len as i32;
                         active[i] = true;
                     }
-                    SlotPhase::Prefilling { next_pos } => {
+                    SlotPhase::Prefilling { next_pos }
+                    | SlotPhase::Resuming { next_pos } => {
                         // a decode entry writes this step's K/V at
                         // lengths-1 for every slot; aim the write at the
                         // slot's next chunk position — inside its own
@@ -1075,6 +1548,7 @@ impl<E: StepEngine> Scheduler<E> {
                         // stays untouched
                         lengths[i] = (next_pos + 1) as i32;
                     }
+                    SlotPhase::Preempted => {}
                 }
             }
         }

@@ -35,7 +35,11 @@ commands:
              prompt length (BENCH_prefill.json), or
              `bench kv-paging [--smoke]` for the paged KV cache: prefill
              tokens saved by cross-request prefix caching and re-bucket
-             bytes vs the contiguous baseline (BENCH_kv.json)
+             bytes vs the contiguous baseline (BENCH_kv.json), or
+             `bench overload [--smoke]` for SLO-aware overload control:
+             goodput of preemption+admission vs reject-only across
+             bursty / heavy-tail / two-tenant / chat-session workloads
+             (BENCH_overload.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -64,6 +68,9 @@ fn main() {
         }
         "bench" if rest.first().map(|s| s.as_str()) == Some("kv-paging") => {
             bench::kv_paging::run(&rest[1..])
+        }
+        "bench" if rest.first().map(|s| s.as_str()) == Some("overload") => {
+            bench::overload::run(&rest[1..])
         }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {
@@ -189,6 +196,9 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
                     }
                     GenerationEvent::Token { request, id, index, .. } => {
                         println!("[{request}] token {index}: {:?}", tok.decode(&[id]));
+                    }
+                    GenerationEvent::Preempted { request } => {
+                        println!("[{request}] preempted (resumes when blocks free)");
                     }
                     GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => {
                         print_completion(&tok, &c);

@@ -29,7 +29,16 @@
 //! structured {"error": ..., "id": ...} line and never reach the
 //! scheduler; prompts longer than the largest seq bucket are rejected
 //! with {"error": "prompt_too_long", "limit": ..., "prompt_len": ...}
-//! instead of being truncated.
+//! instead of being truncated, and a request whose deadline has already
+//! passed at admission gets {"error": "deadline_expired", "id": ...}
+//! without burning a batch slot.
+//!
+//! Overload control (see PROTOCOL.md "Overload"): streaming requests may
+//! see a non-terminal {"event": "preempted"} line when the scheduler
+//! frees their KV blocks for a higher-priority arrival — the token
+//! stream resumes later exactly where it left off. `stats` replies carry
+//! an "overload" object (policy, preemptions, resumes, swap bytes,
+//! admission rejections, goodput).
 //!
 //! Architecture: the acceptor spawns a reader thread per connection; a
 //! dedicated writer thread per connection serialises all reply lines
@@ -173,6 +182,17 @@ where
                             err.set("limit", limit.into());
                             err.set("prompt_len", request.prompt_ids.len().into());
                             let _ = sink.send(err);
+                        } else if request
+                            .deadline
+                            .is_some_and(|d| request.enqueued_at.elapsed() >= d)
+                        {
+                            // SLO already blown before admission: shed it
+                            // here — zero scheduler work, zero KV blocks
+                            sched.metrics.admission_rejections += 1;
+                            let _ = sink.send(error_json(
+                                "deadline_expired",
+                                (request.id as usize).into(),
+                            ));
                         } else {
                             sinks.insert(request.id, ReqSink { tx: sink, stream, alive });
                             sched.enqueue(request);
@@ -198,6 +218,7 @@ where
                         stats.set("sparsity", sched.sparsity().stats.to_json());
                         stats.set("prefill", sched.prefill_stats());
                         stats.set("kv", sched.kv_stats());
+                        stats.set("overload", sched.overload_stats());
                         let _ = sink.send(Json::obj(vec![
                             ("ok", true.into()),
                             ("stats", stats),
@@ -295,6 +316,11 @@ fn route_event(
         }
         GenerationEvent::Prefilled { request } if sink.stream => {
             Some(lifecycle_json(request, "prefilled"))
+        }
+        // non-terminal: the stream resumes after the scheduler re-admits
+        // the request (summary-only clients never see it)
+        GenerationEvent::Preempted { request } if sink.stream => {
+            Some(lifecycle_json(request, "preempted"))
         }
         GenerationEvent::Token { request, id, index, text_offset } if sink.stream => {
             Some(Json::obj(vec![

@@ -1,8 +1,11 @@
 //! Synthetic serving workloads: request generators (Poisson arrivals,
-//! prompt-length distributions), the zero-shot task suite reader
-//! (artifacts/eval_tasks.jsonl, written by python/compile/corpus.py), and
-//! trace record/replay.
+//! prompt-length distributions), the overload scenario suite
+//! ([`scenarios`]: bursty Poisson, heavy-tail prompts, two-tenant
+//! priority mixes, chat sessions re-hitting the prefix cache), the
+//! zero-shot task suite reader (artifacts/eval_tasks.jsonl, written by
+//! python/compile/corpus.py), and trace record/replay.
 
+pub mod scenarios;
 pub mod tasks;
 pub mod trace;
 

@@ -1,0 +1,237 @@
+//! Overload scenario suite: deterministic multi-tenant workloads for the
+//! SLO-aware overload controller (`coordinator::overload`). Each
+//! generator maps a seed to the exact same request sequence — prompts
+//! are synthetic token ids (no tokenizer), so the traces replay
+//! byte-for-byte against the mock engine in tests and `bench overload`.
+//!
+//! Four shapes, matching the conditions the admission/preemption policy
+//! has to survive:
+//!
+//! - [`bursty`]: Poisson bursts separated by quiet gaps — arrival-rate
+//!   spikes that overcommit the KV block pool.
+//! - [`heavy_tail`]: mostly short prompts with a heavy tail of long
+//!   ones — a single long request can hold blocks hostage.
+//! - [`two_tenant`]: an interactive tenant (high priority, tight
+//!   deadlines) sharing the pool with a batch tenant (low priority,
+//!   no deadlines) — the preemption rank order is what keeps the
+//!   interactive SLO.
+//! - [`chat_sessions`]: multi-turn sessions re-sending a shared
+//!   session prefix — resume-after-preemption and admission both lean
+//!   on the prefix cache.
+
+use std::time::Duration;
+
+use crate::coordinator::{Request, SamplingParams};
+use crate::substrate::rng::Rng;
+
+use super::TimedRequest;
+
+/// Knobs shared by every scenario generator.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub n_requests: usize,
+    pub seed: u64,
+    pub max_new_tokens: usize,
+    /// Deadline applied to deadline-carrying requests (ms); 0 = none.
+    pub deadline_ms: f64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig { n_requests: 48, seed: 0, max_new_tokens: 8, deadline_ms: 0.0 }
+    }
+}
+
+/// Synthetic prompt: ids in [20, 220) so the mock's +1 chain never
+/// trips the byte-range newline stop within a scenario's budget.
+fn prompt_ids(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| (20 + rng.below(200)) as i32).collect()
+}
+
+fn build(
+    id: u64,
+    at_s: f64,
+    ids: Vec<i32>,
+    priority: i32,
+    deadline_ms: f64,
+    max_new: usize,
+) -> TimedRequest {
+    let mut b = Request::builder(ids)
+        .id(id)
+        .params(SamplingParams { max_new_tokens: max_new, ..Default::default() })
+        .priority(priority);
+    if deadline_ms > 0.0 {
+        b = b.deadline(Duration::from_secs_f64(deadline_ms / 1e3));
+    }
+    TimedRequest { at_s, request: b.build() }
+}
+
+/// Poisson bursts: groups of near-simultaneous arrivals (intra-burst
+/// rate 400/s) separated by 80 ms quiet gaps. Every burst overcommits
+/// a small block pool on its own.
+pub fn bursty(cfg: &ScenarioConfig) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let burst = (cfg.n_requests / 4).max(4);
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            if i > 0 {
+                t += if i % burst == 0 { 0.08 } else { rng.exponential(400.0) };
+            }
+            let len = rng.range(40, 57);
+            let ids = prompt_ids(&mut rng, len);
+            build(i as u64, t, ids, 0, cfg.deadline_ms, cfg.max_new_tokens)
+        })
+        .collect()
+}
+
+/// Heavy-tailed prompt lengths: ~7/8 short (8..=16 ids), ~1/8 long
+/// (48..=56 ids), steady Poisson arrivals at 150/s. The long requests
+/// pin several blocks each and become the natural preemption victims.
+pub fn heavy_tail(cfg: &ScenarioConfig) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            if i > 0 {
+                t += rng.exponential(150.0);
+            }
+            let len = if rng.below(8) == 0 { rng.range(48, 57) } else { rng.range(8, 17) };
+            let ids = prompt_ids(&mut rng, len);
+            build(i as u64, t, ids, 0, cfg.deadline_ms, cfg.max_new_tokens)
+        })
+        .collect()
+}
+
+/// Two tenants sharing the pool: even ids are the interactive tenant
+/// (priority 5, deadline `cfg.deadline_ms`, short prompts), odd ids the
+/// batch tenant (priority 0, no deadline, long prompts and a 3x token
+/// budget — batch jobs hold their blocks long enough that the
+/// interactive tenant's rank has to preempt them). Arrivals interleave
+/// at 120/s.
+pub fn two_tenant(cfg: &ScenarioConfig) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    (0..cfg.n_requests)
+        .map(|i| {
+            if i > 0 {
+                t += rng.exponential(120.0);
+            }
+            let interactive = i % 2 == 0;
+            let len = if interactive { rng.range(10, 25) } else { rng.range(40, 57) };
+            let ids = prompt_ids(&mut rng, len);
+            let (prio, dl, max_new) = if interactive {
+                (5, cfg.deadline_ms, cfg.max_new_tokens)
+            } else {
+                (0, 0.0, cfg.max_new_tokens * 3)
+            };
+            build(i as u64, t, ids, prio, dl, max_new)
+        })
+        .collect()
+}
+
+/// Multi-turn chat sessions: `n_requests / 4` sessions, each re-sending
+/// a fixed 32-id session prefix (two full 16-token blocks) plus a
+/// per-turn suffix, turns spaced 30 ms apart. Later turns of a session
+/// re-hit the prefix cache — both at first admission and on
+/// resume-after-preemption.
+pub fn chat_sessions(cfg: &ScenarioConfig) -> Vec<TimedRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let sessions = (cfg.n_requests / 4).max(1);
+    let prefixes: Vec<Vec<i32>> =
+        (0..sessions).map(|_| prompt_ids(&mut rng, 32)).collect();
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for i in 0..cfg.n_requests {
+        let session = i % sessions;
+        let turn = i / sessions;
+        let mut ids = prefixes[session].clone();
+        ids.extend(prompt_ids(&mut rng, 4 + rng.below(8)));
+        let t = turn as f64 * 0.03 + session as f64 * 0.002;
+        out.push(build(i as u64, t, ids, 0, cfg.deadline_ms, cfg.max_new_tokens));
+    }
+    out.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_deterministic(gen: fn(&ScenarioConfig) -> Vec<TimedRequest>) {
+        let cfg = ScenarioConfig { n_requests: 24, seed: 7, ..Default::default() };
+        let (a, b) = (gen(&cfg), gen(&cfg));
+        assert_eq!(a.len(), 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt_ids, y.request.prompt_ids);
+            assert_eq!(x.request.priority, y.request.priority);
+            assert_eq!(x.request.deadline, y.request.deadline);
+            assert!((x.at_s - y.at_s).abs() < 1e-12);
+        }
+        for pair in a.windows(2) {
+            assert!(pair[1].at_s >= pair[0].at_s, "arrivals must be monotone");
+        }
+    }
+
+    #[test]
+    fn all_scenarios_are_deterministic_with_monotone_arrivals() {
+        assert_deterministic(bursty);
+        assert_deterministic(heavy_tail);
+        assert_deterministic(two_tenant);
+        assert_deterministic(chat_sessions);
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_into_bursts() {
+        let w = bursty(&ScenarioConfig { n_requests: 24, ..Default::default() });
+        // 4 bursts of 6: exactly 3 inter-burst gaps of >= 80 ms
+        let gaps = w
+            .windows(2)
+            .filter(|p| p[1].at_s - p[0].at_s >= 0.08)
+            .count();
+        assert_eq!(gaps, 3, "arrivals: {:?}", w.iter().map(|r| r.at_s).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn heavy_tail_mixes_short_and_long_prompts() {
+        let w = heavy_tail(&ScenarioConfig { n_requests: 64, ..Default::default() });
+        let long = w.iter().filter(|r| r.request.prompt_ids.len() >= 48).count();
+        let short = w.iter().filter(|r| r.request.prompt_ids.len() <= 16).count();
+        assert!(long >= 2, "expected a long tail, got {long}");
+        assert!(short > w.len() / 2, "body should be short prompts, got {short}");
+    }
+
+    #[test]
+    fn two_tenant_splits_priority_and_deadlines() {
+        let cfg = ScenarioConfig { n_requests: 20, deadline_ms: 250.0, ..Default::default() };
+        let w = two_tenant(&cfg);
+        for r in &w {
+            let interactive = r.request.id % 2 == 0;
+            assert_eq!(r.request.priority, if interactive { 5 } else { 0 });
+            assert_eq!(r.request.deadline.is_some(), interactive);
+        }
+    }
+
+    #[test]
+    fn chat_sessions_share_block_aligned_prefixes() {
+        let w = chat_sessions(&ScenarioConfig { n_requests: 16, ..Default::default() });
+        // 4 sessions x 4 turns: every turn of a session starts with the
+        // same 32-id prefix, and distinct sessions have distinct prefixes
+        let mut by_session: std::collections::BTreeMap<u64, Vec<&[i32]>> = Default::default();
+        for r in &w {
+            by_session
+                .entry(r.request.id % 4)
+                .or_default()
+                .push(&r.request.prompt_ids[..32]);
+        }
+        assert_eq!(by_session.len(), 4);
+        let mut firsts = Vec::new();
+        for (_, prefixes) in &by_session {
+            assert_eq!(prefixes.len(), 4);
+            assert!(prefixes.iter().all(|p| p == &prefixes[0]));
+            firsts.push(prefixes[0]);
+        }
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 4, "sessions must not share prefixes");
+    }
+}

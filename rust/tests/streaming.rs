@@ -345,14 +345,104 @@ fn stop_sequences_and_deadline_ride_the_wire() {
     let fin = events.last().unwrap();
     assert_eq!(fin.get("finish").as_str(), Some("stop_sequence"));
     assert_eq!(fin.get("text").as_str(), Some("BCD"));
-    // an already-expired deadline finishes with "deadline" and no tokens
+    // an already-expired deadline never reaches the scheduler: it is
+    // shed at admission with a structured error line
     let events: Vec<Json> = c
         .stream_with("A", 50, vec![("deadline_ms", 0.0.into())])
         .unwrap()
         .collect::<anyhow::Result<Vec<_>>>()
         .unwrap();
+    assert_eq!(events.len(), 1, "expected only the rejection line: {events:?}");
+    assert_eq!(events[0].get("error").as_str(), Some("deadline_expired"));
+    assert!(!events[0].get("id").is_null());
+    // negative deadlines clamp to zero and take the same path
+    let events: Vec<Json> = c
+        .stream_with("A", 50, vec![("deadline_ms", (-5.0).into())])
+        .unwrap()
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    assert_eq!(events[0].get("error").as_str(), Some("deadline_expired"));
+    let s = c.stats().unwrap();
+    let ov = s.get("stats").get("overload");
+    assert_eq!(ov.get("admission_rejections").as_usize(), Some(2));
+    shut_down(&addr, h);
+}
+
+/// Tentpole, observed end-to-end over the wire: under KV block
+/// pressure a higher-priority arrival preempts a streaming request,
+/// which sees a non-terminal "preempted" event and then resumes with
+/// its token stream intact (indices contiguous, no re-emission).
+#[test]
+fn preemption_rides_the_wire_and_stream_resumes() {
+    // small pool (8 blocks = 7 usable) so block pressure is reachable:
+    // victim (33 ids + 24 new -> 4 predicted blocks) holds 3 + 1
+    // reserved; the hot request (49 ids + 8 new -> 4 blocks) cannot fit
+    // without preempting.
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        serve_with(
+            "127.0.0.1:0",
+            move |addr| {
+                let _ = tx.send(addr);
+            },
+            move || {
+                Ok(Scheduler::new(
+                    MockEngine::new()
+                        .with_pool_blocks(8)
+                        .with_step_delay(Duration::from_millis(2)),
+                    SparsityController::new(Mode::Dense),
+                    SchedulerConfig { max_batch: 8, ..Default::default() },
+                ))
+            },
+        )
+    });
+    let addr: String = rx.recv().expect("server address");
+    let mut c1 = Client::connect(&addr).unwrap();
+    // 31 chars -> 33 prompt ids; last id 'A' (65) -> tokens 66..=89
+    let mut stream = c1.stream(&"A".repeat(31), 24).unwrap();
+    let mut events: Vec<Json> = Vec::new();
+    while events.iter().filter(|e| e.get("event").as_str() == Some("token")).count() < 3 {
+        events.push(stream.next().expect("stream ended early").unwrap());
+    }
+    // hot tenant on a second connection: priority 5 outranks the victim
+    let mut c2 = Client::connect(&addr).unwrap();
+    let hot: Vec<Json> = c2
+        .stream_with(&"K".repeat(47), 8, vec![("priority", 5.into())])
+        .unwrap()
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    assert_eq!(hot.last().unwrap().get("text").as_str(), Some("LMNOPQRS"));
+    // drain the victim to its terminal line
+    for ev in &mut stream {
+        events.push(ev.unwrap());
+    }
+    let kinds: Vec<&str> = events.iter().map(|e| e.get("event").as_str().unwrap()).collect();
+    assert!(kinds.contains(&"preempted"), "no preempted event: {kinds:?}");
     let fin = events.last().unwrap();
-    assert_eq!(fin.get("finish").as_str(), Some("deadline"));
-    assert_eq!(fin.get("tokens").as_arr().unwrap().len(), 0);
+    assert_eq!(fin.get("event").as_str(), Some("finished"));
+    assert_eq!(fin.get("finish").as_str(), Some("length"));
+    // bit-identical stream across the preemption: 24 tokens, contiguous
+    // indices, the full +1 chain in the summary
+    assert_eq!(fin.get("text").as_str(), Some("BCDEFGHIJKLMNOPQRSTUVWXY"));
+    let indices: Vec<usize> = events
+        .iter()
+        .filter(|e| e.get("event").as_str() == Some("token"))
+        .map(|e| e.get("index").as_usize().unwrap())
+        .collect();
+    assert_eq!(indices, (0..24).collect::<Vec<usize>>());
+    // stats surface the overload counters (and the deprecated always-zero
+    // rebuild counters are gone from the payload)
+    let s = c2.stats().unwrap();
+    let stats = s.get("stats");
+    let ov = stats.get("overload");
+    assert_eq!(ov.get("policy").as_str(), Some("preempt_resume"));
+    assert!(ov.get("preemptions").as_usize().unwrap() >= 1);
+    assert!(ov.get("resumes").as_usize().unwrap() >= 1);
+    assert_eq!(ov.get("preempted_queued").as_usize(), Some(0));
+    assert_eq!(ov.get("deadline_met_tokens").as_usize(), Some(32));
+    assert!(ov.get("goodput_tok_per_s").as_f64().unwrap() > 0.0);
+    assert!(stats.get("kv_rebuilds").is_null());
+    assert!(stats.get("regroups").is_null());
+    assert!(stats.get("slot_copies").is_null());
     shut_down(&addr, h);
 }
