@@ -4,6 +4,7 @@
 
 pub mod accuracy;
 pub mod decode_breakdown;
+pub mod fault_recovery;
 pub mod figures;
 pub mod harness;
 pub mod kv_paging;

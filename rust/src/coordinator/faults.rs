@@ -1,0 +1,349 @@
+//! Deterministic fault injection + the retry policy the scheduler runs
+//! under.
+//!
+//! A production step loop has to survive the engine: transient PJRT
+//! execute errors, one poisoned request that fails every batch it rides
+//! in, non-finite logits, stalls, and pool-allocation failures. None of
+//! these are reproducible on demand from real hardware, so this module
+//! scripts them: a [`FaultScript`] names *which* engine calls (by
+//! ordinal) and *which* requests (by token band — the engine never sees
+//! request ids, but disjoint prompt bands make requests identifiable
+//! from the decode inputs) misbehave, and a [`FaultInjector`] replays
+//! that script from inside the engine hooks ([`MockEngine::with_faults`]
+//! and the real engine's validation bails share the same recovery
+//! contract).
+//!
+//! The contract that makes faults *recoverable*: paged entry calls take
+//! the pool by value, so an `Err` would otherwise lose the only KV
+//! handle. Every injection (and every real-engine validation bail)
+//! stashes the pool first; the scheduler drains it back via
+//! [`StepEngine::recover_kv`](super::scheduler::StepEngine::recover_kv)
+//! before retrying. A fault with no recoverable pool is fatal.
+//!
+//! [`MockEngine::with_faults`]: super::mock::MockEngine::with_faults
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::PagedKv;
+use crate::substrate::sync::lock_clean;
+use crate::tokenizer::PAD;
+
+/// A classified engine failure, surfaced through `anyhow` so the
+/// scheduler can `downcast_ref` it back out of an error chain.
+///
+/// * `transient: true` — worth retrying in place (execute hiccup, stall
+///   converted by the watchdog, allocation race).
+/// * `transient: false` — persistent for this batch composition; retry
+///   is pointless, go straight to blame isolation.
+///
+/// Errors that are *not* a `StepFault` (anything the engine's own
+/// validation produced) get retry-then-bisect treatment too: unknown
+/// failures are assumed transient until retries exhaust, then treated
+/// as request-dependent.
+#[derive(Debug, Clone)]
+pub struct StepFault {
+    pub transient: bool,
+    pub msg: String,
+}
+
+impl StepFault {
+    /// Build a transient fault as an `anyhow::Error`.
+    pub fn transient(msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(StepFault { transient: true, msg: msg.into() })
+    }
+
+    /// Build a persistent (request-dependent) fault as an `anyhow::Error`.
+    pub fn persistent(msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(StepFault { transient: false, msg: msg.into() })
+    }
+
+    /// Classify an error chain: `Some(true)` transient, `Some(false)`
+    /// persistent, `None` unclassified (not injected/classified by the
+    /// engine).
+    pub fn classify(err: &anyhow::Error) -> Option<bool> {
+        err.downcast_ref::<StepFault>().map(|f| f.transient)
+    }
+}
+
+impl fmt::Display for StepFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} engine fault: {}",
+            if self.transient { "transient" } else { "persistent" },
+            self.msg
+        )
+    }
+}
+
+impl std::error::Error for StepFault {}
+
+/// Bounded-retry policy for engine step calls.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries per engine call before escalating (transient faults) or
+    /// bisecting (persistent/unclassified faults).
+    pub max_retries: u32,
+    /// First backoff sleep, milliseconds.
+    pub backoff_ms: f64,
+    /// Exponential backoff multiplier per attempt.
+    pub multiplier: f64,
+    /// Engine calls slower than this count as stalls in
+    /// `stats.faults.watchdog_stalls` (telemetry — a blocking call
+    /// cannot be aborted, so injected stalls *return* a transient error
+    /// after sleeping and ride the normal retry path).
+    pub watchdog_ms: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff_ms: 2.0,
+            multiplier: 2.0,
+            watchdog_ms: 500.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based): `backoff_ms * multiplier^attempt`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let ms = self.backoff_ms * self.multiplier.powi(attempt as i32);
+        Duration::from_secs_f64(ms.max(0.0) / 1000.0)
+    }
+}
+
+/// A deterministic schedule of engine misbehavior. Call ordinals are
+/// 0-based and counted per entry point at the engine (retries advance
+/// them — the script addresses *calls*, not scheduler steps). Token
+/// bands are inclusive and keyed on the decode inputs, so a script can
+/// target "the request generating in [120, 129]" without the engine
+/// knowing request ids. `PAD` never matches a band, so bisection probes
+/// that mask the poisoned slot out succeed.
+#[derive(Debug, Clone, Default)]
+pub struct FaultScript {
+    /// Decode calls that fail once each with a transient error.
+    pub transient_decode_calls: Vec<u64>,
+    /// Prefill-chunk calls that fail once each with a transient error.
+    pub transient_prefill_calls: Vec<u64>,
+    /// Any decode whose inputs contain a token in this inclusive band
+    /// fails persistently (the poisoned request).
+    pub poison_token_range: Option<(i32, i32)>,
+    /// Logits rows of slots whose input token lands in this inclusive
+    /// band are corrupted to NaN (the quarantine target).
+    pub nan_token_range: Option<(i32, i32)>,
+    /// Decode calls that sleep `stall` and then fail transiently — the
+    /// watchdog-visible stall-turned-retryable-fault.
+    pub stall_decode_calls: Vec<u64>,
+    pub stall: Duration,
+    /// Fail the first `n` pool allocations.
+    pub pool_alloc_failures: u32,
+}
+
+fn in_band(token: i32, band: Option<(i32, i32)>) -> bool {
+    match band {
+        Some((lo, hi)) => token != PAD && token >= lo && token <= hi,
+        None => false,
+    }
+}
+
+/// Replays a [`FaultScript`] from inside an engine's step entry points.
+/// All state is interior (atomic counters + a pool stash) so a shared
+/// reference from inside `&self` engine methods suffices.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    script: FaultScript,
+    decode_calls: AtomicU64,
+    prefill_calls: AtomicU64,
+    pool_calls: AtomicU64,
+    injected: AtomicU64,
+    stash: Mutex<Option<PagedKv>>,
+}
+
+impl FaultInjector {
+    pub fn new(script: FaultScript) -> FaultInjector {
+        FaultInjector { script, ..Default::default() }
+    }
+
+    /// Total faults injected so far (all classes).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Park the pool so the scheduler can recover it after an `Err`.
+    pub fn stash_kv(&self, kv: PagedKv) {
+        *lock_clean(&self.stash) = Some(kv);
+    }
+
+    /// Drain the parked pool (the engine's `recover_kv` hook).
+    pub fn take_stash(&self) -> Option<PagedKv> {
+        lock_clean(&self.stash).take()
+    }
+
+    /// Gate one decode call: returns the pool untouched when this call
+    /// is clean, otherwise stashes it and returns the scripted fault.
+    pub fn check_decode(&self, tokens: &[i32], kv: PagedKv) -> Result<PagedKv> {
+        let call = self.decode_calls.fetch_add(1, Ordering::Relaxed);
+        if self.script.stall_decode_calls.contains(&call) {
+            std::thread::sleep(self.script.stall);
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.stash_kv(kv);
+            return Err(StepFault::transient(format!(
+                "injected stall ({}ms) at decode call {call}",
+                self.script.stall.as_millis()
+            )));
+        }
+        if self.script.transient_decode_calls.contains(&call) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.stash_kv(kv);
+            return Err(StepFault::transient(format!(
+                "injected transient execute error at decode call {call}"
+            )));
+        }
+        if let Some(&bad) = tokens
+            .iter()
+            .find(|&&t| in_band(t, self.script.poison_token_range))
+        {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.stash_kv(kv);
+            return Err(StepFault::persistent(format!(
+                "injected poisoned-request fault (token {bad}) at decode call {call}"
+            )));
+        }
+        Ok(kv)
+    }
+
+    /// Gate one prefill-chunk call (transient-ordinal faults only).
+    pub fn check_prefill(&self, kv: PagedKv) -> Result<PagedKv> {
+        let call = self.prefill_calls.fetch_add(1, Ordering::Relaxed);
+        if self.script.transient_prefill_calls.contains(&call) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.stash_kv(kv);
+            return Err(StepFault::transient(format!(
+                "injected transient execute error at prefill call {call}"
+            )));
+        }
+        Ok(kv)
+    }
+
+    /// Gate one pool allocation (no pool exists yet, so nothing to stash).
+    pub fn check_pool_alloc(&self) -> Result<()> {
+        let call = self.pool_calls.fetch_add(1, Ordering::Relaxed);
+        if call < self.script.pool_alloc_failures as u64 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Err(StepFault::transient(format!(
+                "injected pool-allocation failure {call}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Corrupt the logits rows of every slot whose input token falls in
+    /// the scripted NaN band. `logits` is row-major `[b, vocab]`.
+    pub fn corrupt_logits(&self, tokens: &[i32], logits: &mut [f32], vocab: usize) {
+        if self.script.nan_token_range.is_none() {
+            return;
+        }
+        for (i, &t) in tokens.iter().enumerate() {
+            if in_band(t, self.script.nan_token_range) {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                for v in &mut logits[i * vocab..(i + 1) * vocab] {
+                    *v = f32::NAN;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn tiny_kv() -> PagedKv {
+        PagedKv::from_tensor(&Tensor::zeros_f32(vec![1, 2, 2, 1, 2, 1]), 2, 2)
+            .expect("tiny pool")
+    }
+
+    #[test]
+    fn classify_roundtrip() {
+        let t = StepFault::transient("hiccup");
+        assert_eq!(StepFault::classify(&t), Some(true));
+        let p = StepFault::persistent("poisoned");
+        assert_eq!(StepFault::classify(&p), Some(false));
+        let other = anyhow::anyhow!("engine validation");
+        assert_eq!(StepFault::classify(&other), None);
+        // classification survives an anyhow context chain
+        let wrapped = t.context("decode step 7");
+        assert_eq!(StepFault::classify(&wrapped), Some(true));
+    }
+
+    #[test]
+    fn transient_decode_fails_once_and_stashes() {
+        let inj = FaultInjector::new(FaultScript {
+            transient_decode_calls: vec![1],
+            ..Default::default()
+        });
+        // call 0 clean
+        assert!(inj.check_decode(&[5], tiny_kv()).is_ok());
+        // call 1 faults and parks the pool
+        let err = inj.check_decode(&[5], tiny_kv()).unwrap_err();
+        assert_eq!(StepFault::classify(&err), Some(true));
+        assert!(inj.take_stash().is_some());
+        assert!(inj.take_stash().is_none(), "stash drains");
+        // call 2 clean again — the ordinal advanced past the script
+        assert!(inj.check_decode(&[5], tiny_kv()).is_ok());
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn poison_band_is_persistent_and_ignores_pad() {
+        let inj = FaultInjector::new(FaultScript {
+            poison_token_range: Some((120, 129)),
+            ..Default::default()
+        });
+        let err = inj.check_decode(&[30, 125, 40], tiny_kv()).unwrap_err();
+        assert_eq!(StepFault::classify(&err), Some(false));
+        assert!(inj.take_stash().is_some());
+        // a probe excluding the poisoned slot (PAD in its place) is clean
+        assert!(inj.check_decode(&[30, PAD, 40], tiny_kv()).is_ok());
+    }
+
+    #[test]
+    fn pool_alloc_fails_first_n() {
+        let inj = FaultInjector::new(FaultScript {
+            pool_alloc_failures: 2,
+            ..Default::default()
+        });
+        assert!(inj.check_pool_alloc().is_err());
+        assert!(inj.check_pool_alloc().is_err());
+        assert!(inj.check_pool_alloc().is_ok());
+    }
+
+    #[test]
+    fn nan_band_corrupts_only_matching_rows() {
+        let inj = FaultInjector::new(FaultScript {
+            nan_token_range: Some((50, 59)),
+            ..Default::default()
+        });
+        let mut logits = vec![1.0f32; 3 * 4];
+        inj.corrupt_logits(&[10, 55, 20], &mut logits, 4);
+        assert!(logits[0..4].iter().all(|v| v.is_finite()));
+        assert!(logits[4..8].iter().all(|v| v.is_nan()));
+        assert!(logits[8..12].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let p = RetryPolicy { backoff_ms: 2.0, multiplier: 2.0, ..Default::default() };
+        assert_eq!(p.backoff(0), Duration::from_millis(2));
+        assert_eq!(p.backoff(1), Duration::from_millis(4));
+        assert_eq!(p.backoff(2), Duration::from_millis(8));
+    }
+}

@@ -64,6 +64,24 @@ pub struct EngineMetrics {
     /// cancelled, and rejected requests contribute nothing). The
     /// numerator of `goodput()`.
     pub deadline_met_tokens: u64,
+    // -- fault tolerance (the server's `stats.faults` object) ----------
+    /// Engine calls retried in place after a transient fault.
+    pub transient_retries: u64,
+    /// Total milliseconds slept in retry backoff.
+    pub backoff_ms: f64,
+    /// Blame-isolation searches run (a step kept failing after retries;
+    /// batch halves were probed to pin the poisoned request).
+    pub blame_bisections: u64,
+    /// Requests finished `engine_fault` by blame isolation.
+    pub blamed_requests: u64,
+    /// Slots quarantined by the sampler's non-finite-logits guard.
+    pub quarantined: u64,
+    /// Steps that fell back from the polar plan to the dense entries
+    /// after a fault (the graceful-degradation path; also counted in
+    /// `RoutingStats::fallback_steps`).
+    pub degraded_steps: u64,
+    /// Engine calls slower than the watchdog threshold.
+    pub watchdog_stalls: u64,
     /// Logical seq-bucket growth events. Under paged KV a "promotion" is
     /// a table-width change (different entry next step) — zero cache
     /// bytes move; the counter survives as telemetry of entry switches.
@@ -162,6 +180,19 @@ impl EngineMetrics {
                 (self.deadline_met_tokens as usize).into(),
             ),
             ("goodput_tok_per_s", self.goodput().into()),
+        ])
+    }
+
+    /// The fault-tolerance counters (the server's `stats.faults` object).
+    pub fn faults_json(&self) -> Json {
+        Json::obj(vec![
+            ("transient_retries", (self.transient_retries as usize).into()),
+            ("backoff_ms", self.backoff_ms.into()),
+            ("blame_bisections", (self.blame_bisections as usize).into()),
+            ("blamed_requests", (self.blamed_requests as usize).into()),
+            ("quarantined", (self.quarantined as usize).into()),
+            ("degraded_steps", (self.degraded_steps as usize).into()),
+            ("watchdog_stalls", (self.watchdog_stalls as usize).into()),
         ])
     }
 
@@ -271,6 +302,26 @@ mod tests {
         assert_eq!(j.get("deadline_met_tokens").as_usize(), Some(120));
         assert_eq!(j.get("goodput_tok_per_s").as_f64(), Some(60.0));
         assert!((m.goodput() - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn faults_json_reports_all_counters() {
+        let mut m = EngineMetrics::default();
+        m.transient_retries = 4;
+        m.backoff_ms = 14.0;
+        m.blame_bisections = 1;
+        m.blamed_requests = 1;
+        m.quarantined = 2;
+        m.degraded_steps = 3;
+        m.watchdog_stalls = 1;
+        let j = m.faults_json();
+        assert_eq!(j.get("transient_retries").as_usize(), Some(4));
+        assert_eq!(j.get("backoff_ms").as_f64(), Some(14.0));
+        assert_eq!(j.get("blame_bisections").as_usize(), Some(1));
+        assert_eq!(j.get("blamed_requests").as_usize(), Some(1));
+        assert_eq!(j.get("quarantined").as_usize(), Some(2));
+        assert_eq!(j.get("degraded_steps").as_usize(), Some(3));
+        assert_eq!(j.get("watchdog_stalls").as_usize(), Some(1));
     }
 
     #[test]

@@ -44,7 +44,7 @@
 //! density climbs toward dense) — the paper's central crossover.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -53,8 +53,10 @@ use crate::runtime::{
     copy_pool_blocks, BlockTables, KvCache, KvStore, ModelConfig, PagedKv,
     PagedStepOutput, RouterBank, StepOutput, StepProfile, StepRouting, Tensor,
 };
+use crate::substrate::sync::lock_clean;
 use crate::tokenizer::PAD;
 
+use super::faults::FaultInjector;
 use super::scheduler::StepEngine;
 
 /// Deterministic router bank matching the mock geometry (L=2, d=8, G=2,
@@ -137,6 +139,10 @@ pub struct MockEngine {
     profile: Mutex<StepProfile>,
     /// Decode steps that arrived with (validated) router indices.
     routed_steps: AtomicU64,
+    /// Scripted fault injection (`with_faults`): the paged entry points
+    /// consult it before touching the pool, and NaN corruption runs over
+    /// the finished logits — see [`super::faults`].
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for MockEngine {
@@ -173,7 +179,16 @@ impl MockEngine {
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
             routed_steps: AtomicU64::new(0),
+            faults: None,
         }
+    }
+
+    /// Replay a scripted fault schedule from inside the paged entry
+    /// points (deterministic injection for the fault-tolerance tests
+    /// and `bench fault-recovery`).
+    pub fn with_faults(mut self, inj: Arc<FaultInjector>) -> Self {
+        self.faults = Some(inj);
+        self
     }
 
     /// How many decode steps consumed router indices.
@@ -330,10 +345,10 @@ impl StepEngine for MockEngine {
         self.chunk_len
     }
     fn profile_snapshot(&self) -> StepProfile {
-        *self.profile.lock().unwrap()
+        *lock_clean(&self.profile)
     }
     fn reset_profile(&self) {
-        *self.profile.lock().unwrap() = StepProfile::default();
+        *lock_clean(&self.profile) = StepProfile::default();
     }
     fn prefill_chunk(
         &self,
@@ -390,7 +405,7 @@ impl StepEngine for MockEngine {
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
         let was_resident = kv.is_resident();
         let kv_out = if self.host_kv_path {
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += payload + kv_bytes;
             p.d2h_bytes += logits_bytes + kv_bytes;
             KvCache::from_tensor(&t, b, n)?
@@ -400,13 +415,13 @@ impl StepEngine for MockEngine {
             // group or post-surgery) and then stays put
             let lit = t.to_literal()?;
             let buf = self.client.buffer_from_host_literal(None, &lit)?;
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += payload + if was_resident { 0 } else { kv_bytes };
             p.d2h_bytes += logits_bytes;
             KvCache { store: KvStore::Buf(buf), batch: b, n }
         };
         {
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.prefill_ns += t0.elapsed().as_nanos() as u64;
             p.prefill_chunks += 1;
         }
@@ -479,7 +494,7 @@ impl StepEngine for MockEngine {
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
         let kv_out = if self.host_kv_path {
             // legacy path: cache crosses the boundary both ways each step
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + kv_bytes;
             p.d2h_bytes += logits_bytes + kv_bytes;
             p.decode_steps += 1;
@@ -490,13 +505,13 @@ impl StepEngine for MockEngine {
             let uploaded = if was_resident { 0 } else { kv_bytes };
             let lit = t.to_literal()?;
             let store = KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?);
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + uploaded;
             p.d2h_bytes += logits_bytes;
             p.decode_steps += 1;
             KvCache { store, batch, n }
         };
-        self.profile.lock().unwrap().compute_ns += t0.elapsed().as_nanos() as u64;
+        lock_clean(&self.profile).compute_ns += t0.elapsed().as_nanos() as u64;
         Ok(StepOutput {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
             kv: kv_out,
@@ -509,7 +524,14 @@ impl StepEngine for MockEngine {
         self.paged_layout()
     }
 
+    fn recover_kv(&self) -> Option<PagedKv> {
+        self.faults.as_ref().and_then(|f| f.take_stash())
+    }
+
     fn new_kv_pool(&self) -> Result<PagedKv> {
+        if let Some(f) = &self.faults {
+            f.check_pool_alloc()?;
+        }
         let (bs, p) = self.paged_layout();
         PagedKv::from_tensor(
             &Tensor::zeros_f32(self.cfg.kv_pool_shape(p, bs)),
@@ -533,6 +555,10 @@ impl StepEngine for MockEngine {
         kv: PagedKv,
     ) -> Result<PagedStepOutput> {
         let t0 = Instant::now();
+        let kv = match &self.faults {
+            Some(f) => f.check_prefill(kv)?,
+            None => kv,
+        };
         let b = tables.batch;
         let c = self.chunk_len;
         let bs = kv.block;
@@ -594,20 +620,20 @@ impl StepEngine for MockEngine {
             + tables.flat.len() * 4) as u64;
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
         let kv_out = if self.host_kv_path {
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += payload + pool_bytes;
             p.d2h_bytes += logits_bytes + pool_bytes;
             PagedKv::from_tensor(&t, p_blocks, bs)?
         } else {
             let lit = t.to_literal()?;
             let buf = self.client.buffer_from_host_literal(None, &lit)?;
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += payload + if was_resident { 0 } else { pool_bytes };
             p.d2h_bytes += logits_bytes;
             PagedKv { store: KvStore::Buf(buf), pool_blocks: p_blocks, block: bs }
         };
         {
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.prefill_ns += t0.elapsed().as_nanos() as u64;
             p.prefill_chunks += 1;
         }
@@ -635,6 +661,10 @@ impl StepEngine for MockEngine {
         if !self.step_delay.is_zero() {
             std::thread::sleep(self.step_delay);
         }
+        let kv = match &self.faults {
+            Some(f) => f.check_decode(tokens, kv)?,
+            None => kv,
+        };
         let b = tokens.len();
         if tables.batch != b || lengths.len() != b {
             bail!("mock decode_paged: tables batch {} vs tokens {b}", tables.batch);
@@ -663,6 +693,9 @@ impl StepEngine for MockEngine {
             }
             logits.extend(row);
         }
+        if let Some(f) = &self.faults {
+            f.corrupt_logits(tokens, &mut logits, self.cfg.vocab);
+        }
         let was_resident = kv.is_resident();
         let mut t = kv.to_tensor()?;
         {
@@ -683,7 +716,7 @@ impl StepEngine for MockEngine {
             (tokens.len() * 4 + lengths.len() * 4 + tables.flat.len() * 4) as u64;
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
         let kv_out = if self.host_kv_path {
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + pool_bytes;
             p.d2h_bytes += logits_bytes + pool_bytes;
             p.decode_steps += 1;
@@ -692,13 +725,13 @@ impl StepEngine for MockEngine {
             let uploaded = if was_resident { 0 } else { pool_bytes };
             let lit = t.to_literal()?;
             let store = KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?);
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + uploaded;
             p.d2h_bytes += logits_bytes;
             p.decode_steps += 1;
             PagedKv { store, pool_blocks: p_blocks, block: bs }
         };
-        self.profile.lock().unwrap().compute_ns += t0.elapsed().as_nanos() as u64;
+        lock_clean(&self.profile).compute_ns += t0.elapsed().as_nanos() as u64;
         Ok(PagedStepOutput {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
             kv: kv_out,
@@ -719,7 +752,7 @@ impl StepEngine for MockEngine {
         if was_resident {
             // materialize + lazy re-upload: the next entry call pays the
             // h2d (its `was_resident == false` branch), we pay the d2h
-            self.profile.lock().unwrap().d2h_bytes += (t.len() * 4) as u64;
+            lock_clean(&self.profile).d2h_bytes += (t.len() * 4) as u64;
         }
         PagedKv::from_tensor(&t, p_blocks, bs)
     }

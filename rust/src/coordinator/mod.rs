@@ -9,9 +9,12 @@
 //! paths, the SLO-aware overload controller ([`overload`]: block-demand
 //! admission, preemption with recompute-or-swap resume, deadline-slack
 //! urgency), sparsity controller (dense / DejaVu / Polar), sampler,
-//! metrics, and a deterministic mock engine for tests and offline
-//! protocol work.
+//! metrics, the fault-tolerance layer ([`faults`]: deterministic fault
+//! injection, error classification, retry/backoff policy behind the
+//! scheduler's blame-isolation machinery), and a deterministic mock
+//! engine for tests and offline protocol work.
 
+pub mod faults;
 pub mod kv;
 pub mod metrics;
 pub mod mock;
@@ -22,6 +25,7 @@ pub mod sampler;
 pub mod scheduler;
 pub mod sparsity;
 
+pub use faults::{FaultInjector, FaultScript, RetryPolicy, StepFault};
 pub use overload::{OverloadConfig, PressurePolicy};
 pub use request::{
     Completion, FinishReason, GenerationEvent, Request, RequestBuilder, SamplingParams,
@@ -1250,5 +1254,222 @@ mod scheduler_tests {
         assert_eq!(s.metrics.prefill_chunks, chunks);
         assert_eq!(s.metrics.prefill_steps, psteps);
         s.run_to_completion().unwrap();
+    }
+
+    // ---- fault tolerance: retry, blame isolation, degradation ----
+
+    use std::sync::Arc;
+
+    use super::faults::{FaultInjector, FaultScript, RetryPolicy};
+
+    /// Scheduler over a fault-injecting mock; backoff shortened so retry
+    /// tests stay fast.
+    fn faulty_sched(script: FaultScript) -> (Scheduler<MockEngine>, Arc<FaultInjector>) {
+        faulty_sched_with(script, RetryPolicy { backoff_ms: 0.1, ..Default::default() })
+    }
+
+    fn faulty_sched_with(
+        script: FaultScript,
+        retry: RetryPolicy,
+    ) -> (Scheduler<MockEngine>, Arc<FaultInjector>) {
+        let inj = Arc::new(FaultInjector::new(script));
+        let s = Scheduler::new(
+            MockEngine::new().with_faults(inj.clone()),
+            SparsityController::new(Mode::Polar { density: 0.5 }),
+            SchedulerConfig { max_batch: 8, retry, ..Default::default() },
+        );
+        (s, inj)
+    }
+
+    fn run_events(s: &mut Scheduler<MockEngine>) -> Vec<GenerationEvent> {
+        let mut evs = Vec::new();
+        let mut guard = 0;
+        while !s.is_idle() {
+            evs.extend(s.step().unwrap());
+            guard += 1;
+            assert!(guard < 10_000, "faulted scheduler did not converge");
+        }
+        evs
+    }
+
+    /// Per-request (index, token) stream — the exactly-once currency.
+    fn token_streams(
+        evs: &[GenerationEvent],
+    ) -> std::collections::BTreeMap<u64, Vec<(usize, i32)>> {
+        let mut m = std::collections::BTreeMap::new();
+        for ev in evs {
+            if let GenerationEvent::Token { request, id, index, .. } = ev {
+                m.entry(*request).or_insert_with(Vec::new).push((*index, *id));
+            }
+        }
+        m
+    }
+
+    fn completion_by_id(evs: &[GenerationEvent], id: u64) -> &Completion {
+        evs.iter()
+            .find_map(|e| match e {
+                GenerationEvent::Finished(c) if c.id == id => Some(c),
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("no completion for request {id}"))
+    }
+
+    /// Transient engine faults (decode and prefill) retry under backoff
+    /// and every request's token stream is exactly-once: identical, with
+    /// contiguous indices, to a never-faulting run of the same workload.
+    #[test]
+    fn transient_faults_retry_with_exactly_once_emission() {
+        let script = FaultScript {
+            transient_decode_calls: vec![1, 3],
+            transient_prefill_calls: vec![0],
+            ..Default::default()
+        };
+        let (mut s, inj) = faulty_sched(script);
+        for i in 0..4 {
+            s.enqueue(req(i, 30 + 10 * i as i32, 6));
+        }
+        let evs = run_events(&mut s);
+        assert!(inj.injected() >= 3, "script never fired");
+        assert!(s.metrics.transient_retries >= 3);
+        assert!(s.metrics.backoff_ms > 0.0);
+        assert_eq!(s.metrics.blame_bisections, 0, "transients must never bisect");
+        assert_eq!(s.metrics.completed_requests, 4);
+
+        let mut b = sched();
+        for i in 0..4 {
+            b.enqueue(req(i, 30 + 10 * i as i32, 6));
+        }
+        let bevs = run_events(&mut b);
+        assert_eq!(
+            token_streams(&evs),
+            token_streams(&bevs),
+            "retry duplicated or lost a token"
+        );
+        assert_eq!(s.kv_blocks_in_use(), 0);
+    }
+
+    /// A persistently-poisoned request is isolated by the bisection
+    /// blame search and finished with `engine_fault`; every other
+    /// request's stream is bit-identical to a fault-free run, and the
+    /// faulting polar step degraded to dense (with `Degraded` events)
+    /// before blame was assigned.
+    #[test]
+    fn poisoned_request_blamed_others_bit_identical() {
+        // request 2's token band [50, 59]: its decode inputs always
+        // fault; bands are disjoint so nobody else ever matches
+        let script =
+            FaultScript { poison_token_range: Some((50, 59)), ..Default::default() };
+        let (mut s, _inj) = faulty_sched(script);
+        for i in 0..4 {
+            s.enqueue(req(i, 30 + 10 * i as i32, 6));
+        }
+        let evs = run_events(&mut s);
+        assert!(s.metrics.blame_bisections >= 1, "no bisection ran");
+        assert_eq!(s.metrics.blamed_requests, 1, "exactly one culprit");
+        assert!(s.metrics.degraded_steps >= 1, "polar step never degraded");
+        assert!(s.sparsity().stats.fallback_steps >= 1);
+        assert!(
+            evs.iter().any(|e| matches!(e, GenerationEvent::Degraded { .. })),
+            "no Degraded event emitted"
+        );
+        let bad = completion_by_id(&evs, 2);
+        assert_eq!(bad.finish, FinishReason::EngineFault);
+        // the first token came from (clean) prefill logits; decode never
+        // produced another
+        assert_eq!(bad.output_ids, vec![51]);
+
+        let mut b = sched();
+        for i in 0..4 {
+            b.enqueue(req(i, 30 + 10 * i as i32, 6));
+        }
+        let bevs = run_events(&mut b);
+        let faulted = token_streams(&evs);
+        let clean = token_streams(&bevs);
+        for id in [0u64, 1, 3] {
+            assert_eq!(
+                faulted.get(&id),
+                clean.get(&id),
+                "survivor {id} diverged from the fault-free run"
+            );
+            assert_eq!(completion_by_id(&evs, id).finish, FinishReason::Length);
+        }
+        // blamed request is not a completion and earns no goodput
+        assert_eq!(s.metrics.completed_requests, 3);
+        assert_eq!(s.metrics.deadline_met_tokens, 18);
+        assert_eq!(s.kv_blocks_in_use(), 0, "blame leaked blocks");
+    }
+
+    /// Non-finite logits quarantine only the offending slot: no token is
+    /// sampled from the garbage row, the slot finishes `engine_fault`,
+    /// and co-resident requests stream on untouched.
+    #[test]
+    fn nan_logits_quarantine_only_offending_slot() {
+        let script =
+            FaultScript { nan_token_range: Some((70, 79)), ..Default::default() };
+        let (mut s, inj) = faulty_sched(script);
+        s.enqueue(req(1, 30, 5));
+        s.enqueue(req(2, 70, 5));
+        let evs = run_events(&mut s);
+        assert!(inj.injected() >= 1, "corruption never fired");
+        assert_eq!(s.metrics.quarantined, 1);
+        assert_eq!(s.metrics.blame_bisections, 0, "NaN is a logits fault, not a step fault");
+        let bad = completion_by_id(&evs, 2);
+        assert_eq!(bad.finish, FinishReason::EngineFault);
+        assert_eq!(bad.output_ids, vec![71], "prefill token only; no decode token");
+        let ok = completion_by_id(&evs, 1);
+        assert_eq!(ok.finish, FinishReason::Length);
+        assert_eq!(ok.output_ids, vec![31, 32, 33, 34, 35]);
+        assert_eq!(s.metrics.completed_requests, 1);
+        assert_eq!(s.kv_blocks_in_use(), 0);
+    }
+
+    /// Transient pool-allocation failures retry inside admission instead
+    /// of failing the step.
+    #[test]
+    fn pool_alloc_failure_retries_and_admits() {
+        let script = FaultScript { pool_alloc_failures: 2, ..Default::default() };
+        let (mut s, _inj) = faulty_sched(script);
+        s.enqueue(req(1, 30, 3));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].output_ids, vec![31, 32, 33]);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert!(s.metrics.transient_retries >= 2);
+    }
+
+    /// An injected stall overruns the watchdog threshold (counted) and
+    /// then recovers through the normal transient-retry path.
+    #[test]
+    fn stalled_step_trips_watchdog_and_recovers() {
+        let script = FaultScript {
+            stall_decode_calls: vec![0],
+            stall: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let (mut s, _inj) = faulty_sched_with(
+            script,
+            RetryPolicy { watchdog_ms: 5.0, backoff_ms: 0.1, ..Default::default() },
+        );
+        s.enqueue(req(1, 30, 4));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done[0].output_ids, vec![31, 32, 33, 34]);
+        assert!(s.metrics.watchdog_stalls >= 1, "stall never tripped the watchdog");
+        assert!(s.metrics.transient_retries >= 1);
+    }
+
+    /// stats.faults carries the counters end-to-end.
+    #[test]
+    fn faults_json_surfaces_injected_run() {
+        let script = FaultScript {
+            transient_decode_calls: vec![0],
+            ..Default::default()
+        };
+        let (mut s, _inj) = faulty_sched(script);
+        s.enqueue(req(1, 30, 3));
+        s.run_to_completion().unwrap();
+        let j = s.metrics.faults_json();
+        assert!(j.get("transient_retries").as_usize().unwrap() >= 1);
+        assert!(j.get("backoff_ms").as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("blame_bisections").as_usize(), Some(0));
+        assert_eq!(j.get("quarantined").as_usize(), Some(0));
     }
 }

@@ -135,6 +135,11 @@ pub enum FinishReason {
     /// (`PressurePolicy::Reject`): predicted KV demand did not fit the
     /// unreserved free pool and preemption could not make room.
     Rejected,
+    /// The engine persistently failed on this request (blame isolation
+    /// pinned it) or its logits went non-finite (sampler quarantine).
+    /// Partial output is preserved; every co-batched request keeps
+    /// streaming.
+    EngineFault,
 }
 
 impl FinishReason {
@@ -149,6 +154,7 @@ impl FinishReason {
             FinishReason::Deadline => "deadline",
             FinishReason::PromptTooLong => "prompt_too_long",
             FinishReason::Rejected => "rejected",
+            FinishReason::EngineFault => "engine_fault",
         }
     }
 }
@@ -194,6 +200,10 @@ pub enum GenerationEvent {
     /// it re-entered the queue. Not terminal — the request resumes later
     /// and its token stream continues where it left off.
     Preempted { request: u64 },
+    /// This step ran on the dense fallback entries because the polar
+    /// path faulted (graceful degradation). Not terminal — tokens keep
+    /// flowing, at dense cost.
+    Degraded { request: u64 },
     /// Terminal: the request ran to a natural finish (or its deadline).
     Finished(Completion),
     /// Terminal: the request was cancelled; partial output inside.
@@ -206,6 +216,7 @@ impl GenerationEvent {
             GenerationEvent::Queued { request }
             | GenerationEvent::Prefilled { request }
             | GenerationEvent::Preempted { request }
+            | GenerationEvent::Degraded { request }
             | GenerationEvent::Token { request, .. } => *request,
             GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => c.id,
         }
@@ -280,12 +291,21 @@ mod tests {
         assert_eq!(FinishReason::Deadline.as_str(), "deadline");
         assert_eq!(FinishReason::PromptTooLong.as_str(), "prompt_too_long");
         assert_eq!(FinishReason::Rejected.as_str(), "rejected");
+        assert_eq!(FinishReason::EngineFault.as_str(), "engine_fault");
     }
 
     #[test]
     fn preempted_event_is_not_terminal() {
         let ev = GenerationEvent::Preempted { request: 4 };
         assert_eq!(ev.request_id(), 4);
+        assert!(!ev.is_terminal());
+        assert!(ev.completion().is_none());
+    }
+
+    #[test]
+    fn degraded_event_is_not_terminal() {
+        let ev = GenerationEvent::Degraded { request: 6 };
+        assert_eq!(ev.request_id(), 6);
         assert!(!ev.is_terminal());
         assert!(ev.completion().is_none());
     }

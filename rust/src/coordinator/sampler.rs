@@ -4,6 +4,15 @@ use crate::substrate::rng::{argmax, Rng};
 
 use super::request::SamplingParams;
 
+/// True when every logit in the row is finite. The scheduler guards
+/// every sampling site with this: a non-finite row (engine fault, bad
+/// entry state) quarantines only the offending slot with
+/// `FinishReason::EngineFault` instead of sampling garbage — or
+/// panicking inside a comparator — and taking the batch down.
+pub fn logits_finite(row: &[f32]) -> bool {
+    row.iter().all(|v| v.is_finite())
+}
+
 /// Per-request sampler state (owns the request's RNG stream).
 #[derive(Debug, Clone)]
 pub struct Sampler {
@@ -31,7 +40,9 @@ impl Sampler {
         if self.params.top_k > 0 && self.params.top_k < logits.len() {
             // mask everything below the k-th largest logit
             let mut sorted: Vec<f32> = logits.to_vec();
-            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): a NaN that slips
+            // past the guard must not panic the engine thread
+            sorted.sort_by(|a, b| b.total_cmp(a));
             let kth = sorted[self.params.top_k - 1];
             let masked: Vec<f32> = logits
                 .iter()
@@ -53,6 +64,24 @@ mod tests {
     fn greedy_is_argmax() {
         let mut s = Sampler::new(SamplingParams::default(), 1);
         assert_eq!(s.sample(&[0.0, 3.0, 1.0]), 1);
+    }
+
+    #[test]
+    fn finite_guard_flags_bad_rows() {
+        assert!(logits_finite(&[0.0, 3.0, -1.0]));
+        assert!(!logits_finite(&[0.0, f32::NAN, 1.0]));
+        assert!(!logits_finite(&[f32::INFINITY, 0.0]));
+        assert!(!logits_finite(&[f32::NEG_INFINITY]));
+    }
+
+    #[test]
+    fn topk_sort_survives_nan() {
+        // a NaN row must not panic the sampler even if the guard is
+        // bypassed; any in-vocab token is acceptable
+        let p = SamplingParams { temperature: 1.0, top_k: 2, ..Default::default() };
+        let mut s = Sampler::new(p, 3);
+        let t = s.sample(&[0.1, f32::NAN, 0.3, 0.2]);
+        assert!((0..4).contains(&t));
     }
 
     #[test]

@@ -55,11 +55,29 @@
 //! to host memory and restored instead. A resumed request's token stream
 //! is bit-identical to an uninterrupted run (the sampler object and all
 //! generated tokens survive preemption; only KV is rebuilt).
+//!
+//! **Fault tolerance** ([`faults`](super::faults)): engine step calls
+//! run under a bounded-retry policy. A failed call first recovers the
+//! KV pool ([`StepEngine::recover_kv`] — a fault that loses the pool is
+//! fatal), then: transient faults retry with exponential backoff; a
+//! persistent fault on a routed (polar/dejavu) step *degrades* it to
+//! the dense fallback entries once; a fault that survives degradation
+//! triggers a **bisection blame search** that probes batch halves
+//! (masked to PAD tokens +
+//! null-block table rows) to pin the poisoned request, finishes it with
+//! `FinishReason::EngineFault`, and re-runs the step for the survivors
+//! — whose token streams stay bit-identical to a fault-free run
+//! because probes never touch sampler state and only the final
+//! successful call's logits are consumed. Non-finite logits rows
+//! quarantine just their slot at the sampling sites. Counters land in
+//! `stats.faults` (PROTOCOL.md).
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::runtime::{
     BlockTables, KvCache, ModelConfig, PagedKv, PagedStepOutput, StepOutput, StepProfile,
@@ -68,13 +86,14 @@ use crate::runtime::{
 use crate::substrate::json::Json;
 use crate::tokenizer::{token_byte_len, PAD};
 
+use super::faults::{RetryPolicy, StepFault};
 use super::kv::{self, BlockTable, MakePrivate};
 use super::metrics::EngineMetrics;
 use super::overload::{self, HostSwap, OverloadConfig, PressurePolicy, Rank};
 use super::planner::{self, PrefillJob};
 use super::request::{Completion, FinishReason, GenerationEvent, Request};
-use super::sampler::Sampler;
-use super::sparsity::SparsityController;
+use super::sampler::{logits_finite, Sampler};
+use super::sparsity::{SparsityController, StepPlan};
 
 /// What the scheduler needs from an engine (the real PJRT engine or a
 /// mock). The serving hot path is the paged family; the contiguous
@@ -145,6 +164,15 @@ pub trait StepEngine {
         StepProfile::default()
     }
     fn reset_profile(&self) {}
+    /// Reclaim the KV pool after a failed paged call. The paged entry
+    /// points consume the pool by value; an engine that can survive the
+    /// fault parks the pool before returning the error and hands it
+    /// back here so the scheduler can retry. `None` means the pool is
+    /// gone with the failure — the fault is unrecoverable and the
+    /// scheduler must propagate it.
+    fn recover_kv(&self) -> Option<PagedKv> {
+        None
+    }
 }
 
 impl StepEngine for crate::runtime::Engine {
@@ -214,6 +242,9 @@ impl StepEngine for crate::runtime::Engine {
     }
     fn reset_profile(&self) {
         self.exec.reset_profile()
+    }
+    fn recover_kv(&self) -> Option<PagedKv> {
+        crate::runtime::Engine::recover_kv(self)
     }
 }
 
@@ -317,6 +348,9 @@ pub struct SchedulerConfig {
     /// Overload control: block-demand admission, pressure policy,
     /// preemption, host swap (see [`overload`]).
     pub overload: OverloadConfig,
+    /// Fault tolerance: transient-retry budget, backoff curve, and the
+    /// step watchdog threshold (see [`faults`](super::faults)).
+    pub retry: RetryPolicy,
 }
 
 impl Default for SchedulerConfig {
@@ -327,6 +361,7 @@ impl Default for SchedulerConfig {
             prefill_chunk_tokens: 0,
             prefix_cache: true,
             overload: OverloadConfig::default(),
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -368,7 +403,8 @@ impl<E: StepEngine> Scheduler<E> {
             "seq buckets {:?} not divisible by kv block {block}",
             engine.seq_buckets()
         );
-        let blocks = kv::BlockPool::new(pool_blocks, block).expect("kv pool geometry");
+        let blocks = kv::BlockPool::new(pool_blocks, block)
+            .unwrap_or_else(|e| panic!("kv pool geometry: {e:#}"));
         Scheduler {
             engine,
             ctl,
@@ -560,14 +596,22 @@ impl<E: StepEngine> Scheduler<E> {
     /// finished-but-unreaped slots, whose natural `Finished` event is
     /// already owed and must not be rewritten as a cancellation).
     pub fn cancel(&mut self, id: u64) -> bool {
-        if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
-            let r = self.pending.remove(pos).unwrap();
+        if let Some(r) = self
+            .pending
+            .iter()
+            .position(|r| r.id == id)
+            .and_then(|pos| self.pending.remove(pos))
+        {
             self.finish_unstarted(r, FinishReason::Cancelled);
             return true;
         }
         // preempted requests hold no slot or blocks, only queue state
-        if let Some(pos) = self.preempted.iter().position(|s| s.req.id == id) {
-            let s = self.preempted.remove(pos).unwrap();
+        if let Some(s) = self
+            .preempted
+            .iter()
+            .position(|s| s.req.id == id)
+            .and_then(|pos| self.preempted.remove(pos))
+        {
             self.swaps.remove(&id);
             self.metrics.cancelled_requests += 1;
             let c = Self::completion_of(&mut self.metrics, s, FinishReason::Cancelled);
@@ -577,8 +621,7 @@ impl<E: StepEngine> Scheduler<E> {
         let found = self.slots.iter().position(|s| {
             s.as_ref().map_or(false, |s| s.req.id == id && s.finished.is_none())
         });
-        if let Some(i) = found {
-            let mut s = self.slots[i].take().unwrap();
+        if let Some(mut s) = found.and_then(|i| self.slots[i].take()) {
             self.blocks.free_table(std::mem::take(&mut s.table));
             self.blocks.release_reservation(id);
             self.swaps.remove(&id);
@@ -597,7 +640,8 @@ impl<E: StepEngine> Scheduler<E> {
             .iter()
             .copied()
             .find(|&b| b >= capped)
-            .unwrap_or_else(|| *self.engine.batch_buckets().last().unwrap())
+            .or_else(|| self.engine.batch_buckets().last().copied())
+            .unwrap_or(1)
     }
 
     fn seq_bucket_for(&self, need: usize) -> Result<usize> {
@@ -763,7 +807,7 @@ impl<E: StepEngine> Scheduler<E> {
         for i in 0..self.slots.len() {
             let fin = self.slots[i].as_ref().and_then(|s| s.finished);
             if let Some(reason) = fin {
-                let mut s = self.slots[i].take().unwrap();
+                let Some(mut s) = self.slots[i].take() else { continue };
                 // KV blocks return to the pool at the terminal event;
                 // published blocks stay in the prefix cache for future
                 // requests sharing the prefix
@@ -772,6 +816,10 @@ impl<E: StepEngine> Scheduler<E> {
                 self.swaps.remove(&s.req.id);
                 if reason == FinishReason::Deadline {
                     self.metrics.deadline_expired += 1;
+                } else if reason == FinishReason::EngineFault {
+                    // a blamed or quarantined request is not a
+                    // completion and earns no goodput; its counters
+                    // live in stats.faults
                 } else {
                     self.metrics.completed_requests += 1;
                     // goodput: tokens delivered within the SLO (natural
@@ -863,7 +911,7 @@ impl<E: StepEngine> Scheduler<E> {
         // lifetime (its prefix cache outlives every request)
         if self.pool_kv.is_none() {
             let t0 = Instant::now();
-            self.pool_kv = Some(self.engine.new_kv_pool()?);
+            self.pool_kv = Some(self.new_pool_with_retry()?);
             self.note_surgery(t0);
         }
 
@@ -1064,6 +1112,25 @@ impl<E: StepEngine> Scheduler<E> {
         BlockTables::new(flat, b, width)
     }
 
+    /// Like [`tables_at`](Self::tables_at), but slots with
+    /// `include[i] == false` get an all-null row: the blame search masks
+    /// suspects out of a probe by aiming their blind per-step K/V write
+    /// at the reserved null block, so a probe can never corrupt a
+    /// surviving request's cache.
+    fn tables_masked(&self, width: usize, include: &[bool]) -> Result<BlockTables> {
+        let b = self.capacity();
+        let mut flat = Vec::with_capacity(b * width);
+        for (i, slot) in self.slots.iter().enumerate() {
+            match slot {
+                Some(s) if include.get(i).copied().unwrap_or(false) => {
+                    flat.extend(s.table.row(width))
+                }
+                _ => flat.extend(std::iter::repeat(0).take(width)),
+            }
+        }
+        BlockTables::new(flat, b, width)
+    }
+
     /// Spend this step's token budget on prefill chunks (planner order:
     /// oldest admitted first), skipping each slot's cached prefix. Slots
     /// whose final chunk lands here sample their first token from the
@@ -1136,7 +1203,7 @@ impl<E: StepEngine> Scheduler<E> {
             let mut lens = vec![0i32; b];
             let mut offs = vec![0i32; b];
             for a in &call {
-                let s = self.slots[a.slot].as_ref().unwrap();
+                let Some(s) = self.slots[a.slot].as_ref() else { continue };
                 if matches!(s.phase, SlotPhase::Resuming { .. }) {
                     let stream = s.stream();
                     toks[a.slot * chunk..a.slot * chunk + a.len]
@@ -1148,16 +1215,36 @@ impl<E: StepEngine> Scheduler<E> {
                 lens[a.slot] = a.len as i32;
                 offs[a.slot] = a.offset as i32;
             }
-            let pool = self.pool_kv.take().context("prefill without kv pool")?;
             let t0 = Instant::now();
-            let out = self.engine.prefill_chunk_paged(&toks, &lens, &offs, &tables, pool)?;
-            self.pool_kv = Some(out.kv);
+            let out = match self.paged_prefill_with_retry(&toks, &lens, &offs, &tables) {
+                Ok(out) => out,
+                Err(e) if self.pool_kv.is_none() => {
+                    // the failing call also lost the pool: nothing left
+                    // to retry against — propagate (server last resort)
+                    return Err(e);
+                }
+                Err(_) => {
+                    // persistent prefill failure with the pool intact:
+                    // blame every slot in this call (chunk granularity —
+                    // prefill has no per-slot probe) instead of taking
+                    // the server down; other calls keep streaming
+                    for a in &call {
+                        if let Some(s) = self.slots[a.slot].as_mut() {
+                            if s.finished.is_none() {
+                                s.finished = Some(FinishReason::EngineFault);
+                                self.metrics.blamed_requests += 1;
+                            }
+                        }
+                    }
+                    continue;
+                }
+            };
             self.metrics.prefill_chunk_latency.push_duration(t0.elapsed());
             self.metrics.prefill_chunks += 1;
             self.metrics.prefill_tokens += call.iter().map(|a| a.len as u64).sum::<u64>();
             let logits = out.logits.as_f32()?;
             for a in &call {
-                let s = self.slots[a.slot].as_mut().unwrap();
+                let Some(s) = self.slots[a.slot].as_mut() else { continue };
                 let now = Instant::now();
                 if s.first_chunk_at.is_none() {
                     s.first_chunk_at = Some(t0);
@@ -1208,6 +1295,13 @@ impl<E: StepEngine> Scheduler<E> {
                 // prompt complete: this chunk's logits row carries the
                 // first-token distribution
                 let row = &logits[a.slot * vocab..(a.slot + 1) * vocab];
+                if !logits_finite(row) {
+                    // quarantine just this slot — a corrupted row never
+                    // reaches the sampler or emits a token
+                    s.finished = Some(FinishReason::EngineFault);
+                    self.metrics.quarantined += 1;
+                    continue;
+                }
                 let first = s.sampler.sample(row);
                 // TTFT measured at first-token emission, not back-computed
                 self.metrics
@@ -1295,16 +1389,20 @@ impl<E: StepEngine> Scheduler<E> {
                 if grown {
                     continue;
                 }
-                let (rank, id) = {
-                    let s = self.slots[i].as_ref().unwrap();
-                    (rank_of(&s.req, Instant::now()), s.req.id)
+                let Some((rank, id)) = self.slots[i]
+                    .as_ref()
+                    .map(|s| (rank_of(&s.req, Instant::now()), s.req.id))
+                else {
+                    break;
                 };
                 if self.cfg.overload.preemption && self.preempt_one(&rank, Some(id)) {
                     continue;
                 }
                 // out of physical memory: end this request rather than
                 // stall the whole batch
-                self.slots[i].as_mut().unwrap().finished = Some(FinishReason::CacheLimit);
+                if let Some(s) = self.slots[i].as_mut() {
+                    s.finished = Some(FinishReason::CacheLimit);
+                }
                 break;
             }
         }
@@ -1374,7 +1472,7 @@ impl<E: StepEngine> Scheduler<E> {
     /// resume can skip the recompute), emit `Preempted`, and park the
     /// slot — sampler, generated tokens and all — in the resume queue.
     fn preempt_slot(&mut self, idx: usize) {
-        let mut s = self.slots[idx].take().unwrap();
+        let Some(mut s) = self.slots[idx].take() else { return };
         let min = self.cfg.overload.swap_min_blocks;
         let full = s.virtual_len() / self.blocks.block_size();
         if min > 0 && full >= min {
@@ -1481,16 +1579,25 @@ impl<E: StepEngine> Scheduler<E> {
         let Some((mut table, cached)) = self.blocks.alloc_prompt(&virt)? else {
             return Ok(false);
         };
-        let mut s = self.preempted.pop_front().unwrap();
+        let Some(mut s) = self.preempted.pop_front() else {
+            self.blocks.free_table(table);
+            return Ok(false);
+        };
         let id = s.req.id;
         let mut next_pos = cached;
         if let Some(swap) = self.swaps.remove(&id) {
-            let restored = self.swap_in(&swap, &table, cached / bs)?;
-            if restored > next_pos {
-                next_pos = restored;
-                if self.cfg.prefix_cache {
-                    self.blocks.publish_full_blocks(&mut table, &virt[..next_pos]);
+            // the swap is an optimization: a failed restore must not
+            // propagate here — the slot is already off the queue and
+            // the table allocated, so an early `?` would leak both the
+            // blocks and the request. Fall back to recompute chunks.
+            match self.swap_in(&swap, &table, cached / bs) {
+                Ok(restored) if restored > next_pos => {
+                    next_pos = restored;
+                    if self.cfg.prefix_cache {
+                        self.blocks.publish_full_blocks(&mut table, &virt[..next_pos]);
+                    }
                 }
+                Ok(_) | Err(_) => {}
             }
         }
         self.metrics.prefix_tokens_skipped += cached as u64;
@@ -1515,6 +1622,213 @@ impl<E: StepEngine> Scheduler<E> {
         let ns = t0.elapsed().as_nanos() as u64;
         self.metrics.surgery.host_surgery_ns += ns;
         self.metrics.host_surgery_s += ns as f64 * 1e-9;
+    }
+
+    /// Sleep out one step of the exponential backoff curve and account
+    /// for it in `stats.faults`.
+    fn backoff_sleep(&mut self, attempt: u32) {
+        let d = self.cfg.retry.backoff(attempt);
+        std::thread::sleep(d);
+        self.metrics.transient_retries += 1;
+        self.metrics.backoff_ms += d.as_secs_f64() * 1e3;
+    }
+
+    /// Step watchdog: an engine call that overran the configured stall
+    /// threshold is counted (the result itself is never discarded — a
+    /// slow success is still a success).
+    fn note_watchdog(&mut self, t0: Instant) {
+        if t0.elapsed().as_secs_f64() * 1e3 > self.cfg.retry.watchdog_ms {
+            self.metrics.watchdog_stalls += 1;
+        }
+    }
+
+    /// Allocate the process-lifetime KV pool, retrying transient
+    /// allocation failures under the backoff policy. Unlike step faults
+    /// there is no pool to recover here — exhausting the budget is
+    /// fatal to admission (and surfaces as a step error).
+    fn new_pool_with_retry(&mut self) -> Result<PagedKv> {
+        let mut attempt = 0u32;
+        loop {
+            match self.engine.new_kv_pool() {
+                Ok(kv) => return Ok(kv),
+                Err(e) => {
+                    let transient = StepFault::classify(&e).unwrap_or(true);
+                    if !transient || attempt >= self.cfg.retry.max_retries {
+                        return Err(e.context("allocating the kv pool"));
+                    }
+                    self.backoff_sleep(attempt);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// One prefill-chunk call under the retry policy: every failure
+    /// first reclaims the pool via [`StepEngine::recover_kv`] (a lost
+    /// pool is fatal), transient faults back off and retry. On give-up
+    /// the pool is back in `self.pool_kv` iff recovery succeeded — the
+    /// caller distinguishes the two by checking it.
+    fn paged_prefill_with_retry(
+        &mut self,
+        toks: &[i32],
+        lens: &[i32],
+        offs: &[i32],
+        tables: &BlockTables,
+    ) -> Result<PagedStepOutput> {
+        let mut attempt = 0u32;
+        loop {
+            let pool = self.pool_kv.take().context("prefill without kv pool")?;
+            let t0 = Instant::now();
+            let r = self.engine.prefill_chunk_paged(toks, lens, offs, tables, pool);
+            self.note_watchdog(t0);
+            match r {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    match self.engine.recover_kv() {
+                        Some(kv) => self.pool_kv = Some(kv),
+                        None => {
+                            return Err(e.context(
+                                "prefill chunk failed and lost the kv pool (unrecoverable)",
+                            ))
+                        }
+                    }
+                    let transient = StepFault::classify(&e).unwrap_or(true);
+                    if !transient || attempt >= self.cfg.retry.max_retries {
+                        return Err(e.context("prefill chunk failed after retries"));
+                    }
+                    self.backoff_sleep(attempt);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// One blame probe: re-run the failing decode step with only
+    /// `subset` of the active slots unmasked (everyone else active gets
+    /// a PAD token, length 1, and a null-block table row). Probe logits
+    /// are discarded and sampler state is never touched, so probes are
+    /// invisible in the surviving requests' token streams. Returns
+    /// whether the fault reproduced.
+    fn probe_fails(
+        &mut self,
+        plan: &StepPlan,
+        toks: &[i32],
+        lens: &[i32],
+        width: usize,
+        subset: &[usize],
+        active: &[bool],
+    ) -> Result<bool> {
+        let mut ptoks = toks.to_vec();
+        let mut plens = lens.to_vec();
+        let mut include = vec![true; active.len()];
+        for i in 0..active.len() {
+            if active[i] && !subset.contains(&i) {
+                ptoks[i] = PAD;
+                plens[i] = 1;
+                include[i] = false;
+            }
+        }
+        let tables = self.tables_masked(width, &include)?;
+        let pool = self.pool_kv.take().context("blame probe without kv pool")?;
+        match self.engine.decode_paged(
+            &plan.tag,
+            &ptoks,
+            &plens,
+            &tables,
+            pool,
+            plan.routing.as_ref(),
+        ) {
+            Ok(out) => {
+                self.pool_kv = Some(out.kv);
+                Ok(false)
+            }
+            Err(e) => match self.engine.recover_kv() {
+                Some(kv) => {
+                    self.pool_kv = Some(kv);
+                    Ok(true)
+                }
+                None => Err(e.context("blame probe lost the kv pool (unrecoverable)")),
+            },
+        }
+    }
+
+    /// The decode step failed persistently: bisection blame search.
+    /// Halve the active set, probing each half until a single slot
+    /// reproduces the fault; finish it with `FinishReason::EngineFault`
+    /// and re-run the step for the survivors. A second failure of the
+    /// survivor run means another culprit — bisect again over the
+    /// remainder. Returns the survivors' successful step output, whose
+    /// logits are the only ones ever sampled — so every non-blamed
+    /// request's token stream is bit-identical to a fault-free run.
+    fn bisect_blame(
+        &mut self,
+        plan: &StepPlan,
+        tokens: &[i32],
+        lengths: &[i32],
+        width: usize,
+        active: &[bool],
+    ) -> Result<PagedStepOutput> {
+        self.metrics.blame_bisections += 1;
+        let mut toks = tokens.to_vec();
+        let mut lens = lengths.to_vec();
+        let mut live: Vec<usize> = (0..active.len()).filter(|&i| active[i]).collect();
+        loop {
+            // pin one culprit: the invariant is that the fault
+            // reproduces on `suspects`; a clean first-half probe moves
+            // the blame to the second half
+            let mut suspects = live.clone();
+            while suspects.len() > 1 {
+                let half = suspects[..suspects.len() / 2].to_vec();
+                if self.probe_fails(plan, &toks, &lens, width, &half, active)? {
+                    suspects = half;
+                } else {
+                    suspects.retain(|i| !half.contains(i));
+                }
+            }
+            let Some(&bad) = suspects.first() else {
+                bail!("blame search over an empty active set");
+            };
+            if let Some(s) = self.slots[bad].as_mut() {
+                s.finished = Some(FinishReason::EngineFault);
+            }
+            self.metrics.blamed_requests += 1;
+            toks[bad] = PAD;
+            lens[bad] = 1;
+            live.retain(|&i| i != bad);
+            let mut include = vec![true; active.len()];
+            for (i, inc) in include.iter_mut().enumerate() {
+                if active[i] && !live.contains(&i) {
+                    *inc = false;
+                }
+            }
+            let tables = self.tables_masked(width, &include)?;
+            let pool = self.pool_kv.take().context("decode without kv pool")?;
+            match self.engine.decode_paged(
+                &plan.tag,
+                &toks,
+                &lens,
+                &tables,
+                pool,
+                plan.routing.as_ref(),
+            ) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    match self.engine.recover_kv() {
+                        Some(kv) => self.pool_kv = Some(kv),
+                        None => {
+                            return Err(
+                                e.context("blame re-run lost the kv pool (unrecoverable)")
+                            )
+                        }
+                    }
+                    if live.is_empty() {
+                        return Err(e.context(
+                            "engine still failing with every active slot masked",
+                        ));
+                    }
+                }
+            }
+        }
     }
 
     fn decode_once(&mut self) -> Result<()> {
@@ -1554,39 +1868,91 @@ impl<E: StepEngine> Scheduler<E> {
         }
         let bs = self.blocks.block_size();
         let n = self.logical_bucket()?;
-        let tables = self.tables_at(n / bs)?;
-        let pool = self.pool_kv.take().context("decode without kv pool")?;
+        let width = n / bs;
+        let tables = self.tables_at(width)?;
         // per-step routing: the controller picks the entry and computes
         // the head/MLP index tensors for this batch's hidden state (the
         // mask keeps padding and prefilling slots out of selection and
-        // telemetry)
-        let plan = self.ctl.plan(&tokens, &lengths, Some(&active))?;
+        // telemetry). Planned ONCE — retries of the same step reuse it
+        // (or its dense degradation) so controller telemetry counts
+        // steps, not attempts.
+        let mut plan = self.ctl.plan(&tokens, &lengths, Some(&active))?;
         if let Some(r) = &plan.routing {
             self.metrics.surgery.router_ns += r.router_ns;
         }
-        let t0 = Instant::now();
-        let out = self.engine.decode_paged(
-            &plan.tag,
-            &tokens,
-            &lengths,
-            &tables,
-            pool,
-            plan.routing.as_ref(),
-        )?;
-        let dt = t0.elapsed();
+        let t_step = Instant::now();
+        let mut attempt = 0u32;
+        let mut degraded = false;
+        let out = loop {
+            let pool = self.pool_kv.take().context("decode without kv pool")?;
+            let t_call = Instant::now();
+            let r = self.engine.decode_paged(
+                &plan.tag,
+                &tokens,
+                &lengths,
+                &tables,
+                pool,
+                plan.routing.as_ref(),
+            );
+            self.note_watchdog(t_call);
+            match r {
+                Ok(out) => break out,
+                Err(e) => {
+                    match self.engine.recover_kv() {
+                        Some(kv) => self.pool_kv = Some(kv),
+                        None => {
+                            return Err(e.context(
+                                "decode step failed and lost the kv pool (unrecoverable)",
+                            ))
+                        }
+                    }
+                    let transient = StepFault::classify(&e).unwrap_or(true);
+                    if transient && attempt < self.cfg.retry.max_retries {
+                        self.backoff_sleep(attempt);
+                        attempt += 1;
+                        continue;
+                    }
+                    // the fault is persistent (or outlived the retry
+                    // budget): before blaming a request, degrade a
+                    // routed step to the dense fallback entries once —
+                    // if the sparse path itself is at fault, dense
+                    // clears it and the controller resumes routing on
+                    // the next step
+                    if !degraded && plan.tag != "dense" {
+                        degraded = true;
+                        plan = self.ctl.degrade();
+                        self.metrics.degraded_steps += 1;
+                        for (i, slot) in self.slots.iter().enumerate() {
+                            if let Some(s) = slot {
+                                if active[i] && s.finished.is_none() {
+                                    self.events.push(GenerationEvent::Degraded {
+                                        request: s.req.id,
+                                    });
+                                }
+                            }
+                        }
+                        continue;
+                    }
+                    // retries exhausted (or the fault is persistent):
+                    // isolate the poisoned request and finish the step
+                    // for everyone else
+                    break self.bisect_blame(&plan, &tokens, &lengths, width, &active)?;
+                }
+            }
+        };
+        let dt = t_step.elapsed();
         self.pool_kv = Some(out.kv);
 
         let logits = out.logits.as_f32()?;
         let vocab = self.engine.config().vocab;
         let max_total = self.max_prompt_len();
         let prefix_cache_on = self.cfg.prefix_cache;
-        let mut active = 0;
+        let mut emitted = 0;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
             if s.finished.is_some() || s.phase != SlotPhase::Running {
                 continue;
             }
-            active += 1;
             // this step wrote position s.len - 1 — if that filled a
             // block, its content (prompt + generated ids) is final:
             // publish it so multi-turn follow-ups embedding this turn's
@@ -1596,7 +1962,16 @@ impl<E: StepEngine> Scheduler<E> {
                 self.blocks.publish_full_blocks(&mut s.table, &stream[..s.len]);
             }
             let row = &logits[i * vocab..(i + 1) * vocab];
+            if !logits_finite(row) {
+                // graceful degradation, slot granularity: a non-finite
+                // row (NaN/Inf) quarantines only this request — no
+                // token is sampled from garbage and nothing is emitted
+                s.finished = Some(FinishReason::EngineFault);
+                self.metrics.quarantined += 1;
+                continue;
+            }
             let next = s.sampler.sample(row);
+            emitted += 1;
             let now = Instant::now();
             // inter-token latency measured between real emissions
             self.metrics
@@ -1622,7 +1997,7 @@ impl<E: StepEngine> Scheduler<E> {
                 s.finished = Some(FinishReason::CacheLimit);
             }
         }
-        self.metrics.record_step(dt, active);
+        self.metrics.record_step(dt, emitted);
         Ok(())
     }
 }

@@ -346,6 +346,17 @@ impl SparsityController {
         Ok(StepPlan { tag: self.mode.tag(), routing })
     }
 
+    /// Graceful degradation: the plan to run *instead* when the polar
+    /// (or dejavu) step faulted — the dense fallback entries, which
+    /// `validate` guarantees exist at every bucket whenever a routed
+    /// variant is served. Counted in `fallback_steps` alongside the
+    /// missing-router-weights fallback: both are "a routed step served
+    /// dense", just with different triggers.
+    pub fn degrade(&mut self) -> StepPlan {
+        self.stats.fallback_steps += 1;
+        StepPlan { tag: "dense".to_string(), routing: None }
+    }
+
     /// Check the manifest actually has the chosen variant at every
     /// (batch, seq) bucket — plus the `dense` entries the controller
     /// falls back to — so the scheduler never faults mid-flight.

@@ -39,7 +39,11 @@ commands:
              `bench overload [--smoke]` for SLO-aware overload control:
              goodput of preemption+admission vs reject-only across
              bursty / heavy-tail / two-tenant / chat-session workloads
-             (BENCH_overload.json)
+             (BENCH_overload.json), or
+             `bench fault-recovery [--smoke]` for fault-tolerant stepping:
+             replays a trace under injected engine faults and gates that
+             every non-poisoned request completes bit-identical to the
+             fault-free run (BENCH_faults.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -71,6 +75,9 @@ fn main() {
         }
         "bench" if rest.first().map(|s| s.as_str()) == Some("overload") => {
             bench::overload::run(&rest[1..])
+        }
+        "bench" if rest.first().map(|s| s.as_str()) == Some("fault-recovery") => {
+            bench::fault_recovery::run(&rest[1..])
         }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {
@@ -199,6 +206,9 @@ fn cmd_generate(rest: &[String]) -> Result<()> {
                     }
                     GenerationEvent::Preempted { request } => {
                         println!("[{request}] preempted (resumes when blocks free)");
+                    }
+                    GenerationEvent::Degraded { request } => {
+                        println!("[{request}] degraded (routed step fell back to dense)");
                     }
                     GenerationEvent::Finished(c) | GenerationEvent::Cancelled(c) => {
                         print_completion(&tok, &c);

@@ -10,9 +10,11 @@
 //! the legacy literal-per-step path, kept as the A/B baseline for
 //! `bench decode-breakdown`.
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
+
+use crate::substrate::sync::lock_clean;
 
 use super::executor::{DeviceInput, Executor};
 use super::router::{RouterBank, RoutingPolicy, StepRouting};
@@ -188,12 +190,37 @@ pub struct Engine {
     /// routers itself only for direct `decode` callers (eval, benches)
     /// hitting an index-taking entry.
     routers: Arc<OnceLock<Option<RouterBank>>>,
+    /// Fault-recovery stash: the paged entry points take the pool by
+    /// value, so a pre-execution validation failure would otherwise lose
+    /// the only KV handle. They park the pool here before bailing; the
+    /// scheduler drains it via [`Engine::recover_kv`] and retries (or
+    /// bisects). An error with an empty stash is unrecoverable.
+    kv_stash: Arc<Mutex<Option<PagedKv>>>,
 }
 
 impl Engine {
     pub fn new(exec: Arc<Executor>) -> Engine {
         let kv_host_path = std::env::var("POLAR_KV_HOST").is_ok();
-        Engine { exec, kv_host_path, routers: Arc::new(OnceLock::new()) }
+        Engine {
+            exec,
+            kv_host_path,
+            routers: Arc::new(OnceLock::new()),
+            kv_stash: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// Drain the pool parked by a recoverable paged-entry failure
+    /// (see `kv_stash`). `None` means the error lost the pool — fatal.
+    pub fn recover_kv(&self) -> Option<PagedKv> {
+        lock_clean(&self.kv_stash).take()
+    }
+
+    /// Park the pool and pass the error through: every paged-entry
+    /// failure before the pool is consumed by execution routes here so
+    /// the caller can recover-and-retry.
+    fn stash_and_err(&self, kv: PagedKv, e: anyhow::Error) -> anyhow::Error {
+        *lock_clean(&self.kv_stash) = Some(kv);
+        e
     }
 
     /// The artifact's router bank, built on first call (None when the
@@ -688,29 +715,39 @@ impl Engine {
         let b = tables.batch;
         let c = self.prefill_chunk_len();
         let n = tables.n(kv.block);
-        if tokens.len() != b * c || lengths.len() != b || offset.len() != b {
-            bail!(
-                "prefill_chunk_paged: tokens {} / lengths {} / offset {} vs batch {b} chunk {c}",
-                tokens.len(),
-                lengths.len(),
-                offset.len()
-            );
-        }
-        for i in 0..b {
-            let end = offset[i] as usize + lengths[i] as usize;
-            if end > n {
-                bail!("prefill_chunk_paged: slot {i} writes to {end} > bucket {n}");
+        // everything up to execution happens while we still own the
+        // pool: failures park it for `recover_kv` instead of losing it
+        let prep = (|| -> Result<[xla::Literal; 4]> {
+            if tokens.len() != b * c || lengths.len() != b || offset.len() != b {
+                bail!(
+                    "prefill_chunk_paged: tokens {} / lengths {} / offset {} vs batch {b} chunk {c}",
+                    tokens.len(),
+                    lengths.len(),
+                    offset.len()
+                );
             }
-        }
-        if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv.pool_blocks) {
-            bail!("prefill_chunk_paged: block id out of pool ({})", kv.pool_blocks);
-        }
+            for i in 0..b {
+                let end = offset[i] as usize + lengths[i] as usize;
+                if end > n {
+                    bail!("prefill_chunk_paged: slot {i} writes to {end} > bucket {n}");
+                }
+            }
+            if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv.pool_blocks) {
+                bail!("prefill_chunk_paged: block id out of pool ({})", kv.pool_blocks);
+            }
+            Ok([
+                Tensor::i32(tokens.to_vec(), vec![b, c])?.to_literal()?,
+                Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?,
+                Tensor::i32(offset.to_vec(), vec![b])?.to_literal()?,
+                tables.to_literal()?,
+            ])
+        })();
+        let [toks, lens, offs, tbl] = match prep {
+            Ok(lits) => lits,
+            Err(e) => return Err(self.stash_and_err(kv, e)),
+        };
         let name = self.exec.manifest().paged_prefill_entry_name(b, n);
         let t0 = std::time::Instant::now();
-        let toks = Tensor::i32(tokens.to_vec(), vec![b, c])?.to_literal()?;
-        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
-        let offs = Tensor::i32(offset.to_vec(), vec![b])?.to_literal()?;
-        let tbl = tables.to_literal()?;
         let (pool_blocks, block) = (kv.pool_blocks, kv.block);
         let (logits, store) = self.run_kv_entry(
             &name,
@@ -739,38 +776,53 @@ impl Engine {
     ) -> Result<PagedStepOutput> {
         let b = tables.batch;
         let n = tables.n(kv.block);
-        if tokens.len() != b || lengths.len() != b {
-            bail!("decode_paged: tokens/lengths len != batch {b}");
-        }
-        if let Some(&max) = lengths.iter().max() {
-            if max as usize > n {
-                bail!("decode_paged: length {max} exceeds logical bucket {n}");
-            }
-        }
-        if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv.pool_blocks) {
-            bail!("decode_paged: block id out of pool ({})", kv.pool_blocks);
-        }
+        // everything up to execution happens while we still own the
+        // pool: failures park it for `recover_kv` instead of losing it
         let name = self.exec.manifest().paged_decode_entry_name(tag, b, n);
-        let spec = self.exec.manifest().entry(&name)?;
         let computed;
-        let routing = match (routing, RoutingPolicy::from_entry(spec)) {
-            (None, Some(policy)) => {
-                let bank = self.router_bank().as_ref().with_context(|| {
-                    format!(
-                        "{name} takes router indices but the artifact has no \
-                         router weights (run compile.routers, or serve with \
-                         --mode dense)"
-                    )
-                })?;
-                computed = bank.route_step(tokens, lengths, None, &policy)?;
-                self.exec.profile_mut().router_ns += computed.router_ns;
-                Some(&computed)
+        let prep = (|| -> Result<(Option<StepRouting>, [xla::Literal; 3])> {
+            if tokens.len() != b || lengths.len() != b {
+                bail!("decode_paged: tokens/lengths len != batch {b}");
             }
-            (r, _) => r,
+            if let Some(&max) = lengths.iter().max() {
+                if max as usize > n {
+                    bail!("decode_paged: length {max} exceeds logical bucket {n}");
+                }
+            }
+            if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv.pool_blocks) {
+                bail!("decode_paged: block id out of pool ({})", kv.pool_blocks);
+            }
+            let spec = self.exec.manifest().entry(&name)?;
+            let computed = match (routing.is_some(), RoutingPolicy::from_entry(spec)) {
+                (false, Some(policy)) => {
+                    let bank = self.router_bank().as_ref().with_context(|| {
+                        format!(
+                            "{name} takes router indices but the artifact has no \
+                             router weights (run compile.routers, or serve with \
+                             --mode dense)"
+                        )
+                    })?;
+                    let r = bank.route_step(tokens, lengths, None, &policy)?;
+                    self.exec.profile_mut().router_ns += r.router_ns;
+                    Some(r)
+                }
+                _ => None,
+            };
+            let lits = [
+                Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?,
+                Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?,
+                tables.to_literal()?,
+            ];
+            Ok((computed, lits))
+        })();
+        let (toks, lens, tbl) = match prep {
+            Ok((c, [toks, lens, tbl])) => {
+                computed = c;
+                (toks, lens, tbl)
+            }
+            Err(e) => return Err(self.stash_and_err(kv, e)),
         };
-        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
-        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
-        let tbl = tables.to_literal()?;
+        let routing = computed.as_ref().or(routing);
         let (pool_blocks, block) = (kv.pool_blocks, kv.block);
         let (logits, store) = self.run_kv_entry(
             &name,

@@ -28,6 +28,8 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 use xla::FromRawBytes;
 
+use crate::substrate::sync::lock_clean;
+
 use super::manifest::{EntrySpec, Manifest};
 use super::profile::StepProfile;
 use super::tensor::Tensor;
@@ -140,20 +142,20 @@ impl Executor {
 
     /// Cumulative transfer/compute profile since the last reset.
     pub fn profile_snapshot(&self) -> StepProfile {
-        *self.profile.lock().unwrap()
+        *lock_clean(&self.profile)
     }
 
     pub fn reset_profile(&self) {
-        *self.profile.lock().unwrap() = StepProfile::default();
+        *lock_clean(&self.profile) = StepProfile::default();
     }
 
     pub(crate) fn profile_mut(&self) -> std::sync::MutexGuard<'_, StepProfile> {
-        self.profile.lock().unwrap()
+        lock_clean(&self.profile)
     }
 
     /// Compile (or fetch from cache) an entry by name.
     pub fn compiled(&self, name: &str) -> Result<Arc<CompiledEntry>> {
-        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+        if let Some(hit) = lock_clean(&self.cache).get(name) {
             return Ok(hit.clone());
         }
         let spec = self.manifest.entry(name)?.clone();
@@ -170,20 +172,17 @@ impl Executor {
             .with_context(|| format!("compiling {name}"))?;
         let dt = t0.elapsed().as_secs_f64();
         {
-            let mut st = self.compile_stats.lock().unwrap();
+            let mut st = lock_clean(&self.compile_stats);
             st.compiled += 1;
             st.total_seconds += dt;
         }
         let entry = Arc::new(CompiledEntry { spec, exe });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), entry.clone());
+        lock_clean(&self.cache).insert(name.to_string(), entry.clone());
         Ok(entry)
     }
 
     pub fn is_cached(&self, name: &str) -> bool {
-        self.cache.lock().unwrap().contains_key(name)
+        lock_clean(&self.cache).contains_key(name)
     }
 
     /// Upload one host literal to the device (h2d accounted).
@@ -193,7 +192,7 @@ impl Executor {
             .client
             .buffer_from_host_literal(None, lit)
             .context("uploading literal")?;
-        let mut p = self.profile.lock().unwrap();
+        let mut p = lock_clean(&self.profile);
         p.h2d_bytes += lit.size_bytes() as u64;
         p.h2d_ns += t0.elapsed().as_nanos() as u64;
         Ok(buf)
@@ -203,7 +202,7 @@ impl Executor {
     pub fn fetch_literal(&self, buf: &xla::PjRtBuffer) -> Result<xla::Literal> {
         let t0 = Instant::now();
         let lit = buf.to_literal_sync().context("fetching buffer")?;
-        let mut p = self.profile.lock().unwrap();
+        let mut p = lock_clean(&self.profile);
         p.d2h_bytes += lit.size_bytes() as u64;
         p.d2h_ns += t0.elapsed().as_nanos() as u64;
         Ok(lit)
@@ -257,7 +256,7 @@ impl Executor {
             .exe
             .execute_untupled_b::<&xla::PjRtBuffer>(&all)
             .with_context(|| format!("executing {} (buffer path)", entry.spec.name))?;
-        self.profile.lock().unwrap().compute_ns += t0.elapsed().as_nanos() as u64;
+        lock_clean(&self.profile).compute_ns += t0.elapsed().as_nanos() as u64;
         if outs.len() != entry.spec.outputs.len() {
             bail!(
                 "{}: got {} outputs, expected {}",
@@ -304,7 +303,7 @@ impl Executor {
                 .exe
                 .execute_b::<&xla::PjRtBuffer>(&inputs)
                 .with_context(|| format!("executing {}", entry.spec.name))?;
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += h2d;
             p.h2d_ns += up_ns;
             p.compute_ns += t0.elapsed().as_nanos() as u64;
@@ -319,7 +318,7 @@ impl Executor {
                 .exe
                 .execute::<&xla::Literal>(&inputs)
                 .with_context(|| format!("executing {}", entry.spec.name))?;
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.h2d_bytes += h2d;
             // PJRT copies the literals inside execute on this path, so
             // upload time is not separable: it lands in compute_ns and
@@ -332,7 +331,7 @@ impl Executor {
             .to_literal_sync()
             .context("fetch result")?;
         {
-            let mut p = self.profile.lock().unwrap();
+            let mut p = lock_clean(&self.profile);
             p.d2h_bytes += tuple.size_bytes() as u64;
             p.d2h_ns += t_down.elapsed().as_nanos() as u64;
         }

@@ -48,6 +48,15 @@
 //! loop, and routes each `GenerationEvent` to its connection. If a
 //! client disconnects mid-stream, its requests are cancelled so their
 //! batch slots free immediately.
+//!
+//! Failure handling: the scheduler absorbs engine faults itself (retry,
+//! polar→dense degradation, bisection blame — see `coordinator::faults`),
+//! so a faulting step surfaces here as per-request `engine_fault`
+//! terminals and non-terminal `degraded` event lines, never as an engine
+//! exit. The engine-death path below is a last resort for faults the
+//! scheduler reports as unrecoverable (e.g. the KV pool is lost).
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -66,6 +75,7 @@ use crate::coordinator::{
 };
 use crate::runtime::{Engine, Executor};
 use crate::substrate::json::Json;
+use crate::substrate::sync::lock_clean;
 use crate::tokenizer::Tokenizer;
 
 pub struct ServerConfig {
@@ -164,7 +174,7 @@ where
         let tok = Tokenizer::new();
         let mut sinks: HashMap<u64, ReqSink> = HashMap::new();
         loop {
-            for inb in q2.lock().unwrap().drain(..) {
+            for inb in lock_clean(&q2).drain(..) {
                 match inb {
                     Inbound::Submit { request, sink, stream, alive } => {
                         // prompts past the largest seq bucket are a
@@ -219,6 +229,7 @@ where
                         stats.set("prefill", sched.prefill_stats());
                         stats.set("kv", sched.kv_stats());
                         stats.set("overload", sched.overload_stats());
+                        stats.set("faults", sched.metrics.faults_json());
                         let _ = sink.send(Json::obj(vec![
                             ("ok", true.into()),
                             ("stats", stats),
@@ -238,7 +249,11 @@ where
             let events = match sched.step() {
                 Ok(events) => events,
                 Err(e) => {
-                    // a dead engine must not leave clients blocked on a
+                    // last resort only: the scheduler has already retried,
+                    // degraded to dense, and run blame isolation before an
+                    // error escapes step() — what reaches here is
+                    // unrecoverable (e.g. the KV pool itself was lost). A
+                    // dead engine must not leave clients blocked on a
                     // reply that will never come: error out every
                     // in-flight request and every undrained inbound
                     // message, then bring the server down
@@ -322,6 +337,12 @@ fn route_event(
         GenerationEvent::Preempted { request } if sink.stream => {
             Some(lifecycle_json(request, "preempted"))
         }
+        // non-terminal: a routed step faulted and this request's stream now
+        // runs on the dense fallback entries (tokens are unchanged — the
+        // fallback computes the same logits without the sparsity routing)
+        GenerationEvent::Degraded { request } if sink.stream => {
+            Some(lifecycle_json(request, "degraded"))
+        }
         GenerationEvent::Token { request, id, index, text_offset } if sink.stream => {
             Some(Json::obj(vec![
                 ("id", (request as usize).into()),
@@ -390,7 +411,7 @@ fn error_json(msg: &str, id: Json) -> Json {
 /// Error out every message still sitting in the inbound queue (used when
 /// the engine dies so no submitter is left waiting on a dead channel).
 fn fail_queue(queue: &Mutex<Vec<Inbound>>, msg: &str) {
-    for inb in queue.lock().unwrap().drain(..) {
+    for inb in lock_clean(queue).drain(..) {
         let sink = match inb {
             Inbound::Submit { sink, .. } => Some(sink),
             Inbound::Cancel { sink, .. } => sink,
@@ -454,7 +475,7 @@ fn handle_conn(
                 continue;
             }
             Some("stats") => {
-                queue.lock().unwrap().push(Inbound::Stats { sink: wtx.clone() });
+                lock_clean(&queue).push(Inbound::Stats { sink: wtx.clone() });
                 continue;
             }
             Some("cancel") => {
@@ -462,7 +483,7 @@ fn handle_conn(
                     Some(id) => {
                         // {"quiet": true} suppresses the ack (PROTOCOL.md)
                         let quiet = j.get("quiet").as_bool().unwrap_or(false);
-                        queue.lock().unwrap().push(Inbound::Cancel {
+                        lock_clean(&queue).push(Inbound::Cancel {
                             id: id as u64,
                             sink: if quiet { None } else { Some(wtx.clone()) },
                         });
@@ -520,7 +541,7 @@ fn handle_conn(
             }
         }
         let stream_mode = j.get("stream").as_bool().unwrap_or(false);
-        queue.lock().unwrap().push(Inbound::Submit {
+        lock_clean(&queue).push(Inbound::Submit {
             request: b.build(),
             sink: wtx.clone(),
             stream: stream_mode,

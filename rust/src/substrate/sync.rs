@@ -1,0 +1,47 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking thread into a cascade:
+//! every later locker panics on the poisoned mutex, so a single bad step
+//! takes down stats/profile reporting and ultimately the server. For the
+//! data we guard (profiling counters, request queues) the invariant is
+//! "the value is a plain struct, always valid" — there is no partially
+//! applied multi-field transaction to fear — so recovering the inner
+//! value is strictly better than propagating the poison.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the inner value if a previous holder
+/// panicked. Use on hot paths where availability beats poison
+/// propagation (profiles, queues, fault stashes).
+pub fn lock_clean<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_clean_survives_poison() {
+        let m = Arc::new(Mutex::new(41u64));
+        let m2 = m.clone();
+        // poison it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // lock_clean still hands out the value, and writes stick
+        *lock_clean(&m) += 1;
+        assert_eq!(*lock_clean(&m), 42);
+    }
+
+    #[test]
+    fn lock_clean_plain_path() {
+        let m = Mutex::new(vec![1, 2, 3]);
+        lock_clean(&m).push(4);
+        assert_eq!(lock_clean(&m).len(), 4);
+    }
+}

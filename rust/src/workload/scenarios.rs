@@ -18,6 +18,9 @@
 //! - [`chat_sessions`]: multi-turn sessions re-sending a shared
 //!   session prefix — resume-after-preemption and admission both lean
 //!   on the prefix cache.
+//! - [`fault_mix`]: disjoint per-request token bands so a fault
+//!   injector can poison individual requests by token value alone —
+//!   the replay trace behind `bench fault-recovery`.
 
 use std::time::Duration;
 
@@ -153,6 +156,28 @@ pub fn chat_sessions(cfg: &ScenarioConfig) -> Vec<TimedRequest> {
     out
 }
 
+/// Fault-injection trace: request `i`'s prompt ids all equal
+/// `20 + (i % 20) * 10`, giving each request its own band of ten token
+/// values (disjoint for up to 20 requests — the mock's +1 decode chain
+/// stays inside the band for `max_new <= 9`). A [`FaultScript`]'s
+/// `poison_token_range`/`nan_token_range` can then target exactly one
+/// request, which is what lets `bench fault-recovery` gate that every
+/// *other* request replays bit-identical under faults. No deadlines:
+/// retry backoff must never turn a healthy request into an SLO miss,
+/// or the bit-identical comparison against the fault-free run breaks.
+///
+/// [`FaultScript`]: crate::coordinator::FaultScript
+pub fn fault_mix(cfg: &ScenarioConfig) -> Vec<TimedRequest> {
+    (0..cfg.n_requests)
+        .map(|i| {
+            let band = 20 + ((i % 20) as i32) * 10;
+            let len = 8 + (i % 3) * 4; // 8 / 12 / 16 ids, all the band value
+            let ids = vec![band; len];
+            build(i as u64, i as f64 * 0.004, ids, 0, 0.0, cfg.max_new_tokens)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +203,26 @@ mod tests {
         assert_deterministic(heavy_tail);
         assert_deterministic(two_tenant);
         assert_deterministic(chat_sessions);
+        assert_deterministic(fault_mix);
+    }
+
+    #[test]
+    fn fault_mix_bands_are_disjoint_and_deadline_free() {
+        let w = fault_mix(&ScenarioConfig { n_requests: 16, ..Default::default() });
+        let mut bands = Vec::new();
+        for r in &w {
+            let first = r.request.prompt_ids[0];
+            assert!(r.request.prompt_ids.iter().all(|&t| t == first));
+            assert!(r.request.deadline.is_none(), "deadlines would break replay");
+            bands.push(first);
+        }
+        bands.sort();
+        bands.dedup();
+        assert_eq!(bands.len(), 16, "one private token band per request");
+        // +1 decode chains stay inside a request's own band of ten
+        for pair in bands.windows(2) {
+            assert!(pair[1] - pair[0] >= 10);
+        }
     }
 
     #[test]

@@ -1,16 +1,21 @@
 //! Protocol-v2 integration tests: the TCP server over the mock engine
 //! (no AOT artifacts needed). Covers streaming event ordering, interleaved
 //! multi-request connections, mid-generation cancellation, the stats
-//! command, and structured rejection of malformed input.
+//! command, structured rejection of malformed input, and fault handling
+//! over the wire (`degraded` event lines, `engine_fault` terminals, and
+//! ledger cleanup when a preempted request is cancelled).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use polar_sparsity::coordinator::mock::MockEngine;
-use polar_sparsity::coordinator::{Mode, Scheduler, SchedulerConfig, SparsityController};
+use polar_sparsity::coordinator::{
+    FaultInjector, FaultScript, Mode, Scheduler, SchedulerConfig, SparsityController,
+};
 use polar_sparsity::server::{serve_with, Client};
 use polar_sparsity::substrate::json::Json;
 
@@ -444,5 +449,152 @@ fn preemption_rides_the_wire_and_stream_resumes() {
     assert!(stats.get("kv_rebuilds").is_null());
     assert!(stats.get("regroups").is_null());
     assert!(stats.get("slot_copies").is_null());
+    shut_down(&addr, h);
+}
+
+/// Satellite regression: cancelling (or disconnecting) a request while
+/// it sits preempted must release every trace of it — no KV blocks, no
+/// reservation-ledger entry, no queue state. The pool returns to its
+/// pre-request baseline once the surviving request finishes.
+#[test]
+fn cancel_while_preempted_releases_ledger_and_pool() {
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        serve_with(
+            "127.0.0.1:0",
+            move |addr| {
+                let _ = tx.send(addr);
+            },
+            move || {
+                Ok(Scheduler::new(
+                    MockEngine::new()
+                        .with_pool_blocks(8)
+                        .with_step_delay(Duration::from_millis(2)),
+                    SparsityController::new(Mode::Dense),
+                    SchedulerConfig { max_batch: 8, ..Default::default() },
+                ))
+            },
+        )
+    });
+    let addr: String = rx.recv().expect("server address");
+    let mut c1 = Client::connect(&addr).unwrap();
+    let baseline = {
+        let s = c1.stats().unwrap();
+        let kv = s.get("stats").get("kv");
+        assert_eq!(kv.get("blocks_in_use").as_usize(), Some(0));
+        kv.get("blocks_available").as_usize().unwrap()
+    };
+    // victim: same geometry as preemption_rides_the_wire (33 ids + 24
+    // new tokens), consumed until it is mid-decode
+    let mut stream = c1.stream(&"A".repeat(31), 24).unwrap();
+    let mut tokens = 0;
+    while tokens < 3 {
+        let ev = stream.next().expect("stream ended early").unwrap();
+        if ev.get("event").as_str() == Some("token") {
+            tokens += 1;
+        }
+    }
+    // hot tenant forces the preemption
+    let mut c2 = Client::connect(&addr).unwrap();
+    let mut hot = c2
+        .stream_with(&"K".repeat(47), 8, vec![("priority", 5.into())])
+        .unwrap();
+    // the moment the victim reports preempted, cancel it — the request
+    // then holds only queue state, which the cancel must fully release
+    let mut saw_preempted = false;
+    loop {
+        let ev = stream.next().expect("no terminal event").unwrap();
+        match ev.get("event").as_str() {
+            Some("preempted") => {
+                saw_preempted = true;
+                stream.cancel().unwrap();
+            }
+            Some("cancelled") => break,
+            Some("finished") => panic!("victim finished despite cancel"),
+            _ => {}
+        }
+    }
+    assert!(saw_preempted, "victim was never preempted");
+    // the survivor is untouched by the cancel
+    let mut hot_fin = None;
+    for ev in &mut hot {
+        let ev = ev.unwrap();
+        if ev.get("event").as_str() == Some("finished") {
+            hot_fin = Some(ev);
+        }
+    }
+    assert_eq!(hot_fin.expect("hot terminal").get("text").as_str(), Some("LMNOPQRS"));
+    drop(hot);
+    let s = c2.stats().unwrap();
+    let stats = s.get("stats");
+    let kv = stats.get("kv");
+    assert_eq!(kv.get("blocks_in_use").as_usize(), Some(0), "kv leak: {kv}");
+    assert_eq!(kv.get("blocks_available").as_usize(), Some(baseline));
+    let ov = stats.get("overload");
+    assert_eq!(ov.get("reserved_blocks").as_usize(), Some(0), "ledger leak: {ov}");
+    assert_eq!(ov.get("preempted_queued").as_usize(), Some(0));
+    assert_eq!(stats.get("cancelled_requests").as_usize(), Some(1));
+    assert_eq!(stats.get("active").as_usize(), Some(0));
+    shut_down(&addr, h);
+}
+
+/// Tentpole, observed over the wire: a poisoned request degrades its
+/// polar step to dense (non-terminal "degraded" line), gets blamed by
+/// the bisection search, and terminates with a structured
+/// `engine_fault` — while the server survives and keeps serving.
+#[test]
+fn engine_fault_rides_the_wire_and_server_survives() {
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        serve_with(
+            "127.0.0.1:0",
+            move |addr| {
+                let _ = tx.send(addr);
+            },
+            move || {
+                // every decode batch carrying token 66 ('B', the first
+                // token generated from prompt "A") fails persistently
+                let inj = Arc::new(FaultInjector::new(FaultScript {
+                    poison_token_range: Some((66, 70)),
+                    ..Default::default()
+                }));
+                Ok(Scheduler::new(
+                    MockEngine::new().with_faults(inj),
+                    SparsityController::new(Mode::Polar { density: 0.5 }),
+                    SchedulerConfig { max_batch: 8, compact: true, ..Default::default() },
+                ))
+            },
+        )
+    });
+    let addr: String = rx.recv().expect("server address");
+    let mut c = Client::connect(&addr).unwrap();
+    let events: Vec<Json> = c
+        .stream("A", 6)
+        .unwrap()
+        .collect::<anyhow::Result<Vec<_>>>()
+        .unwrap();
+    let kinds: Vec<&str> = events
+        .iter()
+        .map(|e| e.get("event").as_str().unwrap())
+        .collect();
+    assert_eq!(
+        kinds,
+        vec!["queued", "prefilled", "token", "degraded", "finished"],
+        "events: {events:?}"
+    );
+    let fin = events.last().unwrap();
+    assert_eq!(fin.get("finish").as_str(), Some("engine_fault"));
+    // the one token emitted before the fault landed is kept
+    assert_eq!(fin.get("text").as_str(), Some("B"));
+    // the server survived blame isolation: a clean request still works
+    let resp = c.request("K", 2).unwrap();
+    assert_eq!(resp.get("text").as_str(), Some("LM"));
+    assert_eq!(resp.get("finish").as_str(), Some("length"));
+    // stats surface the fault counters
+    let s = c.stats().unwrap();
+    let f = s.get("stats").get("faults");
+    assert_eq!(f.get("blame_bisections").as_usize(), Some(1), "{f}");
+    assert_eq!(f.get("blamed_requests").as_usize(), Some(1));
+    assert_eq!(f.get("degraded_steps").as_usize(), Some(1));
     shut_down(&addr, h);
 }
