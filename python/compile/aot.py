@@ -18,7 +18,14 @@ Entries per model (static shapes = the CUDA-graph analogue, DESIGN.md):
                                      teal_dXXXX | cats_dXXXX
   decode_{tag}_b{B}_n{N}_paged       block-pool twin of the serving decode
                                      tags (tokens, lengths, block_table,
-                                     kv-pool[, head_idx[, mlp_idx]])
+                                     kv-pool[, head_idx[, mlp_idx]]) —
+                                     gather -> dense core -> scatter;
+                                     deprecated, kept for bitwise A/B
+  decode_{tag}_b{B}_n{N}_paged_fused fused paged decode: same inputs and
+                                     bit-identical live-slot outputs as the
+                                     twin, but the kernel indexes the block
+                                     table itself and only the new KV row
+                                     is written — no dense intermediate
   micro_* (opt-small)                Fig 1a / Fig 3 / Fig 10 module benches
   pp2_stage{0,1}_{tag}_b{B}_n{N}     pipeline-parallel stages (Fig 11)
   tp{S}_{embed,attn,mlp,final}_*     Megatron-style TP shards (Fig 12)
@@ -148,7 +155,8 @@ def core_entries(cfg, out_dir):
                       "kv_block": KV_BLOCK, "kv_pool_blocks": P},
             ))
 
-    def decode_entry(B, N, mode, density, mlp_topk, tag, paged=False):
+    def decode_entry(B, N, mode, density, mlp_topk, tag, paged=False,
+                     fused=False):
         # polar entries are *index-taking*: the runtime routing subsystem
         # (rust/src/runtime/router.rs) computes per-request top-k head
         # groups and the batch-union MLP neuron set each step and feeds
@@ -177,18 +185,22 @@ def core_entries(cfg, out_dir):
         def mk_fn(cfg_, m, d, tk):
             kw = dict(mode=m, density=d, mlp_topk=tk)
             if paged:
+                # fused entries take the *same* inputs as the twin and
+                # produce bit-identical live-slot outputs; only the data
+                # movement inside the graph differs (no dense KV
+                # intermediate, no scatter).
+                step = (model.decode_step_paged_fused if fused
+                        else model.decode_step_paged)
                 if routed and Km:
                     return lambda toks, lens, table, kv, hi, mi, params: \
-                        model.decode_step_paged(cfg_, params, toks, lens, kv,
-                                                table, head_idx=hi, mlp_idx=mi,
-                                                **kw)
+                        step(cfg_, params, toks, lens, kv,
+                             table, head_idx=hi, mlp_idx=mi, **kw)
                 if routed:
                     return lambda toks, lens, table, kv, hi, params: \
-                        model.decode_step_paged(cfg_, params, toks, lens, kv,
-                                                table, head_idx=hi, **kw)
+                        step(cfg_, params, toks, lens, kv,
+                             table, head_idx=hi, **kw)
                 return lambda toks, lens, table, kv, params: \
-                    model.decode_step_paged(cfg_, params, toks, lens, kv,
-                                            table, **kw)
+                    step(cfg_, params, toks, lens, kv, table, **kw)
             if routed and Km:
                 return lambda toks, lens, kv, hi, mi, params: \
                     model.decode_step(cfg_, params, toks, lens, kv,
@@ -204,10 +216,14 @@ def core_entries(cfg, out_dir):
                 "density": density, "mlp_topk": list(mlp_topk),
                 "routed": routed, "head_k": Kh, "mlp_idx_k": Km}
         if paged:
-            meta.update({"kv_block": KV_BLOCK, "kv_pool_blocks": P})
+            meta.update({"kv_block": KV_BLOCK, "kv_pool_blocks": P,
+                         "fused": fused})
+        suffix = "_paged_fused" if fused else ("_paged" if paged else "")
+        kind = ("decode_paged_fused" if fused
+                else "decode_paged" if paged else "decode")
         return Entry(
-            name=f"decode_{tag}_b{B}_n{N}" + ("_paged" if paged else ""),
-            kind="decode_paged" if paged else "decode",
+            name=f"decode_{tag}_b{B}_n{N}" + suffix,
+            kind=kind,
             fn=mk_fn(cfg, mode, density, mlp_topk),
             data=data,
             outputs=[
@@ -220,18 +236,22 @@ def core_entries(cfg, out_dir):
     for B in batches:
         topk = load_topk(out_dir, cfg, B)
         for N in seqs:
-            # each serving tag lands twice: the contiguous entry (A/B
-            # baseline, eval and the pp/tp drivers) and its block-pool
-            # twin the scheduler serves from
-            for paged in (False, True):
+            # each serving tag lands three times: the contiguous entry
+            # (A/B baseline, eval and the pp/tp drivers), its block-pool
+            # twin (deprecated gather -> dense core -> scatter shape,
+            # kept for bitwise A/B behind the runtime's twin-path flag),
+            # and the fused paged entry the scheduler serves from
+            for paged, fused in ((False, False), (True, False), (True, True)):
                 entries.append(decode_entry(B, N, "dense", 1.0, (), "dense",
-                                            paged=paged))
+                                            paged=paged, fused=fused))
                 entries.append(decode_entry(
                     B, N, "polar", cfg.critical_density, topk,
-                    f"polar_{dtag(cfg.critical_density)}", paged=paged))
+                    f"polar_{dtag(cfg.critical_density)}",
+                    paged=paged, fused=fused))
                 if cfg.mlp_sparsity:
                     entries.append(decode_entry(B, N, "dejavu", 1.0, topk,
-                                                "dejavu", paged=paged))
+                                                "dejavu", paged=paged,
+                                                fused=fused))
 
     # accuracy sweep at B=1, N=128
     if cfg.name != "llama-relu":

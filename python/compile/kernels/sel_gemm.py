@@ -70,6 +70,53 @@ def _nn_kernel(i_ref, h_ref, w_ref, o_ref, *, bm, bs):
     o_ref[pl.ds(mi * bm, bm), :] = o
 
 
+def _nt_bias_kernel(i_ref, b_ref, a_ref, w_ref, o_ref, *, bm, bs, activation):
+    mi = pl.program_id(0)
+    si = pl.program_id(1)
+    K = a_ref.shape[1]
+
+    a = a_ref[pl.ds(mi * bm, bm), :]                  # [bm, K]
+    idx = i_ref[pl.ds(si * bs, bs)]                   # [bs]
+
+    # Gather the active neuron rows AND their biases in one pass; bias add
+    # and activation happen on the tile while it is still in registers —
+    # no elementwise shell over an [M, S] temporary.
+    def gather_row(j, carry):
+        w, bias = carry
+        return (w.at[j, :].set(w_ref[idx[j], :]),
+                bias.at[j].set(b_ref[idx[j]]))
+
+    w, bias = jax.lax.fori_loop(
+        0, bs, gather_row,
+        (jnp.zeros((bs, K), jnp.float32), jnp.zeros((bs,), jnp.float32)))
+    c = jnp.dot(a, w.T) + bias[None, :]               # [bm, bs]
+    if activation == "relu":
+        c = jnp.maximum(c, 0.0)
+    o_ref[pl.ds(mi * bm, bm), pl.ds(si * bs, bs)] = c
+
+
+def _nn_bias_kernel(i_ref, b_ref, h_ref, w_ref, o_ref, *, bm, bs):
+    mi = pl.program_id(0)
+    S = h_ref.shape[1]
+    K = w_ref.shape[1]
+    h = h_ref[pl.ds(mi * bm, bm), :]                  # [bm, S]
+    nblk = S // bs
+
+    def outer(si, acc):
+        idx = i_ref[pl.ds(si * bs, bs)]
+
+        def gather_row(j, wacc):
+            return wacc.at[j, :].set(w_ref[idx[j], :])
+
+        w = jax.lax.fori_loop(0, bs, gather_row, jnp.zeros((bs, K), jnp.float32))
+        hs = jax.lax.dynamic_slice(h, (0, si * bs), (bm, bs))  # [bm, bs]
+        return acc + jnp.dot(hs, w)
+
+    o = jax.lax.fori_loop(0, nblk, outer, jnp.zeros((bm, K), jnp.float32))
+    # Output bias is dense over K: add it as the row-block is written out.
+    o_ref[pl.ds(mi * bm, bm), :] = o + b_ref[:][None, :]
+
+
 def _check(m, s, bm, bs):
     if m % bm != 0:
         raise ValueError(f"M={m} not a multiple of bm={bm}")
@@ -111,9 +158,57 @@ def sel_gemm_nn(h, w, index, bm: int = DEFAULT_BM, bs: int = DEFAULT_BS):
     )(index, h, w)
 
 
+@functools.partial(jax.jit, static_argnames=("activation", "bm", "bs"))
+def sel_gemm_nt_bias(a, w, b, index, activation: str = "none",
+                     bm: int = DEFAULT_BM, bs: int = DEFAULT_BS):
+    """C = act(a @ gather(w, index).T + gather(b, index)); bias fused."""
+    M, K = a.shape
+    S = index.shape[0]
+    bm = min(bm, M)
+    bs = min(bs, S)
+    _check(M, S, bm, bs)
+    kernel = functools.partial(_nt_bias_kernel, bm=bm, bs=bs,
+                               activation=activation)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((M, S), jnp.float32),
+        grid=(M // bm, S // bs),
+        interpret=True,
+    )(index, b, a, w)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bs"))
+def sel_gemm_nn_bias(h, w, b, index, bm: int = DEFAULT_BM,
+                     bs: int = DEFAULT_BS):
+    """C = h @ gather(w, index) + b; dense output bias fused."""
+    M, S = h.shape
+    bm = min(bm, M)
+    bs = min(bs, S)
+    _check(M, S, bm, bs)
+    kernel = functools.partial(_nn_bias_kernel, bm=bm, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((M, w.shape[1]), jnp.float32),
+        grid=(M // bm,),
+        interpret=True,
+    )(index, b, h, w)
+
+
 def sparse_mlp(x, w1, b1, w2, b2, index, bm: int = DEFAULT_BM,
                bs: int = DEFAULT_BS):
     """Full selective MLP block via the fused kernels (OPT/ReLU path)."""
     h = sel_gemm_nt(x, w1, index, activation="none", bm=bm, bs=bs)
     h = jnp.maximum(h + jnp.take(b1, index)[None, :], 0.0)
     return sel_gemm_nn(h, w2, index, bm=bm, bs=bs) + b2[None, :]
+
+
+def sparse_mlp_fused(x, w1, b1, w2, b2, index, bm: int = DEFAULT_BM,
+                     bs: int = DEFAULT_BS):
+    """Selective MLP with biases and activation fused into the kernels.
+
+    Same math as ``sparse_mlp`` but the selected rows are computed and
+    written in place: no elementwise shells between the two GEMMs, no
+    second pass over the [M, S] hidden tile.
+    """
+    h = sel_gemm_nt_bias(x, w1, b1, index, activation="relu", bm=bm, bs=bs)
+    return sel_gemm_nn_bias(h, w2, b2, index, bm=bm, bs=bs)

@@ -41,15 +41,20 @@ def _sha_kernel(hi_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *, blk, q_per_group
     # All query heads that share this KV group: rows g*qpg .. (g+1)*qpg.
     q = q_ref[b, pl.ds(g * q_per_group, q_per_group), :]  # [qpg, dh]
 
-    nblk = N // blk
+    nblk = (N + blk - 1) // blk
 
     def body(j, carry):
         o_acc, l_acc, m_acc = carry
-        kj = k_ref[b, g, pl.ds(j * blk, blk), :]  # [blk, dh]
-        vj = v_ref[b, g, pl.ds(j * blk, blk), :]
+        # Clamp the final (possibly partial) tile back into bounds; rows the
+        # clamped window re-reads from the previous tile are masked below so
+        # nothing is double-counted. Aligned tiles have start == j*blk and the
+        # extra mask term is vacuously true — bitwise identical to before.
+        start = jnp.minimum(j * blk, N - blk)
+        kj = k_ref[b, g, pl.ds(start, blk), :]    # [blk, dh]
+        vj = v_ref[b, g, pl.ds(start, blk), :]
         s = jnp.dot(q, kj.T) * scale              # [qpg, blk]
-        pos = j * blk + jax.lax.iota(jnp.int32, blk)
-        s = jnp.where((pos < n)[None, :], s, -jnp.inf)
+        pos = start + jax.lax.iota(jnp.int32, blk)
+        s = jnp.where(((pos >= j * blk) & (pos < n))[None, :], s, -jnp.inf)
         m_new = jnp.maximum(m_acc, jnp.max(s, axis=1))      # [qpg]
         p = jnp.exp(s - m_new[:, None])                     # [qpg, blk]
         alpha = jnp.exp(m_acc - m_new)                      # [qpg]
@@ -82,8 +87,8 @@ def sha_decode(q, k, v, head_index, lengths, q_per_group: int = 1,
     T = head_index.shape[1]
     if H != G * q_per_group:
         raise ValueError(f"H={H} != G={G} * q_per_group={q_per_group}")
-    if N % blk != 0:
-        raise ValueError(f"KV length {N} not a multiple of blk={blk}")
+    # N need not divide blk: the kernel masks a clamped partial final tile.
+    blk = min(blk, N)
     kernel = functools.partial(_sha_kernel, blk=blk, q_per_group=q_per_group)
     return pl.pallas_call(
         kernel,
@@ -91,6 +96,82 @@ def sha_decode(q, k, v, head_index, lengths, q_per_group: int = 1,
         grid=(B, T),
         interpret=True,
     )(head_index, lengths, q, k, v)
+
+
+def _sha_paged_kernel(hi_ref, len_ref, tbl_ref, q_ref, kpool_ref, vpool_ref,
+                      o_init_ref, o_ref, *, q_per_group):
+    del o_init_ref  # aliased to o_ref; unselected head rows keep its zeros
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    g = hi_ref[b, t]            # selected head/group id for this program
+    n = len_ref[b]              # valid KV length for this sequence
+    dh = q_ref.shape[2]
+    bs = kpool_ref.shape[2]     # pool block size (rows per KV block)
+    nblk = tbl_ref.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    qpg = q_per_group
+
+    q = q_ref[b, pl.ds(g * qpg, qpg), :]          # [qpg, dh]
+
+    def body(j, carry):
+        o_acc, l_acc, m_acc = carry
+        # The block table IS the address computation: tile j of this
+        # sequence's KV stream lives in pool block tbl[b, j]. Null blocks
+        # (id 0) past the valid length are fully masked by pos < n.
+        bid = tbl_ref[b, j]
+        kj = kpool_ref[bid, g]                    # [bs, dh]
+        vj = vpool_ref[bid, g]
+        s = jnp.dot(q, kj.T) * scale              # [qpg, bs]
+        pos = j * bs + jax.lax.iota(jnp.int32, bs)
+        s = jnp.where((pos < n)[None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_acc, jnp.max(s, axis=1))      # [qpg]
+        p = jnp.exp(s - m_new[:, None])                     # [qpg, bs]
+        alpha = jnp.exp(m_acc - m_new)                      # [qpg]
+        l_new = alpha * l_acc + jnp.sum(p, axis=1)
+        o_new = alpha[:, None] * o_acc + jnp.dot(p, vj)     # [qpg, dh]
+        return o_new, l_new, m_new
+
+    o, l, _ = jax.lax.fori_loop(
+        0, nblk, body,
+        (
+            jnp.zeros((qpg, dh), jnp.float32),
+            jnp.zeros((qpg,), jnp.float32),
+            jnp.full((qpg,), -jnp.inf, jnp.float32),
+        ),
+    )
+    o_ref[b, pl.ds(g * qpg, qpg), :] = o / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("q_per_group",))
+def sha_decode_paged(q, k_pool, v_pool, block_table, head_index, lengths,
+                     q_per_group: int = 1):
+    """Fused paged selective-head decode: table-indexed KV, dense output.
+
+    Each (b, t) program resolves its KV tile addresses through the block
+    table (the scalar-prefetch pattern from the module notes) instead of
+    reading a pre-gathered dense cache, and writes its query-head rows
+    straight into the dense [B, H, dh] layout via an aliased zero-filled
+    output — no gathered [B, G, N, dh] intermediate, no compact->dense
+    scatter afterwards.
+
+    q: [B, H, dh]; k_pool/v_pool: [P, G, bs, dh] (one layer, one of k/v);
+    block_table: [B, nblk] int32; head_index: [B, T]; lengths: [B].
+    Returns [B, H, dh] with unselected head rows zero.
+    """
+    B, H, dh = q.shape
+    G = k_pool.shape[1]
+    T = head_index.shape[1]
+    if H != G * q_per_group:
+        raise ValueError(f"H={H} != G={G} * q_per_group={q_per_group}")
+    kernel = functools.partial(_sha_paged_kernel, q_per_group=q_per_group)
+    o_init = jnp.zeros((B, H, dh), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+        grid=(B, T),
+        interpret=True,
+        input_output_aliases={6: 0},
+    )(head_index, lengths, block_table, q, k_pool, v_pool, o_init)
 
 
 def dense_decode_attention(q, k, v, lengths, q_per_group: int = 1,

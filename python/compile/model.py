@@ -182,6 +182,8 @@ def mlp_sparse(cfg, params, l, h, top_k: int, impl: str = "xla", idx=None):
         idx = idx.astype(jnp.int32)
     args = (h, params["w1"][l], params["b1"][l], params["w2"][l],
             params["b2"][l], idx)
+    if impl == "pallas-fused":
+        return sel_gemm.sparse_mlp_fused(*args)
     if impl == "pallas":
         return sel_gemm.sparse_mlp(*args)
     return kref.sparse_mlp_ref(*args)
@@ -418,36 +420,38 @@ def prefill_chunk_paged(cfg: ModelConfig, params, tokens, lengths, offset,
 # ---------------------------------------------------------------------------
 
 
-def _decode_attention(cfg, params, l, x, h, kv_l, lengths, *, sparse: bool,
-                      top_k: int, impl: str, head_idx=None):
-    """One attention block in decode. x: residual [B,d], h: normed [B,d].
-
-    kv_l: this layer's cache [2,B,G,N,dh] (weights indexed by absolute l).
-    ``head_idx`` (i32 [B, top_k]) overrides the in-graph router with the
-    runtime's per-request selection. Returns (attn_out [B,d], k_l, v_l).
-    """
-    B = x.shape[0]
-    G, qpg, dh = cfg.n_groups, cfg.q_per_group, cfg.d_head
-    pos = lengths - 1
-
+def _decode_qkv(cfg, params, l, h, pos):
+    """Projections + rope for one decode position. h: normed [B,d].
+    Returns (q [B,H,dh], k_new [B,G,dh], v_new [B,G,dh])."""
+    B = h.shape[0]
+    G, dh = cfg.n_groups, cfg.d_head
     q = (h @ params["wq"][l] + params["bq"][l]).reshape(B, cfg.n_heads, dh)
     k_new = (h @ params["wk"][l] + params["bk"][l]).reshape(B, G, dh)
     v_new = (h @ params["wv"][l] + params["bv"][l]).reshape(B, G, dh)
     if cfg.pos == "rope":
         q = rope(q, pos, dh)          # [B,H,dh], positions [B]
         k_new = rope(k_new, pos, dh)  # [B,G,dh]
+    return q, k_new, v_new
 
-    def upd(cache_b, new_b, p):
-        return jax.lax.dynamic_update_slice(cache_b, new_b[:, None, :], (0, p, 0))
 
-    k_l = jax.vmap(upd)(kv_l[0], k_new, pos)   # [B,G,N,dh]
-    v_l = jax.vmap(upd)(kv_l[1], v_new, pos)
+def _select_heads(params, l, h, top_k, head_idx):
+    """Resolve the per-request head selection: runtime-provided index, or
+    the in-graph router's top-k."""
+    if head_idx is None:
+        logits = attn_router_logits(params, l, h)      # [B,G]
+        _, head_idx = top_k_desc(logits, top_k)        # batch head index
+        head_idx = head_idx.astype(jnp.int32)
+    return head_idx
 
+
+def _attend(cfg, params, l, h, q, k_l, v_l, lengths, *, sparse: bool,
+            top_k: int, impl: str, head_idx=None):
+    """Attention over a dense per-layer cache view k_l/v_l [B,G,N,dh].
+    Returns attn_out [B,d] (already through the output projection)."""
+    B = q.shape[0]
+    G, qpg, dh = cfg.n_groups, cfg.q_per_group, cfg.d_head
     if sparse and top_k < G:
-        if head_idx is None:
-            logits = attn_router_logits(params, l, h)      # [B,G]
-            _, head_idx = top_k_desc(logits, top_k)        # batch head index
-            head_idx = head_idx.astype(jnp.int32)
+        head_idx = _select_heads(params, l, h, top_k, head_idx)
         if impl == "pallas":
             o_sel = sha_decode.sha_decode(q, k_l, v_l, head_idx, lengths, qpg)
         else:
@@ -463,8 +467,30 @@ def _decode_attention(cfg, params, l, x, h, kv_l, lengths, *, sparse: bool,
         else:
             o = kref.dense_decode_attention_ref(q, k_l, v_l, lengths, qpg)
         o = o.reshape(B, cfg.n_heads, dh)
+    return o.reshape(B, -1) @ params["wo"][l] + params["bo"][l]
 
-    attn_out = o.reshape(B, -1) @ params["wo"][l] + params["bo"][l]
+
+def _decode_attention(cfg, params, l, x, h, kv_l, lengths, *, sparse: bool,
+                      top_k: int, impl: str, head_idx=None):
+    """One attention block in decode. x: residual [B,d], h: normed [B,d].
+
+    kv_l: this layer's cache [2,B,G,N,dh] (weights indexed by absolute l).
+    ``head_idx`` (i32 [B, top_k]) overrides the in-graph router with the
+    runtime's per-request selection. Returns (attn_out [B,d], k_l, v_l).
+    """
+    del x
+    pos = lengths - 1
+    q, k_new, v_new = _decode_qkv(cfg, params, l, h, pos)
+
+    def upd(cache_b, new_b, p):
+        return jax.lax.dynamic_update_slice(cache_b, new_b[:, None, :], (0, p, 0))
+
+    k_l = jax.vmap(upd)(kv_l[0], k_new, pos)   # [B,G,N,dh]
+    v_l = jax.vmap(upd)(kv_l[1], v_new, pos)
+
+    attn_out = _attend(cfg, params, l, h, q, k_l, v_l, lengths,
+                       sparse=sparse, top_k=top_k, impl=impl,
+                       head_idx=head_idx)
     return attn_out, k_l, v_l
 
 
@@ -549,6 +575,136 @@ def decode_step(cfg: ModelConfig, params, tokens, lengths, kv, *,
         head_idx=head_idx, mlp_idx=mlp_idx,
     )
     return final_logits(cfg, params, x), kv_new
+
+
+# ---------------------------------------------------------------------------
+# Fused paged decode (no gather/scatter shells)
+#
+# The twin path above (decode_step_paged) stages a dense [L,2,B,G,N,dh]
+# intermediate on both sides of an unchanged core. The fused path kills
+# both shells: each layer writes its single new-position KV row straight
+# into its pool block through the table, then reads KV through the table —
+# per-layer for the XLA oracle, per-tile inside the kernel for the pallas
+# path (sha_decode_paged resolves tile addresses from the block table and
+# writes selected head rows into the dense layout via an aliased output).
+#
+# The floating-point op sequence is identical to the twin path — only data
+# movement changes — so live-slot logits match the twin bit for bit. The
+# one divergence is don't-care by construction: padding slots whose tables
+# are all-null write to (and may then read back) reserved block 0, where
+# the twin's gather-before-write would have seen the pre-step rows. The
+# aliasing contract (block manager) guarantees live slots never share a
+# block inside any write window, so their views are unaffected.
+# ---------------------------------------------------------------------------
+
+
+def _gather_layer_kv(kv_pool, l, block_table):
+    """One layer's dense cache view through the table:
+    kv_pool [L,2,P,G,bs,dh] -> (k_l, v_l) each [B,G,NB*bs,dh]."""
+    _, _, _, G, bs, dh = kv_pool.shape
+    B, NB = block_table.shape
+    flat = jnp.take(kv_pool[l], block_table.reshape(-1), axis=1)
+    g = flat.reshape(2, B, NB, G, bs, dh)
+    g = jnp.moveaxis(g, 2, 3).reshape(2, B, G, NB * bs, dh)
+    return g[0], g[1]
+
+
+def _write_kv_row(kv_pool, l, block_table, lengths, k_new, v_new):
+    """Write the new position's K/V row for layer l directly into its pool
+    block — no dense intermediate, no whole-view scatter."""
+    bs = kv_pool.shape[4]
+    pos = lengths - 1
+    blk = jnp.take_along_axis(block_table, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    kv_pool = kv_pool.at[l, 0, blk, :, off, :].set(k_new)
+    return kv_pool.at[l, 1, blk, :, off, :].set(v_new)
+
+
+def _attend_fused(cfg, params, l, h, q, kv_pool, block_table, lengths, *,
+                  sparse: bool, top_k: int, head_idx=None):
+    """Pallas fused attention: the kernel indexes the block table itself and
+    writes selected head rows straight into the dense [B,H,dh] layout."""
+    B = q.shape[0]
+    G, qpg = cfg.n_groups, cfg.q_per_group
+    if sparse and top_k < G:
+        head_idx = _select_heads(params, l, h, top_k, head_idx)
+    else:
+        head_idx = jnp.broadcast_to(
+            jnp.arange(G, dtype=jnp.int32)[None, :], (B, G))
+    o = sha_decode.sha_decode_paged(
+        q, kv_pool[l, 0], kv_pool[l, 1], block_table, head_idx, lengths, qpg)
+    return o.reshape(B, -1) @ params["wo"][l] + params["bo"][l]
+
+
+def decode_core_paged(cfg: ModelConfig, params, x, lengths, kv_pool,
+                      block_table, *, mode: str = "dense",
+                      density: float = 1.0, mlp_topk: tuple = (),
+                      attn_impl: str = "xla", mlp_impl: str = "xla",
+                      head_idx=None, mlp_idx=None):
+    """Fused paged decode layers on hidden x [B,d]. Returns (x, kv_pool').
+
+    Same math as :func:`decode_core` over the gathered view, but KV moves
+    block-at-a-time: the new row lands in its pool block before attention
+    reads the layer's cache through the table."""
+    if mode not in ("dense", "dejavu", "polar", "teal", "cats"):
+        raise ValueError(mode)
+    attn_k = max(1, min(cfg.n_groups, round(cfg.n_groups * density)))
+    mlp_sparse_on = mode in ("dejavu", "polar") and cfg.mlp_sparsity and mlp_topk
+    pos = lengths - 1
+
+    for l in range(cfg.n_layers):
+        h = layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q, k_new, v_new = _decode_qkv(cfg, params, l, h, pos)
+        kv_pool = _write_kv_row(kv_pool, l, block_table, lengths, k_new, v_new)
+        sparse_attn = mode == "polar" and l > 0
+        hi_l = None if head_idx is None else head_idx[l]
+        if attn_impl == "pallas":
+            attn_out = _attend_fused(
+                cfg, params, l, h, q, kv_pool, block_table, lengths,
+                sparse=sparse_attn, top_k=attn_k, head_idx=hi_l)
+        else:
+            k_l, v_l = _gather_layer_kv(kv_pool, l, block_table)
+            attn_out = _attend(
+                cfg, params, l, h, q, k_l, v_l, lengths,
+                sparse=sparse_attn, top_k=attn_k, impl=attn_impl,
+                head_idx=hi_l)
+        x = x + attn_out
+        h2 = layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        if mlp_sparse_on and mlp_topk[l] < cfg.d_ff:
+            mlp_out = mlp_sparse(
+                cfg, params, l, h2, mlp_topk[l],
+                "pallas-fused" if mlp_impl == "pallas" else mlp_impl,
+                idx=None if mlp_idx is None else mlp_idx[l],
+            )
+        elif mode in ("teal", "cats") and density < 1.0:
+            mlp_out = mlp_masked(cfg, params, l, h2, mode, density)
+        else:
+            mlp_out = mlp_dense(cfg, params, l, h2)
+        x = x + mlp_out
+    return x, kv_pool
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "mode", "density", "mlp_topk", "attn_impl", "mlp_impl"),
+)
+def decode_step_paged_fused(cfg: ModelConfig, params, tokens, lengths,
+                            kv_pool, block_table, *, mode: str = "dense",
+                            density: float = 1.0, mlp_topk: tuple = (),
+                            attn_impl: str = "xla", mlp_impl: str = "xla",
+                            head_idx=None, mlp_idx=None):
+    """One fused decode step over the block pool (same contract and inputs
+    as :func:`decode_step_paged`, bit-identical live-slot logits) without
+    the dense [L,2,B,G,N,dh] intermediate on either side of the core."""
+    pos = lengths - 1
+    x = _embed(cfg, params, tokens, pos)
+    x, kv_pool = decode_core_paged(
+        cfg, params, x, lengths, kv_pool, block_table,
+        mode=mode, density=density, mlp_topk=mlp_topk,
+        attn_impl=attn_impl, mlp_impl=mlp_impl,
+        head_idx=head_idx, mlp_idx=mlp_idx,
+    )
+    return final_logits(cfg, params, x), kv_pool
 
 
 # ---------------------------------------------------------------------------

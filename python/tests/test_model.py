@@ -305,6 +305,119 @@ def test_paged_prefix_sharing_reuses_blocks(setup):
         np.asarray(kv_ref)[:, :, 0, :, 16:20])
 
 
+def test_fused_paged_decode_matches_twin_bitwise(setup):
+    """The fused path (per-layer table reads, direct pool-row write, no
+    dense KV intermediate) must reproduce the twin gather -> dense core ->
+    scatter path BIT FOR BIT: same logits, same gathered cache view, and
+    physical blocks outside every table untouched. The llama-gqa fixture
+    param covers q_per_group > 1."""
+    cfg, params = setup
+    rng = np.random.default_rng(33)
+    B, S, N, bs = 2, 8, 32, 8
+    toks = rng.integers(0, 250, (B, S)).astype(np.int32)
+    lens0 = np.array([S, S - 2], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), N)
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    pool, table = _pool_from_dense(kv, bs, seed=2)
+    pool0 = np.asarray(pool).copy()
+
+    L, G = cfg.n_layers, cfg.n_groups
+    k = max(1, G // 2)
+    # deliberate TIES in head_idx: every selected group id duplicated
+    hi_tie = jnp.asarray(
+        np.zeros((L, B, k), np.int32) + np.arange(k, dtype=np.int32)[None, None, :] // 2)
+    cases = [
+        dict(mode="dense"),
+        dict(mode="polar", density=0.5),
+        dict(mode="polar", density=0.5, head_idx=hi_tie),
+    ]
+    for kw in cases:
+        want, pool_t = model.decode_step_paged(
+            cfg, params, new, lens, pool, table, **kw)
+        got, pool_f = model.decode_step_paged_fused(
+            cfg, params, new, lens, pool, table, **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(model.gather_block_kv(pool_f, table)),
+            np.asarray(model.gather_block_kv(pool_t, table)))
+        # fused writes nothing outside the tables' blocks
+        unused = sorted(set(range(pool0.shape[2]))
+                        - set(np.asarray(table).ravel()))
+        np.testing.assert_array_equal(
+            np.asarray(pool_f)[:, :, unused], pool0[:, :, unused])
+
+
+def test_fused_paged_decode_cow_shared_boundary_block(setup):
+    """Two requests share a read-only prefix block right at the boundary of
+    their write windows (the post-COW layout). The fused step must leave
+    the shared block bit-identical, keep logits equal to the twin path, and
+    write each request's new row only into its private block."""
+    cfg, params = setup
+    rng = np.random.default_rng(34)
+    B, S, N, bs = 2, 8, 32, 8
+    toks = np.tile(rng.integers(0, 250, (1, S)).astype(np.int32), (B, 1))
+    lens0 = np.array([S, S], np.int32)   # same prompt -> identical block 0
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), N)
+    pool, table = _pool_from_dense(kv, bs, seed=3)
+    # rewrite the tables so both requests name THE SAME physical block for
+    # their full first block (positions 0..bs-1) and keep private blocks
+    # beyond it; the decode write at pos=S lands in block index 1 (private).
+    table = np.asarray(table).copy()
+    shared = int(table[0, 0])
+    table[1, 0] = shared
+    pool = np.asarray(pool).copy()
+    pool[:, :, shared] = np.asarray(kv)[:, :, 0, :, :bs]  # canonical content
+    pool, table = jnp.asarray(pool), jnp.asarray(table)
+    pool0 = np.asarray(pool).copy()
+
+    new = jnp.asarray(np.array([5, 7], np.int32))
+    lens = jnp.asarray(lens0 + 1)        # pos = S = bs -> first row of blk 1
+    want, pool_t = model.decode_step_paged(
+        cfg, params, new, lens, pool, table, mode="dense")
+    got, pool_f = model.decode_step_paged_fused(
+        cfg, params, new, lens, pool, table, mode="dense")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the shared boundary block survives both paths bit-exactly
+    np.testing.assert_array_equal(
+        np.asarray(pool_f)[:, :, shared], pool0[:, :, shared])
+    np.testing.assert_array_equal(
+        np.asarray(pool_t)[:, :, shared], pool0[:, :, shared])
+    # each request's new row landed in its private block-1
+    for b in range(B):
+        blk = int(np.asarray(table)[b, 1])
+        row_f = np.asarray(pool_f)[:, :, blk, :, 0]
+        row_t = np.asarray(pool_t)[:, :, blk, :, 0]
+        np.testing.assert_array_equal(row_f, row_t)
+        assert not np.array_equal(row_f, pool0[:, :, blk, :, 0])
+
+
+def test_fused_paged_decode_chain_stays_bitwise(setup):
+    """A multi-step decode chain alternating paths never diverges: running
+    the fused entry for several steps produces the same pool and logits
+    trajectory as the twin entry."""
+    cfg, params = setup
+    rng = np.random.default_rng(35)
+    B, S, N, bs = 2, 6, 32, 8
+    toks = rng.integers(0, 250, (B, S)).astype(np.int32)
+    lens0 = np.array([S, S - 1], np.int32)
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), N)
+    pool_t, table = _pool_from_dense(kv, bs, seed=4)
+    pool_f = pool_t
+    lens = lens0
+    for step in range(4):
+        new = jnp.asarray(rng.integers(0, 250, B).astype(np.int32))
+        lens = lens + 1
+        lt, pool_t = model.decode_step_paged(
+            cfg, params, new, jnp.asarray(lens), pool_t, table, mode="dense")
+        lf, pool_f = model.decode_step_paged_fused(
+            cfg, params, new, jnp.asarray(lens), pool_f, table, mode="dense")
+        np.testing.assert_array_equal(np.asarray(lf), np.asarray(lt))
+    np.testing.assert_array_equal(
+        np.asarray(model.gather_block_kv(pool_f, table)),
+        np.asarray(model.gather_block_kv(pool_t, table)))
+
+
 def test_aot_paged_entries_contract(tmp_path):
     """Manifest contract of the paged matrix: every serving (batch, seq)
     bucket gains a prefill twin taking [tokens, lengths, offset,
@@ -341,6 +454,17 @@ def test_aot_paged_entries_contract(tmp_path):
     pp = entries["decode_polar_d0500_b4_n128_paged"]
     assert [d["name"] for d in pp.data] == \
         ["tokens", "lengths", "block_table", "kv", "head_idx"]
+
+    # every paged decode twin has a fused sibling with IDENTICAL data and
+    # output specs (the runtime swaps by name, inputs untouched) and a
+    # meta marker; twins carry fused=False so the deprecation is explicit
+    for name, e in entries.items():
+        if e.kind != "decode_paged":
+            continue
+        f = entries[name + "_fused"]
+        assert f.kind == "decode_paged_fused"
+        assert f.data == e.data and f.outputs == e.outputs, name
+        assert f.meta["fused"] is True and e.meta["fused"] is False
 
     # contiguous twins stay (A/B baseline, eval, pp/tp drivers)
     for name in ("decode_dense_b4_n128", "prefill_b4_s128"):

@@ -1,8 +1,12 @@
 //! `bench decode-breakdown` — A/B breakdown of one decode step's cost:
 //! h2d / compute / d2h / host-surgery time and, crucially, the bytes
 //! crossing the host<->device boundary per step, for the legacy host-KV
-//! path vs. the resident-device-KV path. Emits `BENCH_decode.json` so
-//! every PR's CI run records the perf trajectory.
+//! path vs. the resident-device-KV path — plus the paged fused-vs-twin
+//! contrast: the deprecated twin entries stage a dense KV view both ways
+//! around the decode core (`gather_bytes`/`scatter_bytes`), the fused
+//! entries index the block pool in place and must report ~0. The run
+//! FAILS if the fused path moves shell bytes. Emits `BENCH_decode.json`
+//! so every PR's CI run records the perf trajectory.
 //!
 //! `--smoke` runs against the deterministic mock engine (no AOT
 //! artifacts): byte counters are analytic and reproducible; timing fields
@@ -10,11 +14,11 @@
 
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::mock::MockEngine;
 use crate::coordinator::{Mode, SparsityController, StepEngine};
-use crate::runtime::{Engine, Executor, KvCache, StepProfile, Tensor};
+use crate::runtime::{BlockTables, Engine, Executor, KvCache, StepProfile, Tensor};
 use crate::substrate::argparse::Args;
 use crate::substrate::json::Json;
 use crate::tokenizer::PAD;
@@ -58,6 +62,52 @@ fn run_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Result<P
     Ok(PathRun { profile: e.profile_snapshot(), n, wall_s: t0.elapsed().as_secs_f64() })
 }
 
+/// The paged counterpart of [`run_path`]: the same steady batch and
+/// decode loop, but served from the block pool through per-slot block
+/// tables (slot `i` owns blocks `1 + i*width ..`). Twin entries account
+/// the dense view they stage both ways (`gather_bytes`/`scatter_bytes`);
+/// fused entries index the pool in place and account 0. The profile
+/// covers only the decode loop.
+fn run_paged_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Result<PathRun> {
+    let c = e.prefill_chunk_len();
+    let n = e.seq_buckets()[0];
+    let (bs, pool_blocks) = e.kv_layout();
+    let width = (n + bs - 1) / bs;
+    if 1 + b * width > pool_blocks {
+        bail!("pool too small: {pool_blocks} blocks for {b} slots x {width}");
+    }
+    let prompt_len = 4.min(c).min(n - 1);
+    let mut toks = vec![PAD; b * c];
+    let mut lens = vec![0i32; b];
+    let offs = vec![0i32; b];
+    let mut flat = vec![0i32; b * width];
+    for i in 0..b {
+        for j in 0..prompt_len {
+            toks[i * c + j] = 40 + i as i32;
+        }
+        lens[i] = prompt_len as i32;
+        for w in 0..width {
+            flat[i * width + w] = (1 + i * width + w) as i32;
+        }
+    }
+    let tables = BlockTables::new(flat, b, width)?;
+    let out = e.prefill_chunk_paged(&toks, &lens, &offs, &tables, e.new_kv_pool()?)?;
+    let mut kv = out.kv;
+    e.reset_profile();
+    let tokens: Vec<i32> = (0..b).map(|i| 60 + i as i32).collect();
+    let lengths = vec![(prompt_len + 1) as i32; b];
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let o = e.decode_paged(tag, &tokens, &lengths, &tables, kv, None)?;
+        kv = o.kv;
+    }
+    Ok(PathRun {
+        profile: e.profile_snapshot(),
+        n: tables.n(bs),
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
 fn path_json(r: &PathRun) -> Json {
     let mut j = r.profile.to_json();
     j.set("wall_ms", (r.wall_s * 1e3).into());
@@ -66,6 +116,13 @@ fn path_json(r: &PathRun) -> Json {
 
 fn per_step_host_copy(r: &PathRun) -> f64 {
     r.profile.host_copy_bytes() as f64 / r.profile.decode_steps.max(1) as f64
+}
+
+/// Gather + scatter shell bytes per decode step (the dense-view traffic
+/// the twin entries stage around the core; fused must be ~0).
+fn per_step_shell(r: &PathRun) -> f64 {
+    (r.profile.gather_bytes + r.profile.scatter_bytes) as f64
+        / r.profile.decode_steps.max(1) as f64
 }
 
 pub fn run(rest: &[String]) -> Result<()> {
@@ -90,13 +147,17 @@ pub fn run(rest: &[String]) -> Result<()> {
     let b = p.get_usize("batch").map_err(anyhow::Error::msg)?;
     let steps = p.get_usize("steps").map_err(anyhow::Error::msg)?;
 
-    let (engine_label, base, fast) = if p.get_bool("smoke") {
+    let (engine_label, base, fast, twin, fused) = if p.get_bool("smoke") {
         let base_e = MockEngine::new().with_host_kv_path(true);
         let fast_e = MockEngine::new();
+        let twin_e = MockEngine::new().with_twin_kv_path(true);
+        let fused_e = MockEngine::new();
         (
             "mock".to_string(),
             run_path(&base_e, "dense", b, steps)?,
             run_path(&fast_e, "dense", b, steps)?,
+            run_paged_path(&twin_e, "dense", b, steps)?,
+            run_paged_path(&fused_e, "dense", b, steps)?,
         )
     } else {
         let dir = std::path::PathBuf::from(p.get("artifacts")).join(p.get("model"));
@@ -107,17 +168,22 @@ pub fn run(rest: &[String]) -> Result<()> {
         let mode = Mode::parse(p.get("mode"), exec.config().critical_density)?;
         let tag = SparsityController::new(mode).decode_tag();
         let base_e = Engine::new(exec.clone()).with_kv_host_path(true);
-        let fast_e = Engine::new(exec).with_kv_host_path(false);
+        let fast_e = Engine::new(exec.clone()).with_kv_host_path(false);
+        let twin_e = Engine::new(exec.clone()).with_twin_kv_path(true);
+        let fused_e = Engine::new(exec).with_twin_kv_path(false);
         (
             p.get("model").to_string(),
             run_path(&base_e, &tag, b, steps)?,
             run_path(&fast_e, &tag, b, steps)?,
+            run_paged_path(&twin_e, &tag, b, steps)?,
+            run_paged_path(&fused_e, &tag, b, steps)?,
         )
     };
 
     let (hc_base, hc_fast) = (per_step_host_copy(&base), per_step_host_copy(&fast));
     let reduction = if hc_fast > 0.0 { hc_base / hc_fast } else { f64::INFINITY };
     let reduction = (reduction * 1e4).round() / 1e4;
+    let (sh_twin, sh_fused) = (per_step_shell(&twin), per_step_shell(&fused));
     let report = Json::obj(vec![
         ("bench", "decode-breakdown".into()),
         ("engine", engine_label.into()),
@@ -129,9 +195,13 @@ pub fn run(rest: &[String]) -> Result<()> {
             Json::obj(vec![
                 ("baseline_host_kv", path_json(&base)),
                 ("resident_device_kv", path_json(&fast)),
+                ("paged_twin", path_json(&twin)),
+                ("paged_fused", path_json(&fused)),
             ]),
         ),
         ("host_copy_bytes_reduction", reduction.into()),
+        ("shell_bytes_per_step_twin", sh_twin.into()),
+        ("shell_bytes_per_step_fused", sh_fused.into()),
     ]);
 
     println!("decode-breakdown ({engine_label}, b={b}, n={}, {steps} steps)", base.n);
@@ -140,11 +210,23 @@ pub fn run(rest: &[String]) -> Result<()> {
         hc_base, hc_fast
     );
     println!(
+        "  paged shell bytes/step: {:.0} (twin gather+scatter) -> {:.0} (fused)",
+        sh_twin, sh_fused
+    );
+    println!(
         "  step wall: {:.3} ms -> {:.3} ms",
         base.wall_s * 1e3 / steps.max(1) as f64,
         fast.wall_s * 1e3 / steps.max(1) as f64
     );
     super::harness::write_bench_json(p.get("out"), &report)?;
+    // the acceptance gate this bench exists for: fused entries index the
+    // pool in place — any shell traffic means the twin path leaked back
+    if sh_fused != 0.0 {
+        bail!("fused paged decode moved {sh_fused} shell bytes/step — expected 0");
+    }
+    if sh_twin <= 0.0 {
+        bail!("twin paged decode reported no shell bytes — A/B baseline broken");
+    }
     Ok(())
 }
 
@@ -171,5 +253,27 @@ mod tests {
         assert_eq!(per_step_host_copy(&rf), 9664.0);
         let reduction = per_step_host_copy(&rb) / per_step_host_copy(&rf);
         assert!(reduction >= 2.0, "got {reduction}x");
+    }
+
+    /// The fused acceptance gate: at b=8/n=16 the twin paged path stages
+    /// the dense [L,2,B,G,N,dh] view both ways (8192 B each, per step);
+    /// the fused path moves zero shell bytes. Host<->device traffic is
+    /// identical — the shells are device-side movement, so the A/B
+    /// isolates exactly what fusion kills.
+    #[test]
+    fn smoke_paged_fused_kills_shell_bytes() {
+        let twin = MockEngine::new().with_twin_kv_path(true);
+        let fused = MockEngine::new();
+        let rt = run_paged_path(&twin, "dense", 8, 64).unwrap();
+        let rf = run_paged_path(&fused, "dense", 8, 64).unwrap();
+        assert_eq!(rt.profile.decode_steps, 64);
+        assert_eq!(rf.profile.decode_steps, 64);
+        // dense view = 2*2*8*2*16*2 f32 = 2048 elems = 8192 B each way
+        assert_eq!(rt.profile.gather_bytes, 64 * 8192);
+        assert_eq!(rt.profile.scatter_bytes, 64 * 8192);
+        assert_eq!(per_step_shell(&rt), 16384.0);
+        assert_eq!(rf.profile.gather_bytes, 0);
+        assert_eq!(rf.profile.scatter_bytes, 0);
+        assert_eq!(per_step_host_copy(&rt), per_step_host_copy(&rf));
     }
 }

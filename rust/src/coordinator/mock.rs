@@ -19,9 +19,12 @@
 //! The mock also mirrors the engine's two KV paths for `bench
 //! decode-breakdown --smoke`: in the default *resident* mode a host KV is
 //! "uploaded" once and then flows step-to-step as a buffer; in
-//! `with_host_kv_path` mode every step pays the full round trip. Byte
-//! accounting is analytic (computed from the shapes the real paths would
-//! move), so the breakdown is deterministic.
+//! `with_host_kv_path` mode every step pays the full round trip. A second
+//! A/B (`with_twin_kv_path`) mirrors the paged fused-vs-twin contrast:
+//! twin decode accounts the dense gather/scatter shell bytes the
+//! deprecated twin entries stage around the core, fused (the default)
+//! accounts zero. Byte accounting is analytic (computed from the shapes
+//! the real paths would move), so the breakdown is deterministic.
 //!
 //! **Paged KV**: the mock implements the full block-pool path the
 //! scheduler serves from (`prefill_chunk_paged` / `decode_paged` /
@@ -131,6 +134,11 @@ pub struct MockEngine {
     chunk_delay: Duration,
     /// A/B: model the legacy host-KV path (full cache both ways per step).
     host_kv_path: bool,
+    /// A/B: model the deprecated twin paged entries (gather a dense KV
+    /// view, run the dense core, scatter it back). Default false = the
+    /// fused entries, which index the pool in place and move zero shell
+    /// bytes — `gather_bytes`/`scatter_bytes` stay at 0.
+    twin_kv_path: bool,
     /// Override the paged pool's block count (None = the no-sharing
     /// worst case of the bucket ladder). Overload tests shrink this so
     /// block pressure bites long before slot pressure.
@@ -175,6 +183,7 @@ impl MockEngine {
             step_delay: Duration::ZERO,
             chunk_delay: Duration::ZERO,
             host_kv_path: false,
+            twin_kv_path: false,
             pool_blocks: None,
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
@@ -253,6 +262,13 @@ impl MockEngine {
     /// Model the legacy host-KV decode path (the A/B baseline).
     pub fn with_host_kv_path(mut self, host: bool) -> Self {
         self.host_kv_path = host;
+        self
+    }
+
+    /// Model the deprecated twin paged decode path (gather/scatter
+    /// shells around a dense core) for fused-vs-twin A/B runs.
+    pub fn with_twin_kv_path(mut self, twin: bool) -> Self {
+        self.twin_kv_path = twin;
         self
     }
 
@@ -636,6 +652,11 @@ impl StepEngine for MockEngine {
             let mut p = lock_clean(&self.profile);
             p.prefill_ns += t0.elapsed().as_nanos() as u64;
             p.prefill_chunks += 1;
+            // the prefill twin still stages the dense view both ways (no
+            // fused prefill entry yet — decode is the per-token hot path)
+            let view = (self.cfg.kv_elems(b, n) * 4) as u64;
+            p.gather_bytes += view;
+            p.scatter_bytes += view;
         }
         Ok(PagedStepOutput {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
@@ -715,10 +736,20 @@ impl StepEngine for MockEngine {
         let io_bytes =
             (tokens.len() * 4 + lengths.len() * 4 + tables.flat.len() * 4) as u64;
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
+        // shell accounting: the deprecated twin entries stage a dense
+        // [L,2,B,G,N,dh] view both ways around the decode core; the fused
+        // entries index the pool in place and move nothing
+        let shell_bytes = if self.twin_kv_path {
+            (self.cfg.kv_elems(b, n) * 4) as u64
+        } else {
+            0
+        };
         let kv_out = if self.host_kv_path {
             let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + pool_bytes;
             p.d2h_bytes += logits_bytes + pool_bytes;
+            p.gather_bytes += shell_bytes;
+            p.scatter_bytes += shell_bytes;
             p.decode_steps += 1;
             PagedKv::from_tensor(&t, p_blocks, bs)?
         } else {
@@ -728,6 +759,8 @@ impl StepEngine for MockEngine {
             let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + uploaded;
             p.d2h_bytes += logits_bytes;
+            p.gather_bytes += shell_bytes;
+            p.scatter_bytes += shell_bytes;
             p.decode_steps += 1;
             PagedKv { store, pool_blocks: p_blocks, block: bs }
         };

@@ -650,6 +650,95 @@ mod scheduler_tests {
         assert_eq!(s.kv_blocks_in_use(), 0, "blocks leaked after drain");
     }
 
+    /// Fused-vs-twin A/B on a multi-request paged workload: the default
+    /// (fused) engine reproduces every per-block fingerprint with no
+    /// foreign aliasing and ZERO gather/scatter shell bytes per decode
+    /// step, while a twin-path engine run of the same workload produces
+    /// bit-identical fingerprints and token streams but pays the dense
+    /// KV view both ways around every decode step.
+    #[test]
+    fn fused_paged_decode_moves_zero_shell_bytes() {
+        let run = |twin: bool| {
+            let mut s = Scheduler::new(
+                MockEngine::new().with_twin_kv_path(twin),
+                SparsityController::new(Mode::Polar { density: 0.5 }),
+                SchedulerConfig { max_batch: 8, compact: true, ..Default::default() },
+            );
+            let prompts: Vec<Vec<i32>> = (0..3)
+                .map(|i| {
+                    let len = 5 + 14 * i; // 5..33 tokens: 1..3 blocks
+                    (0..len).map(|k| 40 + ((i * 31 + k) % 120) as i32).collect()
+                })
+                .collect();
+            for (i, p) in prompts.iter().enumerate() {
+                s.enqueue(
+                    Request::builder(p.clone()).id(i as u64).max_new_tokens(8).build(),
+                );
+            }
+            let mut prefilled = 0;
+            let mut guard = 0;
+            while prefilled < 3 {
+                for ev in s.step().unwrap() {
+                    if matches!(ev, GenerationEvent::Prefilled { .. }) {
+                        prefilled += 1;
+                    }
+                }
+                guard += 1;
+                assert!(guard < 50, "prompts never finished prefilling");
+            }
+            // per-block fingerprints: every prompt position sits in the
+            // physical block its table names, and no two requests alias
+            let pool = s.kv_snapshot().unwrap().expect("kv pool");
+            let tables: Vec<Vec<i32>> = (0..3)
+                .map(|i| s.block_table_of(i as u64).expect("live table"))
+                .collect();
+            let mut fps = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let fp = s.engine().table_fingerprints(&pool, &tables[i]).unwrap();
+                for (pos, &t) in p.iter().enumerate() {
+                    assert_eq!(fp[pos], t as f32, "req {i} pos {pos}: wrong block");
+                }
+                fps.push(fp);
+            }
+            for i in 0..3 {
+                for j in (i + 1)..3 {
+                    assert!(
+                        tables[i].iter().all(|b| !tables[j].contains(b)),
+                        "requests {i}/{j} alias blocks"
+                    );
+                }
+            }
+            // isolate pure decode: four steps with every slot generating
+            s.engine().reset_profile();
+            for _ in 0..4 {
+                s.step().unwrap();
+            }
+            let p = s.engine().profile_snapshot();
+            assert_eq!(p.decode_steps, 4);
+            assert_eq!(p.prefill_chunks, 0, "decode window ran a prefill chunk");
+            if twin {
+                assert!(p.gather_bytes > 0, "twin decode must stage the dense view");
+                assert_eq!(p.gather_bytes, p.scatter_bytes);
+            } else {
+                assert_eq!(p.gather_bytes, 0, "fused decode gathered shell bytes");
+                assert_eq!(p.scatter_bytes, 0, "fused decode scattered shell bytes");
+            }
+            let mut done = s.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            let streams: Vec<Vec<i32>> = done.into_iter().map(|c| c.output_ids).collect();
+            (fps, streams)
+        };
+        let (fused_fp, fused_out) = run(false);
+        let (twin_fp, twin_out) = run(true);
+        assert_eq!(fused_fp, twin_fp, "fused/twin pools diverged");
+        assert_eq!(fused_out, twin_out, "fused/twin token streams diverged");
+        for (i, out) in fused_out.iter().enumerate() {
+            let last = 40 + ((i * 31 + 4 + 14 * i) % 120) as i32;
+            let want: Vec<i32> = (1..=8).map(|k| last + k).collect();
+            assert_eq!(*out, want, "req {i} diverged from the +1 chain");
+        }
+    }
+
     /// Acceptance: two requests sharing a 256-token prefix perform the
     /// prefix's prefill chunk compute ONCE. The second request's table
     /// re-uses the first's physical blocks (prefix_hits > 0), only its

@@ -182,6 +182,12 @@ pub struct Engine {
     pub exec: Arc<Executor>,
     /// A/B switch: true = legacy host-literal KV path (env POLAR_KV_HOST).
     kv_host_path: bool,
+    /// A/B switch: true = serve paged decode through the deprecated twin
+    /// entries (gather -> dense core -> scatter) even when the artifact
+    /// carries fused entries (env POLAR_TWIN_KV). Default false: fused
+    /// entries are preferred, with automatic fallback to the twin when a
+    /// legacy artifact lacks them.
+    twin_kv_path: bool,
     /// Router weights from the artifact (None when it ships no routers),
     /// built **lazily** on first routed use — dense/dejavu serving never
     /// pays the host-side weight copies (tok_emb alone duplicates the
@@ -201,9 +207,11 @@ pub struct Engine {
 impl Engine {
     pub fn new(exec: Arc<Executor>) -> Engine {
         let kv_host_path = std::env::var("POLAR_KV_HOST").is_ok();
+        let twin_kv_path = std::env::var("POLAR_TWIN_KV").is_ok();
         Engine {
             exec,
             kv_host_path,
+            twin_kv_path,
             routers: Arc::new(OnceLock::new()),
             kv_stash: Arc::new(Mutex::new(None)),
         }
@@ -245,6 +253,14 @@ impl Engine {
     /// baseline) regardless of the environment.
     pub fn with_kv_host_path(mut self, host: bool) -> Engine {
         self.kv_host_path = host;
+        self
+    }
+
+    /// Force the deprecated twin paged-decode path (gather -> dense core ->
+    /// scatter) for bitwise A/B against the fused entries, regardless of
+    /// the environment.
+    pub fn with_twin_kv_path(mut self, twin: bool) -> Engine {
+        self.twin_kv_path = twin;
         self
     }
 
@@ -758,6 +774,11 @@ impl Engine {
         let mut p = self.exec.profile_mut();
         p.prefill_ns += t0.elapsed().as_nanos() as u64;
         p.prefill_chunks += 1;
+        // the prefill twin still stages the dense view both ways (no fused
+        // prefill entry yet — decode is the per-token hot path)
+        let view = self.exec.config().kv_elems(b, n) as u64 * 4;
+        p.gather_bytes += view;
+        p.scatter_bytes += view;
         Ok(PagedStepOutput { logits, kv: PagedKv { store, pool_blocks, block } })
     }
 
@@ -777,8 +798,17 @@ impl Engine {
         let b = tables.batch;
         let n = tables.n(kv.block);
         // everything up to execution happens while we still own the
-        // pool: failures park it for `recover_kv` instead of losing it
-        let name = self.exec.manifest().paged_decode_entry_name(tag, b, n);
+        // pool: failures park it for `recover_kv` instead of losing it.
+        // Serve the fused entry (in-graph table indexing, no dense KV
+        // intermediate) unless twin mode is forced or the artifact
+        // predates the fused emission.
+        let fused_name = self.exec.manifest().fused_decode_entry_name(tag, b, n);
+        let fused = !self.twin_kv_path && self.exec.manifest().has_entry(&fused_name);
+        let name = if fused {
+            fused_name
+        } else {
+            self.exec.manifest().paged_decode_entry_name(tag, b, n)
+        };
         let computed;
         let prep = (|| -> Result<(Option<StepRouting>, [xla::Literal; 3])> {
             if tokens.len() != b || lengths.len() != b {
@@ -830,7 +860,17 @@ impl Engine {
             kv.into_store(),
             routing,
         )?;
-        self.exec.profile_mut().decode_steps += 1;
+        let mut p = self.exec.profile_mut();
+        p.decode_steps += 1;
+        if !fused {
+            // the twin graph materializes the tables' dense [L,2,B,G,N,dh]
+            // view on the way in and scatters the whole view back out; the
+            // fused entry indexes the pool in place and writes one row.
+            let view = self.exec.config().kv_elems(b, n) as u64 * 4;
+            p.gather_bytes += view;
+            p.scatter_bytes += view;
+        }
+        drop(p);
         Ok(PagedStepOutput { logits, kv: PagedKv { store, pool_blocks, block } })
     }
 

@@ -247,10 +247,25 @@ impl Manifest {
         format!("prefill_b{batch}_s{n}")
     }
 
-    /// Block-pool twin of a decode entry: same compute, KV addressed
-    /// through a per-slot block table into the shared pool.
+    /// Block-pool twin of a decode entry: gather -> dense core -> scatter.
+    /// Deprecated as a serving path — kept for bitwise A/B against the
+    /// fused entry (see [`Manifest::fused_decode_entry_name`]).
     pub fn paged_decode_entry_name(&self, tag: &str, batch: usize, n: usize) -> String {
         format!("decode_{tag}_b{batch}_n{n}_paged")
+    }
+
+    /// Fused paged decode entry: identical inputs/outputs to the twin, but
+    /// the graph indexes the block table itself and writes only the new KV
+    /// row — no dense intermediate, no scatter. Runtimes fall back to the
+    /// twin name when an older artifact lacks the fused entries.
+    pub fn fused_decode_entry_name(&self, tag: &str, batch: usize, n: usize) -> String {
+        format!("decode_{tag}_b{batch}_n{n}_paged_fused")
+    }
+
+    /// Whether the manifest carries an entry by this name (used for the
+    /// fused-entry -> twin fallback on legacy artifacts).
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
     }
 
     /// Block-pool twin of a chunked-prefill entry.
@@ -327,6 +342,12 @@ mod tests {
         assert_eq!(m.prefill_entry_name(2, 32), "prefill_b2_s32");
         assert_eq!(m.paged_prefill_entry_name(2, 32), "prefill_b2_s32_paged");
         assert_eq!(m.paged_decode_entry_name("dense", 2, 32), "decode_dense_b2_n32_paged");
+        assert_eq!(
+            m.fused_decode_entry_name("polar_d0500", 2, 32),
+            "decode_polar_d0500_b2_n32_paged_fused"
+        );
+        assert!(m.has_entry("decode_dense_b1_n16"));
+        assert!(!m.has_entry("decode_dense_b1_n16_paged_fused"));
         // legacy manifest (no kv_* buckets): defaults derived from the
         // bucket ladder — block 16, pool 1 + 4 * 32 / 16
         assert_eq!(m.kv_block, 16);

@@ -30,6 +30,14 @@ pub struct StepProfile {
     pub prefill_chunks: u64,
     /// Decode steps the counters cover (for per-step averages).
     pub decode_steps: u64,
+    /// Bytes moved assembling dense KV views from the block pool (the
+    /// gather shell of twin-path paged entries). Fused entries index the
+    /// pool in place and report 0 here.
+    pub gather_bytes: u64,
+    /// Bytes moved writing dense KV views back through the block table
+    /// (the scatter shell). Fused entries write only the new row in place
+    /// and report 0 here.
+    pub scatter_bytes: u64,
 }
 
 impl StepProfile {
@@ -44,6 +52,8 @@ impl StepProfile {
         self.prefill_ns += o.prefill_ns;
         self.prefill_chunks += o.prefill_chunks;
         self.decode_steps += o.decode_steps;
+        self.gather_bytes += o.gather_bytes;
+        self.scatter_bytes += o.scatter_bytes;
     }
 
     /// Total bytes crossing the host<->device boundary.
@@ -73,6 +83,13 @@ impl StepProfile {
                 "host_copy_bytes_per_step",
                 self.per_step(self.host_copy_bytes()).into(),
             ),
+            ("gather_bytes", (self.gather_bytes as usize).into()),
+            ("scatter_bytes", (self.scatter_bytes as usize).into()),
+            ("gather_bytes_per_step", self.per_step(self.gather_bytes).into()),
+            (
+                "scatter_bytes_per_step",
+                self.per_step(self.scatter_bytes).into(),
+            ),
             ("h2d_ms", (self.h2d_ns as f64 * 1e-6).into()),
             ("compute_ms", (self.compute_ns as f64 * 1e-6).into()),
             ("d2h_ms", (self.d2h_ns as f64 * 1e-6).into()),
@@ -98,6 +115,8 @@ mod tests {
             prefill_ns: 4_000_000,
             prefill_chunks: 3,
             decode_steps: 2,
+            gather_bytes: 100,
+            scatter_bytes: 60,
             ..Default::default()
         };
         a.merge(&b);
@@ -105,9 +124,14 @@ mod tests {
         assert_eq!(a.decode_steps, 4);
         assert_eq!(a.router_ns, 3_000_000);
         assert_eq!(a.prefill_chunks, 3);
+        assert_eq!(a.gather_bytes, 100);
+        assert_eq!(a.scatter_bytes, 60);
         let j = a.to_json();
         assert_eq!(j.get("h2d_bytes_per_step").as_f64(), Some(5.0));
         assert_eq!(j.get("host_copy_bytes_per_step").as_f64(), Some(12.5));
+        assert_eq!(j.get("gather_bytes").as_usize(), Some(100));
+        assert_eq!(j.get("gather_bytes_per_step").as_f64(), Some(25.0));
+        assert_eq!(j.get("scatter_bytes_per_step").as_f64(), Some(15.0));
         assert_eq!(j.get("router_ms").as_f64(), Some(3.0));
         assert_eq!(j.get("prefill_ms").as_f64(), Some(4.0));
         assert_eq!(j.get("prefill_chunks").as_usize(), Some(3));
