@@ -12,20 +12,21 @@ Entries per model (static shapes = the CUDA-graph analogue, DESIGN.md):
   prefill_b{B}_s{S}                  chunked prompt pass: appends one chunk
                                      (up to PREFILL_LEN tokens/slot) into a
                                      [*,S] cache at a per-slot offset
-  prefill_b{B}_s{S}_paged            same, addressed through a per-slot
-                                     block table into the shared KV pool
+  prefill_b{B}_s{S}_paged_fused      fused paged prefill chunk: resolves
+                                     prior-context KV through a per-slot
+                                     block table and writes the chunk's new
+                                     K/V rows straight into their pool
+                                     blocks — no dense [*,S] intermediate
   decode_{tag}_b{B}_n{N}             tag in dense | dejavu | polar_dXXXX |
                                      teal_dXXXX | cats_dXXXX
-  decode_{tag}_b{B}_n{N}_paged       block-pool twin of the serving decode
-                                     tags (tokens, lengths, block_table,
-                                     kv-pool[, head_idx[, mlp_idx]]) —
-                                     gather -> dense core -> scatter;
-                                     deprecated, kept for bitwise A/B
-  decode_{tag}_b{B}_n{N}_paged_fused fused paged decode: same inputs and
-                                     bit-identical live-slot outputs as the
-                                     twin, but the kernel indexes the block
-                                     table itself and only the new KV row
-                                     is written — no dense intermediate
+  decode_{tag}_b{B}_n{N}_paged_fused fused paged decode (tokens, lengths,
+                                     block_table, kv-pool[, head_idx[,
+                                     mlp_idx]]): the kernel indexes the
+                                     block table itself and only the new KV
+                                     row is written — no dense intermediate
+  copy_blocks                        on-device COW: copies fixed-width
+                                     (src, dst) block-pair lists inside the
+                                     resident pool ((0,0) pads are identity)
   micro_* (opt-small)                Fig 1a / Fig 3 / Fig 10 module benches
   pp2_stage{0,1}_{tag}_b{B}_n{N}     pipeline-parallel stages (Fig 11)
   tp{S}_{embed,attn,mlp,final}_*     Megatron-style TP shards (Fig 12)
@@ -47,8 +48,9 @@ from jax._src.lib import xla_client as xc
 
 from . import model
 from .configs import (
-    BATCH_BUCKETS, CONFIGS, DEFAULT_RECALL, DENSITY_SWEEP, KV_BLOCK,
-    PREFILL_LEN, SEQ_BUCKETS, get_config, heads_for_density, kv_pool_blocks,
+    BATCH_BUCKETS, CONFIGS, COPY_BLOCKS_PAIRS, DEFAULT_RECALL, DENSITY_SWEEP,
+    KV_BLOCK, PREFILL_LEN, SEQ_BUCKETS, get_config, heads_for_density,
+    kv_pool_blocks,
 )
 from .kernels import ref as kref
 from .kernels import sel_gemm, sha_decode
@@ -112,10 +114,10 @@ def core_entries(cfg, out_dir):
     # chunked prefill: one entry per (batch, seq) bucket. Each call appends
     # up to PREFILL_LEN prompt tokens per slot into the group cache at a
     # per-slot position offset, so a long prompt streams chunk by chunk
-    # while co-resident requests keep decoding between chunks. The paged
-    # variant addresses the shared block pool through a per-slot block
-    # table instead of owning a contiguous [*, S] cache — same compute,
-    # block-granular memory (prefix blocks shared across requests).
+    # while co-resident requests keep decoding between chunks. The fused
+    # paged variant addresses the shared block pool through a per-slot
+    # block table — chunk K/V rows land straight in their pool blocks and
+    # prior context is read through the table, never a dense [*, S] view.
     for B in batches:
         for S in seqs:
             entries.append(Entry(
@@ -135,9 +137,9 @@ def core_entries(cfg, out_dir):
                 meta={"batch": B, "seq_bucket": S, "chunk": PREFILL_LEN},
             ))
             entries.append(Entry(
-                name=f"prefill_b{B}_s{S}_paged", kind="prefill_paged",
+                name=f"prefill_b{B}_s{S}_paged_fused", kind="prefill_paged_fused",
                 fn=(lambda cfg_: lambda toks, lens, off, table, kv, params:
-                    model.prefill_chunk_paged(
+                    model.prefill_chunk_paged_fused(
                         cfg_, params, toks, lens, off, table, kv))(cfg),
                 data=[
                     {"name": "tokens", "shape": [B, PREFILL_LEN], "dtype": "i32"},
@@ -152,11 +154,11 @@ def core_entries(cfg, out_dir):
                     {"name": "kv", "shape": pool_shape(cfg, P), "dtype": "f32"},
                 ],
                 meta={"batch": B, "seq_bucket": S, "chunk": PREFILL_LEN,
-                      "kv_block": KV_BLOCK, "kv_pool_blocks": P},
+                      "kv_block": KV_BLOCK, "kv_pool_blocks": P,
+                      "fused": True},
             ))
 
-    def decode_entry(B, N, mode, density, mlp_topk, tag, paged=False,
-                     fused=False):
+    def decode_entry(B, N, mode, density, mlp_topk, tag, paged=False):
         # polar entries are *index-taking*: the runtime routing subsystem
         # (rust/src/runtime/router.rs) computes per-request top-k head
         # groups and the batch-union MLP neuron set each step and feeds
@@ -185,12 +187,10 @@ def core_entries(cfg, out_dir):
         def mk_fn(cfg_, m, d, tk):
             kw = dict(mode=m, density=d, mlp_topk=tk)
             if paged:
-                # fused entries take the *same* inputs as the twin and
-                # produce bit-identical live-slot outputs; only the data
-                # movement inside the graph differs (no dense KV
-                # intermediate, no scatter).
-                step = (model.decode_step_paged_fused if fused
-                        else model.decode_step_paged)
+                # paged decode is fused-only: the kernel indexes the block
+                # table itself and only the new KV row is written — no
+                # dense intermediate, no scatter.
+                step = model.decode_step_paged_fused
                 if routed and Km:
                     return lambda toks, lens, table, kv, hi, mi, params: \
                         step(cfg_, params, toks, lens, kv,
@@ -217,10 +217,9 @@ def core_entries(cfg, out_dir):
                 "routed": routed, "head_k": Kh, "mlp_idx_k": Km}
         if paged:
             meta.update({"kv_block": KV_BLOCK, "kv_pool_blocks": P,
-                         "fused": fused})
-        suffix = "_paged_fused" if fused else ("_paged" if paged else "")
-        kind = ("decode_paged_fused" if fused
-                else "decode_paged" if paged else "decode")
+                         "fused": True})
+        suffix = "_paged_fused" if paged else ""
+        kind = "decode_paged_fused" if paged else "decode"
         return Entry(
             name=f"decode_{tag}_b{B}_n{N}" + suffix,
             kind=kind,
@@ -236,22 +235,36 @@ def core_entries(cfg, out_dir):
     for B in batches:
         topk = load_topk(out_dir, cfg, B)
         for N in seqs:
-            # each serving tag lands three times: the contiguous entry
-            # (A/B baseline, eval and the pp/tp drivers), its block-pool
-            # twin (deprecated gather -> dense core -> scatter shape,
-            # kept for bitwise A/B behind the runtime's twin-path flag),
-            # and the fused paged entry the scheduler serves from
-            for paged, fused in ((False, False), (True, False), (True, True)):
+            # each serving tag lands twice: the contiguous entry (A/B
+            # baseline, eval and the pp/tp drivers) and the fused paged
+            # entry the scheduler serves from
+            for paged in (False, True):
                 entries.append(decode_entry(B, N, "dense", 1.0, (), "dense",
-                                            paged=paged, fused=fused))
+                                            paged=paged))
                 entries.append(decode_entry(
                     B, N, "polar", cfg.critical_density, topk,
-                    f"polar_{dtag(cfg.critical_density)}",
-                    paged=paged, fused=fused))
+                    f"polar_{dtag(cfg.critical_density)}", paged=paged))
                 if cfg.mlp_sparsity:
                     entries.append(decode_entry(B, N, "dejavu", 1.0, topk,
-                                                "dejavu", paged=paged,
-                                                fused=fused))
+                                                "dejavu", paged=paged))
+
+    # on-device COW: one fixed-width block-pair copy entry per model. The
+    # engine chunks a COW batch into COPY_BLOCKS_PAIRS-wide calls (padding
+    # with (0,0) identity pairs), so the pool never round-trips the host.
+    entries.append(Entry(
+        name="copy_blocks", kind="copy_blocks",
+        fn=lambda src, dst, kv, params: (model.copy_blocks(kv, src, dst),),
+        data=[
+            {"name": "src", "shape": [COPY_BLOCKS_PAIRS], "dtype": "i32"},
+            {"name": "dst", "shape": [COPY_BLOCKS_PAIRS], "dtype": "i32"},
+            {"name": "kv", "shape": pool_shape(cfg, P), "dtype": "f32"},
+        ],
+        outputs=[
+            {"name": "kv", "shape": pool_shape(cfg, P), "dtype": "f32"},
+        ],
+        meta={"pairs": COPY_BLOCKS_PAIRS, "kv_block": KV_BLOCK,
+              "kv_pool_blocks": P},
+    ))
 
     # accuracy sweep at B=1, N=128
     if cfg.name != "llama-relu":
@@ -546,11 +559,14 @@ def build_model(name: str, out_root: str, sets: list):
         # "prefill_chunk" is the chunk token width of the prefill_b{B}_s{S}
         # matrix; "prefill" is kept as a legacy alias for older runtimes.
         # "kv_block"/"kv_pool_blocks" pin the paged entries' pool geometry
-        # ([L,2,kv_pool_blocks,G,kv_block,dh], block 0 reserved as null).
+        # ([L,2,kv_pool_blocks,G,kv_block,dh], block 0 reserved as null);
+        # "copy_pairs" is the fixed (src, dst) width of the copy_blocks
+        # entry (on-device COW).
         "buckets": {"batch": BATCH_BUCKETS, "seq": SEQ_BUCKETS,
                     "prefill": PREFILL_LEN, "prefill_chunk": PREFILL_LEN,
                     "kv_block": KV_BLOCK,
-                    "kv_pool_blocks": kv_pool_blocks(*serving_buckets(cfg))},
+                    "kv_pool_blocks": kv_pool_blocks(*serving_buckets(cfg)),
+                    "copy_pairs": COPY_BLOCKS_PAIRS},
         "entries": [],
     }
     t_total = time.time()

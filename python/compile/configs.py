@@ -37,6 +37,12 @@ PREFILL_LEN = 64
 # table stays a few dozen entries at the largest seq bucket.
 KV_BLOCK = 16
 
+# Pair width of the AOT `copy_blocks` entry (on-device COW: one call
+# copies up to this many (src, dst) block pairs inside the resident pool).
+# The engine chunks longer pair lists across calls and pads short ones
+# with (0, 0) — the null block copied onto itself, an identity write.
+COPY_BLOCKS_PAIRS = 8
+
 
 def kv_pool_blocks(batch_buckets, seq_buckets, block: int = KV_BLOCK) -> int:
     """Pool size covering the no-sharing worst case (every slot of the

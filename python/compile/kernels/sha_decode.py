@@ -174,6 +174,90 @@ def sha_decode_paged(q, k_pool, v_pool, block_table, head_index, lengths,
     )(head_index, lengths, block_table, q, k_pool, v_pool, o_init)
 
 
+def _prefill_paged_kernel(off_ref, tbl_ref, q_ref, kpool_ref, vpool_ref,
+                          o_ref, *, q_per_group):
+    b = pl.program_id(0)
+    g = pl.program_id(1)        # prefill is dense over groups: every g runs
+    off = off_ref[b]            # absolute position of this slot's chunk start
+    C = q_ref.shape[1]
+    dh = q_ref.shape[3]
+    bs = kpool_ref.shape[2]     # pool block size (rows per KV block)
+    nblk = tbl_ref.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    qpg = q_per_group
+
+    # All chunk queries of this slot for the q heads of group g, flattened to
+    # rows r = c*qpg + u so one dot covers the whole chunk per KV tile.
+    q = q_ref[b, :, pl.ds(g * qpg, qpg), :].reshape(C * qpg, dh)
+    # Absolute query position of each row (rows of one chunk index c share it).
+    rpos = off + jax.lax.iota(jnp.int32, C * qpg) // qpg
+
+    def body(j, carry):
+        o_acc, l_acc, m_acc = carry
+        # The block table IS the address computation: tile j of this slot's
+        # KV stream lives in pool block tbl[b, j]. The chunk's own rows were
+        # written before this kernel runs, so causal masking alone decides
+        # visibility — no separate new-vs-prior split.
+        bid = tbl_ref[b, j]
+        kj = kpool_ref[bid, g]                    # [bs, dh]
+        vj = vpool_ref[bid, g]
+        s = jnp.dot(q, kj.T) * scale              # [C*qpg, bs]
+        kpos = j * bs + jax.lax.iota(jnp.int32, bs)
+        s = jnp.where(kpos[None, :] <= rpos[:, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_acc, jnp.max(s, axis=1))      # [C*qpg]
+        p = jnp.exp(s - m_new[:, None])                     # [C*qpg, bs]
+        alpha = jnp.exp(m_acc - m_new)                      # [C*qpg]
+        l_new = alpha * l_acc + jnp.sum(p, axis=1)
+        o_new = alpha[:, None] * o_acc + jnp.dot(p, vj)     # [C*qpg, dh]
+        return o_new, l_new, m_new
+
+    rows = C * qpg
+    o, l, _ = jax.lax.fori_loop(
+        0, nblk, body,
+        (
+            jnp.zeros((rows, dh), jnp.float32),
+            jnp.zeros((rows,), jnp.float32),
+            jnp.full((rows,), -jnp.inf, jnp.float32),
+        ),
+    )
+    o_ref[b, :, pl.ds(g * qpg, qpg), :] = (o / l[:, None]).reshape(C, qpg, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("q_per_group",))
+def prefill_attention_paged(q, k_pool, v_pool, block_table, offset,
+                            q_per_group: int = 1):
+    """Fused paged prefill-chunk attention: table-indexed KV, causal mask.
+
+    Each (b, g) program attends every chunk query of slot b against group
+    g's KV stream, resolving tile addresses through the block table (the
+    same scalar-prefetch pattern as ``_sha_paged_kernel``) — no dense
+    [B, G, N, dh] gather before, no scatter after. The chunk's new K/V
+    rows must already be in the pool; the causal mask
+    ``key_pos <= offset[b] + c`` then covers every case at once: prior
+    context, intra-chunk causality, and future/null tiles.
+
+    Tiles are whole pool blocks, so N == nblk * bs exactly and the
+    ``N % blk != 0`` trailing-tile truncation fixed in ``_sha_kernel``
+    cannot arise here; a chunk *ending* mid-block is handled by the causal
+    mask alone (partially occupied final blocks, mid-block offsets).
+
+    q: [B, C, H, dh] (C = chunk length); k_pool/v_pool: [P, G, bs, dh];
+    block_table: [B, nblk] int32; offset: [B] int32 (absolute start
+    position of each slot's chunk). Returns [B, C, H, dh].
+    """
+    B, C, H, dh = q.shape
+    G = k_pool.shape[1]
+    if H != G * q_per_group:
+        raise ValueError(f"H={H} != G={G} * q_per_group={q_per_group}")
+    kernel = functools.partial(_prefill_paged_kernel, q_per_group=q_per_group)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, dh), jnp.float32),
+        grid=(B, G),
+        interpret=True,
+    )(offset, block_table, q, k_pool, v_pool)
+
+
 def dense_decode_attention(q, k, v, lengths, q_per_group: int = 1,
                            blk: int = DEFAULT_BLK):
     """Dense baseline through the *same* kernel (identity head index).

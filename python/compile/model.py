@@ -708,6 +708,116 @@ def decode_step_paged_fused(cfg: ModelConfig, params, tokens, lengths,
 
 
 # ---------------------------------------------------------------------------
+# Fused paged prefill chunks + on-device COW block copy
+#
+# The last shell traffic after fused decode was the prefill chunk: the twin
+# path gathers the whole [L,2,B,G,S,dh] view, runs prefill_chunk, and
+# scatters the view back — both shells every chunk. The fused path writes
+# the chunk's new K/V rows straight into their pool blocks at per-slot
+# offsets (a masked multi-row scatter, no dense intermediate) and reads KV
+# through the table — per-layer for the XLA path, per-tile inside the
+# kernel for the pallas path (prefill_attention_paged resolves tile
+# addresses from the block table like _sha_paged_kernel).
+#
+# Bitwise contract with the twin: the twin's whole-view scatter writes
+# back gathered (unchanged) rows everywhere outside the chunk window, an
+# identity write, so a pool that only receives the chunk rows is equal
+# everywhere — including reserved null block 0, which the fused write
+# never touches: rows of inactive chunk positions (c >= lengths[b], so
+# every row of a PAD slot) are routed out of range and dropped. The
+# attention math is the twin's einsum over the same [B,G,S,dh] values, so
+# logits match bit for bit; inactive slots still run the full (discarded)
+# computation to keep the op sequence identical.
+# ---------------------------------------------------------------------------
+
+
+def _write_chunk_kv(kv_pool, l, block_table, offset, lengths, k_new, v_new):
+    """Write one chunk's new K/V rows for layer l straight into their pool
+    blocks at per-slot offsets. k_new/v_new: [B,C,G,dh].
+
+    Inactive rows (c >= lengths[b]) get block index P — out of range, and
+    ``mode="drop"`` discards them — so a padding slot can never write any
+    pool block, not even the null block (the policy mock.rs enforces for
+    decode)."""
+    P, bs = kv_pool.shape[2], kv_pool.shape[4]
+    NB = block_table.shape[1]
+    C = k_new.shape[1]
+    c = jnp.arange(C, dtype=jnp.int32)[None, :]
+    pos = offset[:, None] + c                                # [B,C] absolute
+    active = c < lengths[:, None]
+    blk = jnp.take_along_axis(
+        block_table, jnp.clip(pos // bs, 0, NB - 1), axis=1)
+    blk = jnp.where(active, blk, P)                          # P -> dropped
+    off = pos % bs
+    kv_pool = kv_pool.at[l, 0, blk, :, off, :].set(k_new, mode="drop")
+    return kv_pool.at[l, 1, blk, :, off, :].set(v_new, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "attn_impl"))
+def prefill_chunk_paged_fused(cfg: ModelConfig, params, tokens, lengths,
+                              offset, block_table, kv_pool, *,
+                              attn_impl: str = "xla"):
+    """One fused chunked-prefill step over the block pool (same contract
+    and inputs as :func:`prefill_chunk_paged`, bit-identical logits and
+    pool contents) without the dense [L,2,B,G,S,dh] view on either side.
+
+    Each layer writes the chunk's K/V rows into their blocks first, then
+    attends causally over the table's whole stream — prior chunks, prefix-
+    cached blocks another request published, and the just-written
+    intra-chunk rows all resolve through the same table lookup."""
+    B, C = tokens.shape
+    bs = kv_pool.shape[4]
+    S = block_table.shape[1] * bs
+    G, qpg, dh = cfg.n_groups, cfg.q_per_group, cfg.d_head
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    pos = offset[:, None] + jnp.arange(C)[None, :]          # [B,C] absolute
+    x = _embed(cfg, params, tokens, jnp.clip(pos, 0, cfg.max_seq - 1))
+    j = jnp.arange(S)[None, :]                              # [1,S]
+
+    for l in range(cfg.n_layers):
+        h = layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
+        q = (h @ params["wq"][l] + params["bq"][l]).reshape(B, C, cfg.n_heads, dh)
+        k_new = (h @ params["wk"][l] + params["bk"][l]).reshape(B, C, G, dh)
+        v_new = (h @ params["wv"][l] + params["bv"][l]).reshape(B, C, G, dh)
+        if cfg.pos == "rope":
+            q = rope(q, pos, dh)
+            k_new = rope(k_new, pos, dh)
+        kv_pool = _write_chunk_kv(
+            kv_pool, l, block_table, offset, lengths, k_new, v_new)
+        if attn_impl == "pallas":
+            o = sha_decode.prefill_attention_paged(
+                q, kv_pool[l, 0], kv_pool[l, 1], block_table, offset, qpg)
+            o = o.reshape(B, C, -1)
+        else:
+            k_l, v_l = _gather_layer_kv(kv_pool, l, block_table)
+            qg = q.reshape(B, C, G, qpg, dh)
+            s = jnp.einsum("bigqd,bgjd->bgqij", qg, k_l) * scale
+            mask = j[:, None, :] <= pos[:, :, None]         # [B,C,S]
+            s = jnp.where(mask[:, None, None, :, :], s, kref.NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bgqij,bgjd->bigqd", p, v_l).reshape(B, C, -1)
+        x = x + o @ params["wo"][l] + params["bo"][l]
+        h2 = layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+        x = x + mlp_dense(cfg, params, l, h2)
+    last_idx = jnp.clip(lengths - 1, 0, C - 1)              # [B]
+    x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0, :]
+    return final_logits(cfg, params, x_last), kv_pool
+
+
+@jax.jit
+def copy_blocks(kv_pool, src, dst):
+    """On-device COW block copy: pool[:, :, dst[i]] = pool[:, :, src[i]].
+
+    The AOT ``copy_blocks`` entry has a fixed pair width; the engine pads
+    a shorter pair list with (0, 0) — the null block copied onto itself,
+    an identity write. Within one batch no dst is another pair's src (a
+    COW dst is a freshly allocated private block), so gather-then-scatter
+    is well-defined; duplicate (0, 0) dsts all write the same rows."""
+    rows = jnp.take(kv_pool, src, axis=2)
+    return kv_pool.at[:, :, dst].set(rows)
+
+
+# ---------------------------------------------------------------------------
 # Tensor-parallel shard entries (Fig 12 substrate)
 #
 # Megatron-style TP simulated on one host: each shard executable computes its

@@ -102,10 +102,14 @@ def test_decode_entry_coverage_opt_tiny():
     for b in man["buckets"]["batch"]:
         for n in man["buckets"]["seq"]:
             assert f"prefill_b{b}_s{n}" in names, (b, n)
-            assert f"prefill_b{b}_s{n}_paged" in names, (b, n)
+            assert f"prefill_b{b}_s{n}_paged_fused" in names, (b, n)
             for tag in ("dense", "dejavu", "polar_d0500"):
                 assert f"decode_{tag}_b{b}_n{n}" in names, (tag, b, n)
-                assert f"decode_{tag}_b{b}_n{n}_paged" in names, (tag, b, n)
+                assert f"decode_{tag}_b{b}_n{n}_paged_fused" in names, (tag, b, n)
+    assert "copy_blocks" in names
+    # the deprecated twin entries are retired from the artifact
+    assert not any(nm.endswith("_paged") for nm in names)
     assert man["buckets"]["prefill_chunk"] > 0
     assert man["buckets"]["kv_block"] > 0
     assert man["buckets"]["kv_pool_blocks"] > 1
+    assert man["buckets"]["copy_pairs"] > 0

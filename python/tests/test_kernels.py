@@ -227,6 +227,93 @@ def test_sha_paged_null_blocks_masked():
 
 
 # ---------------------------------------------------------------------------
+# Fused paged prefill attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_ref(q, kd, vd, off, qpg):
+    """Causal masked-softmax oracle on the gathered dense view.
+    q: [B,C,H,dh]; kd/vd: [B,G,N,dh]; off: [B]."""
+    b, c, h, dh = q.shape
+    n = kd.shape[2]
+    scale = 1.0 / np.sqrt(dh)
+    out = np.zeros_like(q)
+    for i in range(b):
+        for hh in range(h):
+            g = hh // qpg
+            for cc in range(c):
+                s = (kd[i, g] @ q[i, cc, hh]) * scale
+                s = np.where(np.arange(n) <= off[i] + cc, s, -np.inf)
+                p = np.exp(s - s.max())
+                out[i, cc, hh] = (p / p.sum()) @ vd[i, g]
+    return out
+
+
+@pytest.mark.parametrize("qpg", [1, 2])
+def test_prefill_paged_matches_masked_ref(qpg):
+    """The fused prefill kernel reading KV through the block table must
+    match the causal masked-softmax oracle on the gathered dense view —
+    including per-slot offsets that start and end mid-block."""
+    rng = np.random.default_rng(10)
+    b, g, n, dh, c, bs = 2, 2, 64, 8, 8, 16
+    q = rand(rng, b, c, g * qpg, dh)
+    kpool, vpool, table, kd, vd = _paged_cache(rng, b, g, n, dh, bs=bs)
+    off = np.array([5, 19], np.int32)     # both mid-block
+    out = np.asarray(sha_decode.prefill_attention_paged(
+        q, kpool, vpool, table, off, q_per_group=qpg))
+    want = _prefill_ref(q, kd, vd, off, qpg)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_paged_partial_block_tail():
+    """Partial-tile regression (the `N % blk != 0` class of bug fixed in
+    `_sha_kernel`): tiles here are whole pool blocks, so the hazard is a
+    partially *occupied* final block. The last visible row must still
+    influence the output, and the first row past the causal horizon must
+    not."""
+    rng = np.random.default_rng(11)
+    b, g, n, dh, c, bs = 1, 2, 64, 8, 4, 16
+    q = rand(rng, b, c, g, dh)
+    kpool, vpool, table, _, _ = _paged_cache(rng, b, g, n, dh, bs=bs)
+    off = np.array([17], np.int32)        # final query at pos 20, mid-block 1
+    base = np.asarray(sha_decode.prefill_attention_paged(
+        q, kpool, vpool, table, off))
+    last_blk, last_row = int(table[0, 20 // bs]), 20 % bs
+    kpool2 = kpool.copy()
+    kpool2[last_blk, :, last_row] += 3.0  # last visible row: must matter
+    pert = np.asarray(sha_decode.prefill_attention_paged(
+        q, kpool2, vpool, table, off))
+    assert not np.allclose(base[0, -1], pert[0, -1], rtol=RTOL, atol=ATOL)
+    kpool3, vpool3 = kpool.copy(), vpool.copy()
+    kpool3[last_blk, :, last_row + 1:] = 1e6   # past the horizon: masked
+    vpool3[last_blk, :, last_row + 1:] = -1e6
+    pert2 = np.asarray(sha_decode.prefill_attention_paged(
+        q, kpool3, vpool3, table, off))
+    np.testing.assert_allclose(base, pert2, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_paged_null_blocks_masked():
+    """Trailing table entries past the causal horizon point at the
+    reserved null block (id 0); its contents must not influence any
+    in-range query."""
+    rng = np.random.default_rng(12)
+    b, g, n, dh, c, bs = 1, 2, 64, 8, 8, 16
+    q = rand(rng, b, c, g, dh)
+    kpool, vpool, table, _, _ = _paged_cache(rng, b, g, n, dh, bs=bs)
+    table = table.copy()
+    table[0, 2:] = 0                      # only blocks 0..1 are live
+    off = np.array([2 * bs - c], np.int32)  # last query ends block 1 exactly
+    base = np.asarray(sha_decode.prefill_attention_paged(
+        q, kpool, vpool, table, off))
+    kpool2, vpool2 = kpool.copy(), vpool.copy()
+    kpool2[0] = 1e6
+    vpool2[0] = -1e6
+    pert = np.asarray(sha_decode.prefill_attention_paged(
+        q, kpool2, vpool2, table, off))
+    np.testing.assert_allclose(base, pert, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # Sparse fused GEMM (Algorithm 3)
 # ---------------------------------------------------------------------------
 

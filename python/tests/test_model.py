@@ -418,14 +418,198 @@ def test_fused_paged_decode_chain_stays_bitwise(setup):
         np.asarray(model.gather_block_kv(pool_t, table)))
 
 
+# The fused-vs-twin prefill contract is an *entry-level* one: both sides
+# are jitted whole-graph programs (AOT entries), so the oracle is the
+# jitted twin — op-by-op eager dispatch of the same math can associate
+# reductions differently and is only allclose, not bitwise.
+_twin_prefill = jax.jit(model.prefill_chunk_paged, static_argnames=("cfg",))
+
+
+def test_fused_paged_prefill_matches_twin_bitwise(setup):
+    """The fused prefill chunk (direct pool-block writes at per-slot
+    offsets, per-layer table reads, no dense [L,2,B,G,S,dh] view) must
+    reproduce the twin gather -> prefill_chunk -> scatter path BIT FOR
+    BIT — logits and the ENTIRE pool — across per-slot offsets, a
+    sub-chunk final chunk, and GQA (llama-gqa fixture param)."""
+    cfg, params = setup
+    rng = np.random.default_rng(40)
+    B, P_len, C, N, bs = 2, 20, 8, 32, 8
+    toks = rng.integers(0, 250, (B, P_len)).astype(np.int32)
+    # slot 1's prompt ends mid-chunk AND mid-block (15 = 8 + 7): the final
+    # chunk is sub-chunk (7 < C) and its last block is partially occupied
+    lens = np.array([P_len, P_len - 5], np.int32)
+
+    kv = jnp.zeros((cfg.n_layers, 2, B, cfg.n_kv_heads, N, cfg.d_head),
+                   jnp.float32)
+    pool_t, table = _pool_from_dense(kv, bs, seed=5)
+    pool_f = pool_t
+    off = 0
+    while off < P_len:
+        chunk = np.zeros((B, C), np.int32)
+        clen = np.zeros(B, np.int32)
+        for b in range(B):
+            n = int(np.clip(lens[b] - off, 0, C))
+            chunk[b, :n] = toks[b, off:off + n]
+            clen[b] = n
+        offs = jnp.asarray(np.minimum(off, lens).astype(np.int32))
+        want, pool_t = _twin_prefill(
+            cfg, params, jnp.asarray(chunk), jnp.asarray(clen), offs, table,
+            pool_t)
+        got, pool_f = model.prefill_chunk_paged_fused(
+            cfg, params, jnp.asarray(chunk), jnp.asarray(clen), offs, table,
+            pool_f)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(pool_f), np.asarray(pool_t))
+        off += C
+
+
+def test_fused_paged_prefill_prefix_skip_matches_twin(setup):
+    """Prefix-cache skip through the fused path: request B's table names
+    request A's published prefix blocks and B prefills ONLY its suffix
+    chunk. Fused logits and pool match the twin bitwise, and the shared
+    prefix blocks survive B's call untouched (the fused write can't even
+    reach them — they're outside the chunk's write window)."""
+    cfg, params = setup
+    rng = np.random.default_rng(41)
+    bs, C = 8, 8
+    prefix = rng.integers(0, 250, 16).astype(np.int32)      # 2 full blocks
+    suf_b = rng.integers(0, 250, 4).astype(np.int32)
+    P = 8
+    pool = jnp.zeros(model.kv_pool_shape(cfg, P, bs), jnp.float32)
+    table_a = jnp.asarray(np.array([[1, 2, 3, 0]], np.int32))
+    table_b = jnp.asarray(np.array([[1, 2, 4, 0]], np.int32))  # shares 1, 2
+
+    def chunk_call(fn, tokens_1d, off, table, pool):
+        n = min(C, len(tokens_1d) - off)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = tokens_1d[off:off + n]
+        return fn(cfg, params, jnp.asarray(chunk),
+                  jnp.asarray(np.array([n], np.int32)),
+                  jnp.asarray(np.array([off], np.int32)), table, pool)
+
+    # request A publishes the prefix blocks through the FUSED path
+    prompt_a = np.concatenate([prefix, rng.integers(0, 250, 4).astype(np.int32)])
+    for off in (0, 8, 16):
+        _, pool = chunk_call(model.prefill_chunk_paged_fused, prompt_a, off,
+                             table_a, pool)
+    shared_before = np.asarray(pool)[:, :, [1, 2]].copy()
+
+    # request B: ONE suffix chunk at offset 16, fused vs twin
+    prompt_b = np.concatenate([prefix, suf_b])
+    want, pool_t = chunk_call(_twin_prefill, prompt_b, 16, table_b, pool)
+    got, pool_f = chunk_call(model.prefill_chunk_paged_fused, prompt_b, 16,
+                             table_b, pool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(pool_f), np.asarray(pool_t))
+    np.testing.assert_array_equal(np.asarray(pool_f)[:, :, [1, 2]],
+                                  shared_before)
+
+
+def test_fused_paged_prefill_cow_boundary_block(setup):
+    """COW at a chunk boundary: request B forks from A mid-block, the
+    boundary block is duplicated with copy_blocks, and B's divergent
+    suffix chunk writes into the COPY. Fused matches twin bitwise, A's
+    original boundary block is untouched, and the copy keeps its
+    pre-boundary rows while gaining B's divergent rows."""
+    cfg, params = setup
+    rng = np.random.default_rng(42)
+    bs, C = 8, 8
+    P = 8
+    pool = jnp.zeros(model.kv_pool_shape(cfg, P, bs), jnp.float32)
+    table_a = jnp.asarray(np.array([[1, 2, 3, 0]], np.int32))
+    prompt_a = rng.integers(0, 250, 12).astype(np.int32)    # ends mid-block 2
+
+    def chunk_call(fn, tokens_1d, off, table, pool):
+        n = min(C, len(tokens_1d) - off)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = tokens_1d[off:off + n]
+        return fn(cfg, params, jnp.asarray(chunk),
+                  jnp.asarray(np.array([n], np.int32)),
+                  jnp.asarray(np.array([off], np.int32)), table, pool)
+
+    for off in (0, 8):
+        _, pool = chunk_call(model.prefill_chunk_paged_fused, prompt_a, off,
+                             table_a, pool)
+
+    # fork: B shares full block 1, COWs the half-full boundary block 2 -> 4
+    pool = model.copy_blocks(pool, jnp.asarray(np.array([2], np.int32)),
+                             jnp.asarray(np.array([4], np.int32)))
+    table_b = jnp.asarray(np.array([[1, 4, 5, 0]], np.int32))
+    block_a = np.asarray(pool)[:, :, 2].copy()
+    copied = np.asarray(pool)[:, :, 4].copy()
+
+    # B's divergent suffix: positions 12..15 land in the tail of the copy
+    prompt_b = np.concatenate([prompt_a, rng.integers(0, 250, 4).astype(np.int32)])
+    want, pool_t = chunk_call(_twin_prefill, prompt_b, 12, table_b, pool)
+    got, pool_f = chunk_call(model.prefill_chunk_paged_fused, prompt_b, 12,
+                             table_b, pool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(pool_f), np.asarray(pool_t))
+    pf = np.asarray(pool_f)
+    # A's boundary block survives B's divergent writes bit-exactly
+    np.testing.assert_array_equal(pf[:, :, 2], block_a)
+    # the copy keeps its shared pre-boundary rows and gained new tail rows
+    np.testing.assert_array_equal(pf[:, :, 4, :, :4], copied[:, :, :, :4])
+    assert not np.array_equal(pf[:, :, 4, :, 4:], copied[:, :, :, 4:])
+
+
+def test_fused_paged_prefill_pad_slot_writes_nothing(setup):
+    """Null-block write policy (the decode policy mock.rs enforces, now
+    closed for prefill): a PAD slot — lengths 0, all-null table — must
+    not write ANY pool block, not even reserved block 0; and an active
+    slot's sub-chunk tail rows must be dropped, not scattered."""
+    cfg, params = setup
+    rng = np.random.default_rng(43)
+    bs, C, P = 8, 8, 8
+    pool0 = jnp.asarray(
+        rng.standard_normal(model.kv_pool_shape(cfg, P, bs)).astype(np.float32))
+    table = jnp.asarray(np.array([[1, 2, 3, 0], [0, 0, 0, 0]], np.int32))
+    toks = jnp.asarray(rng.integers(0, 250, (2, C)).astype(np.int32))
+    # slot 0: 5 valid tokens at offset 8; slot 1: PAD (lengths 0)
+    lens = jnp.asarray(np.array([5, 0], np.int32))
+    offs = jnp.asarray(np.array([8, 0], np.int32))
+    _, pool1 = model.prefill_chunk_paged_fused(
+        cfg, params, toks, lens, offs, table, pool0)
+    p0, p1 = np.asarray(pool0), np.asarray(pool1)
+    # only block 2 rows 0..4 (positions 8..12) may change
+    np.testing.assert_array_equal(p1[:, :, 0], p0[:, :, 0])   # null block
+    np.testing.assert_array_equal(p1[:, :, 1], p0[:, :, 1])
+    np.testing.assert_array_equal(p1[:, :, 3:], p0[:, :, 3:])
+    np.testing.assert_array_equal(p1[:, :, 2, :, 5:], p0[:, :, 2, :, 5:])
+    assert not np.array_equal(p1[:, :, 2, :, :5], p0[:, :, 2, :, :5])
+
+
+def test_copy_blocks_copies_pairs_and_identity(setup):
+    """copy_blocks semantics the engine relies on: every (src, dst) pair
+    lands dst <- src across all layers/K/V, (0, 0) pads are identity, and
+    blocks outside the dst set are untouched."""
+    cfg, params = setup
+    del params
+    rng = np.random.default_rng(44)
+    bs, P = 8, 10
+    pool0 = jnp.asarray(
+        rng.standard_normal(model.kv_pool_shape(cfg, P, bs)).astype(np.float32))
+    src = jnp.asarray(np.array([1, 3, 0, 0], np.int32))
+    dst = jnp.asarray(np.array([7, 8, 0, 0], np.int32))
+    pool1 = model.copy_blocks(pool0, src, dst)
+    p0, p1 = np.asarray(pool0), np.asarray(pool1)
+    np.testing.assert_array_equal(p1[:, :, 7], p0[:, :, 1])
+    np.testing.assert_array_equal(p1[:, :, 8], p0[:, :, 3])
+    untouched = [b for b in range(P) if b not in (7, 8)]
+    np.testing.assert_array_equal(p1[:, :, untouched], p0[:, :, untouched])
+
+
 def test_aot_paged_entries_contract(tmp_path):
     """Manifest contract of the paged matrix: every serving (batch, seq)
-    bucket gains a prefill twin taking [tokens, lengths, offset,
-    block_table, kv-pool] and decode twins taking [tokens, lengths,
-    block_table, kv-pool, (head_idx...)], all addressing ONE pool shape."""
+    bucket gains a fused prefill entry taking [tokens, lengths, offset,
+    block_table, kv-pool] and fused decode entries taking [tokens,
+    lengths, block_table, kv-pool, (head_idx...)], all addressing ONE
+    pool shape, plus one copy_blocks entry (on-device COW). No deprecated
+    twin entries are emitted."""
     from compile import aot
     from compile.configs import (
-        BATCH_BUCKETS, KV_BLOCK, SEQ_BUCKETS, kv_pool_blocks,
+        BATCH_BUCKETS, COPY_BLOCKS_PAIRS, KV_BLOCK, SEQ_BUCKETS,
+        kv_pool_blocks,
     )
 
     cfg = get_config("llama-tiny")
@@ -433,8 +617,8 @@ def test_aot_paged_entries_contract(tmp_path):
     P = kv_pool_blocks(BATCH_BUCKETS, SEQ_BUCKETS)
     pshape = [cfg.n_layers, 2, P, cfg.n_kv_heads, KV_BLOCK, cfg.d_head]
 
-    pe = entries["prefill_b4_s128_paged"]
-    assert pe.kind == "prefill_paged"
+    pe = entries["prefill_b4_s128_paged_fused"]
+    assert pe.kind == "prefill_paged_fused"
     assert [d["name"] for d in pe.data] == \
         ["tokens", "lengths", "offset", "block_table", "kv"]
     assert pe.data[3]["shape"] == [4, 128 // KV_BLOCK]
@@ -443,30 +627,36 @@ def test_aot_paged_entries_contract(tmp_path):
     assert pe.outputs[1]["shape"] == pshape
     assert pe.meta["kv_block"] == KV_BLOCK
     assert pe.meta["kv_pool_blocks"] == P
+    assert pe.meta["fused"] is True
 
-    de = entries["decode_dense_b4_n128_paged"]
-    assert de.kind == "decode_paged"
+    de = entries["decode_dense_b4_n128_paged_fused"]
+    assert de.kind == "decode_paged_fused"
     assert [d["name"] for d in de.data] == \
         ["tokens", "lengths", "block_table", "kv"]
     assert de.data[3]["shape"] == pshape
+    assert de.meta["fused"] is True
 
     # the index-taking convention rides along unchanged
-    pp = entries["decode_polar_d0500_b4_n128_paged"]
+    pp = entries["decode_polar_d0500_b4_n128_paged_fused"]
     assert [d["name"] for d in pp.data] == \
         ["tokens", "lengths", "block_table", "kv", "head_idx"]
 
-    # every paged decode twin has a fused sibling with IDENTICAL data and
-    # output specs (the runtime swaps by name, inputs untouched) and a
-    # meta marker; twins carry fused=False so the deprecation is explicit
-    for name, e in entries.items():
-        if e.kind != "decode_paged":
-            continue
-        f = entries[name + "_fused"]
-        assert f.kind == "decode_paged_fused"
-        assert f.data == e.data and f.outputs == e.outputs, name
-        assert f.meta["fused"] is True and e.meta["fused"] is False
+    # on-device COW: one fixed-width block-pair copy entry per model
+    cb = entries["copy_blocks"]
+    assert cb.kind == "copy_blocks"
+    assert [d["name"] for d in cb.data] == ["src", "dst", "kv"]
+    assert cb.data[0]["shape"] == [COPY_BLOCKS_PAIRS]
+    assert cb.data[0]["dtype"] == "i32" and cb.data[1]["dtype"] == "i32"
+    assert cb.data[2]["shape"] == pshape
+    assert cb.outputs == [{"name": "kv", "shape": pshape, "dtype": "f32"}]
+    assert cb.meta["pairs"] == COPY_BLOCKS_PAIRS
 
-    # contiguous twins stay (A/B baseline, eval, pp/tp drivers)
+    # the deprecated twin entries are retired: the fused path is the only
+    # paged path the artifact carries
+    for name in entries:
+        assert not name.endswith("_paged"), name
+
+    # contiguous entries stay (A/B baseline, eval, pp/tp drivers)
     for name in ("decode_dense_b4_n128", "prefill_b4_s128"):
         assert name in entries, name
 

@@ -1,12 +1,14 @@
 //! `bench decode-breakdown` — A/B breakdown of one decode step's cost:
 //! h2d / compute / d2h / host-surgery time and, crucially, the bytes
 //! crossing the host<->device boundary per step, for the legacy host-KV
-//! path vs. the resident-device-KV path — plus the paged fused-vs-twin
-//! contrast: the deprecated twin entries stage a dense KV view both ways
-//! around the decode core (`gather_bytes`/`scatter_bytes`), the fused
-//! entries index the block pool in place and must report ~0. The run
-//! FAILS if the fused path moves shell bytes. Emits `BENCH_decode.json`
-//! so every PR's CI run records the perf trajectory.
+//! path vs. the resident-device-KV path — plus the fused paged pipeline
+//! end to end: chunked prefill, one COW `copy_blocks`, and the decode
+//! loop all index the block pool in place, so every shell counter
+//! (`gather_bytes`/`scatter_bytes` on the decode side,
+//! `prefill_gather_bytes`/`prefill_scatter_bytes` on the prefill side)
+//! must report 0 and COW shows up only as device-local `cow_bytes`. The
+//! run FAILS if any default-path step moves shell bytes. Emits
+//! `BENCH_decode.json` so every PR's CI run records the perf trajectory.
 //!
 //! `--smoke` runs against the deterministic mock engine (no AOT
 //! artifacts): byte counters are analytic and reproducible; timing fields
@@ -62,19 +64,20 @@ fn run_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Result<P
     Ok(PathRun { profile: e.profile_snapshot(), n, wall_s: t0.elapsed().as_secs_f64() })
 }
 
-/// The paged counterpart of [`run_path`]: the same steady batch and
-/// decode loop, but served from the block pool through per-slot block
-/// tables (slot `i` owns blocks `1 + i*width ..`). Twin entries account
-/// the dense view they stage both ways (`gather_bytes`/`scatter_bytes`);
-/// fused entries index the pool in place and account 0. The profile
-/// covers only the decode loop.
+/// The paged counterpart of [`run_path`], covering the WHOLE fused
+/// pipeline: chunked prefill into the pool (slot `i` owns blocks
+/// `1 + i*width ..`), one COW `copy_blocks` (slot 0's first block forked
+/// into the first spare block, the shared-prefix divergence pattern),
+/// then the decode loop. The profile covers all three phases — so the
+/// zero-shell gate proves no default-path step stages a dense KV view.
 fn run_paged_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Result<PathRun> {
     let c = e.prefill_chunk_len();
     let n = e.seq_buckets()[0];
     let (bs, pool_blocks) = e.kv_layout();
     let width = (n + bs - 1) / bs;
-    if 1 + b * width > pool_blocks {
-        bail!("pool too small: {pool_blocks} blocks for {b} slots x {width}");
+    // one spare block past the slots' own, for the COW fork
+    if 1 + b * width + 1 > pool_blocks {
+        bail!("pool too small: {pool_blocks} blocks for {b} slots x {width} + COW spare");
     }
     let prompt_len = 4.min(c).min(n - 1);
     let mut toks = vec![PAD; b * c];
@@ -91,9 +94,12 @@ fn run_paged_path<E: StepEngine>(e: &E, tag: &str, b: usize, steps: usize) -> Re
         }
     }
     let tables = BlockTables::new(flat, b, width)?;
-    let out = e.prefill_chunk_paged(&toks, &lens, &offs, &tables, e.new_kv_pool()?)?;
-    let mut kv = out.kv;
     e.reset_profile();
+    let out = e.prefill_chunk_paged(&toks, &lens, &offs, &tables, e.new_kv_pool()?)?;
+    // COW fork: copy slot 0's first block into the spare — on-device,
+    // accounted as cow_bytes, never as shell or full-pool traffic
+    let spare = (1 + b * width) as u32;
+    let mut kv = e.copy_blocks(out.kv, &[(1, spare)])?;
     let tokens: Vec<i32> = (0..b).map(|i| 60 + i as i32).collect();
     let lengths = vec![(prompt_len + 1) as i32; b];
     let t0 = Instant::now();
@@ -118,11 +124,13 @@ fn per_step_host_copy(r: &PathRun) -> f64 {
     r.profile.host_copy_bytes() as f64 / r.profile.decode_steps.max(1) as f64
 }
 
-/// Gather + scatter shell bytes per decode step (the dense-view traffic
-/// the twin entries stage around the core; fused must be ~0).
-fn per_step_shell(r: &PathRun) -> f64 {
-    (r.profile.gather_bytes + r.profile.scatter_bytes) as f64
-        / r.profile.decode_steps.max(1) as f64
+/// Total dense-view shell bytes across the run — decode gather/scatter
+/// plus the prefill-side counters. The fused pipeline must report 0.
+fn total_shell(r: &PathRun) -> u64 {
+    r.profile.gather_bytes
+        + r.profile.scatter_bytes
+        + r.profile.prefill_gather_bytes
+        + r.profile.prefill_scatter_bytes
 }
 
 pub fn run(rest: &[String]) -> Result<()> {
@@ -147,17 +155,15 @@ pub fn run(rest: &[String]) -> Result<()> {
     let b = p.get_usize("batch").map_err(anyhow::Error::msg)?;
     let steps = p.get_usize("steps").map_err(anyhow::Error::msg)?;
 
-    let (engine_label, base, fast, twin, fused) = if p.get_bool("smoke") {
+    let (engine_label, base, fast, paged) = if p.get_bool("smoke") {
         let base_e = MockEngine::new().with_host_kv_path(true);
         let fast_e = MockEngine::new();
-        let twin_e = MockEngine::new().with_twin_kv_path(true);
-        let fused_e = MockEngine::new();
+        let paged_e = MockEngine::new();
         (
             "mock".to_string(),
             run_path(&base_e, "dense", b, steps)?,
             run_path(&fast_e, "dense", b, steps)?,
-            run_paged_path(&twin_e, "dense", b, steps)?,
-            run_paged_path(&fused_e, "dense", b, steps)?,
+            run_paged_path(&paged_e, "dense", b, steps)?,
         )
     } else {
         let dir = std::path::PathBuf::from(p.get("artifacts")).join(p.get("model"));
@@ -169,21 +175,19 @@ pub fn run(rest: &[String]) -> Result<()> {
         let tag = SparsityController::new(mode).decode_tag();
         let base_e = Engine::new(exec.clone()).with_kv_host_path(true);
         let fast_e = Engine::new(exec.clone()).with_kv_host_path(false);
-        let twin_e = Engine::new(exec.clone()).with_twin_kv_path(true);
-        let fused_e = Engine::new(exec).with_twin_kv_path(false);
+        let paged_e = Engine::new(exec);
         (
             p.get("model").to_string(),
             run_path(&base_e, &tag, b, steps)?,
             run_path(&fast_e, &tag, b, steps)?,
-            run_paged_path(&twin_e, &tag, b, steps)?,
-            run_paged_path(&fused_e, &tag, b, steps)?,
+            run_paged_path(&paged_e, &tag, b, steps)?,
         )
     };
 
     let (hc_base, hc_fast) = (per_step_host_copy(&base), per_step_host_copy(&fast));
     let reduction = if hc_fast > 0.0 { hc_base / hc_fast } else { f64::INFINITY };
     let reduction = (reduction * 1e4).round() / 1e4;
-    let (sh_twin, sh_fused) = (per_step_shell(&twin), per_step_shell(&fused));
+    let shell = total_shell(&paged);
     let report = Json::obj(vec![
         ("bench", "decode-breakdown".into()),
         ("engine", engine_label.into()),
@@ -195,13 +199,12 @@ pub fn run(rest: &[String]) -> Result<()> {
             Json::obj(vec![
                 ("baseline_host_kv", path_json(&base)),
                 ("resident_device_kv", path_json(&fast)),
-                ("paged_twin", path_json(&twin)),
-                ("paged_fused", path_json(&fused)),
+                ("paged_fused", path_json(&paged)),
             ]),
         ),
         ("host_copy_bytes_reduction", reduction.into()),
-        ("shell_bytes_per_step_twin", sh_twin.into()),
-        ("shell_bytes_per_step_fused", sh_fused.into()),
+        ("shell_bytes_paged", (shell as usize).into()),
+        ("cow_bytes_paged", (paged.profile.cow_bytes as usize).into()),
     ]);
 
     println!("decode-breakdown ({engine_label}, b={b}, n={}, {steps} steps)", base.n);
@@ -210,8 +213,8 @@ pub fn run(rest: &[String]) -> Result<()> {
         hc_base, hc_fast
     );
     println!(
-        "  paged shell bytes/step: {:.0} (twin gather+scatter) -> {:.0} (fused)",
-        sh_twin, sh_fused
+        "  paged pipeline (prefill + COW + decode): shell bytes {shell}, cow bytes {}",
+        paged.profile.cow_bytes
     );
     println!(
         "  step wall: {:.3} ms -> {:.3} ms",
@@ -219,13 +222,25 @@ pub fn run(rest: &[String]) -> Result<()> {
         fast.wall_s * 1e3 / steps.max(1) as f64
     );
     super::harness::write_bench_json(p.get("out"), &report)?;
-    // the acceptance gate this bench exists for: fused entries index the
-    // pool in place — any shell traffic means the twin path leaked back
-    if sh_fused != 0.0 {
-        bail!("fused paged decode moved {sh_fused} shell bytes/step — expected 0");
+    // the acceptance gate this bench exists for: the fused pipeline
+    // indexes the pool in place end to end — ANY shell traffic on any
+    // default-path step (prefill, COW, or decode) fails the run
+    if paged.profile.gather_bytes != 0 || paged.profile.scatter_bytes != 0 {
+        bail!(
+            "paged decode moved shell bytes (gather {} / scatter {}) — expected 0",
+            paged.profile.gather_bytes,
+            paged.profile.scatter_bytes
+        );
     }
-    if sh_twin <= 0.0 {
-        bail!("twin paged decode reported no shell bytes — A/B baseline broken");
+    if paged.profile.prefill_gather_bytes != 0 || paged.profile.prefill_scatter_bytes != 0 {
+        bail!(
+            "paged prefill moved shell bytes (gather {} / scatter {}) — expected 0",
+            paged.profile.prefill_gather_bytes,
+            paged.profile.prefill_scatter_bytes
+        );
+    }
+    if paged.profile.cow_bytes == 0 {
+        bail!("COW fork accounted no cow_bytes — copy_blocks path broken");
     }
     Ok(())
 }
@@ -255,25 +270,25 @@ mod tests {
         assert!(reduction >= 2.0, "got {reduction}x");
     }
 
-    /// The fused acceptance gate: at b=8/n=16 the twin paged path stages
-    /// the dense [L,2,B,G,N,dh] view both ways (8192 B each, per step);
-    /// the fused path moves zero shell bytes. Host<->device traffic is
-    /// identical — the shells are device-side movement, so the A/B
-    /// isolates exactly what fusion kills.
+    /// The zero-shell acceptance gate: the whole paged pipeline —
+    /// chunked prefill, the COW fork, and 64 decode steps — moves zero
+    /// dense-view shell bytes, uploads the pool exactly once, and
+    /// accounts the COW as one block of device-local `cow_bytes`.
     #[test]
-    fn smoke_paged_fused_kills_shell_bytes() {
-        let twin = MockEngine::new().with_twin_kv_path(true);
-        let fused = MockEngine::new();
-        let rt = run_paged_path(&twin, "dense", 8, 64).unwrap();
-        let rf = run_paged_path(&fused, "dense", 8, 64).unwrap();
-        assert_eq!(rt.profile.decode_steps, 64);
-        assert_eq!(rf.profile.decode_steps, 64);
-        // dense view = 2*2*8*2*16*2 f32 = 2048 elems = 8192 B each way
-        assert_eq!(rt.profile.gather_bytes, 64 * 8192);
-        assert_eq!(rt.profile.scatter_bytes, 64 * 8192);
-        assert_eq!(per_step_shell(&rt), 16384.0);
-        assert_eq!(rf.profile.gather_bytes, 0);
-        assert_eq!(rf.profile.scatter_bytes, 0);
-        assert_eq!(per_step_host_copy(&rt), per_step_host_copy(&rf));
+    fn smoke_paged_pipeline_moves_zero_shell_bytes() {
+        let e = MockEngine::new();
+        let r = run_paged_path(&e, "dense", 8, 64).unwrap();
+        assert_eq!(r.profile.decode_steps, 64);
+        assert_eq!(r.profile.prefill_chunks, 1);
+        assert_eq!(total_shell(&r), 0, "fused pipeline staged a dense view");
+        // one (1 -> spare) pair: a block is L*2*G*bs*dh = 256 f32 = 1024 B
+        assert_eq!(r.profile.cow_bytes, 1024);
+        assert_eq!(e.pool_uploads(), 1, "pool crossed host->device again");
+        // analytic traffic for the mock at b=8, n=16, 33-block pool:
+        //   h2d: prefill payload 608 + pool upload 33792 + COW indices 64
+        //        + 64 decode steps x 96 B tokens/lengths/tables
+        //   d2h: logits 9600 B per prefill chunk and per decode step
+        assert_eq!(r.profile.h2d_bytes, 608 + 33792 + 64 + 64 * 96);
+        assert_eq!(r.profile.d2h_bytes, 9600 + 64 * 9600);
     }
 }

@@ -19,12 +19,14 @@
 //! The mock also mirrors the engine's two KV paths for `bench
 //! decode-breakdown --smoke`: in the default *resident* mode a host KV is
 //! "uploaded" once and then flows step-to-step as a buffer; in
-//! `with_host_kv_path` mode every step pays the full round trip. A second
-//! A/B (`with_twin_kv_path`) mirrors the paged fused-vs-twin contrast:
-//! twin decode accounts the dense gather/scatter shell bytes the
-//! deprecated twin entries stage around the core, fused (the default)
-//! accounts zero. Byte accounting is analytic (computed from the shapes
-//! the real paths would move), so the breakdown is deterministic.
+//! `with_host_kv_path` mode every step pays the full round trip. The
+//! paged pipeline is fused end to end: prefill and decode index the pool
+//! in place (zero gather/scatter shell bytes, on either side), and COW
+//! runs as an on-device block-pair copy accounted in `cow_bytes` — the
+//! pool uploads once per process ([`MockEngine::pool_uploads`]) and never
+//! crosses the host boundary again. Byte accounting is analytic (computed
+//! from the shapes the real paths would move), so the breakdown is
+//! deterministic.
 //!
 //! **Paged KV**: the mock implements the full block-pool path the
 //! scheduler serves from (`prefill_chunk_paged` / `decode_paged` /
@@ -134,11 +136,6 @@ pub struct MockEngine {
     chunk_delay: Duration,
     /// A/B: model the legacy host-KV path (full cache both ways per step).
     host_kv_path: bool,
-    /// A/B: model the deprecated twin paged entries (gather a dense KV
-    /// view, run the dense core, scatter it back). Default false = the
-    /// fused entries, which index the pool in place and move zero shell
-    /// bytes — `gather_bytes`/`scatter_bytes` stay at 0.
-    twin_kv_path: bool,
     /// Override the paged pool's block count (None = the no-sharing
     /// worst case of the bucket ladder). Overload tests shrink this so
     /// block pressure bites long before slot pressure.
@@ -147,6 +144,9 @@ pub struct MockEngine {
     profile: Mutex<StepProfile>,
     /// Decode steps that arrived with (validated) router indices.
     routed_steps: AtomicU64,
+    /// Paged calls that uploaded the pool (resident path: exactly one
+    /// per process — the first; see [`MockEngine::pool_uploads`]).
+    pool_uploads: AtomicU64,
     /// Scripted fault injection (`with_faults`): the paged entry points
     /// consult it before touching the pool, and NaN corruption runs over
     /// the finished logits — see [`super::faults`].
@@ -183,11 +183,11 @@ impl MockEngine {
             step_delay: Duration::ZERO,
             chunk_delay: Duration::ZERO,
             host_kv_path: false,
-            twin_kv_path: false,
             pool_blocks: None,
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
             routed_steps: AtomicU64::new(0),
+            pool_uploads: AtomicU64::new(0),
             faults: None,
         }
     }
@@ -265,11 +265,11 @@ impl MockEngine {
         self
     }
 
-    /// Model the deprecated twin paged decode path (gather/scatter
-    /// shells around a dense core) for fused-vs-twin A/B runs.
-    pub fn with_twin_kv_path(mut self, twin: bool) -> Self {
-        self.twin_kv_path = twin;
-        self
+    /// How many times a paged entry call uploaded the pool (a resident
+    /// serving run uploads it exactly once, at the first paged call, and
+    /// never again — bucket changes, COW, admissions included).
+    pub fn pool_uploads(&self) -> u64 {
+        self.pool_uploads.load(Ordering::Relaxed)
     }
 
     /// Shrink (or grow) the paged pool to exactly `n` physical blocks
@@ -641,6 +641,9 @@ impl StepEngine for MockEngine {
             p.d2h_bytes += logits_bytes + pool_bytes;
             PagedKv::from_tensor(&t, p_blocks, bs)?
         } else {
+            if !was_resident {
+                self.pool_uploads.fetch_add(1, Ordering::Relaxed);
+            }
             let lit = t.to_literal()?;
             let buf = self.client.buffer_from_host_literal(None, &lit)?;
             let mut p = lock_clean(&self.profile);
@@ -649,14 +652,12 @@ impl StepEngine for MockEngine {
             PagedKv { store: KvStore::Buf(buf), pool_blocks: p_blocks, block: bs }
         };
         {
+            // fused prefill: the graph resolves prior-context tiles through
+            // the block table and writes the chunk's rows in place — no
+            // dense view on either side, prefill_{gather,scatter}_bytes 0
             let mut p = lock_clean(&self.profile);
             p.prefill_ns += t0.elapsed().as_nanos() as u64;
             p.prefill_chunks += 1;
-            // the prefill twin still stages the dense view both ways (no
-            // fused prefill entry yet — decode is the per-token hot path)
-            let view = (self.cfg.kv_elems(b, n) * 4) as u64;
-            p.gather_bytes += view;
-            p.scatter_bytes += view;
         }
         Ok(PagedStepOutput {
             logits: Tensor::f32(logits, vec![b, self.cfg.vocab])?,
@@ -736,31 +737,24 @@ impl StepEngine for MockEngine {
         let io_bytes =
             (tokens.len() * 4 + lengths.len() * 4 + tables.flat.len() * 4) as u64;
         let logits_bytes = (b * self.cfg.vocab * 4) as u64;
-        // shell accounting: the deprecated twin entries stage a dense
-        // [L,2,B,G,N,dh] view both ways around the decode core; the fused
-        // entries index the pool in place and move nothing
-        let shell_bytes = if self.twin_kv_path {
-            (self.cfg.kv_elems(b, n) * 4) as u64
-        } else {
-            0
-        };
+        // fused decode: in-graph table indexing, one KV row written in
+        // place — gather_bytes/scatter_bytes stay 0 by construction
         let kv_out = if self.host_kv_path {
             let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + pool_bytes;
             p.d2h_bytes += logits_bytes + pool_bytes;
-            p.gather_bytes += shell_bytes;
-            p.scatter_bytes += shell_bytes;
             p.decode_steps += 1;
             PagedKv::from_tensor(&t, p_blocks, bs)?
         } else {
             let uploaded = if was_resident { 0 } else { pool_bytes };
+            if !was_resident {
+                self.pool_uploads.fetch_add(1, Ordering::Relaxed);
+            }
             let lit = t.to_literal()?;
             let store = KvStore::Buf(self.client.buffer_from_host_literal(None, &lit)?);
             let mut p = lock_clean(&self.profile);
             p.h2d_bytes += io_bytes + uploaded;
             p.d2h_bytes += logits_bytes;
-            p.gather_bytes += shell_bytes;
-            p.scatter_bytes += shell_bytes;
             p.decode_steps += 1;
             PagedKv { store, pool_blocks: p_blocks, block: bs }
         };
@@ -771,9 +765,13 @@ impl StepEngine for MockEngine {
         })
     }
 
-    /// COW block copies on the materialized pool, fingerprints included —
-    /// so a forked/diverging request's copied block carries the original
-    /// prefix fingerprints, exactly like the real copy.
+    /// COW block copies, fingerprints included — so a forked/diverging
+    /// request's copied block carries the original prefix fingerprints,
+    /// exactly like the real copy. Mirrors the AOT `copy_blocks` entry:
+    /// a resident pool STAYS resident (the mock's host materialization is
+    /// bookkeeping, not modeled traffic); only the bytes logically copied
+    /// are accounted, as device-local `cow_bytes`, plus the tiny (src,
+    /// dst) index uploads.
     fn copy_blocks(&self, kv: PagedKv, pairs: &[(u32, u32)]) -> Result<PagedKv> {
         if pairs.is_empty() {
             return Ok(kv);
@@ -782,10 +780,19 @@ impl StepEngine for MockEngine {
         let was_resident = kv.is_resident();
         let mut t = kv.to_tensor()?;
         copy_pool_blocks(&mut t, pairs)?;
+        {
+            let live = pairs.iter().filter(|&&(s, d)| s != d).count();
+            // one fixed-width entry call per 8 pairs, two i32 index
+            // vectors each (mirrors configs.COPY_BLOCKS_PAIRS)
+            let calls = pairs.len().div_ceil(8) as u64;
+            let mut p = lock_clean(&self.profile);
+            p.cow_bytes += (live * self.cfg.kv_block_elems(bs) * 4) as u64;
+            p.h2d_bytes += calls * 2 * 8 * 4;
+        }
         if was_resident {
-            // materialize + lazy re-upload: the next entry call pays the
-            // h2d (its `was_resident == false` branch), we pay the d2h
-            lock_clean(&self.profile).d2h_bytes += (t.len() * 4) as u64;
+            let lit = t.to_literal()?;
+            let buf = self.client.buffer_from_host_literal(None, &lit)?;
+            return Ok(PagedKv { store: KvStore::Buf(buf), pool_blocks: p_blocks, block: bs });
         }
         PagedKv::from_tensor(&t, p_blocks, bs)
     }

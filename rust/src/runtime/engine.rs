@@ -182,12 +182,6 @@ pub struct Engine {
     pub exec: Arc<Executor>,
     /// A/B switch: true = legacy host-literal KV path (env POLAR_KV_HOST).
     kv_host_path: bool,
-    /// A/B switch: true = serve paged decode through the deprecated twin
-    /// entries (gather -> dense core -> scatter) even when the artifact
-    /// carries fused entries (env POLAR_TWIN_KV). Default false: fused
-    /// entries are preferred, with automatic fallback to the twin when a
-    /// legacy artifact lacks them.
-    twin_kv_path: bool,
     /// Router weights from the artifact (None when it ships no routers),
     /// built **lazily** on first routed use — dense/dejavu serving never
     /// pays the host-side weight copies (tok_emb alone duplicates the
@@ -207,11 +201,9 @@ pub struct Engine {
 impl Engine {
     pub fn new(exec: Arc<Executor>) -> Engine {
         let kv_host_path = std::env::var("POLAR_KV_HOST").is_ok();
-        let twin_kv_path = std::env::var("POLAR_TWIN_KV").is_ok();
         Engine {
             exec,
             kv_host_path,
-            twin_kv_path,
             routers: Arc::new(OnceLock::new()),
             kv_stash: Arc::new(Mutex::new(None)),
         }
@@ -253,14 +245,6 @@ impl Engine {
     /// baseline) regardless of the environment.
     pub fn with_kv_host_path(mut self, host: bool) -> Engine {
         self.kv_host_path = host;
-        self
-    }
-
-    /// Force the deprecated twin paged-decode path (gather -> dense core ->
-    /// scatter) for bitwise A/B against the fused entries, regardless of
-    /// the environment.
-    pub fn with_twin_kv_path(mut self, twin: bool) -> Engine {
-        self.twin_kv_path = twin;
         self
     }
 
@@ -621,9 +605,10 @@ impl Engine {
     /// Assemble one KV-carrying entry's data inputs in declared order
     /// (named literals + the single `kv` store + routing index tensors),
     /// run it on the configured path, and return (logits, kv-out). Shared
-    /// by the paged decode/prefill twins; the contract is identical to
-    /// the contiguous paths': host path fetches the full output tuple,
-    /// resident path leaves the KV on-device and fetches only logits.
+    /// by the fused paged decode/prefill entry points; the contract is
+    /// identical to the contiguous paths': host path fetches the full
+    /// output tuple, resident path leaves the KV on-device and fetches
+    /// only logits.
     fn run_kv_entry(
         &self,
         name: &str,
@@ -716,10 +701,13 @@ impl Engine {
         }
     }
 
-    /// Block-pool chunked prefill through `prefill_b{B}_s{N}_paged`:
+    /// Block-pool chunked prefill through `prefill_b{B}_s{N}_paged_fused`:
     /// the same per-slot chunk semantics as [`Engine::prefill_chunk`],
-    /// with each slot's cache addressed through its block-table row. The
-    /// logical bucket N is implied by the tables' width x block size.
+    /// with each slot's cache addressed through its block-table row (the
+    /// graph resolves prior-context KV through the table and writes the
+    /// chunk's new rows straight into their pool blocks — no dense view,
+    /// no gather/scatter shell). The logical bucket N is implied by the
+    /// tables' width x block size.
     pub fn prefill_chunk_paged(
         &self,
         tokens: &[i32],
@@ -762,7 +750,7 @@ impl Engine {
             Ok(lits) => lits,
             Err(e) => return Err(self.stash_and_err(kv, e)),
         };
-        let name = self.exec.manifest().paged_prefill_entry_name(b, n);
+        let name = self.exec.manifest().fused_prefill_entry_name(b, n);
         let t0 = std::time::Instant::now();
         let (pool_blocks, block) = (kv.pool_blocks, kv.block);
         let (logits, store) = self.run_kv_entry(
@@ -774,16 +762,11 @@ impl Engine {
         let mut p = self.exec.profile_mut();
         p.prefill_ns += t0.elapsed().as_nanos() as u64;
         p.prefill_chunks += 1;
-        // the prefill twin still stages the dense view both ways (no fused
-        // prefill entry yet — decode is the per-token hot path)
-        let view = self.exec.config().kv_elems(b, n) as u64 * 4;
-        p.gather_bytes += view;
-        p.scatter_bytes += view;
         Ok(PagedStepOutput { logits, kv: PagedKv { store, pool_blocks, block } })
     }
 
-    /// Block-pool decode through `decode_{tag}_b{B}_n{N}_paged` — the
-    /// serving hot path. Same index-taking routing convention as
+    /// Block-pool decode through `decode_{tag}_b{B}_n{N}_paged_fused` —
+    /// the serving hot path. Same index-taking routing convention as
     /// [`Engine::decode`] (the engine runs the artifact routers itself
     /// for direct callers hitting an index-taking entry).
     pub fn decode_paged(
@@ -799,16 +782,9 @@ impl Engine {
         let n = tables.n(kv.block);
         // everything up to execution happens while we still own the
         // pool: failures park it for `recover_kv` instead of losing it.
-        // Serve the fused entry (in-graph table indexing, no dense KV
-        // intermediate) unless twin mode is forced or the artifact
-        // predates the fused emission.
-        let fused_name = self.exec.manifest().fused_decode_entry_name(tag, b, n);
-        let fused = !self.twin_kv_path && self.exec.manifest().has_entry(&fused_name);
-        let name = if fused {
-            fused_name
-        } else {
-            self.exec.manifest().paged_decode_entry_name(tag, b, n)
-        };
+        // The fused entry indexes the block table in-graph — no dense KV
+        // intermediate, no gather/scatter shell.
+        let name = self.exec.manifest().fused_decode_entry_name(tag, b, n);
         let computed;
         let prep = (|| -> Result<(Option<StepRouting>, [xla::Literal; 3])> {
             if tokens.len() != b || lengths.len() != b {
@@ -860,42 +836,72 @@ impl Engine {
             kv.into_store(),
             routing,
         )?;
-        let mut p = self.exec.profile_mut();
-        p.decode_steps += 1;
-        if !fused {
-            // the twin graph materializes the tables' dense [L,2,B,G,N,dh]
-            // view on the way in and scatters the whole view back out; the
-            // fused entry indexes the pool in place and writes one row.
-            let view = self.exec.config().kv_elems(b, n) as u64 * 4;
-            p.gather_bytes += view;
-            p.scatter_bytes += view;
-        }
-        drop(p);
+        self.exec.profile_mut().decode_steps += 1;
         Ok(PagedStepOutput { logits, kv: PagedKv { store, pool_blocks, block } })
     }
 
     /// Copy physical blocks inside the pool (copy-on-write service).
     ///
-    /// Honest cost note: with no dedicated on-device copy entry yet,
-    /// a COW on a *resident* pool materializes the WHOLE pool to the
-    /// host (accounted d2h here) and the next entry call re-uploads it
-    /// (accounted h2d there) — far more transfer than the one block
-    /// logically copied. COW is bounded by admissions (never on the
-    /// per-token path), so this is a latency blip per shared-prompt
-    /// admission, not a steady-state cost; an AOT `copy_blocks` entry
-    /// that gathers/scatters on-device is the planned fix.
+    /// On a resident pool this runs the AOT `copy_blocks` entry: the pool
+    /// buffer stays on the device, pairs are chunked into fixed-width
+    /// calls padded with (0, 0) (null block copied onto itself — an
+    /// identity write), and the only host traffic is the tiny index
+    /// uploads. Only the bytes logically copied are accounted, as
+    /// `cow_bytes` (device-local, not host<->device). A host-literal pool
+    /// (the POLAR_KV_HOST A/B baseline, or a legacy artifact without the
+    /// entry) falls back to the host-side [`copy_pool_blocks`].
     pub fn copy_kv_blocks(&self, kv: PagedKv, pairs: &[(u32, u32)]) -> Result<PagedKv> {
         if pairs.is_empty() {
             return Ok(kv);
         }
         let (pool_blocks, block) = (kv.pool_blocks, kv.block);
-        let mut t = match kv.store {
-            KvStore::Lit(l) => Tensor::from_literal(&l)?,
-            // account the full-pool fetch like any other d2h
-            KvStore::Buf(b) => Tensor::from_literal(&self.exec.fetch_literal(&b)?)?,
-        };
-        copy_pool_blocks(&mut t, pairs)?;
-        PagedKv::from_tensor(&t, pool_blocks, block)
+        if let Err(e) = (|| -> Result<()> {
+            for &(src, dst) in pairs {
+                if src as usize >= pool_blocks || dst as usize >= pool_blocks {
+                    bail!("copy_kv_blocks: {src} -> {dst} out of pool ({pool_blocks} blocks)");
+                }
+            }
+            Ok(())
+        })() {
+            return Err(self.stash_and_err(kv, e));
+        }
+        let live = pairs.iter().filter(|&&(s, d)| s != d).count() as u64;
+        let cow = live * self.exec.config().kv_block_elems(block) as u64 * 4;
+        let m = self.exec.manifest();
+        let name = m.copy_blocks_entry_name();
+        if self.kv_host_path || !m.has_entry(&name) {
+            let mut t = match kv.store {
+                KvStore::Lit(l) => Tensor::from_literal(&l)?,
+                // account the full-pool fetch like any other d2h
+                KvStore::Buf(b) => Tensor::from_literal(&self.exec.fetch_literal(&b)?)?,
+            };
+            copy_pool_blocks(&mut t, pairs)?;
+            self.exec.profile_mut().cow_bytes += cow;
+            return PagedKv::from_tensor(&t, pool_blocks, block);
+        }
+        let width = m.copy_pairs.max(1);
+        let mut store = kv.into_store();
+        for chunk in pairs.chunks(width) {
+            let mut src = vec![0i32; width]; // (0, 0) pad: null -> null
+            let mut dst = vec![0i32; width];
+            for (i, &(s, d)) in chunk.iter().enumerate() {
+                src[i] = s as i32;
+                dst[i] = d as i32;
+            }
+            let src_l = Tensor::i32(src, vec![width])?.to_literal()?;
+            let dst_l = Tensor::i32(dst, vec![width])?.to_literal()?;
+            let kv_in = match store {
+                KvStore::Lit(l) => DeviceInput::Host(l),
+                KvStore::Buf(b) => DeviceInput::Buf(b),
+            };
+            let outs = self.exec.run_bufs(
+                &name,
+                vec![DeviceInput::Host(src_l), DeviceInput::Host(dst_l), kv_in],
+            )?;
+            store = KvStore::Buf(outs.into_iter().next().context("copy_blocks kv output")?);
+        }
+        self.exec.profile_mut().cow_bytes += cow;
+        Ok(PagedKv { store, pool_blocks, block })
     }
 
     // -- pipeline parallel (2 stages, Fig 11) -----------------------------

@@ -119,11 +119,13 @@ pub struct Manifest {
     /// Chunked-prefill token width: each `prefill_b{B}_s{S}` call appends
     /// up to this many prompt tokens per slot at a position offset.
     pub prefill_chunk: usize,
-    /// Paged-KV geometry of the `*_paged` entries: token positions per
+    /// Paged-KV geometry of the `*_paged_fused` entries: token positions per
     /// physical block, and total pool blocks (incl. the reserved null
     /// block 0). The pool tensor is [L,2,kv_pool_blocks,G,kv_block,dh].
     pub kv_block: usize,
     pub kv_pool_blocks: usize,
+    /// Pair width of the `copy_blocks` entry (on-device COW).
+    pub copy_pairs: usize,
     pub entries: BTreeMap<String, EntrySpec>,
 }
 
@@ -222,6 +224,7 @@ impl Manifest {
                 .unwrap_or(64),
             kv_block,
             kv_pool_blocks,
+            copy_pairs: buckets.get("copy_pairs").as_usize().unwrap_or(8),
             entries,
         })
     }
@@ -247,30 +250,31 @@ impl Manifest {
         format!("prefill_b{batch}_s{n}")
     }
 
-    /// Block-pool twin of a decode entry: gather -> dense core -> scatter.
-    /// Deprecated as a serving path — kept for bitwise A/B against the
-    /// fused entry (see [`Manifest::fused_decode_entry_name`]).
-    pub fn paged_decode_entry_name(&self, tag: &str, batch: usize, n: usize) -> String {
-        format!("decode_{tag}_b{batch}_n{n}_paged")
-    }
-
-    /// Fused paged decode entry: identical inputs/outputs to the twin, but
-    /// the graph indexes the block table itself and writes only the new KV
-    /// row — no dense intermediate, no scatter. Runtimes fall back to the
-    /// twin name when an older artifact lacks the fused entries.
+    /// Fused paged decode entry: the graph indexes the block table itself
+    /// and writes only the new KV row into the resident pool — no dense
+    /// intermediate, no gather/scatter shell.
     pub fn fused_decode_entry_name(&self, tag: &str, batch: usize, n: usize) -> String {
         format!("decode_{tag}_b{batch}_n{n}_paged_fused")
     }
 
-    /// Whether the manifest carries an entry by this name (used for the
-    /// fused-entry -> twin fallback on legacy artifacts).
+    /// Whether the manifest carries an entry by this name.
     pub fn has_entry(&self, name: &str) -> bool {
         self.entries.contains_key(name)
     }
 
-    /// Block-pool twin of a chunked-prefill entry.
-    pub fn paged_prefill_entry_name(&self, batch: usize, n: usize) -> String {
-        format!("prefill_b{batch}_s{n}_paged")
+    /// Fused paged chunked-prefill entry: resolves prior-context KV tile
+    /// addresses through the block table inside the kernel and writes the
+    /// chunk's new K/V rows directly into their pool blocks at per-slot
+    /// offsets.
+    pub fn fused_prefill_entry_name(&self, batch: usize, n: usize) -> String {
+        format!("prefill_b{batch}_s{n}_paged_fused")
+    }
+
+    /// On-device COW entry: copies up to `buckets.copy_pairs` (src, dst)
+    /// block pairs inside the resident pool in one call. Pairs are padded
+    /// with (0, 0) — the null block copied onto itself.
+    pub fn copy_blocks_entry_name(&self) -> String {
+        "copy_blocks".to_string()
     }
 
     /// Smallest batch bucket >= need (error if need exceeds the largest).
@@ -340,8 +344,9 @@ mod tests {
         assert_eq!(m.config.kv_shape(1, 16), vec![2, 2, 1, 2, 16, 4]);
         assert_eq!(m.prefill_chunk, 16);
         assert_eq!(m.prefill_entry_name(2, 32), "prefill_b2_s32");
-        assert_eq!(m.paged_prefill_entry_name(2, 32), "prefill_b2_s32_paged");
-        assert_eq!(m.paged_decode_entry_name("dense", 2, 32), "decode_dense_b2_n32_paged");
+        assert_eq!(m.fused_prefill_entry_name(2, 32), "prefill_b2_s32_paged_fused");
+        assert_eq!(m.copy_blocks_entry_name(), "copy_blocks");
+        assert_eq!(m.copy_pairs, 8);
         assert_eq!(
             m.fused_decode_entry_name("polar_d0500", 2, 32),
             "decode_polar_d0500_b2_n32_paged_fused"

@@ -30,14 +30,25 @@ pub struct StepProfile {
     pub prefill_chunks: u64,
     /// Decode steps the counters cover (for per-step averages).
     pub decode_steps: u64,
-    /// Bytes moved assembling dense KV views from the block pool (the
-    /// gather shell of twin-path paged entries). Fused entries index the
-    /// pool in place and report 0 here.
+    /// Decode-side bytes moved assembling dense KV views from the block
+    /// pool (the gather shell of a shell-path paged call). The fused
+    /// entries index the pool in place: the default path reports 0 here,
+    /// and `bench decode-breakdown` gates on that.
     pub gather_bytes: u64,
-    /// Bytes moved writing dense KV views back through the block table
-    /// (the scatter shell). Fused entries write only the new row in place
-    /// and report 0 here.
+    /// Decode-side bytes moved writing dense KV views back through the
+    /// block table (the scatter shell). Fused entries write only the new
+    /// row in place and report 0 here.
     pub scatter_bytes: u64,
+    /// Prefill-side gather-shell bytes (dense view assembly before a
+    /// chunked-prefill call). Zero on the fused prefill path.
+    pub prefill_gather_bytes: u64,
+    /// Prefill-side scatter-shell bytes (dense view write-back after a
+    /// chunked-prefill call). Zero on the fused prefill path.
+    pub prefill_scatter_bytes: u64,
+    /// Bytes copied between pool blocks by on-device COW (`copy_blocks`
+    /// calls). This is device-local traffic, not host<->device — counted
+    /// separately so COW cost stays visible once the shells are gone.
+    pub cow_bytes: u64,
 }
 
 impl StepProfile {
@@ -54,6 +65,9 @@ impl StepProfile {
         self.decode_steps += o.decode_steps;
         self.gather_bytes += o.gather_bytes;
         self.scatter_bytes += o.scatter_bytes;
+        self.prefill_gather_bytes += o.prefill_gather_bytes;
+        self.prefill_scatter_bytes += o.prefill_scatter_bytes;
+        self.cow_bytes += o.cow_bytes;
     }
 
     /// Total bytes crossing the host<->device boundary.
@@ -90,6 +104,15 @@ impl StepProfile {
                 "scatter_bytes_per_step",
                 self.per_step(self.scatter_bytes).into(),
             ),
+            (
+                "prefill_gather_bytes",
+                (self.prefill_gather_bytes as usize).into(),
+            ),
+            (
+                "prefill_scatter_bytes",
+                (self.prefill_scatter_bytes as usize).into(),
+            ),
+            ("cow_bytes", (self.cow_bytes as usize).into()),
             ("h2d_ms", (self.h2d_ns as f64 * 1e-6).into()),
             ("compute_ms", (self.compute_ns as f64 * 1e-6).into()),
             ("d2h_ms", (self.d2h_ns as f64 * 1e-6).into()),
@@ -117,6 +140,9 @@ mod tests {
             decode_steps: 2,
             gather_bytes: 100,
             scatter_bytes: 60,
+            prefill_gather_bytes: 40,
+            prefill_scatter_bytes: 20,
+            cow_bytes: 2048,
             ..Default::default()
         };
         a.merge(&b);
@@ -126,7 +152,13 @@ mod tests {
         assert_eq!(a.prefill_chunks, 3);
         assert_eq!(a.gather_bytes, 100);
         assert_eq!(a.scatter_bytes, 60);
+        assert_eq!(a.prefill_gather_bytes, 40);
+        assert_eq!(a.prefill_scatter_bytes, 20);
+        assert_eq!(a.cow_bytes, 2048);
         let j = a.to_json();
+        assert_eq!(j.get("prefill_gather_bytes").as_usize(), Some(40));
+        assert_eq!(j.get("prefill_scatter_bytes").as_usize(), Some(20));
+        assert_eq!(j.get("cow_bytes").as_usize(), Some(2048));
         assert_eq!(j.get("h2d_bytes_per_step").as_f64(), Some(5.0));
         assert_eq!(j.get("host_copy_bytes_per_step").as_f64(), Some(12.5));
         assert_eq!(j.get("gather_bytes").as_usize(), Some(100));

@@ -237,11 +237,11 @@ fn tp2_matches_single_decode() {
 #[test]
 fn paged_decode_matches_contiguous_entry() {
     // pack a dense [L,2,1,G,64,dh] cache into pool blocks 1..=width and
-    // decode through the paged twin: logits must match the contiguous
-    // entry (same math; the gather/scatter is pure data movement).
+    // decode through the fused paged entry: logits must match the
+    // contiguous entry (same math; the table indexing is pure addressing).
     let Some(e) = engine("opt-tiny") else { return };
-    if !e.exec.manifest().entries.contains_key("decode_dense_b1_n64_paged") {
-        eprintln!("[skip] artifacts predate paged entries; re-run `make artifacts`");
+    if !e.exec.manifest().entries.contains_key("decode_dense_b1_n64_paged_fused") {
+        eprintln!("[skip] artifacts predate fused paged entries; re-run `make artifacts`");
         return;
     }
     let cfg = e.exec.config().clone();
