@@ -28,8 +28,16 @@ Entries per model (static shapes = the CUDA-graph analogue, DESIGN.md):
                                      (src, dst) block-pair lists inside the
                                      resident pool ((0,0) pads are identity)
   micro_* (opt-small)                Fig 1a / Fig 3 / Fig 10 module benches
-  pp2_stage{0,1}_{tag}_b{B}_n{N}     pipeline-parallel stages (Fig 11)
-  tp{S}_{embed,attn,mlp,final}_*     Megatron-style TP shards (Fig 12)
+  pp2_stage{0,1}_*_paged_fused       pipeline-parallel stages over per-stage
+                                     pool slices + block tables (Fig 11)
+  tp{S}_attn_s{s}_*_paged_fused      TP attention shards over per-shard pool
+                                     slices; dense | sha (local head_idx,
+                                     sentinel-dropped) | kvw (KV-write-only
+                                     dispatch for router-skipped shards)
+  tp{S}_mlp_s{s}_*                   biasless TP MLP shards (k* takes local
+                                     mlp_idx, sentinel-masked)
+  tp{S}_{attn,mlp}_reduce_b{B}       on-device all-reduce: residual + Σ
+                                     partials + the bias shards omit
 
 Usage: python -m compile.aot [--models a,b] [--sets core,micro,pp,tp]
        [--out ../artifacts]
@@ -380,64 +388,121 @@ def micro_entries(cfg, out_dir):
 
 
 def pp_entries(cfg, out_dir):
-    """Two-stage pipeline-parallel decode (Fig 11)."""
+    """Two-stage pipeline-parallel decode over per-stage pool slices
+    (Fig 11). Each stage owns a resident pool [Lstage,2,P,G,bs,dh] — the
+    layer split of the single-device pool — addressed by the same block
+    tables; the stage-0 -> 1 activation x [B,d] stays a device buffer.
+    Polar stages are index-taking like the core decode entries: the full
+    head_idx [L,B,Kh] (+ mlp_idx [L,Km]) rides to both stages, each reads
+    its own layers' rows."""
     V, L, G, dh, d = cfg.vocab, cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_model
     Lh = L // 2
     N = 256
+    batches, seqs = serving_buckets(cfg)
+    P = kv_pool_blocks(batches, seqs)
+    W = N // KV_BLOCK
     entries = []
     modes = [("dense", 1.0), ("polar", cfg.critical_density)]
     for B in BATCH_BUCKETS:
         topk = load_topk(out_dir, cfg, B)
         for mode, density in modes:
+            routed = mode == "polar"
+            Kh = heads_for_density(cfg, density) if routed else 0
+            Km = int(max(topk)) if (routed and cfg.mlp_sparsity and topk) else 0
             tag = "dense" if mode == "dense" else f"polar_{dtag(density)}"
-            kv0 = [Lh, 2, B, G, N, dh]
-            kv1 = [L - Lh, 2, B, G, N, dh]
-            fn0 = (lambda c, m, dn, tk: lambda toks, lens, kv, params: (
-                lambda x_kv: (x_kv[0], x_kv[1]))(
-                model.decode_core(
-                    c, params, model._embed(c, params, toks, lens - 1),
-                    lens, kv, layer_begin=0, layer_end=Lh, mode=m,
-                    density=dn, mlp_topk=tk)))(cfg, mode, density, topk)
+            kv0 = [Lh, 2, P, G, KV_BLOCK, dh]
+            kv1 = [L - Lh, 2, P, G, KV_BLOCK, dh]
+            idx_data = []
+            if routed:
+                idx_data.append({"name": "head_idx", "shape": [L, B, Kh],
+                                 "dtype": "i32"})
+                if Km:
+                    idx_data.append({"name": "mlp_idx", "shape": [L, Km],
+                                     "dtype": "i32"})
+
+            def mk_stage(c, m, dn, tk, begin, end, stage):
+                kw = dict(layer_begin=begin, layer_end=end, mode=m,
+                          density=dn, mlp_topk=tk)
+
+                def core(x, lens, table, kv, hi, mi, params):
+                    x, kv = model.decode_core_paged(
+                        c, params, x, lens, kv, table,
+                        head_idx=hi, mlp_idx=mi, **kw)
+                    if stage == 1:
+                        return model.final_logits(c, params, x), kv
+                    return x, kv
+
+                def stage0(toks, lens, table, kv, hi, mi, params):
+                    x = model._embed(c, params, toks, lens - 1)
+                    return core(x, lens, table, kv, hi, mi, params)
+
+                inner = stage0 if stage == 0 else core
+                if m == "polar" and Km:
+                    return lambda a, lens, table, kv, hi, mi, params: \
+                        inner(a, lens, table, kv, hi, mi, params)
+                if m == "polar":
+                    return lambda a, lens, table, kv, hi, params: \
+                        inner(a, lens, table, kv, hi, None, params)
+                return lambda a, lens, table, kv, params: \
+                    inner(a, lens, table, kv, None, None, params)
+
+            meta = {"batch": B, "seq_bucket": N, "mode": mode,
+                    "density": density, "routed": routed, "head_k": Kh,
+                    "mlp_idx_k": Km, "kv_block": KV_BLOCK,
+                    "kv_pool_blocks": P, "fused": True}
             entries.append(Entry(
-                f"pp2_stage0_{tag}_b{B}_n{N}", "pp_stage0", fn0,
+                f"pp2_stage0_{tag}_b{B}_n{N}_paged_fused",
+                "pp_stage0_paged_fused",
+                mk_stage(cfg, mode, density, topk, 0, Lh, 0),
                 [{"name": "tokens", "shape": [B], "dtype": "i32"},
                  {"name": "lengths", "shape": [B], "dtype": "i32"},
-                 {"name": "kv", "shape": kv0, "dtype": "f32"}],
+                 {"name": "block_table", "shape": [B, W], "dtype": "i32"},
+                 {"name": "kv", "shape": kv0, "dtype": "f32"}] + idx_data,
                 [{"name": "x", "shape": [B, d], "dtype": "f32"},
                  {"name": "kv", "shape": kv0, "dtype": "f32"}],
-                {"batch": B, "seq_bucket": N, "mode": mode, "density": density,
-                 "stage": 0, "layers": [0, Lh]},
+                dict(meta, stage=0, layers=[0, Lh]),
             ))
-            fn1 = (lambda c, m, dn, tk: lambda x, lens, kv, params: (
-                lambda x_kv: (model.final_logits(c, params, x_kv[0]), x_kv[1]))(
-                model.decode_core(
-                    c, params, x, lens, kv, layer_begin=Lh, layer_end=L,
-                    mode=m, density=dn, mlp_topk=tk)))(cfg, mode, density, topk)
             entries.append(Entry(
-                f"pp2_stage1_{tag}_b{B}_n{N}", "pp_stage1", fn1,
+                f"pp2_stage1_{tag}_b{B}_n{N}_paged_fused",
+                "pp_stage1_paged_fused",
+                mk_stage(cfg, mode, density, topk, Lh, L, 1),
                 [{"name": "x", "shape": [B, d], "dtype": "f32"},
                  {"name": "lengths", "shape": [B], "dtype": "i32"},
-                 {"name": "kv", "shape": kv1, "dtype": "f32"}],
+                 {"name": "block_table", "shape": [B, W], "dtype": "i32"},
+                 {"name": "kv", "shape": kv1, "dtype": "f32"}] + idx_data,
                 [{"name": "logits", "shape": [B, V], "dtype": "f32"},
                  {"name": "kv", "shape": kv1, "dtype": "f32"}],
-                {"batch": B, "seq_bucket": N, "mode": mode, "density": density,
-                 "stage": 1, "layers": [Lh, L]},
+                dict(meta, stage=1, layers=[Lh, L]),
             ))
     return entries
 
 
 def tp_entries(cfg, out_dir, n_shards: int):
-    """Megatron-style TP shard entries (Fig 12)."""
+    """Megatron-style TP shard entries over per-shard pool slices (Fig 12).
+
+    Each shard owns a resident pool [L,2,P,Gs,bs,dh] — the group-axis
+    split of the single-device pool — addressed by the shared block
+    tables. Shard entries are biasless; the per-layer reduce entries own
+    the residual + bias, so a router-skipped shard contributes a zero
+    buffer and only runs the KV-write-only ``kvw`` entry. ``sha``/``k*``
+    entries take per-shard LOCAL indices (sentinel Gs/Ds = unselected).
+    """
     V, L, G, dh, d, H = (cfg.vocab, cfg.n_layers, cfg.n_kv_heads, cfg.d_head,
                          cfg.d_model, cfg.n_heads)
     if G % n_shards or H % n_shards or cfg.d_ff % n_shards:
         return []
     Gs = G // n_shards
+    Ds = cfg.d_ff // n_shards
+    Ks = min(heads_for_density(cfg, cfg.critical_density), Gs)
     N = 256
+    batches, seqs = serving_buckets(cfg)
+    P = kv_pool_blocks(batches, seqs)
+    W = N // KV_BLOCK
+    pshape = [L, 2, P, Gs, KV_BLOCK, dh]
     entries = []
     for B in (1, 4, 16):
         topk = load_topk(out_dir, cfg, B)
-        mean_k = int(np.mean(topk)) if topk else 0
+        Kms = min(int(max(topk)), Ds) if (cfg.mlp_sparsity and topk) else 0
         entries.append(Entry(
             f"tp{n_shards}_embed_b{B}", "tp_embed",
             (lambda c: lambda toks, lens, params: (model.tp_embed(c, params, toks, lens),))(cfg),
@@ -453,53 +518,80 @@ def tp_entries(cfg, out_dir, n_shards: int):
             [{"name": "logits", "shape": [B, V], "dtype": "f32"}],
             {"batch": B, "n_shards": n_shards},
         ))
+        for op in ("attn", "mlp"):
+            fn = (lambda c, o: lambda layer, x, *rest: (
+                (model.tp_attn_reduce if o == "attn" else model.tp_mlp_reduce)(
+                    c, rest[-1], layer, x, list(rest[:-1])),))(cfg, op)
+            entries.append(Entry(
+                f"tp{n_shards}_{op}_reduce_b{B}", "tp_reduce", fn,
+                [{"name": "layer", "shape": [], "dtype": "i32"},
+                 {"name": "x", "shape": [B, d], "dtype": "f32"}]
+                + [{"name": f"p{s}", "shape": [B, d], "dtype": "f32"}
+                   for s in range(n_shards)],
+                [{"name": "x", "shape": [B, d], "dtype": "f32"}],
+                {"batch": B, "n_shards": n_shards, "op": op},
+            ))
         for s in range(n_shards):
-            for sparse, tag, dens in (
-                (False, "dense", 1.0),
-                (True, f"sha_{dtag(cfg.critical_density)}", cfg.critical_density),
-            ):
-                def _mk(c, sh, sp, dn, ns):
-                    def fn(layer, x, kv, lens, params):
-                        p, k, v = model.tp_attn_shard(
-                            c, params, layer, x, kv, lens, shard=sh,
-                            n_shards=ns, sparse=sp, density=dn)
-                        # stack k/v so the shard cache round-trips as ONE
-                        # tensor (rust feeds it straight back next layer)
-                        import jax.numpy as jnp_
-                        return p, jnp_.stack([k, v])
+            attn_modes = [
+                ("dense", "dense", 1.0, 0),
+                ("sha", f"sha_{dtag(cfg.critical_density)}",
+                 cfg.critical_density, Ks),
+                ("kvw", "kvw", 0.0, 0),
+            ]
+            for amode, tag, dens, kk in attn_modes:
+                def _mk(c, sh, md, ns):
+                    def fn(layer, x, lens, table, kv, *rest):
+                        hi = rest[0] if md == "sha" else None
+                        params = rest[-1]
+                        out = model.tp_attn_shard_paged(
+                            c, params, layer, x, lens, table, kv,
+                            shard=sh, n_shards=ns, mode=md, head_idx=hi)
+                        return (out,) if md == "kvw" else out
                     return fn
-                fn = _mk(cfg, s, sparse, dens, n_shards)
+                data = [{"name": "layer", "shape": [], "dtype": "i32"},
+                        {"name": "x", "shape": [B, d], "dtype": "f32"},
+                        {"name": "lengths", "shape": [B], "dtype": "i32"},
+                        {"name": "block_table", "shape": [B, W], "dtype": "i32"},
+                        {"name": "kv", "shape": pshape, "dtype": "f32"}]
+                if amode == "sha":
+                    data.append({"name": "head_idx", "shape": [B, Ks],
+                                 "dtype": "i32"})
+                outputs = ([] if amode == "kvw" else
+                           [{"name": "partial", "shape": [B, d], "dtype": "f32"}])
+                outputs.append({"name": "kv", "shape": pshape, "dtype": "f32"})
                 entries.append(Entry(
-                    f"tp{n_shards}_attn_s{s}_{tag}_b{B}_n{N}", "tp_attn", fn,
-                    [{"name": "layer", "shape": [], "dtype": "i32"},
-                     {"name": "x", "shape": [B, d], "dtype": "f32"},
-                     {"name": "kv", "shape": [2, B, Gs, N, dh], "dtype": "f32"},
-                     {"name": "lengths", "shape": [B], "dtype": "i32"}],
-                    [{"name": "partial", "shape": [B, d], "dtype": "f32"},
-                     {"name": "kv", "shape": [2, B, Gs, N, dh], "dtype": "f32"}],
+                    f"tp{n_shards}_attn_s{s}_{tag}_b{B}_n{N}_paged_fused",
+                    "tp_attn", _mk(cfg, s, amode, n_shards), data, outputs,
                     {"batch": B, "seq_bucket": N, "shard": s,
-                     "n_shards": n_shards, "density": dens},
+                     "n_shards": n_shards, "mode": amode, "density": dens,
+                     "head_k": kk, "kv_block": KV_BLOCK, "kv_pool_blocks": P,
+                     "fused": True},
                 ))
-            for k_mode, kk in (("dense", 0),
-                               (f"k{max(1, mean_k // n_shards)}",
-                                max(1, mean_k // n_shards)) if mean_k else ("dense", 0)):
-                fn = (lambda c, sh, kk_: lambda layer, x, params: (
-                    model.tp_mlp_shard(c, params, layer, x, shard=sh,
-                                       n_shards=n_shards, top_k=kk_),))(cfg, s, kk)
+            mlp_modes = [("dense", 0)]
+            if Kms:
+                mlp_modes.append((f"k{Kms}", Kms))
+            for k_mode, kk in mlp_modes:
+                def _mk_mlp(c, sh, kk_, ns):
+                    def fn(layer, x, *rest):
+                        mi = rest[0] if kk_ else None
+                        params = rest[-1]
+                        return (model.tp_mlp_shard(
+                            c, params, layer, x, shard=sh, n_shards=ns,
+                            mlp_idx=mi),)
+                    return fn
+                data = [{"name": "layer", "shape": [], "dtype": "i32"},
+                        {"name": "x", "shape": [B, d], "dtype": "f32"}]
+                if kk:
+                    data.append({"name": "mlp_idx", "shape": [kk],
+                                 "dtype": "i32"})
                 entries.append(Entry(
-                    f"tp{n_shards}_mlp_s{s}_{k_mode}_b{B}", "tp_mlp", fn,
-                    [{"name": "layer", "shape": [], "dtype": "i32"},
-                     {"name": "x", "shape": [B, d], "dtype": "f32"}],
+                    f"tp{n_shards}_mlp_s{s}_{k_mode}_b{B}", "tp_mlp",
+                    _mk_mlp(cfg, s, kk, n_shards), data,
                     [{"name": "partial", "shape": [B, d], "dtype": "f32"}],
-                    {"batch": B, "shard": s, "n_shards": n_shards, "top_k": kk},
+                    {"batch": B, "shard": s, "n_shards": n_shards,
+                     "top_k": kk},
                 ))
-    # dedupe (the k_mode tuple trick can emit duplicates)
-    seen, out = set(), []
-    for e in entries:
-        if e.name not in seen:
-            seen.add(e.name)
-            out.append(e)
-    return out
+    return entries
 
 
 # ---------------------------------------------------------------------------

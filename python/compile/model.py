@@ -621,49 +621,60 @@ def _write_kv_row(kv_pool, l, block_table, lengths, k_new, v_new):
 
 
 def _attend_fused(cfg, params, l, h, q, kv_pool, block_table, lengths, *,
-                  sparse: bool, top_k: int, head_idx=None):
+                  sparse: bool, top_k: int, head_idx=None, pool_l=None):
     """Pallas fused attention: the kernel indexes the block table itself and
-    writes selected head rows straight into the dense [B,H,dh] layout."""
+    writes selected head rows straight into the dense [B,H,dh] layout.
+    ``pool_l`` is the pool's layer index when the pool holds only a layer
+    slice (pipeline stage); weights always index by absolute ``l``."""
     B = q.shape[0]
     G, qpg = cfg.n_groups, cfg.q_per_group
+    pl = l if pool_l is None else pool_l
     if sparse and top_k < G:
         head_idx = _select_heads(params, l, h, top_k, head_idx)
     else:
         head_idx = jnp.broadcast_to(
             jnp.arange(G, dtype=jnp.int32)[None, :], (B, G))
     o = sha_decode.sha_decode_paged(
-        q, kv_pool[l, 0], kv_pool[l, 1], block_table, head_idx, lengths, qpg)
+        q, kv_pool[pl, 0], kv_pool[pl, 1], block_table, head_idx, lengths, qpg)
     return o.reshape(B, -1) @ params["wo"][l] + params["bo"][l]
 
 
 def decode_core_paged(cfg: ModelConfig, params, x, lengths, kv_pool,
-                      block_table, *, mode: str = "dense",
+                      block_table, *, layer_begin: int = 0,
+                      layer_end: int = None, mode: str = "dense",
                       density: float = 1.0, mlp_topk: tuple = (),
                       attn_impl: str = "xla", mlp_impl: str = "xla",
                       head_idx=None, mlp_idx=None):
-    """Fused paged decode layers on hidden x [B,d]. Returns (x, kv_pool').
+    """Fused paged decode layers [layer_begin, layer_end) on hidden x [B,d].
+    Returns (x, kv_pool').
 
     Same math as :func:`decode_core` over the gathered view, but KV moves
     block-at-a-time: the new row lands in its pool block before attention
-    reads the layer's cache through the table."""
+    reads the layer's cache through the table. ``kv_pool`` holds only this
+    slice's layers — [layer_end-layer_begin, 2, P, G, bs, dh] — so
+    pipeline-parallel stages own disjoint pool slices while weights and
+    ``head_idx``/``mlp_idx``/``mlp_topk`` index by absolute layer."""
     if mode not in ("dense", "dejavu", "polar", "teal", "cats"):
         raise ValueError(mode)
+    if layer_end is None:
+        layer_end = cfg.n_layers
     attn_k = max(1, min(cfg.n_groups, round(cfg.n_groups * density)))
     mlp_sparse_on = mode in ("dejavu", "polar") and cfg.mlp_sparsity and mlp_topk
     pos = lengths - 1
 
-    for l in range(cfg.n_layers):
+    for l in range(layer_begin, layer_end):
+        lk = l - layer_begin  # pool-slice index
         h = layer_norm(x, params["ln1_g"][l], params["ln1_b"][l])
         q, k_new, v_new = _decode_qkv(cfg, params, l, h, pos)
-        kv_pool = _write_kv_row(kv_pool, l, block_table, lengths, k_new, v_new)
+        kv_pool = _write_kv_row(kv_pool, lk, block_table, lengths, k_new, v_new)
         sparse_attn = mode == "polar" and l > 0
         hi_l = None if head_idx is None else head_idx[l]
         if attn_impl == "pallas":
             attn_out = _attend_fused(
                 cfg, params, l, h, q, kv_pool, block_table, lengths,
-                sparse=sparse_attn, top_k=attn_k, head_idx=hi_l)
+                sparse=sparse_attn, top_k=attn_k, head_idx=hi_l, pool_l=lk)
         else:
-            k_l, v_l = _gather_layer_kv(kv_pool, l, block_table)
+            k_l, v_l = _gather_layer_kv(kv_pool, lk, block_table)
             attn_out = _attend(
                 cfg, params, l, h, q, k_l, v_l, lengths,
                 sparse=sparse_attn, top_k=attn_k, impl=attn_impl,
@@ -818,15 +829,31 @@ def copy_blocks(kv_pool, src, dst):
 
 
 # ---------------------------------------------------------------------------
-# Tensor-parallel shard entries (Fig 12 substrate)
+# Tensor-parallel shard entries over the block pool (Fig 12 substrate)
 #
 # Megatron-style TP simulated on one host: each shard executable computes its
-# slice of heads (attention) or FFN neurons (MLP) for *one* layer, selected
-# dynamically by a scalar layer id (weights are stacked [L,...], so
-# dynamic_index_in_dim keeps shapes static). The rust driver runs shards on
-# worker threads and performs the per-layer all-reduce (partial sums +
-# residual) on the host — the same two-sync-points-per-layer schedule as real
-# Megatron TP. Layer 0 uses the dense attention entry (paper §3.2).
+# slice of head groups (attention) or FFN neurons (MLP) for *one* layer,
+# selected dynamically by a scalar layer id (weights are stacked [L,...], so
+# dynamic_index_in_dim keeps shapes static). Each shard owns a resident pool
+# slice [L,2,P,Gs,bs,dh] — the group-axis split of the single-device pool —
+# addressed by the same block tables, so paging and prefix sharing compose
+# with TP unchanged.
+#
+# Bias convention: shard entries are BIASLESS — the per-layer reduce entry
+# (tp_attn_reduce / tp_mlp_reduce) owns the output bias and the residual
+# add. That makes a skipped shard's contribution an exact zero [B,d]
+# buffer: a shard whose head groups are all router-unselected would have
+# scattered o = 0 rows into its partial (0 @ wo_s == 0.0 exactly), so the
+# driver can skip its attention dispatch entirely and feed the reduce a
+# persistent zero buffer instead. The skipped shard still runs the cheap
+# KV-write-only entry (mode="kvw") — future steps may select its groups,
+# and the paper's KV cache is dense even where attention is sparse.
+#
+# Head/neuron indices are per-shard LOCAL with a sentinel: the runtime
+# localizes the global head_idx [L,B,Kh] / mlp_idx [L,Km] to each shard
+# (global id - shard*Gs if owned, else the sentinel Gs/Ds), and the entry
+# drops sentinel rows in-graph (scatter mode="drop" / a where-mask), which
+# reproduces the single-device scatter-into-zeros exactly.
 # ---------------------------------------------------------------------------
 
 
@@ -845,14 +872,41 @@ def tp_final(cfg, params, x):
     return final_logits(cfg, params, x)
 
 
-def tp_attn_shard(cfg, params, layer, x, kv_l_shard, lengths, *,
-                  shard: int, n_shards: int, sparse: bool = False,
-                  density: float = 1.0, impl: str = "xla"):
-    """One attention block's shard: heads [shard*Hs, (shard+1)*Hs).
+def _shard_layer_kv(kv_pool, layer, block_table):
+    """Traced-layer dense view of one shard's pool slice:
+    kv_pool [L,2,P,Gs,bs,dh], block_table [B,NB] -> (k,v) [B,Gs,NB*bs,dh]."""
+    pool_l = jax.lax.dynamic_index_in_dim(kv_pool, layer, 0, keepdims=False)
+    _, _, Gs, bs, dh = pool_l.shape
+    B, NB = block_table.shape
+    flat = jnp.take(pool_l, block_table.reshape(-1), axis=1)
+    g = flat.reshape(2, B, NB, Gs, bs, dh)
+    g = jnp.moveaxis(g, 2, 3).reshape(2, B, Gs, NB * bs, dh)
+    return g[0], g[1]
 
-    layer: scalar i32. kv_l_shard: [2,B,Gs,N,dh]. Returns
-    (partial attn_out [B,d] — summed across shards by the host all-reduce,
-     k_shard', v_shard').
+
+def _write_shard_kv_row(kv_pool, layer, block_table, lengths, k_new, v_new):
+    """Traced-layer variant of :func:`_write_kv_row` for a shard pool."""
+    bs = kv_pool.shape[4]
+    pos = lengths - 1
+    blk = jnp.take_along_axis(block_table, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    kv_pool = kv_pool.at[layer, 0, blk, :, off, :].set(k_new)
+    return kv_pool.at[layer, 1, blk, :, off, :].set(v_new)
+
+
+def tp_attn_shard_paged(cfg, params, layer, x, lengths, block_table, kv_pool,
+                        *, shard: int, n_shards: int, mode: str = "dense",
+                        head_idx=None):
+    """One attention block's shard over its resident pool slice.
+
+    layer: scalar i32. kv_pool: [L,2,P,Gs,bs,dh] (this shard's group slice
+    of the single-device pool, full layer depth). The new KV row is always
+    written — even in mode="kvw", which then returns only the pool (the
+    dispatch a router-skipped shard still runs). head_idx (mode="sha"):
+    [B, Ks] LOCAL group ids, sentinel >= Gs for unselected slots.
+
+    Returns (partial [B,d] biasless, kv_pool') — or kv_pool' alone for
+    mode="kvw".
     """
     B = x.shape[0]
     H, G, dh = cfg.n_heads, cfg.n_groups, cfg.d_head
@@ -860,78 +914,90 @@ def tp_attn_shard(cfg, params, layer, x, kv_l_shard, lengths, *,
     qpg = cfg.q_per_group
     hs, gs = shard * Hs * dh, shard * Gs * dh
     p = _layer_params(params, layer, ["ln1_g", "ln1_b", "wq", "bq", "wk", "bk",
-                                      "wv", "bv", "wo", "bo", "ar_w", "ar_b"])
+                                      "wv", "bv", "wo"])
     pos = lengths - 1
     h = layer_norm(x, p["ln1_g"], p["ln1_b"])
-    q = (h @ p["wq"][:, hs:hs + Hs * dh] + p["bq"][hs:hs + Hs * dh]).reshape(B, Hs, dh)
     k_new = (h @ p["wk"][:, gs:gs + Gs * dh] + p["bk"][gs:gs + Gs * dh]).reshape(B, Gs, dh)
     v_new = (h @ p["wv"][:, gs:gs + Gs * dh] + p["bv"][gs:gs + Gs * dh]).reshape(B, Gs, dh)
     if cfg.pos == "rope":
-        q = rope(q, pos, dh)
         k_new = rope(k_new, pos, dh)
+    kv_pool = _write_shard_kv_row(kv_pool, layer, block_table, lengths,
+                                  k_new, v_new)
+    if mode == "kvw":
+        return kv_pool
 
-    def upd(cache_b, new_b, pb):
-        return jax.lax.dynamic_update_slice(cache_b, new_b[:, None, :], (0, pb, 0))
-
-    k_l = jax.vmap(upd)(kv_l_shard[0], k_new, pos)
-    v_l = jax.vmap(upd)(kv_l_shard[1], v_new, pos)
-
-    if sparse:
-        top_k = max(1, min(Gs, round(Gs * density)))
-        logits = h @ p["ar_w"][:, shard * Gs:(shard + 1) * Gs] \
-            + p["ar_b"][shard * Gs:(shard + 1) * Gs]
-        _, head_idx = top_k_desc(logits, top_k)
-        head_idx = head_idx.astype(jnp.int32)
-        o_sel = kref.sha_decode_ref(q, k_l, v_l, head_idx, lengths, qpg)
+    q = (h @ p["wq"][:, hs:hs + Hs * dh] + p["bq"][hs:hs + Hs * dh]).reshape(B, Hs, dh)
+    if cfg.pos == "rope":
+        q = rope(q, pos, dh)
+    k_l, v_l = _shard_layer_kv(kv_pool, layer, block_table)
+    if mode == "sha":
+        # sentinel rows: computed on a clipped duplicate, discarded by the
+        # out-of-range scatter — unselected heads stay exactly 0.0, the
+        # same rows the single-device scatter-into-zeros leaves untouched
+        sel = jnp.clip(head_idx, 0, Gs - 1)
+        o_sel = kref.sha_decode_ref(q, k_l, v_l, sel, lengths, qpg)
         qidx = (head_idx[:, :, None] * qpg
                 + jnp.arange(qpg, dtype=jnp.int32)[None, None, :]).reshape(B, -1)
         o = jnp.zeros((B, Hs, dh), jnp.float32)
-        o = o.at[jnp.arange(B)[:, None], qidx].set(o_sel)
+        o = o.at[jnp.arange(B)[:, None], qidx].set(o_sel, mode="drop")
     else:
         o = kref.dense_decode_attention_ref(q, k_l, v_l, lengths, qpg)
         o = o.reshape(B, Hs, dh)
-
     partial = o.reshape(B, -1) @ p["wo"][hs:hs + Hs * dh, :]
-    if shard == 0:
-        partial = partial + p["bo"]
-    return partial, k_l, v_l
+    return partial, kv_pool
 
 
 def tp_mlp_shard(cfg, params, layer, x, *, shard: int, n_shards: int,
-                 top_k: int = 0):
-    """One MLP block's shard: neurons [shard*Ds, (shard+1)*Ds).
+                 mlp_idx=None):
+    """One MLP block's shard: neurons [shard*Ds, (shard+1)*Ds). Biasless.
 
-    Returns partial [B,d] (host all-reduce sums shards). top_k > 0 applies
-    the union router over the shard's local neurons (dynamic MLP sparsity).
+    mlp_idx (i32 [Kms], ReLU models): per-shard LOCAL neuron ids from the
+    runtime's batch union, sentinel >= Ds for slots owned by other shards.
+    Sentinel columns are masked to exact 0.0 before the down-projection,
+    so the shard partials sum to the single-device selective MLP.
     """
     Dff = cfg.d_ff
     Ds = Dff // n_shards
     lo = shard * Ds
-    names = ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"]
+    names = ["ln2_g", "ln2_b", "w1", "b1", "w2"]
     if cfg.mlp == "swiglu":
         names.append("w3")
-    if top_k > 0:
-        names += ["mr_w1", "mr_b1", "mr_w2", "mr_b2"]
     p = _layer_params(params, layer, names)
     h = layer_norm(x, p["ln2_g"], p["ln2_b"])
     w1, w2 = p["w1"][lo:lo + Ds], p["w2"][lo:lo + Ds]
     b1 = p["b1"][lo:lo + Ds]
-    if top_k > 0 and cfg.mlp == "relu":
-        z = jax.nn.relu(h @ p["mr_w1"] + p["mr_b1"])
-        logits = (z @ p["mr_w2"] + p["mr_b2"])[:, lo:lo + Ds]
-        union = jnp.max(logits, axis=0)
-        k = min(top_k, Ds)
-        _, idx = top_k_desc(union, k)
-        idx = idx.astype(jnp.int32)
-        partial = kref.sparse_mlp_ref(h, w1, b1, w2, jnp.zeros_like(p["b2"]), idx)
+    if mlp_idx is not None and cfg.mlp == "relu":
+        sel = jnp.clip(mlp_idx, 0, Ds - 1)
+        a = jax.nn.relu(h @ jnp.take(w1, sel, axis=0).T + jnp.take(b1, sel))
+        a = jnp.where((mlp_idx < Ds)[None, :], a, 0.0)
+        partial = a @ jnp.take(w2, sel, axis=0)
     elif cfg.mlp == "relu":
         partial = jax.nn.relu(h @ w1.T + b1) @ w2
     else:
         w3 = p["w3"][lo:lo + Ds]
         partial = (jax.nn.silu(h @ w1.T) * (h @ w3.T)) @ w2
-    if shard == 0:
-        partial = partial + p["b2"]
     return partial
+
+
+def tp_attn_reduce(cfg, params, layer, x, partials):
+    """All-reduce half of a TP attention layer: residual + Σ shard partials
+    + the output bias the biasless shards omitted. Runs on-device — the
+    driver feeds shard partials (or persistent zero buffers for skipped
+    shards) as device buffers."""
+    bo = jax.lax.dynamic_index_in_dim(params["bo"], layer, 0, keepdims=False)
+    acc = partials[0]
+    for part in partials[1:]:
+        acc = acc + part
+    return x + (acc + bo)
+
+
+def tp_mlp_reduce(cfg, params, layer, x, partials):
+    """All-reduce half of a TP MLP layer (see :func:`tp_attn_reduce`)."""
+    b2 = jax.lax.dynamic_index_in_dim(params["b2"], layer, 0, keepdims=False)
+    acc = partials[0]
+    for part in partials[1:]:
+        acc = acc + part
+    return x + (acc + b2)
 
 
 # ---------------------------------------------------------------------------

@@ -851,6 +851,8 @@ def test_pp_stages_compose_to_decode_step(setup):
 
 
 def test_tp_shards_compose_to_decode_step():
+    """Paged TP shard/reduce decomposition == the legacy dense decode step
+    (deeper sharded-vs-single-device coverage lives in test_sharding.py)."""
     cfg = get_config("opt-tiny")
     params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=8).items()}
     rng = np.random.default_rng(7)
@@ -863,21 +865,24 @@ def test_tp_shards_compose_to_decode_step():
 
     n_shards = 2
     gs = cfg.n_kv_heads // n_shards
+    bs = 16
+    pool, table = _pool_from_dense(kv, bs, seed=7)
+    pools = [pool[:, :, :, s * gs:(s + 1) * gs] for s in range(n_shards)]
     x = model.tp_embed(cfg, params, new, lens)
     for l in range(cfg.n_layers):
         li = jnp.int32(l)
         partials = []
         for s in range(n_shards):
-            kv_shard = kv[l, :, :, s * gs:(s + 1) * gs]
-            p, _, _ = model.tp_attn_shard(cfg, params, li, x, kv_shard, lens,
-                                          shard=s, n_shards=n_shards)
+            p, pools[s] = model.tp_attn_shard_paged(
+                cfg, params, li, x, lens, table, pools[s],
+                shard=s, n_shards=n_shards, mode="dense")
             partials.append(p)
-        x = x + sum(partials)
+        x = model.tp_attn_reduce(cfg, params, li, x, partials)
         partials = [
             model.tp_mlp_shard(cfg, params, li, x, shard=s, n_shards=n_shards)
             for s in range(n_shards)
         ]
-        x = x + sum(partials)
+        x = model.tp_mlp_reduce(cfg, params, li, x, partials)
     got = model.tp_final(cfg, params, x)
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 

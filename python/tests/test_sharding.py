@@ -1,0 +1,441 @@
+"""Sharded paged serving correctness: TP shard/reduce decomposition over
+per-shard pool slices, KV-write-only skipped-shard dispatch, PP stage
+composition over per-stage pool slices, and the sharded AOT contract.
+
+Equality scope (mirrors the runtime's bench gate): the PP stage
+composition reproduces the single-device paged path BIT FOR BIT — per
+layer it is the same op sequence over the same values, only the pool is
+layer-sliced. TP cannot be fully bitwise: splitting the output/down
+projections over shards re-associates the K-dimension float sum, so the
+hidden state (and with it logits and layers>0 KV rows) drifts at float
+epsilon — those compare under tight allclose plus greedy-argmax equality
+(the token stream the scheduler actually consumes), while the KV-write
+contract itself IS pinned bitwise (kvw vs full dispatch on the same x);
+the rust mock gate holds sharded streams bit-identical by construction.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import get_config, heads_for_density
+
+RTOL, ATOL = 2e-3, 2e-3
+
+
+@pytest.fixture(scope="module", params=["opt-tiny", "llama-gqa"])
+def setup(request):
+    cfg = get_config(request.param)
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=3).items()}
+    return cfg, params
+
+
+def _pool_from_dense(kv_dense, bs, seed=0, extra_blocks=3):
+    """Pack a dense [L,2,B,G,N,dh] cache into a block pool + tables with
+    scrambled physical block ids (block 0 = reserved null)."""
+    L, two, B, G, N, dh = kv_dense.shape
+    NB = N // bs
+    P = 1 + B * NB + extra_blocks
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(np.arange(1, P))[: B * NB]
+    pool = np.zeros((L, two, P, G, bs, dh), np.float32)
+    table = np.zeros((B, NB), np.int32)
+    dense = np.asarray(kv_dense)
+    for b in range(B):
+        for j in range(NB):
+            blk = int(ids[b * NB + j])
+            table[b, j] = blk
+            pool[:, :, blk] = dense[:, :, b, :, j * bs:(j + 1) * bs]
+    return jnp.asarray(pool), jnp.asarray(table)
+
+
+def split_pool_groups(pool, n_shards):
+    """Per-shard resident pool slices: group-axis split of the single
+    pool (same P, same block tables address every slice)."""
+    Gs = pool.shape[3] // n_shards
+    return [pool[:, :, :, s * Gs:(s + 1) * Gs] for s in range(n_shards)]
+
+
+def localize_heads(head_row, shard, Gs, Ks):
+    """Global per-request group ids [B,Kh] -> shard-local [B,Ks] with
+    sentinel Gs for slots owned by other shards (the runtime's
+    localization, mirrored here)."""
+    B = head_row.shape[0]
+    out = np.full((B, Ks), Gs, np.int32)
+    lo = shard * Gs
+    for b in range(B):
+        mine = [g - lo for g in head_row[b] if lo <= g < lo + Gs]
+        out[b, :len(mine)] = mine[:Ks]
+    return jnp.asarray(out)
+
+
+def localize_mlp(idx_row, shard, Ds, Kms):
+    """Global union neuron ids [Km] -> shard-local [Kms], sentinel Ds."""
+    lo = shard * Ds
+    mine = [i - lo for i in idx_row if lo <= i < lo + Ds]
+    out = np.full(Kms, Ds, np.int32)
+    out[:len(mine)] = mine[:Kms]
+    return jnp.asarray(out)
+
+
+def run_tp_paged(cfg, params, n_shards, tokens, lengths, table, pools, *,
+                 head_idx=None, mlp_idx=None, mlp_topk=(), Ks=None, Kms=None):
+    """Drive the TP shard/reduce entries the way the rust driver does:
+    route-then-dispatch — a shard whose head groups are all unselected for
+    a layer runs only the KV-write entry and contributes a zero partial."""
+    G, Ds = cfg.n_groups, cfg.d_ff // n_shards
+    Gs = G // n_shards
+    B = tokens.shape[0]
+    dispatched, skipped = 0, 0
+    x = model.tp_embed(cfg, params, tokens, lengths)
+    for l in range(cfg.n_layers):
+        li = jnp.int32(l)
+        partials = []
+        for s in range(n_shards):
+            if head_idx is None or l == 0:  # layer 0 stays dense (§3.2)
+                p, pools[s] = model.tp_attn_shard_paged(
+                    cfg, params, li, x, lengths, table, pools[s],
+                    shard=s, n_shards=n_shards, mode="dense")
+                dispatched += 1
+            else:
+                local = localize_heads(np.asarray(head_idx[l]), s, Gs, Ks)
+                if bool((np.asarray(local) < Gs).any()):
+                    p, pools[s] = model.tp_attn_shard_paged(
+                        cfg, params, li, x, lengths, table, pools[s],
+                        shard=s, n_shards=n_shards, mode="sha",
+                        head_idx=local)
+                    dispatched += 1
+                else:
+                    pools[s] = model.tp_attn_shard_paged(
+                        cfg, params, li, x, lengths, table, pools[s],
+                        shard=s, n_shards=n_shards, mode="kvw")
+                    p = jnp.zeros((B, cfg.d_model), jnp.float32)
+                    skipped += 1
+            partials.append(p)
+        x = model.tp_attn_reduce(cfg, params, li, x, partials)
+        partials = []
+        for s in range(n_shards):
+            if mlp_idx is not None and mlp_topk:
+                local = localize_mlp(np.asarray(mlp_idx[l]), s, Ds, Kms)
+                p = model.tp_mlp_shard(cfg, params, li, x, shard=s,
+                                       n_shards=n_shards, mlp_idx=local)
+            else:
+                p = model.tp_mlp_shard(cfg, params, li, x, shard=s,
+                                       n_shards=n_shards)
+            partials.append(p)
+        x = model.tp_mlp_reduce(cfg, params, li, x, partials)
+    return model.tp_final(cfg, params, x), pools, dispatched, skipped
+
+
+def _decode_setup(cfg, params, seed, B=2, S=8, N=32, bs=8):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 250, (B, S)).astype(np.int32)
+    lens0 = np.array([S, S - 2], np.int32)[:B]
+    _, kv = model.prefill(cfg, params, jnp.asarray(toks), jnp.asarray(lens0), N)
+    pool, table = _pool_from_dense(kv, bs, seed=seed)
+    new = jnp.asarray(rng.integers(0, 250, B).astype(np.int32))
+    lens = jnp.asarray(lens0 + 1)
+    return new, lens, pool, table
+
+
+def test_tp_paged_dense_matches_single_device(setup):
+    """Dense TP over per-shard pool slices == single-device fused paged
+    decode: logits allclose + same argmax, per-shard pools equal to the
+    single pool's group slices to float epsilon (the shard-sum
+    reassociation perturbs the hidden state feeding layers>0 KV rows)."""
+    cfg, params = setup
+    new, lens, pool, table = _decode_setup(cfg, params, 50)
+    want, pool_ref = model.decode_step_paged_fused(
+        cfg, params, new, lens, pool, table, mode="dense")
+    for n_shards in (2,) if cfg.n_groups < 4 else (2, 4):
+        pools = split_pool_groups(pool, n_shards)
+        got, pools, dispatched, skipped = run_tp_paged(
+            cfg, params, n_shards, new, lens, table, pools)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=RTOL, atol=ATOL)
+        np.testing.assert_array_equal(
+            np.argmax(np.asarray(got), -1), np.argmax(np.asarray(want), -1))
+        ref_slices = split_pool_groups(pool_ref, n_shards)
+        for s in range(n_shards):
+            np.testing.assert_allclose(
+                np.asarray(pools[s]), np.asarray(ref_slices[s]),
+                rtol=1e-4, atol=1e-5)
+        assert dispatched == cfg.n_layers * n_shards and skipped == 0
+
+
+def test_tp_paged_routed_skips_unselected_shards(setup):
+    """Routed TP: shards whose groups are all unselected run only the
+    KV-write entry + a zero partial, and the result still matches the
+    single-device polar run of the same global head_idx — including the
+    skipped shards' pools (KV is written even where attention is not)."""
+    cfg, params = setup
+    new, lens, pool, table = _decode_setup(cfg, params, 51)
+    B, L, G = new.shape[0], cfg.n_layers, cfg.n_groups
+    n_shards = 2
+    Gs = G // n_shards
+    k = heads_for_density(cfg, 0.5)
+    Ks = min(k, Gs)
+    # every request picks groups from shard 1 only (for l > 0): shard 0
+    # must be attention-skipped at every sparse layer
+    rng = np.random.default_rng(7)
+    hi = np.zeros((L, B, k), np.int32)
+    for l in range(L):
+        for b in range(B):
+            hi[l, b] = rng.permutation(np.arange(Gs, G, dtype=np.int32))[:k]
+    hi = jnp.asarray(hi)
+    want, pool_ref = model.decode_step_paged_fused(
+        cfg, params, new, lens, pool, table, mode="polar", density=0.5,
+        head_idx=hi)
+    pools = split_pool_groups(pool, n_shards)
+    got, pools, dispatched, skipped = run_tp_paged(
+        cfg, params, n_shards, new, lens, table, pools, head_idx=hi, Ks=Ks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_array_equal(
+        np.argmax(np.asarray(got), -1), np.argmax(np.asarray(want), -1))
+    # shard 0 skipped on every layer > 0, both shards dense on layer 0
+    assert skipped == L - 1
+    assert dispatched == 2 * L - (L - 1)
+    # the skipped shard still wrote its KV rows: pools match the
+    # single-device pool's group slices (to the same epsilon as above)
+    ref_slices = split_pool_groups(pool_ref, n_shards)
+    for s in range(n_shards):
+        np.testing.assert_allclose(
+            np.asarray(pools[s]), np.asarray(ref_slices[s]),
+            rtol=1e-4, atol=1e-5)
+
+
+def test_tp_kvw_entry_writes_same_kv_as_full_dispatch(setup):
+    """mode='kvw' must produce the exact pool a full dense dispatch of the
+    same shard would have produced (attention reads KV, never writes it)."""
+    cfg, params = setup
+    new, lens, pool, table = _decode_setup(cfg, params, 52)
+    n_shards = 2
+    pools = split_pool_groups(pool, n_shards)
+    x = model.tp_embed(cfg, params, new, lens)
+    li = jnp.int32(1)
+    _, pool_full = model.tp_attn_shard_paged(
+        cfg, params, li, x, lens, table, pools[0], shard=0,
+        n_shards=n_shards, mode="dense")
+    pool_kvw = model.tp_attn_shard_paged(
+        cfg, params, li, x, lens, table, pools[0], shard=0,
+        n_shards=n_shards, mode="kvw")
+    np.testing.assert_array_equal(np.asarray(pool_kvw), np.asarray(pool_full))
+
+
+def test_tp_sha_sentinel_rows_are_exact_zero(setup):
+    """An all-sentinel head_idx row must yield an exactly-zero partial —
+    the invariant that lets the driver substitute a zero buffer for a
+    skipped shard without changing the reduce."""
+    cfg, params = setup
+    new, lens, pool, table = _decode_setup(cfg, params, 53)
+    n_shards = 2
+    Gs = cfg.n_groups // n_shards
+    pools = split_pool_groups(pool, n_shards)
+    x = model.tp_embed(cfg, params, new, lens)
+    B = new.shape[0]
+    sent = jnp.full((B, max(1, Gs)), Gs, jnp.int32)
+    partial, _ = model.tp_attn_shard_paged(
+        cfg, params, jnp.int32(1), x, lens, table, pools[0], shard=0,
+        n_shards=n_shards, mode="sha", head_idx=sent)
+    np.testing.assert_array_equal(
+        np.asarray(partial), np.zeros((B, cfg.d_model), np.float32))
+
+
+def test_tp_mlp_idx_shards_compose_to_sparse_mlp():
+    """Localized union indices: shard partials + reduce == the
+    single-device selective MLP over the same global union; a shard owning
+    no union neuron contributes an exactly-zero partial."""
+    cfg = get_config("opt-tiny")
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed=4).items()}
+    rng = np.random.default_rng(8)
+    B, Dff, L = 3, cfg.d_ff, cfg.n_layers
+    n_shards = 2
+    Ds = Dff // n_shards
+    x = jnp.asarray(rng.standard_normal((B, cfg.d_model)).astype(np.float32))
+    l, Km = 1, Dff // 4
+    idx = jnp.asarray(rng.permutation(Dff)[:Km].astype(np.int32))
+    h = model.layer_norm(x, params["ln2_g"][l], params["ln2_b"][l])
+    want = model.mlp_sparse(cfg, params, l, h, Km, idx=idx)
+    li = jnp.int32(l)
+    partials = [
+        model.tp_mlp_shard(cfg, params, li, x, shard=s, n_shards=n_shards,
+                           mlp_idx=localize_mlp(np.asarray(idx), s, Ds, Km))
+        for s in range(n_shards)
+    ]
+    got = model.tp_mlp_reduce(cfg, params, li, x, partials)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x + want),
+                               rtol=1e-5, atol=1e-5)
+    # all-sentinel shard: exact zero partial
+    zero = model.tp_mlp_shard(cfg, params, li, x, shard=0, n_shards=n_shards,
+                              mlp_idx=jnp.full((Km,), Ds, jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(zero), np.zeros((B, cfg.d_model), np.float32))
+
+
+def split_pool_layers(pool, l0):
+    """Per-stage resident pool slices: layer split of the single pool."""
+    return pool[:l0], pool[l0:]
+
+
+def test_pp_paged_stages_compose_bitwise(setup):
+    """PP over per-stage pool slices: stage0 (embed + layers [0,Lh)) then
+    stage1 (layers [Lh,L) + head) over the SAME block tables reproduces
+    the single-device fused paged decode bit for bit — logits and both
+    stage pools — in dense and routed polar modes."""
+    cfg, params = setup
+    new, lens, pool, table = _decode_setup(cfg, params, 54)
+    L, G, B = cfg.n_layers, cfg.n_groups, new.shape[0]
+    Lh = L // 2
+    k = heads_for_density(cfg, 0.5)
+    hi = jnp.asarray(
+        np.random.default_rng(9).integers(0, G, (L, B, k)).astype(np.int32))
+    cases = [dict(mode="dense"),
+             dict(mode="polar", density=0.5, head_idx=hi)]
+    for kw in cases:
+        # eager single-device reference: the exact op sequence the stages
+        # replay per layer (jit fusion would perturb it at float epsilon)
+        xr = model._embed(cfg, params, new, lens - 1)
+        xr, pool_ref = model.decode_core_paged(
+            cfg, params, xr, lens, pool, table, **kw)
+        want = model.final_logits(cfg, params, xr)
+        fused, _ = model.decode_step_paged_fused(
+            cfg, params, new, lens, pool, table, **kw)
+        np.testing.assert_allclose(np.asarray(want), np.asarray(fused),
+                                   rtol=RTOL, atol=ATOL)
+        kv0, kv1 = split_pool_layers(pool, Lh)
+        x = model._embed(cfg, params, new, lens - 1)
+        x, kv0 = model.decode_core_paged(
+            cfg, params, x, lens, kv0, table, layer_begin=0, layer_end=Lh,
+            **kw)
+        x, kv1 = model.decode_core_paged(
+            cfg, params, x, lens, kv1, table, layer_begin=Lh, layer_end=L,
+            **kw)
+        got = model.final_logits(cfg, params, x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(kv0), np.asarray(pool_ref)[:Lh])
+        np.testing.assert_array_equal(np.asarray(kv1), np.asarray(pool_ref)[Lh:])
+
+
+def test_tp_multi_step_stream_matches_single_device(setup):
+    """A short greedy decode chain through the TP composition produces the
+    same token stream as the single-device paged path (the scheduler-level
+    invariant the rust mock gate holds bit-identically)."""
+    cfg, params = setup
+    new, lens, pool, table = _decode_setup(cfg, params, 55)
+    n_shards = 2
+    pool_sd = pool
+    pools = split_pool_groups(pool, n_shards)
+    lens_sd = lens
+    new_sd = new
+    new_tp, lens_tp = new, lens
+    for _ in range(4):
+        want, pool_sd = model.decode_step_paged_fused(
+            cfg, params, new_sd, lens_sd, pool_sd, table, mode="dense")
+        got, pools, _, _ = run_tp_paged(
+            cfg, params, n_shards, new_tp, lens_tp, table, pools)
+        tok_w = np.argmax(np.asarray(want), -1).astype(np.int32)
+        tok_g = np.argmax(np.asarray(got), -1).astype(np.int32)
+        np.testing.assert_array_equal(tok_g, tok_w)
+        new_sd = jnp.asarray(tok_w)
+        new_tp = jnp.asarray(tok_g)
+        lens_sd = lens_sd + 1
+        lens_tp = lens_tp + 1
+
+
+def test_aot_tp_paged_entries_contract(tmp_path):
+    """Manifest contract of the sharded entries: per-shard paged attention
+    (dense | sha with local head_idx | kvw), biasless MLP shards with
+    meta.top_k, and per-layer reduce entries; no contiguous-KV shard
+    entries remain."""
+    import json as _json
+    from compile import aot
+    from compile.configs import BATCH_BUCKETS, KV_BLOCK, SEQ_BUCKETS, \
+        kv_pool_blocks
+
+    cfg = get_config("opt-small")
+    table = {"recall_targets": {"0.99": {
+        str(b): [cfg.d_ff // 4] * cfg.n_layers for b in [1, 4, 16]}}}
+    mdir = tmp_path / cfg.name
+    mdir.mkdir(parents=True)
+    (mdir / "topk_table.json").write_text(_json.dumps(table))
+
+    for S in (2, 4):
+        entries = {e.name: e for e in aot.tp_entries(cfg, str(tmp_path), S)}
+        Gs = cfg.n_groups // S
+        Ds = cfg.d_ff // S
+        Ks = min(heads_for_density(cfg, cfg.critical_density), Gs)
+        P = kv_pool_blocks(BATCH_BUCKETS, SEQ_BUCKETS)
+        pshape = [cfg.n_layers, 2, P, Gs, KV_BLOCK, cfg.d_head]
+        Kms = min(cfg.d_ff // 4, Ds)
+
+        for s in range(S):
+            de = entries[f"tp{S}_attn_s{s}_dense_b4_n256_paged_fused"]
+            assert [d["name"] for d in de.data] == \
+                ["layer", "x", "lengths", "block_table", "kv"]
+            assert de.data[4]["shape"] == pshape
+            assert [o["name"] for o in de.outputs] == ["partial", "kv"]
+
+            sh = entries[f"tp{S}_attn_s{s}_sha_d0250_b4_n256_paged_fused"]
+            assert sh.data[5]["name"] == "head_idx"
+            assert sh.data[5]["shape"] == [4, Ks]
+            assert sh.meta["head_k"] == Ks
+
+            kvw = entries[f"tp{S}_attn_s{s}_kvw_b4_n256_paged_fused"]
+            assert [o["name"] for o in kvw.outputs] == ["kv"]
+            assert kvw.meta["mode"] == "kvw"
+
+            mk = entries[f"tp{S}_mlp_s{s}_k{Kms}_b4"]
+            assert mk.meta["top_k"] == Kms
+            assert mk.data[2]["name"] == "mlp_idx"
+            assert mk.data[2]["shape"] == [Kms]
+            assert entries[f"tp{S}_mlp_s{s}_dense_b4"].meta["top_k"] == 0
+
+        for op in ("attn", "mlp"):
+            re = entries[f"tp{S}_{op}_reduce_b4"]
+            assert [d["name"] for d in re.data] == \
+                ["layer", "x"] + [f"p{s}" for s in range(S)]
+            assert re.meta["op"] == op
+
+        # no contiguous-KV shard entries remain
+        for name in entries:
+            assert "attn" not in name or name.endswith("_paged_fused") \
+                or "reduce" in name, name
+
+
+def test_aot_pp_paged_entries_contract(tmp_path):
+    """PP stages are paged + index-taking: per-stage pool slices, shared
+    block table, full-depth head_idx (+ mlp_idx on ReLU models)."""
+    import json as _json
+    from compile import aot
+    from compile.configs import BATCH_BUCKETS, KV_BLOCK, SEQ_BUCKETS, \
+        kv_pool_blocks
+
+    cfg = get_config("opt-small")
+    table = {"recall_targets": {"0.99": {
+        str(b): [cfg.d_ff // 4] * cfg.n_layers for b in BATCH_BUCKETS}}}
+    mdir = tmp_path / cfg.name
+    mdir.mkdir(parents=True)
+    (mdir / "topk_table.json").write_text(_json.dumps(table))
+
+    entries = {e.name: e for e in aot.pp_entries(cfg, str(tmp_path))}
+    L, Lh = cfg.n_layers, cfg.n_layers // 2
+    P = kv_pool_blocks(BATCH_BUCKETS, SEQ_BUCKETS)
+    Kh = heads_for_density(cfg, cfg.critical_density)
+
+    s0 = entries[f"pp2_stage0_dense_b4_n256_paged_fused"]
+    assert [d["name"] for d in s0.data] == \
+        ["tokens", "lengths", "block_table", "kv"]
+    assert s0.data[3]["shape"] == [Lh, 2, P, cfg.n_kv_heads, KV_BLOCK,
+                                   cfg.d_head]
+    s1 = entries[f"pp2_stage1_polar_d0250_b4_n256_paged_fused"]
+    assert [d["name"] for d in s1.data] == \
+        ["x", "lengths", "block_table", "kv", "head_idx", "mlp_idx"]
+    assert s1.data[0]["shape"] == [4, cfg.d_model]
+    assert s1.data[3]["shape"] == [L - Lh, 2, P, cfg.n_kv_heads, KV_BLOCK,
+                                   cfg.d_head]
+    assert s1.data[4]["shape"] == [L, 4, Kh]          # full depth
+    assert s1.meta["routed"] and s1.meta["stage"] == 1
+    for name in entries:
+        assert name.endswith("_paged_fused"), name

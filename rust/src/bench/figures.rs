@@ -558,17 +558,12 @@ fn fig11(ctx: &Ctx) -> Result<()> {
 // Fig 12 — tensor-parallel decode throughput (opt-small)
 // ---------------------------------------------------------------------------
 fn mlp_tag_for(m: &Manifest, n_shards: usize, b: usize) -> String {
-    // discover the sparse MLP shard tag baked at AOT time (k depends on the
-    // calibrated table); fall back to dense when absent
-    let prefix = format!("tp{n_shards}_mlp_s0_k");
-    let suffix = format!("_b{b}");
-    for name in m.entry_names() {
-        if name.starts_with(&prefix) && name.ends_with(&suffix) {
-            let k = &name[prefix.len() - 1..name.len() - suffix.len()];
-            return k.to_string(); // "kNNN"
-        }
+    // discover the sparse MLP shard k baked at AOT time (depends on the
+    // calibrated table) from entry meta; fall back to dense when absent
+    match crate::runtime::mlp_shard_k(m, n_shards, b) {
+        Some(k) => format!("k{k}"),
+        None => "dense".to_string(),
     }
-    "dense".to_string()
 }
 
 fn fig12(ctx: &Ctx) -> Result<()> {
@@ -587,9 +582,7 @@ fn fig12(ctx: &Ctx) -> Result<()> {
                 ("dense", "dense", "dense".to_string()),
                 ("polar", sha_tag.as_str(), mlp_sparse_tag),
             ] {
-                let r = decode_throughput_tp(
-                    &e, n_shards, attn, &mlp, b, 256, ctx.opts, true,
-                )?;
+                let r = decode_throughput_tp(&e, n_shards, attn, &mlp, b, 256, ctx.opts)?;
                 if label == "dense" {
                     dense_tps = r.tok_per_s;
                 }
@@ -671,7 +664,8 @@ mod tests {
 
     #[test]
     fn mlp_tag_parsing() {
-        // uses the suffix-stripping logic: "tp2_mlp_s0_k188_b4" -> "k188"
+        // k comes from entry meta, not the entry-name string: a multi-k
+        // artifact (k96@b4, k188@b16) must resolve per batch bucket
         let dir = std::env::temp_dir().join("ps_fig_test");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(
@@ -681,12 +675,23 @@ mod tests {
                           "d_ff":16,"d_head":4,"vocab":10,"max_seq":32,
                           "mlp":"relu","pos":"learned","critical_density":0.5},
                 "params":[],"buckets":{"batch":[1],"seq":[16],"prefill":16},
-                "entries":[{"name":"tp2_mlp_s0_k188_b4","kind":"tp_mlp",
-                  "file":"x","data":[],"outputs":[],"meta":{}}]}"#,
+                "entries":[
+                  {"name":"tp2_mlp_s0_k96_b4","kind":"tp_mlp","file":"x",
+                   "data":[],"outputs":[],
+                   "meta":{"batch":4,"shard":0,"n_shards":2,"top_k":96}},
+                  {"name":"tp2_mlp_s0_k188_b16","kind":"tp_mlp","file":"x",
+                   "data":[],"outputs":[],
+                   "meta":{"batch":16,"shard":0,"n_shards":2,"top_k":188}},
+                  {"name":"tp2_mlp_s0_dense_b1","kind":"tp_mlp","file":"x",
+                   "data":[],"outputs":[],
+                   "meta":{"batch":1,"shard":0,"n_shards":2,"top_k":0}}]}"#,
         )
         .unwrap();
         let m = Manifest::load(&dir).unwrap();
-        assert_eq!(mlp_tag_for(&m, 2, 4), "k188");
+        assert_eq!(mlp_tag_for(&m, 2, 4), "k96");
+        assert_eq!(mlp_tag_for(&m, 2, 16), "k188");
+        // dense-only bucket and unsharded counts fall back to dense
+        assert_eq!(mlp_tag_for(&m, 2, 1), "dense");
         assert_eq!(mlp_tag_for(&m, 4, 4), "dense");
     }
 }

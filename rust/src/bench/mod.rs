@@ -11,6 +11,7 @@ pub mod kv_paging;
 pub mod overload;
 pub mod prefill_interference;
 pub mod serving;
+pub mod shard_scaling;
 pub mod sparsity_scaling;
 pub mod throughput;
 

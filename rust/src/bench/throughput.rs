@@ -5,10 +5,11 @@
 //! (batch, kv-bucket) with sequences deep into the bucket (the paper uses
 //! seq len 1920 with 2048-token caches; we use 7/8 of the bucket).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::coordinator::kv::split_groups;
-use crate::runtime::{Engine, KvCache, Tensor};
+use crate::runtime::{
+    split_pool_groups, split_pool_layers, BlockTables, Engine, KvCache, PagedKv, Tensor,
+};
 use crate::substrate::rng::Rng;
 use crate::substrate::stats::Samples;
 
@@ -71,7 +72,48 @@ pub fn decode_throughput(
     Ok(DecodeBench { tok_per_s, step })
 }
 
-/// Same through the 2-stage pipeline (Fig 11).
+/// Synthetic steady-state paged inputs shared by the PP/TP benches: a
+/// randomly-filled pool (every slot deep into the bucket), identity-ish
+/// block tables (slot `i` owns blocks `1 + i*width ..`), tokens and
+/// lengths. The single source of the sharded benches' KV layout — the
+/// per-path split happens through [`crate::runtime::shard`]'s pool
+/// helpers, not ad-hoc slicing here.
+fn synthetic_paged_inputs(
+    engine: &Engine,
+    b: usize,
+    n: usize,
+    seed: u64,
+) -> Result<(Vec<i32>, Vec<i32>, BlockTables, Tensor)> {
+    let cfg = engine.exec.config();
+    let m = engine.exec.manifest();
+    let (block, pool_blocks) = (m.kv_block, m.kv_pool_blocks);
+    let width = n.div_ceil(block);
+    if 1 + b * width > pool_blocks {
+        bail!(
+            "pool too small: {pool_blocks} blocks for {b} slots x {width} (n={n})"
+        );
+    }
+    let mut rng = Rng::new(seed);
+    let tokens: Vec<i32> = (0..b).map(|_| rng.below(256) as i32).collect();
+    let lengths = vec![steady_len(n) as i32; b];
+    let mut flat = vec![0i32; b * width];
+    for i in 0..b {
+        for w in 0..width {
+            flat[i * width + w] = (1 + i * width + w) as i32;
+        }
+    }
+    let tables = BlockTables::new(flat, b, width)?;
+    let elems: usize = cfg.kv_pool_shape(pool_blocks, block).iter().product();
+    let data: Vec<f32> = (0..elems)
+        .map(|_| (rng.f64() as f32 - 0.5) * 0.2)
+        .collect();
+    let pool = Tensor::f32(data, cfg.kv_pool_shape(pool_blocks, block))?;
+    Ok((tokens, lengths, tables, pool))
+}
+
+/// Same through the 2 paged pipeline stages (Fig 11): the pool is layer-
+/// split across the stages and each step feeds both stages' KV buffers
+/// straight into the next.
 pub fn decode_throughput_pp2(
     engine: &Engine,
     tag: &str,
@@ -80,21 +122,23 @@ pub fn decode_throughput_pp2(
     opts: BenchOpts,
 ) -> Result<DecodeBench> {
     let cfg = engine.exec.config();
-    let (tokens, lengths, kvt) = synthetic_inputs(engine, b, n, 43)?;
+    let (tokens, lengths, tables, pool) = synthetic_paged_inputs(engine, b, n, 43)?;
+    let (pool_blocks, block) = (engine.exec.manifest().kv_pool_blocks, engine.exec.manifest().kv_block);
     let l0 = cfg.n_layers / 2;
-    let (k0, k1) = crate::coordinator::kv::split_layers(&kvt, l0)?;
-    let mut kv0 = Some(KvCache::from_tensor(&k0, b, n)?);
-    let mut kv1 = Some(KvCache::from_tensor(&k1, b, n)?);
+    let (k0, k1) = split_pool_layers(&pool, l0)?;
+    let mut kv0 = Some(PagedKv::from_tensor(&k0, pool_blocks, block)?);
+    let mut kv1 = Some(PagedKv::from_tensor(&k1, pool_blocks, block)?);
     let mut step = Samples::new();
     for i in 0..opts.warmup + opts.iters {
         let t0 = std::time::Instant::now();
-        let (_logits, a, b2) = engine.decode_pp2(
+        let (_logits, a, b2) = engine.decode_pp2_paged(
             tag,
             &tokens,
             &lengths,
+            &tables,
             kv0.take().unwrap(),
             kv1.take().unwrap(),
-            n,
+            None,
         )?;
         if i >= opts.warmup {
             step.push_duration(t0.elapsed());
@@ -105,9 +149,10 @@ pub fn decode_throughput_pp2(
     Ok(DecodeBench { tok_per_s: b as f64 / step.mean(), step })
 }
 
-/// Megatron-style TP decode (Fig 12). attn_tag: "dense"|"sha_dXXXX";
-/// mlp_tag: "dense"|"kNN".
-#[allow(clippy::too_many_arguments)]
+/// Megatron-style paged TP decode (Fig 12): per-shard pool slices, the
+/// activation and partials stay device buffers, and routing skips whole
+/// shard dispatches (`attn_tag` "dense"|"sha_dXXXX", `mlp_tag`
+/// "dense"|"kNN").
 pub fn decode_throughput_tp(
     engine: &Engine,
     n_shards: usize,
@@ -116,29 +161,23 @@ pub fn decode_throughput_tp(
     b: usize,
     n: usize,
     opts: BenchOpts,
-    parallel: bool,
 ) -> Result<DecodeBench> {
-    let (tokens, lengths, kvt) = synthetic_inputs(engine, b, n, 44)?;
-    let shards = split_groups(&kvt, n_shards)?;
-    let mut kv: Vec<Vec<xla::Literal>> = shards
-        .into_iter()
-        .map(|per_layer| {
-            per_layer
-                .into_iter()
-                .map(|t| t.to_literal())
-                .collect::<Result<Vec<_>>>()
-        })
+    let (tokens, lengths, tables, pool) = synthetic_paged_inputs(engine, b, n, 44)?;
+    let (pool_blocks, block) = (engine.exec.manifest().kv_pool_blocks, engine.exec.manifest().kv_block);
+    let mut pools = split_pool_groups(&pool, n_shards)?
+        .iter()
+        .map(|t| PagedKv::from_tensor(t, pool_blocks, block))
         .collect::<Result<Vec<_>>>()?;
     let mut step = Samples::new();
     for i in 0..opts.warmup + opts.iters {
         let t0 = std::time::Instant::now();
-        let (_logits, kv_new) = engine.decode_tp(
-            n_shards, attn_tag, mlp_tag, &tokens, &lengths, kv, n, parallel,
+        let out = engine.decode_tp_paged(
+            n_shards, attn_tag, mlp_tag, &tokens, &lengths, &tables, pools, None,
         )?;
         if i >= opts.warmup {
             step.push_duration(t0.elapsed());
         }
-        kv = kv_new;
+        pools = out.pools;
     }
     Ok(DecodeBench { tok_per_s: b as f64 / step.mean(), step })
 }

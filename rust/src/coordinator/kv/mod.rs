@@ -10,10 +10,11 @@
 //!   table entries. This file's contiguous-surgery era (`regroup`,
 //!   `shrink_patience`, the pooled rebuild buffers) is retired.
 //! * Contiguous host-tensor surgery on the `[L, 2, B, G, N, dh]` layout
-//!   ([`copy_slot`], [`append_chunk`], [`pad_n`], the PP/TP splits) —
-//!   still used by the contiguous A/B engine path, the mock's
-//!   fingerprint bookkeeping, eval, and the pipeline/tensor-parallel
-//!   drivers.
+//!   ([`copy_slot`], [`append_chunk`], [`pad_n`]) — still used by the
+//!   contiguous A/B engine path, the mock's fingerprint bookkeeping and
+//!   eval. The PP/TP splits moved to pool-slice form in
+//!   [`crate::runtime::shard`] (`split_pool_layers` / `split_pool_groups`):
+//!   sharded serving slices the paged pool, not dense caches.
 
 use anyhow::{bail, Result};
 
@@ -222,56 +223,6 @@ pub fn pad_n(kv: &Tensor, n_new: usize) -> Result<Tensor> {
     Ok(out)
 }
 
-/// Split along layers for 2-stage pipeline parallelism.
-pub fn split_layers(kv: &Tensor, l0: usize) -> Result<(Tensor, Tensor)> {
-    let (l, two, bsz, g, n, dh) = dims6(kv)?;
-    if l0 == 0 || l0 >= l {
-        bail!("split_layers: bad split {l0} of {l}");
-    }
-    let src = kv.as_f32()?;
-    let block = two * bsz * g * n * dh;
-    let a = src[..l0 * block].to_vec();
-    let b2 = src[l0 * block..].to_vec();
-    Ok((
-        Tensor::f32(a, vec![l0, two, bsz, g, n, dh])?,
-        Tensor::f32(b2, vec![l - l0, two, bsz, g, n, dh])?,
-    ))
-}
-
-/// Merge two stage caches back (inverse of split_layers).
-pub fn merge_layers(kv0: &Tensor, kv1: &Tensor) -> Result<Tensor> {
-    let (l0, two, bsz, g, n, dh) = dims6(kv0)?;
-    let (l1, ..) = dims6(kv1)?;
-    let mut data = kv0.as_f32()?.to_vec();
-    data.extend_from_slice(kv1.as_f32()?);
-    Tensor::f32(data, vec![l0 + l1, two, bsz, g, n, dh])
-}
-
-/// Split into per-shard, per-layer caches for tensor parallelism:
-/// result[shard][layer] = [2, B, G/n_shards, N, dh].
-pub fn split_groups(kv: &Tensor, n_shards: usize) -> Result<Vec<Vec<Tensor>>> {
-    let (l, two, bsz, g, n, dh) = dims6(kv)?;
-    if g % n_shards != 0 {
-        bail!("split_groups: G={g} not divisible by {n_shards}");
-    }
-    let gs = g / n_shards;
-    let src = kv.as_f32()?;
-    let mut out = vec![Vec::with_capacity(l); n_shards];
-    for s in 0..n_shards {
-        for li in 0..l {
-            let mut data = Vec::with_capacity(two * bsz * gs * n * dh);
-            for c in 0..two {
-                for b in 0..bsz {
-                    let base = (((li * two + c) * bsz + b) * g + s * gs) * n * dh;
-                    data.extend_from_slice(&src[base..base + gs * n * dh]);
-                }
-            }
-            out[s].push(Tensor::f32(data, vec![two, bsz, gs, n, dh])?);
-        }
-    }
-    Ok(out)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,26 +285,6 @@ mod tests {
         let (sn, pn) = (s.as_f32().unwrap(), p.as_f32().unwrap());
         // row 0 of group 0, layer 0, k
         assert_eq!(&sn[0..4], &pn[0..4]);
-    }
-
-    #[test]
-    fn split_merge_layers_roundtrip() {
-        let c = cfg();
-        let kv = filled(c.kv_shape(2, 4), 3.0);
-        let (a, b) = split_layers(&kv, 1).unwrap();
-        assert_eq!(a.shape()[0], 1);
-        assert_eq!(b.shape()[0], 1);
-        assert_eq!(merge_layers(&a, &b).unwrap(), kv);
-    }
-
-    #[test]
-    fn split_groups_shapes() {
-        let c = cfg();
-        let kv = filled(c.kv_shape(2, 4), 0.0);
-        let shards = split_groups(&kv, 2).unwrap();
-        assert_eq!(shards.len(), 2);
-        assert_eq!(shards[0].len(), 2);
-        assert_eq!(shards[0][0].shape(), &[2, 2, 1, 4, 4]);
     }
 
     #[test]

@@ -47,6 +47,15 @@
 //! routes with: head selection is input-independent (batch-union density
 //! stays flat as B grows) while MLP selection is token-dependent (union
 //! density climbs toward dense) — the paper's central crossover.
+//!
+//! **Sharding**: [`MockEngine::with_tp`] / [`MockEngine::with_pp2`] model
+//! the shard-aware serving modes: TP fans every KV write across all head
+//! groups (each shard's `split_pool_groups` slice carries the
+//! fingerprints — KV-write-always) and runs each routed step through
+//! [`plan_shard_dispatch`], accounting `shards_dispatched` /
+//! `shards_skipped` / `allreduce_bytes` exactly as the sharded driver
+//! would; logits are untouched, so sharded streams stay bit-identical to
+//! single-device runs of the same workload.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -55,8 +64,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::runtime::{
-    copy_pool_blocks, BlockTables, KvCache, KvStore, ModelConfig, PagedKv,
-    PagedStepOutput, RouterBank, StepOutput, StepProfile, StepRouting, Tensor,
+    copy_pool_blocks, plan_shard_dispatch, BlockTables, KvCache, KvStore,
+    ModelConfig, PagedKv, PagedStepOutput, RouterBank, ShardPlanSpec, StepOutput,
+    StepProfile, StepRouting, Tensor,
 };
 use crate::substrate::sync::lock_clean;
 use crate::tokenizer::PAD;
@@ -77,7 +87,16 @@ use super::scheduler::StepEngine;
 ///   with the number of distinct tokens in flight (Deja Vu's failure
 ///   mode at batch, §4.1).
 pub fn mock_router_bank() -> RouterBank {
-    let (l, d, g, dff, rh, vocab) = (2usize, 8usize, 2usize, 16usize, 8usize, 300usize);
+    mock_router_bank_g(2)
+}
+
+/// [`mock_router_bank`] generalized over the group count, for sharding
+/// tests that need more head groups than TP shards (e.g. G=4 with 4
+/// shards: top-1 selection dispatches exactly 1 of 4 attention shards per
+/// routed layer). Layer `li`'s top-1 group is `(g - 1 - li) % g` — still
+/// input-independent, so the dispatch pattern is flat across batch.
+pub fn mock_router_bank_g(g: usize) -> RouterBank {
+    let (l, d, dff, rh, vocab) = (2usize, 8usize, 16usize, 8usize, 300usize);
     let mut tok_emb = vec![0f32; vocab * d];
     for t in 0..vocab {
         tok_emb[t * d + t % d] = 1.0;
@@ -140,6 +159,19 @@ pub struct MockEngine {
     /// worst case of the bucket ladder). Overload tests shrink this so
     /// block pressure bites long before slot pressure.
     pool_blocks: Option<usize>,
+    /// Model tensor-parallel serving across this many shards: paged
+    /// writes land in EVERY head group (each shard's group slice carries
+    /// the fingerprints — the KV-write-always discipline), and every
+    /// decode step runs [`plan_shard_dispatch`] on the incoming routing
+    /// to account `shards_dispatched` / `shards_skipped` /
+    /// `allreduce_bytes` exactly as the sharded driver would. Logits are
+    /// untouched, so sharded streams stay bit-identical to single-device.
+    tp_shards: Option<usize>,
+    /// Model 2-stage pipeline serving: the pool's layer halves live on
+    /// different stages (tests slice with `split_pool_layers`), and each
+    /// decode step accounts two stage dispatches. PP stages are never
+    /// skippable — routing thins work *within* a stage, not across.
+    pp2: bool,
     client: xla::PjRtClient,
     profile: Mutex<StepProfile>,
     /// Decode steps that arrived with (validated) router indices.
@@ -184,6 +216,8 @@ impl MockEngine {
             chunk_delay: Duration::ZERO,
             host_kv_path: false,
             pool_blocks: None,
+            tp_shards: None,
+            pp2: false,
             client: xla::PjRtClient::cpu().expect("shim client"),
             profile: Mutex::new(StepProfile::default()),
             routed_steps: AtomicU64::new(0),
@@ -279,6 +313,35 @@ impl MockEngine {
     pub fn with_pool_blocks(mut self, n: usize) -> Self {
         assert!(n >= 2, "pool needs the null block + at least one usable");
         self.pool_blocks = Some(n);
+        self
+    }
+
+    /// Widen the mock to `g` KV head groups (pair with
+    /// [`mock_router_bank_g`]), so sharding tests can split groups across
+    /// more TP shards than the default G=2 allows.
+    pub fn with_groups(mut self, g: usize) -> Self {
+        assert!(g >= 1);
+        self.cfg.n_heads = g;
+        self.cfg.n_kv_heads = g;
+        self
+    }
+
+    /// Serve as `n_shards` tensor-parallel shards (see the field doc):
+    /// all-group KV writes + per-step shard-dispatch accounting.
+    pub fn with_tp(mut self, n_shards: usize) -> Self {
+        assert!(
+            n_shards >= 1 && self.cfg.n_kv_heads % n_shards == 0,
+            "G must divide into shards"
+        );
+        self.tp_shards = Some(n_shards);
+        self
+    }
+
+    /// Serve as a 2-stage pipeline (see the field doc): per-step stage
+    /// dispatch accounting; the layer split point is `n_layers / 2`.
+    pub fn with_pp2(mut self) -> Self {
+        assert!(self.cfg.n_layers >= 2);
+        self.pp2 = true;
         self
     }
 
@@ -595,6 +658,10 @@ impl StepEngine for MockEngine {
         let mut t = kv.to_tensor()?;
         let (g, dh) = (self.cfg.n_kv_heads, self.cfg.d_head);
         let block_row = g * bs * dh;
+        // TP mode fans the write across every head group: a KV-write
+        // entry runs on every shard (even ones routing will later skip),
+        // so each shard's group slice must carry the fingerprints
+        let fan = if self.tp_shards.is_some() { g } else { 1 };
         let mut logits = Vec::with_capacity(b * self.cfg.vocab);
         {
             let d = t.as_f32_mut()?;
@@ -620,8 +687,10 @@ impl StepEngine for MockEngine {
                             "mock prefill_chunk_paged: slot {i} pos {pos} writes block {blk}"
                         );
                     }
-                    d[blk as usize * block_row + (pos % bs) * dh] =
-                        tokens[i * c + k] as f32;
+                    for gi in 0..fan {
+                        d[blk as usize * block_row + (gi * bs + pos % bs) * dh] =
+                            tokens[i * c + k] as f32;
+                    }
                 }
                 logits.extend(self.logits_for(tokens[i * c + len - 1]));
             }
@@ -707,6 +776,38 @@ impl StepEngine for MockEngine {
             }
             None => None,
         };
+        // sharded-serving accounting: run this step's routing through the
+        // same dispatch planner the sharded driver uses, and mirror its
+        // analytic transfer profile — routing CUTS dispatched shards,
+        // never logits, so sharded streams stay bit-identical
+        if let Some(s) = self.tp_shards {
+            let l = self.cfg.n_layers;
+            let mlp_ks = routing
+                .and_then(|r| r.mlp_idx.as_ref())
+                .map(|m| m.shape()[1].min(self.cfg.d_ff / s))
+                .unwrap_or(0);
+            let plan = plan_shard_dispatch(
+                &ShardPlanSpec {
+                    n_shards: s,
+                    n_layers: l,
+                    n_groups: self.cfg.n_kv_heads,
+                    d_ff: self.cfg.d_ff,
+                    batch: b,
+                    route_attn: routing.is_some(),
+                    mlp_ks,
+                },
+                routing,
+            )?;
+            let mut p = lock_clean(&self.profile);
+            p.shards_dispatched += plan.dispatched();
+            p.shards_skipped += plan.skipped();
+            // two all-reduces per layer (attention + MLP partials), each
+            // combining S device-resident [B, d] f32 partials
+            p.allreduce_bytes += (2 * l * s * b * self.cfg.d_model * 4) as u64;
+        } else if self.pp2 {
+            // two stage dispatches per step; stages are never skippable
+            lock_clean(&self.profile).shards_dispatched += 2;
+        }
         let mut logits = Vec::with_capacity(b * self.cfg.vocab);
         for (i, &tk) in tokens.iter().enumerate() {
             let mut row = self.logits_for(if tk == PAD { 0 } else { tk });
@@ -724,13 +825,17 @@ impl StepEngine for MockEngine {
             let d = t.as_f32_mut()?;
             let (g, dh) = (self.cfg.n_kv_heads, self.cfg.d_head);
             let block_row = g * bs * dh;
+            // TP mode: the sentinel lands in every group (KV-write-always)
+            let fan = if self.tp_shards.is_some() { g } else { 1 };
             for (i, &len) in lengths.iter().enumerate() {
                 let pos = (len.max(1) as usize) - 1;
                 let blk = tables.flat[i * tables.width + pos / bs];
                 if blk < 0 || blk as usize >= p_blocks {
                     bail!("mock decode_paged: slot {i} pos {pos} names block {blk}");
                 }
-                d[blk as usize * block_row + (pos % bs) * dh] = -1.0;
+                for gi in 0..fan {
+                    d[blk as usize * block_row + (gi * bs + pos % bs) * dh] = -1.0;
+                }
             }
         }
         let pool_bytes = (t.len() * 4) as u64;

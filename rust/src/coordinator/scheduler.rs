@@ -564,6 +564,20 @@ impl<E: StepEngine> Scheduler<E> {
         j
     }
 
+    /// The server's `stats.shards` object: per-(layer, shard) dispatch
+    /// counters from the shard-aware serving path (routing cuts
+    /// `shards_dispatched` and grows `shards_skipped`; skipped attention
+    /// shards still ran their KV write) plus the device-local all-reduce
+    /// traffic. All zero on unsharded engines.
+    pub fn shard_stats(&self) -> Json {
+        let p = self.profile();
+        Json::obj(vec![
+            ("shards_dispatched", (p.shards_dispatched as usize).into()),
+            ("shards_skipped", (p.shards_skipped as usize).into()),
+            ("allreduce_bytes", (p.allreduce_bytes as usize).into()),
+        ])
+    }
+
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }

@@ -43,7 +43,11 @@ commands:
              `bench fault-recovery [--smoke]` for fault-tolerant stepping:
              replays a trace under injected engine faults and gates that
              every non-poisoned request completes bit-identical to the
-             fault-free run (BENCH_faults.json)
+             fault-free run (BENCH_faults.json), or
+             `bench shard-scaling [--smoke]` for shard-aware serving:
+             selective-head routing cuts TP shard dispatches (flat across
+             batch) while sharded streams stay bit-identical to
+             single-device, zero shell bytes (BENCH_shards.json)
 
 common flags: --model <name> --artifacts <dir> --mode dense|dejavu|polar|polar@<d>
 run `polar-sparsity <command> --help` for details";
@@ -78,6 +82,9 @@ fn main() {
         }
         "bench" if rest.first().map(|s| s.as_str()) == Some("fault-recovery") => {
             bench::fault_recovery::run(&rest[1..])
+        }
+        "bench" if rest.first().map(|s| s.as_str()) == Some("shard-scaling") => {
+            bench::shard_scaling::run(&rest[1..])
         }
         "bench" => bench::figures::run(rest),
         "--help" | "-h" | "help" => {

@@ -1,5 +1,6 @@
-//! Model engine: prefill / decode step API over compiled entries, plus the
-//! pipeline-parallel and tensor-parallel drivers (Figs 11, 12).
+//! Model engine: prefill / decode step API over compiled entries. The
+//! shard-aware paged TP/PP drivers (Figs 11, 12) live in
+//! [`super::shard`].
 //!
 //! The decode hot path keeps the KV cache **resident on the device**: each
 //! step's KV output buffer is fed straight into the next step
@@ -139,7 +140,7 @@ impl BlockTables {
         self.width * block
     }
 
-    fn to_literal(&self) -> Result<xla::Literal> {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
         Tensor::i32(self.flat.clone(), vec![self.batch, self.width])?.to_literal()
     }
 }
@@ -904,214 +905,5 @@ impl Engine {
         Ok(PagedKv { store, pool_blocks, block })
     }
 
-    // -- pipeline parallel (2 stages, Fig 11) -----------------------------
-
-    /// One decode step through the two pipeline stages. kv0/kv1 hold the
-    /// stage-local layer slices (split by `coordinator::kv::split_layers`).
-    /// On the resident path the stage-0 activation crosses to stage 1 as a
-    /// device buffer and both stage KVs stay resident.
-    pub fn decode_pp2(
-        &self,
-        tag: &str,
-        tokens: &[i32],
-        lengths: &[i32],
-        kv0: KvCache,
-        kv1: KvCache,
-        n: usize,
-    ) -> Result<(Tensor, KvCache, KvCache)> {
-        let b = tokens.len();
-        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
-        // built once, shared by both stages (Literal clone is O(1) in the
-        // vendored shim — Arc-backed storage)
-        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
-        let s0 = format!("pp2_stage0_{tag}_b{b}_n{n}");
-        let s1 = format!("pp2_stage1_{tag}_b{b}_n{n}");
-        let out = if self.kv_host_path {
-            let kv0_lit = kv0.into_literal(&self.exec)?;
-            let outs0 = self.exec.run_raw(&s0, &[toks, lens.clone(), kv0_lit])?;
-            let mut it0 = outs0.into_iter();
-            let x = it0.next().context("stage0 x")?;
-            let kv0 = KvCache {
-                store: KvStore::Lit(it0.next().context("stage0 kv")?),
-                batch: b,
-                n,
-            };
-            let kv1_lit = kv1.into_literal(&self.exec)?;
-            let outs1 = self.exec.run_raw(&s1, &[x, lens, kv1_lit])?;
-            let mut it1 = outs1.into_iter();
-            let logits = Tensor::from_literal(&it1.next().context("stage1 logits")?)?;
-            let kv1 = KvCache {
-                store: KvStore::Lit(it1.next().context("stage1 kv")?),
-                batch: b,
-                n,
-            };
-            (logits, kv0, kv1)
-        } else {
-            let outs0 = self.exec.run_bufs(
-                &s0,
-                vec![
-                    DeviceInput::Host(toks),
-                    DeviceInput::Host(lens.clone()),
-                    kv0.into_input(),
-                ],
-            )?;
-            let mut it0 = outs0.into_iter();
-            let x = it0.next().context("stage0 x")?;
-            let kv0 = KvCache {
-                store: KvStore::Buf(it0.next().context("stage0 kv")?),
-                batch: b,
-                n,
-            };
-            let outs1 = self.exec.run_bufs(
-                &s1,
-                vec![DeviceInput::Buf(x), DeviceInput::Host(lens), kv1.into_input()],
-            )?;
-            let mut it1 = outs1.into_iter();
-            let logits_buf = it1.next().context("stage1 logits")?;
-            let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
-            let kv1 = KvCache {
-                store: KvStore::Buf(it1.next().context("stage1 kv")?),
-                batch: b,
-                n,
-            };
-            (logits, kv0, kv1)
-        };
-        self.exec.profile_mut().decode_steps += 1;
-        Ok(out)
-    }
-
-    // -- tensor parallel (Megatron-style, Fig 12) --------------------------
-
-    /// One decode step across `n_shards` TP shards with host all-reduce
-    /// after attention and MLP of every layer. `kv[shard][layer]` holds
-    /// [2,B,Gs,N,dh] literals. `attn_tag` is "dense" or "sha_dXXXX"
-    /// (layer 0 always uses "dense", §3.2); `mlp_tag` is "dense" or "kNN".
-    ///
-    /// Loop-invariant literals (`lengths`, the per-layer activation and
-    /// layer index) are serialized once and shared across shards — Literal
-    /// clones are O(1) Arc bumps in the vendored shim, so the per-shard
-    /// closures no longer re-serialize per shard per op.
-    #[allow(clippy::too_many_arguments)]
-    pub fn decode_tp(
-        &self,
-        n_shards: usize,
-        attn_tag: &str,
-        mlp_tag: &str,
-        tokens: &[i32],
-        lengths: &[i32],
-        kv: Vec<Vec<xla::Literal>>,
-        n: usize,
-        parallel: bool,
-    ) -> Result<(Tensor, Vec<Vec<xla::Literal>>)> {
-        let b = tokens.len();
-        let cfg = self.exec.config();
-        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
-        let lens_lit = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
-        let embed = self
-            .exec
-            .run_raw(&format!("tp{n_shards}_embed_b{b}"), &[toks, lens_lit.clone()])?;
-        let mut x = Tensor::from_literal(&embed[0])?;
-
-        let mut kv_new: Vec<Vec<xla::Literal>> =
-            (0..n_shards).map(|_| Vec::new()).collect();
-        let mut kv = kv;
-        for l in 0..cfg.n_layers {
-            let tag = if l == 0 { "dense" } else { attn_tag };
-            let l_lit = Tensor::i32(vec![l as i32], vec![])?.to_literal()?;
-            // attention shards (+ local kv update); x serialized once here
-            let x_lit = x.to_literal()?;
-            let shard_outs = self.run_shards(
-                n_shards,
-                parallel,
-                |s| format!("tp{n_shards}_attn_s{s}_{tag}_b{b}_n{n}"),
-                |s| {
-                    Ok(vec![
-                        l_lit.clone(),
-                        x_lit.clone(),
-                        std::mem::replace(&mut kv[s][l], empty_literal()),
-                        lens_lit.clone(),
-                    ])
-                },
-            )?;
-            let xd = x.as_f32_mut()?;
-            for (s, outs) in shard_outs.into_iter().enumerate() {
-                let mut it = outs.into_iter();
-                let partial = Tensor::from_literal(&it.next().context("attn partial")?)?;
-                for (xi, pi) in xd.iter_mut().zip(partial.as_f32()?) {
-                    *xi += pi; // host all-reduce: sum partials into residual
-                }
-                kv_new[s].push(it.next().context("attn kv")?);
-            }
-            // MLP shards; x re-serialized once after the attention reduce
-            let x_lit = x.to_literal()?;
-            let shard_outs = self.run_shards(
-                n_shards,
-                parallel,
-                |s| format!("tp{n_shards}_mlp_s{s}_{mlp_tag}_b{b}"),
-                |_| Ok(vec![l_lit.clone(), x_lit.clone()]),
-            )?;
-            let xd = x.as_f32_mut()?;
-            for outs in shard_outs {
-                let partial = Tensor::from_literal(&outs[0])?;
-                for (xi, pi) in xd.iter_mut().zip(partial.as_f32()?) {
-                    *xi += pi;
-                }
-            }
-        }
-        let fin = self
-            .exec
-            .run_raw(&format!("tp{n_shards}_final_b{b}"), &[x.to_literal()?])?;
-        Ok((Tensor::from_literal(&fin[0])?, kv_new))
-    }
-
-    /// Run one executable per shard, optionally on worker threads (the
-    /// host-side analogue of simultaneous multi-GPU dispatch). In parallel
-    /// mode each shard is dispatched as soon as its inputs are prepared,
-    /// so shard s+1's input prep overlaps shard s's execution.
-    fn run_shards(
-        &self,
-        n_shards: usize,
-        parallel: bool,
-        name: impl Fn(usize) -> String + Sync,
-        inputs: impl FnMut(usize) -> Result<Vec<xla::Literal>>,
-    ) -> Result<Vec<Vec<xla::Literal>>> {
-        let mut inputs = inputs;
-        if parallel {
-            // SAFETY: PJRT execution is thread-safe; Literal is only moved,
-            // not aliased, across the scope boundary (see Executor note).
-            struct SendLits(Vec<xla::Literal>);
-            unsafe impl Send for SendLits {}
-            let exec = &self.exec;
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(n_shards);
-                for s in 0..n_shards {
-                    let nm = name(s);
-                    let ins = SendLits(inputs(s)?);
-                    handles.push(scope.spawn(move || {
-                        // rebind to defeat disjoint-field capture (which
-                        // would capture the inner Vec<Literal> directly)
-                        let ins = ins;
-                        exec.run_raw(&nm, &ins.0).map(SendLits)
-                    }));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard thread panicked").map(|r| r.0))
-                    .collect()
-            })
-        } else {
-            let mut prepared = Vec::with_capacity(n_shards);
-            for s in 0..n_shards {
-                prepared.push((name(s), inputs(s)?));
-            }
-            prepared
-                .into_iter()
-                .map(|(nm, ins)| self.exec.run_raw(&nm, &ins))
-                .collect()
-        }
-    }
 }
 
-fn empty_literal() -> xla::Literal {
-    xla::Literal::scalar(0f32)
-}

@@ -277,6 +277,59 @@ impl Manifest {
         "copy_blocks".to_string()
     }
 
+    /// TP shard attention entry over a per-shard pool slice. `tag` is
+    /// "dense", "sha_dXXXX" (localized head_idx) or "kvw" (KV-write-only —
+    /// the dispatch a routing-skipped shard still runs).
+    pub fn tp_attn_entry_name(
+        &self,
+        n_shards: usize,
+        shard: usize,
+        tag: &str,
+        batch: usize,
+        n: usize,
+    ) -> String {
+        format!("tp{n_shards}_attn_s{shard}_{tag}_b{batch}_n{n}_paged_fused")
+    }
+
+    /// Biasless TP MLP shard entry. `tag` is "dense" or "k{Kms}" (localized
+    /// union indices, sentinel = d_ff/n_shards).
+    pub fn tp_mlp_entry_name(
+        &self,
+        n_shards: usize,
+        shard: usize,
+        tag: &str,
+        batch: usize,
+    ) -> String {
+        format!("tp{n_shards}_mlp_s{shard}_{tag}_b{batch}")
+    }
+
+    /// Per-layer on-device all-reduce entry (`op` = "attn" | "mlp"):
+    /// residual + Σ shard partials + the output bias the biasless shard
+    /// entries dropped.
+    pub fn tp_reduce_entry_name(&self, n_shards: usize, op: &str, batch: usize) -> String {
+        format!("tp{n_shards}_{op}_reduce_b{batch}")
+    }
+
+    pub fn tp_embed_entry_name(&self, n_shards: usize, batch: usize) -> String {
+        format!("tp{n_shards}_embed_b{batch}")
+    }
+
+    pub fn tp_final_entry_name(&self, n_shards: usize, batch: usize) -> String {
+        format!("tp{n_shards}_final_b{batch}")
+    }
+
+    /// Pipeline stage entry over a per-stage pool slice (`stage` 0 embeds
+    /// tokens and runs layers [0, L/2); stage 1 finishes and projects).
+    pub fn pp_stage_entry_name(
+        &self,
+        stage: usize,
+        tag: &str,
+        batch: usize,
+        n: usize,
+    ) -> String {
+        format!("pp2_stage{stage}_{tag}_b{batch}_n{n}_paged_fused")
+    }
+
     /// Smallest batch bucket >= need (error if need exceeds the largest).
     pub fn batch_bucket(&self, need: usize) -> Result<usize> {
         self.batch_buckets
@@ -350,6 +403,20 @@ mod tests {
         assert_eq!(
             m.fused_decode_entry_name("polar_d0500", 2, 32),
             "decode_polar_d0500_b2_n32_paged_fused"
+        );
+        assert_eq!(
+            m.tp_attn_entry_name(2, 1, "sha_d0250", 4, 256),
+            "tp2_attn_s1_sha_d0250_b4_n256_paged_fused"
+        );
+        assert_eq!(m.tp_attn_entry_name(4, 0, "kvw", 1, 256),
+                   "tp4_attn_s0_kvw_b1_n256_paged_fused");
+        assert_eq!(m.tp_mlp_entry_name(2, 1, "k96", 16), "tp2_mlp_s1_k96_b16");
+        assert_eq!(m.tp_reduce_entry_name(2, "attn", 4), "tp2_attn_reduce_b4");
+        assert_eq!(m.tp_embed_entry_name(2, 4), "tp2_embed_b4");
+        assert_eq!(m.tp_final_entry_name(4, 1), "tp4_final_b1");
+        assert_eq!(
+            m.pp_stage_entry_name(1, "polar_d0250", 4, 256),
+            "pp2_stage1_polar_d0250_b4_n256_paged_fused"
         );
         assert!(m.has_entry("decode_dense_b1_n16"));
         assert!(!m.has_entry("decode_dense_b1_n16_paged_fused"));

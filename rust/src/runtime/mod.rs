@@ -1,5 +1,7 @@
 //! Runtime layer: PJRT client, artifact manifest, weight loading, lazy
-//! executable compilation and the prefill/decode/PP/TP step drivers.
+//! executable compilation, the paged prefill/decode step drivers and the
+//! shard-aware TP/PP drivers (`shard`: route-then-dispatch planning over
+//! per-shard resident pool slices).
 //! Adapted from the /opt/xla-example/load_hlo pattern (HLO **text** is the
 //! interchange format — see DESIGN.md).
 
@@ -8,6 +10,7 @@ pub mod executor;
 pub mod manifest;
 pub mod profile;
 pub mod router;
+pub mod shard;
 pub mod tensor;
 
 pub use engine::{
@@ -18,4 +21,9 @@ pub use executor::{DeviceInput, Executor};
 pub use manifest::{EntrySpec, Manifest, ModelConfig, TensorSpec};
 pub use profile::StepProfile;
 pub use router::{RouterBank, RoutingPolicy, StepRouting};
+pub use shard::{
+    merge_pool_groups, merge_pool_layers, mlp_shard_k, plan_shard_dispatch,
+    split_pool_groups, split_pool_layers, AttnDispatch, LayerPlan, MlpDispatch,
+    ShardDispatch, ShardPlanSpec, TpStepOutput,
+};
 pub use tensor::{Dtype, Tensor};

@@ -49,6 +49,18 @@ pub struct StepProfile {
     /// calls). This is device-local traffic, not host<->device — counted
     /// separately so COW cost stays visible once the shells are gone.
     pub cow_bytes: u64,
+    /// Bytes the per-layer reduce entries consume combining shard partials
+    /// (n_shards x B x d x 4 per reduce call). Device-local like
+    /// `cow_bytes`: the partials stay device buffers, nothing crosses the
+    /// host boundary on the reduce.
+    pub allreduce_bytes: u64,
+    /// (layer, shard) pairs that ran a full compute dispatch (dense/SHA
+    /// attention, MLP shard) on sharded steps.
+    pub shards_dispatched: u64,
+    /// (layer, shard) pairs routing let us skip: the shard ran only the
+    /// KV-write entry (attention) or nothing at all (MLP with no union
+    /// neuron in the shard's range) and contributed a zero partial.
+    pub shards_skipped: u64,
 }
 
 impl StepProfile {
@@ -68,6 +80,9 @@ impl StepProfile {
         self.prefill_gather_bytes += o.prefill_gather_bytes;
         self.prefill_scatter_bytes += o.prefill_scatter_bytes;
         self.cow_bytes += o.cow_bytes;
+        self.allreduce_bytes += o.allreduce_bytes;
+        self.shards_dispatched += o.shards_dispatched;
+        self.shards_skipped += o.shards_skipped;
     }
 
     /// Total bytes crossing the host<->device boundary.
@@ -113,6 +128,9 @@ impl StepProfile {
                 (self.prefill_scatter_bytes as usize).into(),
             ),
             ("cow_bytes", (self.cow_bytes as usize).into()),
+            ("allreduce_bytes", (self.allreduce_bytes as usize).into()),
+            ("shards_dispatched", (self.shards_dispatched as usize).into()),
+            ("shards_skipped", (self.shards_skipped as usize).into()),
             ("h2d_ms", (self.h2d_ns as f64 * 1e-6).into()),
             ("compute_ms", (self.compute_ns as f64 * 1e-6).into()),
             ("d2h_ms", (self.d2h_ns as f64 * 1e-6).into()),
@@ -143,6 +161,9 @@ mod tests {
             prefill_gather_bytes: 40,
             prefill_scatter_bytes: 20,
             cow_bytes: 2048,
+            allreduce_bytes: 512,
+            shards_dispatched: 6,
+            shards_skipped: 2,
             ..Default::default()
         };
         a.merge(&b);
@@ -155,7 +176,13 @@ mod tests {
         assert_eq!(a.prefill_gather_bytes, 40);
         assert_eq!(a.prefill_scatter_bytes, 20);
         assert_eq!(a.cow_bytes, 2048);
+        assert_eq!(a.allreduce_bytes, 512);
+        assert_eq!(a.shards_dispatched, 6);
+        assert_eq!(a.shards_skipped, 2);
         let j = a.to_json();
+        assert_eq!(j.get("allreduce_bytes").as_usize(), Some(512));
+        assert_eq!(j.get("shards_dispatched").as_usize(), Some(6));
+        assert_eq!(j.get("shards_skipped").as_usize(), Some(2));
         assert_eq!(j.get("prefill_gather_bytes").as_usize(), Some(40));
         assert_eq!(j.get("prefill_scatter_bytes").as_usize(), Some(20));
         assert_eq!(j.get("cow_bytes").as_usize(), Some(2048));

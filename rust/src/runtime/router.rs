@@ -170,6 +170,10 @@ pub struct StepRouting {
     /// Selection counts, [n_layers * n_groups] row-major — feeds the
     /// head-selection histogram in server stats.
     pub head_counts: Vec<u64>,
+    /// Live-slot mask this decision was computed under (None = all live).
+    /// Masked slots carry placeholder `0..k` head rows — the shard
+    /// dispatch planner must not let those force a shard dispatch.
+    pub active: Option<Vec<bool>>,
     pub router_ns: u64,
 }
 
@@ -522,6 +526,7 @@ impl RouterBank {
             head_union,
             mlp_union,
             head_counts,
+            active: active.map(|a| a.to_vec()),
             router_ns: t0.elapsed().as_nanos() as u64,
         })
     }

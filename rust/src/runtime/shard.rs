@@ -1,0 +1,925 @@
+//! Shard-aware zero-shell serving: route-then-dispatch planning plus the
+//! paged TP/PP step drivers (Figs 11, 12).
+//!
+//! The [`SparsityController`](crate::coordinator) plans a step's routing
+//! FIRST; [`plan_shard_dispatch`] then turns the decision into per-shard
+//! work: a TP shard whose head groups are all unselected for a layer runs
+//! only the cheap KV-write entry (`kvw`) and contributes a zero partial to
+//! the reduce — KV must be written every step even where attention is
+//! skipped, or the cache corrupts for future steps. Layer 0 always stays
+//! dense (paper §3.2). MLP shards owning no batch-union neuron are skipped
+//! outright (the selective GEMM of an empty row set is exactly zero).
+//!
+//! Data movement discipline (the "zero-shell" part): each shard owns a
+//! resident pool slice `[L,2,P,Gs,bs,dh]` addressed by the SAME block
+//! tables; the activation and every shard partial stay device buffers and
+//! the per-layer `tp{S}_{attn,mlp}_reduce` entries sum them on-device —
+//! accounted as `allreduce_bytes` (device-local, like `cow_bytes`), with
+//! no per-layer f32 host loop and no gather/scatter shells anywhere.
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{BlockTables, Engine, KvStore, PagedKv};
+use super::executor::DeviceInput;
+use super::manifest::Manifest;
+use super::router::{RoutingPolicy, StepRouting};
+use super::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// dispatch plan
+// ---------------------------------------------------------------------------
+
+/// What one TP shard runs for one layer's attention.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttnDispatch {
+    /// Full dense attention over all the shard's local groups.
+    Dense,
+    /// SHA entry with localized per-request group ids, row-major `[B, Ks]`
+    /// (sentinel `Gs` marks unselected slots — exact zero rows in-graph).
+    Sha(Vec<i32>),
+    /// No live slot selected any of this shard's groups: run only the
+    /// KV-write entry and contribute a zero partial to the reduce.
+    KvWrite,
+}
+
+/// What one TP shard runs for one layer's MLP.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MlpDispatch {
+    Dense,
+    /// Localized union neuron ids `[Kms]`, sentinel-`Ds` padded.
+    Sparse(Vec<i32>),
+    /// No union neuron lands in this shard's range: zero partial, no call.
+    Skip,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub attn: Vec<AttnDispatch>,
+    pub mlp: Vec<MlpDispatch>,
+}
+
+/// One step's per-(layer, shard) dispatch decisions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardDispatch {
+    pub n_shards: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl ShardDispatch {
+    /// (layer, shard) pairs running a full compute dispatch.
+    pub fn dispatched(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.attn.iter().filter(|d| !matches!(d, AttnDispatch::KvWrite)).count()
+                    + l.mlp.iter().filter(|d| !matches!(d, MlpDispatch::Skip)).count()
+            })
+            .sum::<usize>() as u64
+    }
+
+    /// (layer, shard) pairs routing let us skip (kvw-only attention or a
+    /// skipped MLP shard).
+    pub fn skipped(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.attn.iter().filter(|d| matches!(d, AttnDispatch::KvWrite)).count()
+                    + l.mlp.iter().filter(|d| matches!(d, MlpDispatch::Skip)).count()
+            })
+            .sum::<usize>() as u64
+    }
+}
+
+/// Geometry + mode inputs of [`plan_shard_dispatch`].
+#[derive(Debug, Clone)]
+pub struct ShardPlanSpec {
+    pub n_shards: usize,
+    pub n_layers: usize,
+    pub n_groups: usize,
+    pub d_ff: usize,
+    pub batch: usize,
+    /// SHA-dispatch attention from the routing decision (false = dense
+    /// attention entries on every shard regardless of routing).
+    pub route_attn: bool,
+    /// Per-shard `mlp_idx` width of the artifact's k-entries
+    /// ([`mlp_shard_k`]); 0 = dense MLP shards.
+    pub mlp_ks: usize,
+}
+
+/// Turn a step's routing decision into per-(layer, shard) dispatches.
+///
+/// Routing `None` (or `route_attn: false`) plans dense attention
+/// everywhere. With routing, layer 0 stays dense (§3.2); for l > 0 a
+/// shard gets a [`AttnDispatch::Sha`] row set localized to its group
+/// range iff some LIVE slot (per `routing.active` — masked slots carry
+/// placeholder indices that must not force a dispatch) selected one of
+/// its groups, else [`AttnDispatch::KvWrite`]. Sparse MLP partitions each
+/// layer's union row by shard range.
+pub fn plan_shard_dispatch(
+    spec: &ShardPlanSpec,
+    routing: Option<&StepRouting>,
+) -> Result<ShardDispatch> {
+    let s = spec.n_shards;
+    if s == 0 || spec.n_groups % s != 0 {
+        bail!(
+            "plan_shard_dispatch: {} groups not divisible into {s} shards",
+            spec.n_groups
+        );
+    }
+    let gs = spec.n_groups / s;
+    let route_attn = spec.route_attn && routing.is_some();
+    let (head, kh, ks) = if route_attn {
+        let r = routing.unwrap();
+        let sh = r.head_idx.shape().to_vec();
+        if sh.len() != 3 || sh[0] != spec.n_layers || sh[1] != spec.batch {
+            bail!(
+                "plan_shard_dispatch: head_idx {:?} != [{}, {}, k]",
+                sh, spec.n_layers, spec.batch
+            );
+        }
+        (Some(r.head_idx.as_i32()?), sh[2], sh[2].min(gs).max(1))
+    } else {
+        (None, 0, 0)
+    };
+    let (mlp, ds) = if spec.mlp_ks > 0 {
+        if spec.d_ff % s != 0 {
+            bail!("plan_shard_dispatch: d_ff {} not divisible into {s} shards", spec.d_ff);
+        }
+        let r = routing.context("plan_shard_dispatch: sparse MLP entries need routing")?;
+        let t = r
+            .mlp_idx
+            .as_ref()
+            .context("plan_shard_dispatch: routing decision carries no mlp_idx")?;
+        let sh = t.shape();
+        if sh.len() != 2 || sh[0] != spec.n_layers {
+            bail!("plan_shard_dispatch: mlp_idx {:?} != [{}, k]", sh, spec.n_layers);
+        }
+        (Some((t.as_i32()?, sh[1])), spec.d_ff / s)
+    } else {
+        (None, 0)
+    };
+    let live = |i: usize| {
+        routing.map_or(true, |r| {
+            r.active.as_ref().map_or(true, |a| a.get(i).copied().unwrap_or(false))
+        })
+    };
+
+    let mut layers = Vec::with_capacity(spec.n_layers);
+    for l in 0..spec.n_layers {
+        let mut attn = Vec::with_capacity(s);
+        for shard in 0..s {
+            let data = match &head {
+                // layer 0 stays dense per §3.2 even when routing is on
+                Some(d) if l > 0 => d,
+                _ => {
+                    attn.push(AttnDispatch::Dense);
+                    continue;
+                }
+            };
+            let lo = (shard * gs) as i32;
+            let hi = lo + gs as i32;
+            let mut rows = vec![gs as i32; spec.batch * ks];
+            let mut any = false;
+            for b in 0..spec.batch {
+                if !live(b) {
+                    continue;
+                }
+                let row = &data[(l * spec.batch + b) * kh..(l * spec.batch + b + 1) * kh];
+                let mut w = 0;
+                for &g in row {
+                    if g >= lo && g < hi && w < ks {
+                        rows[b * ks + w] = g - lo;
+                        w += 1;
+                    }
+                }
+                any |= w > 0;
+            }
+            attn.push(if any { AttnDispatch::Sha(rows) } else { AttnDispatch::KvWrite });
+        }
+        let mut mlp_row = Vec::with_capacity(s);
+        for shard in 0..s {
+            match &mlp {
+                None => mlp_row.push(MlpDispatch::Dense),
+                Some((data, km)) => {
+                    let lo = (shard * ds) as i32;
+                    let hi = lo + ds as i32;
+                    let mut out = vec![ds as i32; spec.mlp_ks];
+                    let mut w = 0;
+                    for &i in &data[l * km..(l + 1) * km] {
+                        if i >= lo && i < hi && w < spec.mlp_ks {
+                            out[w] = i - lo;
+                            w += 1;
+                        }
+                    }
+                    mlp_row.push(if w > 0 {
+                        MlpDispatch::Sparse(out)
+                    } else {
+                        MlpDispatch::Skip
+                    });
+                }
+            }
+        }
+        layers.push(LayerPlan { attn, mlp: mlp_row });
+    }
+    Ok(ShardDispatch { n_shards: s, layers })
+}
+
+/// Per-shard sparse-MLP index width baked into the artifact for
+/// (n_shards, batch): the `top_k` meta of the shard-0 k-entry. `None`
+/// when the artifact ships only dense MLP shards (non-ReLU models, no
+/// calibration table, or an unsharded artifact).
+pub fn mlp_shard_k(m: &Manifest, n_shards: usize, batch: usize) -> Option<usize> {
+    m.entries.values().find_map(|e| {
+        if e.kind != "tp_mlp"
+            || e.meta.get("n_shards").as_usize()? != n_shards
+            || e.meta.get("batch").as_usize()? != batch
+            || e.meta.get("shard").as_usize()? != 0
+        {
+            return None;
+        }
+        match e.meta.get("top_k").as_usize()? {
+            0 => None,
+            k => Some(k),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// pool slicing (host side of shard composition changes)
+// ---------------------------------------------------------------------------
+
+fn pool_dims(t: &Tensor) -> Result<[usize; 6]> {
+    let s = t.shape();
+    if s.len() != 6 || s[1] != 2 {
+        bail!("expected pool [L,2,P,G,bs,dh], got {s:?}");
+    }
+    Ok([s[0], s[1], s[2], s[3], s[4], s[5]])
+}
+
+/// Split a host pool `[L,2,P,G,bs,dh]` into per-shard group slices
+/// `[L,2,P,Gs,bs,dh]`. Every slice keeps the full pool depth P, so the
+/// same block tables address all of them.
+pub fn split_pool_groups(pool: &Tensor, n_shards: usize) -> Result<Vec<Tensor>> {
+    let [l, two, p, g, bs, dh] = pool_dims(pool)?;
+    if n_shards == 0 || g % n_shards != 0 {
+        bail!("split_pool_groups: {g} groups not divisible into {n_shards} shards");
+    }
+    let gs = g / n_shards;
+    let row = bs * dh;
+    let data = pool.as_f32()?;
+    let mut out = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let mut shard = Vec::with_capacity(l * two * p * gs * row);
+        for o in 0..l * two * p {
+            let base = o * g * row + s * gs * row;
+            shard.extend_from_slice(&data[base..base + gs * row]);
+        }
+        out.push(Tensor::f32(shard, vec![l, two, p, gs, bs, dh])?);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`split_pool_groups`]: reassemble the single-device pool
+/// from per-shard group slices.
+pub fn merge_pool_groups(shards: &[Tensor]) -> Result<Tensor> {
+    let n_shards = shards.len();
+    if n_shards == 0 {
+        bail!("merge_pool_groups: no shards");
+    }
+    let [l, two, p, gs, bs, dh] = pool_dims(&shards[0])?;
+    let row = bs * dh;
+    let g = gs * n_shards;
+    let mut data = vec![0f32; l * two * p * g * row];
+    for (s, t) in shards.iter().enumerate() {
+        if t.shape() != shards[0].shape() {
+            bail!("merge_pool_groups: shard {s} shape {:?} != {:?}", t.shape(),
+                  shards[0].shape());
+        }
+        let src = t.as_f32()?;
+        for o in 0..l * two * p {
+            let dst = o * g * row + s * gs * row;
+            data[dst..dst + gs * row]
+                .copy_from_slice(&src[o * gs * row..(o + 1) * gs * row]);
+        }
+    }
+    Tensor::f32(data, vec![l, two, p, g, bs, dh])
+}
+
+/// Split a host pool `[L,2,P,G,bs,dh]` into per-stage layer slices
+/// `[0, l0)` and `[l0, L)` (layers are the outermost axis, so both slices
+/// are contiguous ranges of the flat buffer).
+pub fn split_pool_layers(pool: &Tensor, l0: usize) -> Result<(Tensor, Tensor)> {
+    let [l, two, p, g, bs, dh] = pool_dims(pool)?;
+    if l0 == 0 || l0 >= l {
+        bail!("split_pool_layers: split {l0} outside (0, {l})");
+    }
+    let per_layer = two * p * g * bs * dh;
+    let data = pool.as_f32()?;
+    Ok((
+        Tensor::f32(data[..l0 * per_layer].to_vec(), vec![l0, two, p, g, bs, dh])?,
+        Tensor::f32(data[l0 * per_layer..].to_vec(), vec![l - l0, two, p, g, bs, dh])?,
+    ))
+}
+
+/// Inverse of [`split_pool_layers`].
+pub fn merge_pool_layers(s0: &Tensor, s1: &Tensor) -> Result<Tensor> {
+    let [l0, two, p, g, bs, dh] = pool_dims(s0)?;
+    let [l1, two1, p1, g1, bs1, dh1] = pool_dims(s1)?;
+    if (two, p, g, bs, dh) != (two1, p1, g1, bs1, dh1) {
+        bail!("merge_pool_layers: stage shapes {:?} / {:?} disagree", s0.shape(),
+              s1.shape());
+    }
+    let mut data = Vec::with_capacity((l0 + l1) * two * p * g * bs * dh);
+    data.extend_from_slice(s0.as_f32()?);
+    data.extend_from_slice(s1.as_f32()?);
+    Tensor::f32(data, vec![l0 + l1, two, p, g, bs, dh])
+}
+
+// ---------------------------------------------------------------------------
+// engine drivers
+// ---------------------------------------------------------------------------
+
+pub struct TpStepOutput {
+    pub logits: Tensor, // [B, V]
+    /// Per-shard pool slices, KV rows written on EVERY shard (kvw included).
+    pub pools: Vec<PagedKv>,
+    /// The dispatch plan the step ran (counters already merged into the
+    /// profile; returned so callers can assert on the shape of the work).
+    pub plan: ShardDispatch,
+}
+
+impl Engine {
+    /// Routing policy for a self-routed TP step (direct bench/eval
+    /// callers): prefer the single-device fused polar entry matching the
+    /// SHA tag's density — it carries the calibrated per-layer mlp_topk —
+    /// and fall back to tag-derived values.
+    fn tp_routing_policy(
+        &self,
+        attn_tag: &str,
+        mlp_ks: usize,
+        n_shards: usize,
+        b: usize,
+        n: usize,
+    ) -> Result<RoutingPolicy> {
+        let m = self.exec.manifest();
+        let cfg = self.exec.config();
+        if let Some(d) = attn_tag.strip_prefix("sha_") {
+            let fused = m.fused_decode_entry_name(&format!("polar_{d}"), b, n);
+            if let Ok(spec) = m.entry(&fused) {
+                if let Some(p) = RoutingPolicy::from_entry(spec) {
+                    return Ok(p);
+                }
+            }
+        }
+        let g = cfg.n_groups();
+        let head_k = match attn_tag.strip_prefix("sha_d") {
+            Some(t) => {
+                let density = t.parse::<f64>().map(|x| x / 1000.0).unwrap_or(1.0);
+                ((g as f64 * density).round() as usize).clamp(1, g)
+            }
+            None => g,
+        };
+        let (mlp_cap, mlp_req_k) = if mlp_ks > 0 {
+            ((mlp_ks * n_shards).min(cfg.d_ff), vec![mlp_ks.min(cfg.d_ff); cfg.n_layers])
+        } else {
+            (0, Vec::new())
+        };
+        Ok(RoutingPolicy { head_k, mlp_req_k, mlp_cap })
+    }
+
+    /// One decode step across `n_shards` TP shards over per-shard resident
+    /// pool slices — route-then-dispatch (see module doc). `attn_tag` is
+    /// "dense" or "sha_dXXXX" (layer 0 always runs dense, §3.2);
+    /// `mlp_tag` is "dense" or "k{Kms}". With routed tags and `routing:
+    /// None` the engine runs the artifact routers itself, like
+    /// [`Engine::decode_paged`].
+    ///
+    /// The activation and every shard partial stay device buffers; the
+    /// per-layer reduce entries sum them on-device (`allreduce_bytes`).
+    /// A routing-skipped shard runs the KV-write entry and contributes a
+    /// cloned zero buffer uploaded once per step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_tp_paged(
+        &self,
+        n_shards: usize,
+        attn_tag: &str,
+        mlp_tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        tables: &BlockTables,
+        pools: Vec<PagedKv>,
+        routing: Option<&StepRouting>,
+    ) -> Result<TpStepOutput> {
+        let cfg = self.exec.config().clone();
+        let b = tables.batch;
+        if tokens.len() != b || lengths.len() != b {
+            bail!("decode_tp_paged: tokens/lengths len != batch {b}");
+        }
+        if pools.len() != n_shards || n_shards == 0 {
+            bail!("decode_tp_paged: {} pools vs {n_shards} shards", pools.len());
+        }
+        let (pool_blocks, block) = (pools[0].pool_blocks, pools[0].block);
+        if pools.iter().any(|p| p.pool_blocks != pool_blocks || p.block != block) {
+            bail!("decode_tp_paged: shard pool geometries disagree");
+        }
+        if tables.flat.iter().any(|&x| x < 0 || x as usize >= pool_blocks) {
+            bail!("decode_tp_paged: block id out of pool ({pool_blocks})");
+        }
+        let n = tables.n(block);
+        let mlp_ks = if mlp_tag == "dense" {
+            0
+        } else {
+            mlp_tag
+                .strip_prefix('k')
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&k| k > 0)
+                .with_context(|| format!("decode_tp_paged: bad mlp tag {mlp_tag:?}"))?
+        };
+        let route_attn = attn_tag != "dense";
+        let computed = if routing.is_none() && (route_attn || mlp_ks > 0) {
+            let policy = self.tp_routing_policy(attn_tag, mlp_ks, n_shards, b, n)?;
+            let bank = self.router_bank().as_ref().with_context(|| {
+                format!(
+                    "TP tags {attn_tag}/{mlp_tag} take router indices but the \
+                     artifact has no router weights"
+                )
+            })?;
+            let r = bank.route_step(tokens, lengths, None, &policy)?;
+            self.exec.profile_mut().router_ns += r.router_ns;
+            Some(r)
+        } else {
+            None
+        };
+        let routing = computed.as_ref().or(routing);
+        let plan = plan_shard_dispatch(
+            &ShardPlanSpec {
+                n_shards,
+                n_layers: cfg.n_layers,
+                n_groups: cfg.n_groups(),
+                d_ff: cfg.d_ff,
+                batch: b,
+                route_attn,
+                mlp_ks,
+            },
+            routing,
+        )?;
+
+        let m = self.exec.manifest();
+        let toks_lit = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        let lens_lit = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let tbl_lit = tables.to_literal()?;
+        // one zero [B,d] buffer uploaded per step, cloned per skipped shard
+        // (buffer clones are O(1) handles — nothing re-crosses the host)
+        let zero_buf = if plan.skipped() > 0 {
+            Some(self.exec.upload(&Tensor::zeros_f32(vec![b, cfg.d_model]).to_literal()?)?)
+        } else {
+            None
+        };
+        let zero = || DeviceInput::Buf(zero_buf.clone().expect("zero partial"));
+
+        let embed = self.exec.run_bufs(
+            &m.tp_embed_entry_name(n_shards, b),
+            vec![DeviceInput::Host(toks_lit), DeviceInput::Host(lens_lit.clone())],
+        )?;
+        let mut x = embed.into_iter().next().context("tp embed x")?;
+        let mut stores: Vec<Option<KvStore>> =
+            pools.into_iter().map(|p| Some(p.store)).collect();
+
+        for (l, lp) in plan.layers.iter().enumerate() {
+            let l_lit = Tensor::i32(vec![l as i32], vec![])?.to_literal()?;
+            // attention shards: data order [layer, x, lengths, block_table,
+            // kv, (head_idx)] — pinned by the AOT contract test
+            let mut partials: Vec<DeviceInput> = Vec::with_capacity(n_shards);
+            for (s, d) in lp.attn.iter().enumerate() {
+                let kv_in = match stores[s].take().expect("kv store") {
+                    KvStore::Lit(lit) => DeviceInput::Host(lit),
+                    KvStore::Buf(buf) => DeviceInput::Buf(buf),
+                };
+                let mut ins = vec![
+                    DeviceInput::Host(l_lit.clone()),
+                    DeviceInput::Buf(x.clone()),
+                    DeviceInput::Host(lens_lit.clone()),
+                    DeviceInput::Host(tbl_lit.clone()),
+                    kv_in,
+                ];
+                let name = match d {
+                    AttnDispatch::Dense => m.tp_attn_entry_name(n_shards, s, "dense", b, n),
+                    AttnDispatch::Sha(rows) => {
+                        let ks = rows.len() / b.max(1);
+                        ins.push(DeviceInput::Host(
+                            Tensor::i32(rows.clone(), vec![b, ks])?.to_literal()?,
+                        ));
+                        m.tp_attn_entry_name(n_shards, s, attn_tag, b, n)
+                    }
+                    AttnDispatch::KvWrite => m.tp_attn_entry_name(n_shards, s, "kvw", b, n),
+                };
+                let mut it = self.exec.run_bufs(&name, ins)?.into_iter();
+                if matches!(d, AttnDispatch::KvWrite) {
+                    stores[s] = Some(KvStore::Buf(it.next().context("kvw kv")?));
+                    partials.push(zero());
+                } else {
+                    partials.push(DeviceInput::Buf(it.next().context("attn partial")?));
+                    stores[s] = Some(KvStore::Buf(it.next().context("attn kv")?));
+                }
+            }
+            let mut ins = vec![DeviceInput::Host(l_lit.clone()), DeviceInput::Buf(x)];
+            ins.extend(partials);
+            x = self
+                .exec
+                .run_bufs(&m.tp_reduce_entry_name(n_shards, "attn", b), ins)?
+                .into_iter()
+                .next()
+                .context("attn reduce x")?;
+
+            // MLP shards: data order [layer, x, (mlp_idx)]
+            let mut partials: Vec<DeviceInput> = Vec::with_capacity(n_shards);
+            for (s, d) in lp.mlp.iter().enumerate() {
+                if matches!(d, MlpDispatch::Skip) {
+                    partials.push(zero());
+                    continue;
+                }
+                let mut ins =
+                    vec![DeviceInput::Host(l_lit.clone()), DeviceInput::Buf(x.clone())];
+                let name = match d {
+                    MlpDispatch::Sparse(idx) => {
+                        ins.push(DeviceInput::Host(
+                            Tensor::i32(idx.clone(), vec![idx.len()])?.to_literal()?,
+                        ));
+                        m.tp_mlp_entry_name(n_shards, s, mlp_tag, b)
+                    }
+                    _ => m.tp_mlp_entry_name(n_shards, s, "dense", b),
+                };
+                partials.push(DeviceInput::Buf(
+                    self.exec
+                        .run_bufs(&name, ins)?
+                        .into_iter()
+                        .next()
+                        .context("mlp partial")?,
+                ));
+            }
+            let mut ins = vec![DeviceInput::Host(l_lit), DeviceInput::Buf(x)];
+            ins.extend(partials);
+            x = self
+                .exec
+                .run_bufs(&m.tp_reduce_entry_name(n_shards, "mlp", b), ins)?
+                .into_iter()
+                .next()
+                .context("mlp reduce x")?;
+        }
+
+        let logits_buf = self
+            .exec
+            .run_bufs(&m.tp_final_entry_name(n_shards, b), vec![DeviceInput::Buf(x)])?
+            .into_iter()
+            .next()
+            .context("tp logits")?;
+        let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
+
+        let resident = self.kv_resident();
+        let pools = stores
+            .into_iter()
+            .map(|st| -> Result<PagedKv> {
+                let store = match st.expect("kv store") {
+                    // A/B host path: materialize like the single-device
+                    // baseline (accounted d2h)
+                    KvStore::Buf(buf) if !resident => {
+                        KvStore::Lit(self.exec.fetch_literal(&buf)?)
+                    }
+                    s => s,
+                };
+                Ok(PagedKv { store, pool_blocks, block })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut p = self.exec.profile_mut();
+        p.decode_steps += 1;
+        // 2 reduces per layer, each consuming S partials of B x d floats
+        p.allreduce_bytes +=
+            (2 * cfg.n_layers * n_shards * b * cfg.d_model * 4) as u64;
+        p.shards_dispatched += plan.dispatched();
+        p.shards_skipped += plan.skipped();
+        drop(p);
+        Ok(TpStepOutput { logits, pools, plan })
+    }
+
+    /// One decode step through the two paged pipeline stages. `kv0`/`kv1`
+    /// hold the per-stage resident pool slices (layer split, same block
+    /// tables); the stage-0 activation crosses to stage 1 as a device
+    /// buffer. Polar tags are index-taking: the full-depth routing tensors
+    /// ride to both stages and each reads its own layers' rows; with
+    /// `routing: None` the engine self-routes like [`Engine::decode_paged`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_pp2_paged(
+        &self,
+        tag: &str,
+        tokens: &[i32],
+        lengths: &[i32],
+        tables: &BlockTables,
+        kv0: PagedKv,
+        kv1: PagedKv,
+        routing: Option<&StepRouting>,
+    ) -> Result<(Tensor, PagedKv, PagedKv)> {
+        let b = tables.batch;
+        if tokens.len() != b || lengths.len() != b {
+            bail!("decode_pp2_paged: tokens/lengths len != batch {b}");
+        }
+        let geom0 = (kv0.pool_blocks, kv0.block);
+        let geom1 = (kv1.pool_blocks, kv1.block);
+        if geom0 != geom1 {
+            bail!("decode_pp2_paged: stage pool geometries disagree");
+        }
+        if tables.flat.iter().any(|&x| x < 0 || x as usize >= kv0.pool_blocks) {
+            bail!("decode_pp2_paged: block id out of pool ({})", kv0.pool_blocks);
+        }
+        let n = tables.n(kv0.block);
+        let m = self.exec.manifest();
+        let s0 = m.pp_stage_entry_name(0, tag, b, n);
+        let s1 = m.pp_stage_entry_name(1, tag, b, n);
+        let spec0 = m.entry(&s0)?;
+        let takes_head = spec0.data.iter().any(|d| d.name == "head_idx");
+        let takes_mlp = spec0.data.iter().any(|d| d.name == "mlp_idx");
+        let computed = match (routing.is_some(), RoutingPolicy::from_entry(spec0)) {
+            (false, Some(policy)) => {
+                let bank = self.router_bank().as_ref().with_context(|| {
+                    format!("{s0} takes router indices but the artifact has no router weights")
+                })?;
+                let r = bank.route_step(tokens, lengths, None, &policy)?;
+                self.exec.profile_mut().router_ns += r.router_ns;
+                Some(r)
+            }
+            _ => None,
+        };
+        let routing = computed.as_ref().or(routing);
+        let mut idx_lits: Vec<xla::Literal> = Vec::new();
+        if takes_head {
+            let r = routing.with_context(|| format!("{s0} takes head_idx but no routing"))?;
+            idx_lits.push(r.head_idx.to_literal()?);
+        }
+        if takes_mlp {
+            let r = routing.with_context(|| format!("{s0} takes mlp_idx but no routing"))?;
+            let t = r
+                .mlp_idx
+                .as_ref()
+                .with_context(|| format!("{s0}: routing decision carries no mlp_idx"))?;
+            idx_lits.push(t.to_literal()?);
+        }
+
+        let toks = Tensor::i32(tokens.to_vec(), vec![b])?.to_literal()?;
+        let lens = Tensor::i32(lengths.to_vec(), vec![b])?.to_literal()?;
+        let tbl = tables.to_literal()?;
+
+        // stage 0: [tokens, lengths, block_table, kv, (idx...)] -> [x, kv]
+        let kv0_in = match kv0.store {
+            KvStore::Lit(l) => DeviceInput::Host(l),
+            KvStore::Buf(buf) => DeviceInput::Buf(buf),
+        };
+        let mut ins0 = vec![
+            DeviceInput::Host(toks),
+            DeviceInput::Host(lens.clone()),
+            DeviceInput::Host(tbl.clone()),
+            kv0_in,
+        ];
+        ins0.extend(idx_lits.iter().cloned().map(DeviceInput::Host));
+        let mut it0 = self.exec.run_bufs(&s0, ins0)?.into_iter();
+        let x = it0.next().context("stage0 x")?;
+        let kv0_store = KvStore::Buf(it0.next().context("stage0 kv")?);
+
+        // stage 1: [x, lengths, block_table, kv, (idx...)] -> [logits, kv]
+        let kv1_in = match kv1.store {
+            KvStore::Lit(l) => DeviceInput::Host(l),
+            KvStore::Buf(buf) => DeviceInput::Buf(buf),
+        };
+        let mut ins1 = vec![
+            DeviceInput::Buf(x),
+            DeviceInput::Host(lens),
+            DeviceInput::Host(tbl),
+            kv1_in,
+        ];
+        ins1.extend(idx_lits.into_iter().map(DeviceInput::Host));
+        let mut it1 = self.exec.run_bufs(&s1, ins1)?.into_iter();
+        let logits_buf = it1.next().context("stage1 logits")?;
+        let kv1_store = KvStore::Buf(it1.next().context("stage1 kv")?);
+        let logits = Tensor::from_literal(&self.exec.fetch_literal(&logits_buf)?)?;
+
+        let resident = self.kv_resident();
+        let mat = |store: KvStore| -> Result<KvStore> {
+            Ok(match store {
+                KvStore::Buf(buf) if !resident => {
+                    KvStore::Lit(self.exec.fetch_literal(&buf)?)
+                }
+                s => s,
+            })
+        };
+        let kv0 = PagedKv { store: mat(kv0_store)?, pool_blocks: geom0.0, block: geom0.1 };
+        let kv1 = PagedKv { store: mat(kv1_store)?, pool_blocks: geom1.0, block: geom1.1 };
+        self.exec.profile_mut().decode_steps += 1;
+        Ok((logits, kv0, kv1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn routing(
+        n_layers: usize,
+        batch: usize,
+        head: Vec<i32>,
+        head_k: usize,
+        n_groups: usize,
+        mlp: Option<(Vec<i32>, usize)>,
+        active: Option<Vec<bool>>,
+    ) -> StepRouting {
+        StepRouting {
+            head_idx: Tensor::i32(head, vec![n_layers, batch, head_k]).unwrap(),
+            mlp_idx: mlp
+                .map(|(v, k)| Tensor::i32(v, vec![n_layers, k]).unwrap()),
+            head_k,
+            n_groups,
+            head_union: vec![],
+            mlp_union: vec![],
+            head_counts: vec![],
+            active,
+            router_ns: 0,
+        }
+    }
+
+    #[test]
+    fn dense_plan_dispatches_everything() {
+        let spec = ShardPlanSpec {
+            n_shards: 2, n_layers: 3, n_groups: 4, d_ff: 8, batch: 2,
+            route_attn: false, mlp_ks: 0,
+        };
+        let p = plan_shard_dispatch(&spec, None).unwrap();
+        assert_eq!(p.layers.len(), 3);
+        for l in &p.layers {
+            assert_eq!(l.attn, vec![AttnDispatch::Dense; 2]);
+            assert_eq!(l.mlp, vec![MlpDispatch::Dense; 2]);
+        }
+        assert_eq!(p.dispatched(), 3 * 2 * 2);
+        assert_eq!(p.skipped(), 0);
+    }
+
+    #[test]
+    fn routed_plan_localizes_and_skips() {
+        // G=4, 2 shards (Gs=2), L=2, B=2, k=1: layer 1 both requests pick
+        // groups {2, 3} -> shard 0 skipped, shard 1 gets local ids {0, 1}
+        let r = routing(
+            2, 2,
+            vec![0, 3, /* layer 1: */ 2, 3],
+            1, 4, None, None,
+        );
+        let spec = ShardPlanSpec {
+            n_shards: 2, n_layers: 2, n_groups: 4, d_ff: 8, batch: 2,
+            route_attn: true, mlp_ks: 0,
+        };
+        let p = plan_shard_dispatch(&spec, Some(&r)).unwrap();
+        // layer 0 dense on every shard regardless of the indices
+        assert_eq!(p.layers[0].attn, vec![AttnDispatch::Dense; 2]);
+        assert_eq!(p.layers[1].attn[0], AttnDispatch::KvWrite);
+        // Ks = min(1, 2) = 1; global {2, 3} -> local {0, 1} on shard 1
+        assert_eq!(p.layers[1].attn[1], AttnDispatch::Sha(vec![0, 1]));
+        assert_eq!(p.dispatched(), 2 + 1 + 2 + 2); // attn l0 + attn l1 + mlp x2
+        assert_eq!(p.skipped(), 1);
+    }
+
+    #[test]
+    fn masked_slots_do_not_force_a_dispatch() {
+        // slot 1 is a padding slot whose placeholder row points at shard 0;
+        // only live slot 0 (groups in shard 1's range) may drive dispatch
+        let r = routing(
+            2, 2,
+            vec![0, 0, /* layer 1: */ 3, 0],
+            1, 4, None,
+            Some(vec![true, false]),
+        );
+        let spec = ShardPlanSpec {
+            n_shards: 2, n_layers: 2, n_groups: 4, d_ff: 8, batch: 2,
+            route_attn: true, mlp_ks: 0,
+        };
+        let p = plan_shard_dispatch(&spec, Some(&r)).unwrap();
+        assert_eq!(p.layers[1].attn[0], AttnDispatch::KvWrite);
+        // sentinel Gs=2 on the masked slot's row
+        assert_eq!(p.layers[1].attn[1], AttnDispatch::Sha(vec![1, 2]));
+    }
+
+    #[test]
+    fn mlp_union_partitions_by_shard_range() {
+        // d_ff=8, 2 shards (Ds=4), union row layer 0 = {1, 6}, layer 1 all
+        // in shard 0 -> shard 1 skipped there
+        let r = routing(
+            2, 1,
+            vec![0, 0],
+            1, 2,
+            Some((vec![1, 6, /* layer 1: */ 0, 2], 2)),
+            None,
+        );
+        let spec = ShardPlanSpec {
+            n_shards: 2, n_layers: 2, n_groups: 2, d_ff: 8, batch: 1,
+            route_attn: false, mlp_ks: 2,
+        };
+        let p = plan_shard_dispatch(&spec, Some(&r)).unwrap();
+        // sentinel Ds=4 pads the localized rows to width mlp_ks
+        assert_eq!(p.layers[0].mlp[0], MlpDispatch::Sparse(vec![1, 4]));
+        assert_eq!(p.layers[0].mlp[1], MlpDispatch::Sparse(vec![2, 4]));
+        assert_eq!(p.layers[1].mlp[0], MlpDispatch::Sparse(vec![0, 2]));
+        assert_eq!(p.layers[1].mlp[1], MlpDispatch::Skip);
+        assert_eq!(p.skipped(), 1);
+        // attention stayed dense (route_attn: false)
+        assert_eq!(p.layers[1].attn, vec![AttnDispatch::Dense; 2]);
+    }
+
+    #[test]
+    fn plan_rejects_bad_geometry() {
+        let spec = ShardPlanSpec {
+            n_shards: 3, n_layers: 2, n_groups: 4, d_ff: 9, batch: 1,
+            route_attn: false, mlp_ks: 0,
+        };
+        assert!(plan_shard_dispatch(&spec, None).is_err());
+        // sparse MLP without a routing decision is an error, not silence
+        let spec = ShardPlanSpec {
+            n_shards: 2, n_layers: 2, n_groups: 4, d_ff: 8, batch: 1,
+            route_attn: false, mlp_ks: 2,
+        };
+        assert!(plan_shard_dispatch(&spec, None).is_err());
+    }
+
+    fn seq_pool(shape: [usize; 6]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::f32((0..n).map(|i| i as f32).collect(), shape.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn pool_group_split_merge_roundtrip() {
+        let pool = seq_pool([2, 2, 3, 4, 2, 2]);
+        let shards = split_pool_groups(&pool, 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].shape(), &[2, 2, 3, 2, 2, 2]);
+        // shard 1 owns groups {2, 3}: first element is the (0,0,0,2,0,0)
+        // entry of the full pool
+        assert_eq!(shards[1].as_f32().unwrap()[0], 2.0 * 2.0 * 2.0);
+        let merged = merge_pool_groups(&shards).unwrap();
+        assert_eq!(merged.as_f32().unwrap(), pool.as_f32().unwrap());
+        assert!(split_pool_groups(&pool, 3).is_err());
+    }
+
+    #[test]
+    fn pool_layer_split_merge_roundtrip() {
+        let pool = seq_pool([4, 2, 3, 2, 2, 2]);
+        let (a, b) = split_pool_layers(&pool, 1).unwrap();
+        assert_eq!(a.shape(), &[1, 2, 3, 2, 2, 2]);
+        assert_eq!(b.shape(), &[3, 2, 3, 2, 2, 2]);
+        let merged = merge_pool_layers(&a, &b).unwrap();
+        assert_eq!(merged.as_f32().unwrap(), pool.as_f32().unwrap());
+        assert!(split_pool_layers(&pool, 0).is_err());
+        assert!(split_pool_layers(&pool, 4).is_err());
+    }
+
+    #[test]
+    fn mlp_shard_k_reads_meta_not_names() {
+        use crate::substrate::json::Json;
+        use crate::runtime::manifest::EntrySpec;
+        let entry = |name: &str, meta: &str| EntrySpec {
+            name: name.into(),
+            kind: "tp_mlp".into(),
+            file: "x".into(),
+            data: vec![],
+            outputs: vec![],
+            meta: Json::parse(meta).unwrap(),
+        };
+        let dir = std::env::temp_dir().join("ps_shard_mlpk_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model":"m","analogue":"x",
+                "config":{"d_model":8,"n_layers":2,"n_heads":2,"n_kv_heads":2,
+                          "d_ff":16,"d_head":4,"vocab":10,"max_seq":32,
+                          "mlp":"relu","pos":"learned","critical_density":0.5},
+                "params":[],"buckets":{"batch":[1],"seq":[16]},"entries":[]}"#,
+        )
+        .unwrap();
+        let mut m = Manifest::load(&dir).unwrap();
+        // multi-k artifact: k96 at B=4 and k188 at B=16 must not bleed into
+        // each other (the old string-prefix scan returned whichever name
+        // sorted first)
+        for (name, meta) in [
+            ("tp2_mlp_s0_dense_b4",
+             r#"{"batch":4,"shard":0,"n_shards":2,"top_k":0}"#),
+            ("tp2_mlp_s0_k96_b4",
+             r#"{"batch":4,"shard":0,"n_shards":2,"top_k":96}"#),
+            ("tp2_mlp_s1_k96_b4",
+             r#"{"batch":4,"shard":1,"n_shards":2,"top_k":96}"#),
+            ("tp2_mlp_s0_k188_b16",
+             r#"{"batch":16,"shard":0,"n_shards":2,"top_k":188}"#),
+            ("tp4_mlp_s0_k48_b4",
+             r#"{"batch":4,"shard":0,"n_shards":4,"top_k":48}"#),
+        ] {
+            m.entries.insert(name.to_string(), entry(name, meta));
+        }
+        assert_eq!(mlp_shard_k(&m, 2, 4), Some(96));
+        assert_eq!(mlp_shard_k(&m, 2, 16), Some(188));
+        assert_eq!(mlp_shard_k(&m, 4, 4), Some(48));
+        assert_eq!(mlp_shard_k(&m, 4, 16), None);
+        assert_eq!(mlp_shard_k(&m, 8, 4), None);
+    }
+}

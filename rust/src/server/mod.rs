@@ -229,6 +229,7 @@ where
                         stats.set("prefill", sched.prefill_stats());
                         stats.set("kv", sched.kv_stats());
                         stats.set("overload", sched.overload_stats());
+                        stats.set("shards", sched.shard_stats());
                         stats.set("faults", sched.metrics.faults_json());
                         let _ = sink.send(Json::obj(vec![
                             ("ok", true.into()),
